@@ -1,0 +1,59 @@
+//! GPT-2 XL on the FlooNoC compute mesh (paper Sec. VIII, Fig. 15).
+//!
+//! Run: cargo run --release --example gpt2_mesh
+
+use softex::mesh::{sweep_mesh, MeshPoint};
+use softex::report;
+use softex::workload::ModelConfig;
+
+fn main() {
+    let gpt2 = ModelConfig::gpt2_xl();
+    println!(
+        "GPT-2 XL prompt mode: {} layers, d={}, {} heads, {:.1} TOP/forward\n",
+        gpt2.layers,
+        gpt2.d_model,
+        gpt2.heads,
+        gpt2.total_ops() as f64 / 1e12
+    );
+
+    let sizes: Vec<usize> = (1..=8).collect();
+    let pts: Vec<MeshPoint> = sweep_mesh(&sizes, 1 << 16, 0x600D);
+    let rows: Vec<Vec<String>> = pts
+        .iter()
+        .map(|p| {
+            vec![
+                format!("{}x{}", p.n, p.n),
+                report::f(p.total_tops, 2),
+                report::f(p.per_cluster_gops, 0),
+                report::f(p.dram_gbs, 2),
+                report::f(p.tops_per_w, 3),
+                report::pct(p.slowdown),
+                report::pct(p.noc_power_frac),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::render_table(
+            "Fig. 15 — mesh scalability (2^16 Monte Carlo trials per point)",
+            &["mesh", "TOPS", "GOPS/clu", "DRAM GB/s", "TOPS/W", "slowdown", "NoC pwr"],
+            &rows
+        )
+    );
+
+    let p8 = pts.last().unwrap();
+    let p1 = &pts[0];
+    println!(
+        "8x8 vs paper: {:.1} TOPS (18.2), {:.0} GOPS/cluster (285), {:.1}% of 1x1 ({}), eff drop {:.1}% (7.44%)",
+        p8.total_tops,
+        p8.per_cluster_gops,
+        100.0 * p8.per_cluster_gops / p1.per_cluster_gops,
+        "82.6%",
+        100.0 * (1.0 - p8.tops_per_w / p1.tops_per_w),
+    );
+    println!(
+        "forward-pass time on 8x8: {:.1} ms/token-batch",
+        gpt2.total_ops() as f64 / (p8.total_tops * 1e12) * 1e3
+    );
+    println!("gpt2_mesh OK");
+}

@@ -1,0 +1,78 @@
+//! The paper's MobileBERT attention-layer study (Sec. VII-B-c, VII-C):
+//! softmax latency/energy vs the software baselines across sequence
+//! lengths, plus the full attention layer and the 24-layer model.
+//!
+//! Run: cargo run --release --example mobilebert_attention
+
+use softex::cluster::cores::{softmax_sw_cycles, ExpAlgo};
+use softex::coordinator::{execute_trace, ExecConfig};
+use softex::energy::{energy_j, ActivityMode, OP_EFFICIENCY, OP_THROUGHPUT};
+use softex::report;
+use softex::runtime::Engine;
+use softex::softex::{run_softmax, SoftExConfig};
+use softex::workload::trace::trace_attention_core;
+use softex::workload::{gen, trace_model, ModelConfig};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SoftExConfig::default();
+
+    // --- softmax kernel vs software, over sequence length ---------------
+    let mut rows_out = Vec::new();
+    for seq in [128usize, 256, 512] {
+        let mb = ModelConfig::mobilebert(seq);
+        let (rows, len) = mb.softmax_shape();
+        let scores = gen::attention_scores(rows, len, seq as u64);
+        let hw = run_softmax(&cfg, &scores, rows, len);
+        let hw_c = hw.cycles.total();
+        let sw_c = softmax_sw_cycles(ExpAlgo::Exps, rows, len);
+        let e_hw = energy_j(ActivityMode::SoftmaxHw, hw_c, &OP_THROUGHPUT);
+        let e_sw = energy_j(ActivityMode::SoftmaxSw, sw_c, &OP_THROUGHPUT);
+        rows_out.push(vec![
+            seq.to_string(),
+            report::cycles(hw_c),
+            report::cycles(sw_c),
+            format!("{:.1}x", sw_c as f64 / hw_c as f64),
+            format!("{:.1}x", e_sw / e_hw),
+        ]);
+    }
+    println!(
+        "{}",
+        report::render_table(
+            "Softmax: SoftEx vs 8-core exps (paper: 6.2x/15.3x @128, 10.8x/26.8x @512)",
+            &["seq", "SoftEx", "sw exps", "speedup", "energy gain"],
+            &rows_out
+        )
+    );
+
+    // --- numerics through the PJRT path on the attention head -----------
+    let mut engine = Engine::from_default_artifacts()?;
+    let (err, _, _) = engine.verify_golden("attention_head_128")?;
+    println!("attention_head_128 artifact golden max|err| = {err:.2e}\n");
+
+    // --- full attention layer and full model ----------------------------
+    let mb = ModelConfig::mobilebert(512);
+    let hw = execute_trace(&ExecConfig::paper_accelerated(), &trace_attention_core(&mb));
+    let sw = execute_trace(
+        &ExecConfig::sw_nonlinearities(ExpAlgo::Exps),
+        &trace_attention_core(&mb),
+    );
+    println!(
+        "attention layer @seq512: SoftEx {:.0} GOPS (paper 324), sw {:.0} GOPS, slowdown {:.2}x (paper >2.17x)",
+        hw.gops(&OP_THROUGHPUT),
+        sw.gops(&OP_THROUGHPUT),
+        sw.total_cycles() as f64 / hw.total_cycles() as f64
+    );
+    println!(
+        "attention layer efficiency @0.55V: {:.2} TOPS/W (paper 1.30)",
+        hw.tops_per_w(&OP_EFFICIENCY)
+    );
+
+    let full = execute_trace(&ExecConfig::paper_accelerated(), &trace_model(&mb));
+    println!(
+        "full MobileBERT (24 layers, seq 512): {:.0} GOPS, {:.0} ms (paper: 297 GOPS, 152 ms)",
+        full.gops(&OP_THROUGHPUT),
+        full.seconds(&OP_THROUGHPUT) * 1e3
+    );
+    println!("mobilebert_attention OK");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Quickstart: the three-layer flow in one page.
+//!
+//! 1. Load an AOT JAX/Pallas artifact (L1+L2, compiled by `make
+//!    artifacts`) through the PJRT runtime and execute it from Rust.
+//! 2. Run the same softmax on the bit-accurate SoftEx hardware model and
+//!    compare outputs.
+//! 3. Ask the cycle/energy model what the job costs on the cluster.
+//!
+//! Run: cargo run --release --example quickstart
+
+use softex::energy::{energy_j, ActivityMode, OP_THROUGHPUT};
+use softex::report;
+use softex::runtime::Engine;
+use softex::softex::{run_softmax, SoftExConfig};
+use softex::workload::gen;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. request-path execution of the Pallas softmax kernel --------
+    let mut engine = Engine::from_default_artifacts()?;
+    let rows = 128;
+    let len = 128;
+    let scores = gen::attention_scores(rows, len, 42);
+    let pallas_out = engine.run("softmax_128x128", &[scores.clone()])?;
+    println!("PJRT softmax_128x128: {} outputs", pallas_out.len());
+
+    // --- 2. the same job on the SoftEx hardware model -------------------
+    let cfg = SoftExConfig::default();
+    let hw = run_softmax(&cfg, &scores, rows, len);
+    let max_diff = hw
+        .out
+        .iter()
+        .zip(&pallas_out)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("SoftEx model vs Pallas kernel: max |diff| = {max_diff:.2e}");
+    assert!(max_diff < 0.02, "cross-layer contract violated");
+
+    // --- 3. what does it cost on the cluster? ---------------------------
+    let e = energy_j(ActivityMode::SoftmaxHw, hw.cycles.total(), &OP_THROUGHPUT);
+    println!(
+        "cycle model: {} total ({} acc / {} inv / {} norm), {:.2} uJ @0.8V",
+        report::cycles(hw.cycles.total()),
+        report::cycles(hw.cycles.accumulation),
+        report::cycles(hw.cycles.inversion),
+        report::cycles(hw.cycles.normalization),
+        e * 1e6
+    );
+    println!("quickstart OK");
+    Ok(())
+}

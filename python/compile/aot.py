@@ -1,0 +1,151 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+HLO text — NOT `lowered.compile().serialize()` — is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+For every artifact we also emit a `<name>.golden.txt` with one concrete
+(input, output) pair evaluated in JAX, so the Rust runtime tests can verify
+end-to-end numerics without re-deriving the kernels, plus a `manifest.txt`
+listing names and shapes for the Rust artifact loader.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.expp import expp_pallas, exps_pallas
+from .kernels.gelu import gelu_pallas
+from .kernels.softmax import softmax_pallas
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default HLO printer elides big constants
+    # as `constant({...})`, which the text parser then reads back as
+    # garbage (silent NaN at runtime!) — baked model weights must survive
+    # the round trip.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _fmt_shape(arr) -> str:
+    return "x".join(str(d) for d in arr.shape) + ":" + str(arr.dtype)
+
+
+def _write_golden(path, inputs, outputs):
+    with open(path, "w") as f:
+        for arr in inputs:
+            a = np.asarray(arr, dtype=np.float32).reshape(-1)
+            f.write(f"in {_fmt_shape(np.asarray(arr))} {a.size}\n")
+            f.write(" ".join(repr(float(v)) for v in a) + "\n")
+        for arr in outputs:
+            a = np.asarray(arr, dtype=np.float32).reshape(-1)
+            f.write(f"out {_fmt_shape(np.asarray(arr))} {a.size}\n")
+            f.write(" ".join(repr(float(v)) for v in a) + "\n")
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def export(self, name: str, fn, example_inputs):
+        """Lower fn at the example shapes, dump HLO text + golden vectors."""
+        specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in example_inputs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        hlo_path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(text)
+        outs = fn(*example_inputs)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        _write_golden(
+            os.path.join(self.out_dir, f"{name}.golden.txt"), example_inputs, outs
+        )
+        in_sig = ",".join(_fmt_shape(np.asarray(a)) for a in example_inputs)
+        out_sig = ",".join(_fmt_shape(np.asarray(o)) for o in outs)
+        self.manifest.append(f"{name} | {in_sig} | {out_sig}")
+        print(f"  wrote {name}: {len(text)} chars, in=[{in_sig}] out=[{out_sig}]")
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(self.manifest) + "\n")
+
+
+def bf16_round(x):
+    return np.asarray(
+        jnp.asarray(x, jnp.float32).astype(jnp.bfloat16).astype(jnp.float32)
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--full", action="store_true",
+                    help="also export the larger softmax geometries")
+    args = ap.parse_args()
+
+    ex = Exporter(args.out_dir)
+    rng = np.random.default_rng(0x50F7E
+                                )
+    # --- elementwise exponentials -------------------------------------
+    x = bf16_round(rng.uniform(-20.0, 0.0, 16384).astype(np.float32))
+    ex.export("expp_16384", expp_pallas, [jnp.asarray(x)])
+    ex.export("exps_16384", exps_pallas, [jnp.asarray(x)])
+
+    # --- softmax (MobileBERT attention-score geometry) -----------------
+    for seq in [128] + ([256, 512] if args.full else []):
+        s = bf16_round((rng.standard_normal((seq, seq)) * 2.0).astype(np.float32))
+        ex.export(f"softmax_{seq}x{seq}", softmax_pallas, [jnp.asarray(s)])
+    # ViT geometry
+    s = bf16_round((rng.standard_normal((197, 197)) * 2.0).astype(np.float32))
+    ex.export("softmax_197x197", softmax_pallas, [jnp.asarray(s)])
+
+    # --- GELU (ViT FFN activation geometry) ----------------------------
+    g = bf16_round((rng.standard_normal(16384) * 1.5).astype(np.float32))
+    ex.export("gelu_16384", functools.partial(gelu_pallas), [jnp.asarray(g)])
+
+    # --- attention head (numerics through scores->softmax->AV) ---------
+    d_h = 64
+    q = bf16_round((rng.standard_normal((128, d_h)) * 0.5).astype(np.float32))
+    k = bf16_round((rng.standard_normal((128, d_h)) * 0.5).astype(np.float32))
+    v = bf16_round((rng.standard_normal((128, d_h)) * 0.5).astype(np.float32))
+    ex.export(
+        "attention_head_128",
+        M.attention_head,
+        [jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)],
+    )
+
+    # --- generic matmul (runtime overhead benchmarking) ----------------
+    a = bf16_round(rng.standard_normal((256, 256)).astype(np.float32))
+    b = bf16_round(rng.standard_normal((256, 256)).astype(np.float32))
+    ex.export("matmul_256", M.redmule_matmul, [jnp.asarray(a), jnp.asarray(b)])
+
+    # --- tiny ViT end-to-end (weights baked as constants) --------------
+    cfg, params = M.init_vit_tiny(seed=0)
+    tokens = bf16_round(
+        (rng.standard_normal((cfg["seq"], cfg["d"])) * 0.5).astype(np.float32)
+    )
+    fwd = functools.partial(M.vit_tiny_forward, params=params)
+    ex.export("vit_tiny_forward", lambda t: fwd(t), [jnp.asarray(tokens)])
+
+    ex.finish()
+    print(f"manifest: {len(ex.manifest)} artifacts in {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

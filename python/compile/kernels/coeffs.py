@@ -1,0 +1,75 @@
+"""Numerical constants shared by the L1 kernels and the Rust hardware model.
+
+Two families of constants live here:
+
+1. ``expp`` polynomial-correction parameters (paper Sec. IV, Fig. 2).
+   The paper's published values are alpha=0.21875, beta=0.4375,
+   gamma1=3.296875, gamma2=2.171875, found with a Monte Carlo search over
+   *their* exact datapath. Our datapath keeps 6 guard bits on frac(x') and
+   uses round-to-nearest shifts, so we re-ran the same Monte Carlo style
+   sweep (see DESIGN.md) and settled on gamma1=3.25 which gives
+   MRE 0.167% / max 0.544% against glibc exp (paper: 0.14% / 0.78%).
+
+2. Sum-of-exponentials coefficients for the Gaussian Q-function
+   (paper Sec. III-C / Appendix; Tanash & Riihonen minmax fit over
+   [0, 2.8] relative error). Fitted offline with scipy (see DESIGN.md);
+   r_max per N: {2: 5.5e-2, 3: 1.7e-2, 4: 6.5e-3, 5: 2.8e-3, 6: 3.9e-3}.
+
+The Rust side mirrors these in ``rust/src/softex/coeffs.rs``; the
+cross-layer golden-vector tests guarantee both stay in sync.
+"""
+
+# --- expp (Sec. IV) -------------------------------------------------------
+# Fixed-point layout: frac(x') is kept with F = 7 + GUARD_BITS bits.
+GUARD_BITS = 6
+FRAC_BITS = 7 + GUARD_BITS  # 13
+
+INV_LN2 = 1.4426950408889634  # 1/ln(2), rounded to f32 on use
+
+ALPHA_NUM = 7     # alpha = 7/32  = 0.21875  (matches paper)
+ALPHA_SHIFT = 5
+BETA_NUM = 7      # beta  = 7/16  = 0.4375   (matches paper)
+BETA_SHIFT = 4
+GAMMA1 = 3.25     # paper: 3.296875 (re-optimized for our rounding, DESIGN.md)
+GAMMA2 = 2.171875 # matches paper
+
+GAMMA1_FXP = int(round(GAMMA1 * (1 << FRAC_BITS)))  # 26624
+GAMMA2_FXP = int(round(GAMMA2 * (1 << FRAC_BITS)))  # 17792
+
+# --- GELU sum-of-exponentials (Sec. III-C, VI-B) ---------------------------
+# Q(x) ~= sum_i a_i * exp(-b_i * x^2) over x in [0, 2.8], minmax relative.
+# Keys: number of terms Nw. Values: (a list, b list, r_max).
+SOE_COEFFS = {
+    2: (
+        [0.26146600, 0.21117873],
+        [0.59746135, 3.44125356],
+        5.471e-2,
+    ),
+    3: (
+        [0.22798227, 0.17528598, 0.08823792],
+        [0.57503648, 1.76040176, 24.68097028],
+        1.699e-2,
+    ),
+    4: (
+        [0.21045943, 0.15579257, 0.09396217, 0.03654393],
+        [0.56364560, 1.36409451, 7.84896545, 154.48448138],
+        6.48e-3,
+    ),
+    5: (
+        [0.19670326, 0.14468806, 0.09417818, 0.04673172, 0.01630930],
+        [0.55494203, 1.17119911, 4.57679345, 35.82410459, 800.63105373],
+        2.78e-3,
+    ),
+    6: (
+        [0.08128476, 0.10819573, 0.10611694, 0.11645327, 0.06321428, 0.02277756],
+        [0.48864579, 0.64132223, 0.89753052, 2.68102317, 18.86970997, 407.38806911],
+        3.91e-3,
+    ),
+}
+
+# Default hardware configuration (paper Sec. VI-B conclusion).
+DEFAULT_TERMS = 4
+DEFAULT_ACC_BITS = 14  # fractional bits of the 14-bit lane accumulator
+
+# GELU(x) == x for x > X_CLIP and ~0 for x < -X_CLIP (paper Sec. VI-B).
+X_CLIP = 2.8

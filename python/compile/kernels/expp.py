@@ -1,0 +1,134 @@
+"""L1: the `expp` approximate exponential (paper Sec. IV) as jnp bit ops.
+
+The function is defined purely over the BF16 bit pattern of the input, so
+the jnp implementation here, the Pallas kernels that call it, and the Rust
+hardware model (`rust/src/expp/`) are bit-identical by construction:
+
+  1. round the input to bf16, widen back to f32;
+  2. x' = x * (1/ln2) as an f32 multiply;
+  3. k = floor(x' * 2^13)  -- exact (power-of-two scaling), 13 frac bits
+     of x' = 7 mantissa bits + 6 guard bits;
+  4. split k into integer exponent and fractional mantissa;
+  5. polynomial mantissa correction P(frac) in integer arithmetic
+     (Fig. 2 circuit: one branch per half of [0,1), selected by the MSB);
+  6. round the corrected mantissa to 7 bits, reassemble the bf16 pattern,
+     saturating to +inf / flushing to zero.
+
+`exps` (plain Schraudolph, Algorithm 2) is the baseline the paper compares
+against; it skips step 5.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import coeffs as C
+
+_F = C.FRAC_BITS          # 13
+_G = C.GUARD_BITS         # 6
+_MASK = (1 << _F) - 1     # 0x1FFF
+_HALF = 1 << (_F - 1)
+
+
+def _to_bf16_bits_f32(x):
+    """Round f32 -> bf16 (RNE) and return the widened f32 value."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _split(x):
+    """Steps 1-4: return (e_int, f) with f the F-bit fraction of x'."""
+    xb = _to_bf16_bits_f32(x)
+    t = xb * jnp.float32(C.INV_LN2)
+    # |t| <= 128 * 1.443 => t * 2^13 fits comfortably in int32.
+    k = jnp.floor(t * jnp.float32(1 << _F)).astype(jnp.int32)
+    e_int = k >> _F
+    f = k & _MASK
+    return e_int, f
+
+
+def _assemble(e_int, p7):
+    """Step 6: reassemble bf16 bits with saturation, widen to f32."""
+    carry = p7 >> 7
+    e_int = e_int + carry
+    p7 = p7 & 0x7F
+    exp_field = e_int + 127
+    bits = (exp_field << 7) | p7
+    bits = jnp.where(bits >= 0x7F80, 0x7F80, bits)   # overflow -> +inf
+    bits = jnp.where(exp_field <= 0, 0, bits)        # underflow -> 0
+    bf = jax.lax.bitcast_convert_type(bits.astype(jnp.uint16), jnp.bfloat16)
+    return bf.astype(jnp.float32)
+
+
+def expp(x):
+    """The paper's corrected exponential, elementwise on f32 (bf16 values)."""
+    e_int, f = _split(x)
+    # Branch A, frac in [0, 0.5): P = alpha * f * (f + gamma1)
+    pa = (C.ALPHA_NUM * f * (f + C.GAMMA1_FXP) + (1 << (C.ALPHA_SHIFT + _F - 1))) >> (
+        C.ALPHA_SHIFT + _F
+    )
+    # Branch B, frac in [0.5, 1): P = not(beta * not(f) * (f + gamma2))
+    nf = _MASK - f
+    pb = _MASK - (
+        (C.BETA_NUM * nf * (f + C.GAMMA2_FXP) + (1 << (C.BETA_SHIFT + _F - 1)))
+        >> (C.BETA_SHIFT + _F)
+    )
+    p = jnp.where(f < _HALF, pa, pb)
+    p = jnp.clip(p, 0, _MASK)
+    p7 = (p + (1 << (_G - 1))) >> _G  # round to 7 mantissa bits
+    return _assemble(e_int, p7)
+
+
+def exps(x):
+    """Plain Schraudolph's method (Algorithm 2): 1 + frac, no correction."""
+    e_int, f = _split(x)
+    p7 = f >> _G  # truncate to the 7-bit mantissa, as the raw method does
+    return _assemble(e_int, p7)
+
+
+# ---------------------------------------------------------------------------
+# Pallas elementwise kernels. interpret=True everywhere: the CPU PJRT client
+# cannot execute Mosaic custom-calls (see DESIGN.md Hardware-Adaptation).
+# ---------------------------------------------------------------------------
+
+from jax.experimental import pallas as pl  # noqa: E402
+
+
+def _expp_kernel(x_ref, o_ref):
+    o_ref[...] = expp(x_ref[...])
+
+
+def _exps_kernel(x_ref, o_ref):
+    o_ref[...] = exps(x_ref[...])
+
+
+def expp_pallas(x, block: int = 2048):
+    """expp over a 1-D f32 array via a blocked Pallas call.
+
+    The block maps to one SoftEx streamer burst; 2048 f32 = 8 KiB stays far
+    under a VMEM-sized budget and mirrors the lane-array tiling.
+    """
+    n = x.shape[0]
+    if n % block != 0:
+        block = n  # degenerate single-block fallback for odd sizes
+    return pl.pallas_call(
+        _expp_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(x)
+
+
+def exps_pallas(x, block: int = 2048):
+    """Schraudolph baseline over a 1-D f32 array via Pallas."""
+    n = x.shape[0]
+    if n % block != 0:
+        block = n
+    return pl.pallas_call(
+        _exps_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(x)

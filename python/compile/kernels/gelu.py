@@ -1,0 +1,79 @@
+"""L1: SoftEx GELU via sum of exponentials (paper Sec. III-C, V-B3).
+
+Algorithm 1 / the four-step procedure of the appendix:
+
+  1. square the input (bf16 MAU on the cores in the paper's split);
+  2. s = sum_{i=1..Nw} a_i * expp(-b_i * x^2) — the accelerated step.
+     Each product a_i * expp(.) is computed in bf16 by the lane's FP
+     multiplier, then *truncated* into a fixed-point lane accumulator with
+     ACC_BITS fractional bits (the paper's 14-bit accumulator; values are
+     bounded in (0, 0.5] so fixed point is safe — Sec. V-B3);
+  3. if x > 0, complement: Phi = 1 - s, else Phi = s;
+  4. multiply x * Phi in bf16.
+
+The accumulator width and term count are compile-time parameters so that
+Fig. 5's (bits x terms) sweep can be regenerated both here and in the Rust
+model.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import coeffs as C
+from .expp import expp
+
+
+def _bf16(x):
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def gelu_soe(x, terms: int = C.DEFAULT_TERMS, acc_bits: int = C.DEFAULT_ACC_BITS):
+    """Sum-of-exponentials GELU, elementwise on f32 (bf16 values)."""
+    a, b, _ = C.SOE_COEFFS[terms]
+    xb = _bf16(x)
+    x2 = _bf16(xb * xb)  # step 1 (bf16 multiply)
+    scale = jnp.float32(1 << acc_bits)
+    acc = jnp.zeros(x.shape, jnp.int32)
+    for ai, bi in zip(a, b):
+        # MAU: multiply by the (negated) b_i weight in bf16
+        t = _bf16(x2 * _bf16(jnp.float32(-bi)))
+        e = expp(t)
+        prod = _bf16(e * _bf16(jnp.float32(ai)))
+        # lane accumulator: truncating fixed-point add
+        acc = acc + jnp.floor(prod * scale).astype(jnp.int32)
+    s = acc.astype(jnp.float32) / scale  # back-conversion to bf16 domain
+    s = _bf16(s)
+    phi = jnp.where(xb > 0, _bf16(jnp.float32(1.0) - s), s)  # step 3
+    return _bf16(xb * phi)  # step 4
+
+
+def _gelu_kernel(x_ref, o_ref, *, terms, acc_bits):
+    o_ref[...] = gelu_soe(x_ref[...], terms, acc_bits)
+
+
+def gelu_pallas(
+    x,
+    terms: int = C.DEFAULT_TERMS,
+    acc_bits: int = C.DEFAULT_ACC_BITS,
+    block: int = 2048,
+):
+    """SoftEx-style GELU over a 1-D f32 array via a blocked Pallas call.
+
+    Output bandwidth of the modeled unit is N/Nw elements per cycle; the
+    block maps to one streamer burst held steady for Nw weight cycles.
+    """
+    n = x.shape[0]
+    if n % block != 0:
+        block = n
+    kern = functools.partial(_gelu_kernel, terms=terms, acc_bits=acc_bits)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(x)

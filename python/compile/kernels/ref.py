@@ -1,0 +1,70 @@
+"""Pure-jnp correctness oracles for every L1 kernel.
+
+These implement the *mathematically accurate* versions of the functions the
+hardware approximates (the role glibc / PyTorch exact GELU play in the
+paper), plus the software baselines the paper benchmarks against
+(Schraudolph softmax, sigmoid-GELU, tanh-GELU).
+"""
+
+import jax.numpy as jnp
+import jax.scipy.special as jsp
+
+from . import coeffs as C
+
+
+def exp_exact(x):
+    """Accurate exponential (the glibc stand-in)."""
+    return jnp.exp(x.astype(jnp.float32))
+
+
+def softmax_exact(x):
+    """Numerically-stable exact softmax over the last axis (Eq. 1)."""
+    x = x.astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def gelu_exact(x):
+    """Exact GELU via the Gaussian CDF (Eq. 3): x * Phi(x)."""
+    x = x.astype(jnp.float32)
+    phi = 0.5 * (1.0 + jsp.erf(x / jnp.sqrt(jnp.float32(2.0))))
+    return x * phi
+
+
+def gelu_tanh(x):
+    """The tanh approximation (Eq. 4)."""
+    x = x.astype(jnp.float32)
+    c = jnp.sqrt(jnp.float32(2.0 / jnp.pi))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def gelu_sigmoid(x):
+    """The sigmoid approximation (Eq. 5) — the paper's software baseline."""
+    x = x.astype(jnp.float32)
+    return x * jnp.reciprocal(1.0 + jnp.exp(-1.702 * x))
+
+
+def q_function(x):
+    """Gaussian Q(x) = 1 - Phi(x)."""
+    x = x.astype(jnp.float32)
+    return 0.5 * jsp.erfc(x / jnp.sqrt(jnp.float32(2.0)))
+
+
+def soe_q(x, terms: int = C.DEFAULT_TERMS):
+    """Float (non-quantized) sum-of-exponentials Q approximation (Eq. 6)."""
+    a, b, _ = C.SOE_COEFFS[terms]
+    x = x.astype(jnp.float32)
+    return sum(ai * jnp.exp(-bi * x * x) for ai, bi in zip(a, b))
+
+
+def gelu_soe_float(x, terms: int = C.DEFAULT_TERMS):
+    """GELU through the sum-of-exp Phi, in full f32 (no fixed-point acc).
+
+    Upper bound on what the quantized kernel can achieve; used to separate
+    approximation error from accumulator quantization error in Fig. 5.
+    """
+    x = x.astype(jnp.float32)
+    s = soe_q(jnp.abs(x), terms)
+    phi = jnp.where(x > 0, 1.0 - s, s)
+    return x * phi

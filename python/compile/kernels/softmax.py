@@ -1,0 +1,86 @@
+"""L1: SoftEx softmax as a Pallas kernel (paper Sec. V-B2).
+
+Row-wise softmax over the last axis, mirroring the accelerator's datapath:
+
+  accumulation  — subtract the max in bf16 (MAU), exponentiate with expp
+                  (EXPU), accumulate the denominator in FP32 (the paper's
+                  higher-precision denominator accumulator);
+  inversion     — Newton-Raphson reciprocal seeded from the exponent trick
+                  of Sec. V-B2b, two iterations on the FP32 FMA;
+  normalization — multiply each exponentiated score by the bf16-cast
+                  reciprocal in the MAU, emit bf16.
+
+The Pallas grid assigns one row block per program — the analogue of the
+paper's "each cluster computes full rows" marshaling (Fig. 14b). The kernel
+uses the *global* row max (the whole row is resident in VMEM) where the
+streaming hardware uses the online running max; both produce the same
+maximum, only the rescale rounding path differs (see the Rust model, which
+implements the online variant bit-faithfully).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .expp import expp, exps
+
+
+def hw_recip(d):
+    """Newton-Raphson reciprocal of a positive f32, as in Sec. V-B2b.
+
+    Seed: for d = (1+M)*2^(e-127), the reciprocal exponent field is exactly
+    253-e and the mantissa is estimated with the parabola (1-M)^2/2, with
+    1-M approximated by not(M).
+    """
+    bits = jax.lax.bitcast_convert_type(d, jnp.int32)
+    e = (bits >> 23) & 0xFF
+    m = bits & 0x7FFFFF
+    nm = 0x7FFFFF - m  # not(M): one's-complement approximation of 1-M
+    mf = nm.astype(jnp.float32) * jnp.float32(2.0**-23)
+    seed_mant = mf * mf * jnp.float32(0.5)  # in [0, 0.5)
+    seed_exp = 253 - e
+    seed_bits = (seed_exp << 23)
+    seed_pow = jax.lax.bitcast_convert_type(seed_bits, jnp.float32)
+    r = seed_pow * (jnp.float32(1.0) + seed_mant)
+    # Two Newton iterations on the FP32 FMA: r <- r * (2 - d*r)
+    r = r * (jnp.float32(2.0) - d * r)
+    r = r * (jnp.float32(2.0) - d * r)
+    return r
+
+
+def _bf16(x):
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _softmax_body(x, exp_fn):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    # MAU: bf16 subtract of the running max
+    shifted = _bf16(_bf16(x) - _bf16(m))
+    e = exp_fn(shifted)
+    den = jnp.sum(e, axis=-1, keepdims=True, dtype=jnp.float32)
+    r = _bf16(hw_recip(den))  # reciprocal cast back to bf16 for the MAUs
+    return _bf16(e * r)
+
+
+def _softmax_kernel(x_ref, o_ref):
+    o_ref[...] = _softmax_body(x_ref[...], expp)
+
+
+def _softmax_exps_kernel(x_ref, o_ref):
+    o_ref[...] = _softmax_body(x_ref[...], exps)
+
+
+def softmax_pallas(x, rows_per_block: int = 1, use_exps: bool = False):
+    """Row-wise SoftEx softmax over the last axis of a 2-D f32 array."""
+    rows, cols = x.shape
+    if rows % rows_per_block != 0:
+        rows_per_block = 1
+    kern = _softmax_exps_kernel if use_exps else _softmax_kernel
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        grid=(rows // rows_per_block,),
+        in_specs=[pl.BlockSpec((rows_per_block, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows_per_block, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(x)

@@ -1,0 +1,148 @@
+"""L2: Transformer compute graphs in JAX, calling the L1 Pallas kernels.
+
+Everything here is build-time only: `aot.py` lowers these functions once to
+HLO text; the Rust coordinator loads and executes the artifacts via PJRT.
+
+The model mirrors the paper's workloads:
+  * a single attention head / full MHSA (MobileBERT-style geometry) whose
+    softmax runs through the SoftEx Pallas kernel;
+  * a feed-forward block whose GELU runs through the sum-of-exponentials
+    Pallas kernel;
+  * `vit_tiny` — a real, runnable small ViT (4 layers, d=128, 4 heads)
+    used by the end-to-end validation example.
+
+MatMuls are computed with bf16 operands accumulated in f32, matching the
+RedMulE tensor unit's BF16-FMA datapath.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import coeffs as C
+from .kernels.gelu import gelu_pallas
+from .kernels.softmax import softmax_pallas
+
+
+def _bf16(x):
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def redmule_matmul(a, b):
+    """MatMul with bf16 operands and f32 accumulation (RedMulE semantics)."""
+    return jnp.matmul(
+        a.astype(jnp.bfloat16),
+        b.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def layer_norm(x, gamma, beta, eps=1e-6):
+    """LayerNorm in f32 (runs on the RISC-V cores in the paper's mapping)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def attention_head(q, k, v):
+    """Single-head attention with the SoftEx softmax kernel.
+
+    q, k, v: (seq, d_h) f32. Returns (seq, d_h) f32.
+    """
+    d_h = q.shape[-1]
+    scale = jnp.float32(1.0 / jnp.sqrt(d_h))
+    scores = redmule_matmul(q, k.T) * scale
+    probs = softmax_pallas(scores)
+    return redmule_matmul(probs, v)
+
+
+def mhsa(x, wq, wk, wv, wo, heads: int):
+    """Multi-head self-attention. x: (seq, d); w*: (d, d)."""
+    seq, d = x.shape
+    d_h = d // heads
+    q = redmule_matmul(x, wq).reshape(seq, heads, d_h)
+    k = redmule_matmul(x, wk).reshape(seq, heads, d_h)
+    v = redmule_matmul(x, wv).reshape(seq, heads, d_h)
+    outs = [
+        attention_head(q[:, h, :], k[:, h, :], v[:, h, :]) for h in range(heads)
+    ]
+    cat = jnp.concatenate(outs, axis=-1)
+    return redmule_matmul(cat, wo)
+
+
+def ffn(x, w1, b1, w2, b2, terms: int = C.DEFAULT_TERMS,
+        acc_bits: int = C.DEFAULT_ACC_BITS):
+    """Feed-forward block with the SoftEx GELU kernel.
+
+    x: (seq, d); w1: (d, d_ff); w2: (d_ff, d).
+    """
+    h = redmule_matmul(x, w1) + b1
+    seq, d_ff = h.shape
+    g = gelu_pallas(h.reshape(-1), terms=terms, acc_bits=acc_bits)
+    return redmule_matmul(g.reshape(seq, d_ff), w2) + b2
+
+
+def transformer_block(x, p, heads: int):
+    """Pre-LN encoder block: x + MHSA(LN(x)); x + FFN(LN(x))."""
+    a = mhsa(layer_norm(x, p["ln1_g"], p["ln1_b"]),
+             p["wq"], p["wk"], p["wv"], p["wo"], heads)
+    x = x + a
+    f = ffn(layer_norm(x, p["ln2_g"], p["ln2_b"]),
+            p["w1"], p["b1"], p["w2"], p["b2"])
+    return x + f
+
+
+# ---------------------------------------------------------------------------
+# Tiny ViT for end-to-end validation (EXPERIMENTS.md §E2E)
+# ---------------------------------------------------------------------------
+
+VIT_TINY = dict(layers=4, d=128, heads=4, d_ff=512, seq=65, classes=10)
+
+
+def init_block_params(key, d: int, d_ff: int):
+    ks = jax.random.split(key, 6)
+    s_attn = 1.0 / jnp.sqrt(d)
+    s_ff1 = 1.0 / jnp.sqrt(d)
+    s_ff2 = 1.0 / jnp.sqrt(d_ff)
+    return {
+        "wq": jax.random.normal(ks[0], (d, d), jnp.float32) * s_attn,
+        "wk": jax.random.normal(ks[1], (d, d), jnp.float32) * s_attn,
+        "wv": jax.random.normal(ks[2], (d, d), jnp.float32) * s_attn,
+        "wo": jax.random.normal(ks[3], (d, d), jnp.float32) * s_attn,
+        "w1": jax.random.normal(ks[4], (d, d_ff), jnp.float32) * s_ff1,
+        "b1": jnp.zeros((d_ff,), jnp.float32),
+        "w2": jax.random.normal(ks[5], (d_ff, d), jnp.float32) * s_ff2,
+        "b2": jnp.zeros((d,), jnp.float32),
+        "ln1_g": jnp.ones((d,), jnp.float32),
+        "ln1_b": jnp.zeros((d,), jnp.float32),
+        "ln2_g": jnp.ones((d,), jnp.float32),
+        "ln2_b": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def init_vit_tiny(seed: int = 0):
+    cfg = VIT_TINY
+    key = jax.random.PRNGKey(seed)
+    kb, kp, kh = jax.random.split(key, 3)
+    params = {
+        "blocks": [
+            init_block_params(k, cfg["d"], cfg["d_ff"])
+            for k in jax.random.split(kb, cfg["layers"])
+        ],
+        "pos": jax.random.normal(kp, (cfg["seq"], cfg["d"]), jnp.float32) * 0.02,
+        "head": jax.random.normal(kh, (cfg["d"], cfg["classes"]), jnp.float32)
+        * (1.0 / jnp.sqrt(cfg["d"])),
+        "ln_g": jnp.ones((cfg["d"],), jnp.float32),
+        "ln_b": jnp.zeros((cfg["d"],), jnp.float32),
+    }
+    return cfg, params
+
+
+def vit_tiny_forward(tokens, params):
+    """tokens: (seq, d) pre-embedded patches. Returns (classes,) logits."""
+    cfg = VIT_TINY
+    x = tokens + params["pos"]
+    for p in params["blocks"]:
+        x = transformer_block(x, p, cfg["heads"])
+    x = layer_norm(x, params["ln_g"], params["ln_b"])
+    cls = x[0]  # CLS token
+    return redmule_matmul(cls[None, :], params["head"])[0]

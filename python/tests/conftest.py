@@ -1,0 +1,13 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+
+def bf16(x):
+    """Round an array to bf16 values (kept in f32 storage)."""
+    return jnp.asarray(x, jnp.float32).astype(jnp.bfloat16).astype(jnp.float32)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xBEEF)

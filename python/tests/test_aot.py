@@ -1,0 +1,73 @@
+"""AOT path: HLO text generation and golden-vector files (DESIGN.md §2)."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def test_to_hlo_text_small_fn():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text
+    assert "dot" in text
+
+
+def test_to_hlo_text_pallas_kernel_lowered():
+    """interpret=True Pallas bodies must lower to plain HLO (no custom-call
+    the CPU PJRT client can't run)."""
+    from compile.kernels.expp import expp_pallas
+
+    spec = jax.ShapeDtypeStruct((256,), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(expp_pallas).lower(spec))
+    assert "HloModule" in text
+    assert "custom-call" not in text.lower()
+
+
+def test_golden_roundtrip(tmp_path):
+    x = np.arange(6, dtype=np.float32).reshape(2, 3)
+    y = x * 2
+    path = tmp_path / "g.golden.txt"
+    aot._write_golden(str(path), [x], [y])
+    lines = path.read_text().strip().splitlines()
+    assert lines[0].startswith("in 2x3:float32 6")
+    vals = [float(v) for v in lines[1].split()]
+    assert vals == list(range(6))
+    assert lines[2].startswith("out 2x3:float32 6")
+
+
+def test_exporter_writes_manifest(tmp_path):
+    ex = aot.Exporter(str(tmp_path))
+
+    def fn(x):
+        return x + jnp.float32(1.0)
+
+    ex.export("plus_one", fn, [jnp.zeros((4,), jnp.float32)])
+    ex.finish()
+    assert (tmp_path / "plus_one.hlo.txt").exists()
+    assert (tmp_path / "plus_one.golden.txt").exists()
+    manifest = (tmp_path / "manifest.txt").read_text()
+    assert "plus_one | 4:float32 | 4:float32" in manifest
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.txt")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_artifacts_consistent():
+    """Every artifact in the manifest has its .hlo.txt and .golden.txt."""
+    art = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(art, "manifest.txt")) as f:
+        names = [ln.split("|")[0].strip() for ln in f if ln.strip()]
+    assert len(names) >= 8
+    for n in names:
+        assert os.path.exists(os.path.join(art, f"{n}.hlo.txt")), n
+        assert os.path.exists(os.path.join(art, f"{n}.golden.txt")), n

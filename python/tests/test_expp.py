@@ -1,0 +1,106 @@
+"""expp / exps accuracy and bit-level behaviour (paper Sec. IV, VI-A1)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.expp import expp, exps, expp_pallas, exps_pallas
+from .conftest import bf16
+
+# bf16 normal range: the paper evaluates on [-88.7, 88.7] (f32 no-overflow);
+# in bf16 exp underflows below ~-87.3 to denormals which the unit flushes.
+LO, HI = -87.0, 88.0
+
+
+def _rel_err(y, r):
+    y = np.asarray(y, np.float64)
+    r = np.asarray(r, np.float64)
+    ok = (r > 1.2e-38) & (r < 3.3e38)
+    return np.abs(y[ok] - r[ok]) / r[ok]
+
+
+def test_expp_error_bounds(rng):
+    """Paper: MRE 0.14%, max 0.78%. Ours: <=0.20% / <=0.60% (DESIGN.md)."""
+    x = bf16(rng.uniform(LO, HI, 200_000).astype(np.float32))
+    rel = _rel_err(expp(x), ref.exp_exact(x))
+    assert rel.mean() < 0.0020, f"MRE {rel.mean():.5f}"
+    assert rel.max() < 0.0060, f"max {rel.max():.5f}"
+
+
+def test_exps_much_worse_than_expp(rng):
+    """Paper: expp is 13x lower MRE than Schraudolph's method."""
+    x = bf16(rng.uniform(LO, HI, 200_000).astype(np.float32))
+    r = ref.exp_exact(x)
+    mre_p = _rel_err(expp(x), r).mean()
+    mre_s = _rel_err(exps(x), r).mean()
+    assert mre_s / mre_p > 8.0, (mre_s, mre_p)
+
+
+def test_expp_exact_at_zero():
+    assert float(expp(jnp.float32(0.0))) == 1.0
+
+
+def test_expp_one(rng):
+    y = float(expp(jnp.float32(1.0)))
+    assert abs(y - np.e) / np.e < 0.006
+
+
+def test_expp_underflow_flushes_to_zero():
+    assert float(expp(jnp.float32(-100.0))) == 0.0
+    assert float(expp(jnp.float32(-1000.0))) == 0.0
+
+
+def test_expp_overflow_saturates_to_inf():
+    assert np.isinf(float(expp(jnp.float32(200.0))))
+
+
+def test_expp_nonnegative(rng):
+    x = bf16(rng.uniform(-200, 100, 50_000).astype(np.float32))
+    assert bool(jnp.all(expp(x) >= 0.0))
+
+
+def test_expp_monotone_on_grid():
+    """expp must be monotone non-decreasing over bf16-representable inputs."""
+    x = bf16(np.linspace(-20, 20, 8001).astype(np.float32))
+    x = np.unique(np.asarray(x))
+    y = np.asarray(expp(jnp.asarray(x)))
+    assert np.all(np.diff(y) >= 0.0)
+
+
+def test_expp_outputs_are_bf16_values(rng):
+    x = bf16(rng.uniform(LO, HI, 10_000).astype(np.float32))
+    y = expp(x)
+    assert bool(jnp.all(y == bf16(y)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([64, 256, 1000, 2048, 4096]),
+    lo=st.floats(-80, -1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_expp_pallas_matches_jnp(n, lo, seed):
+    """The Pallas kernel is bit-identical to the jnp reference formulation."""
+    r = np.random.default_rng(seed)
+    x = bf16(r.uniform(lo, 5.0, n).astype(np.float32))
+    assert bool(jnp.all(expp_pallas(x) == expp(x)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([128, 2048, 6144]), seed=st.integers(0, 2**31 - 1))
+def test_exps_pallas_matches_jnp(n, seed):
+    r = np.random.default_rng(seed)
+    x = bf16(r.uniform(-40, 2, n).astype(np.float32))
+    assert bool(jnp.all(exps_pallas(x) == exps(x)))
+
+
+def test_expp_vs_exps_agree_on_exponent(rng):
+    """Correction only touches the mantissa: results differ by < 1 binade."""
+    x = bf16(rng.uniform(-30, 30, 20_000).astype(np.float32))
+    p = np.asarray(expp(x), np.float64)
+    s = np.asarray(exps(x), np.float64)
+    ratio = p / np.where(s == 0, 1, s)
+    ok = s > 0
+    assert np.all(ratio[ok] < 2.0) and np.all(ratio[ok] > 0.5)

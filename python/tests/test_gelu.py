@@ -1,0 +1,116 @@
+"""SoftEx GELU kernel vs exact / baseline approximations (Sec. III-C, VI-B)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import coeffs as C
+from compile.kernels import ref
+from compile.kernels.gelu import gelu_pallas, gelu_soe
+from .conftest import bf16
+
+
+def _mse(a, b):
+    return float(np.mean((np.asarray(a, np.float64) - np.asarray(b, np.float64)) ** 2))
+
+
+def test_gelu_close_to_exact(rng):
+    x = bf16((rng.standard_normal(8192) * 1.5).astype(np.float32))
+    g = gelu_pallas(x)
+    r = ref.gelu_exact(x)
+    assert _mse(g, r) < 2e-5
+    assert float(jnp.max(jnp.abs(g - r))) < 0.03
+
+
+def test_gelu_beats_sigmoid_approximation(rng):
+    """Paper Fig. 5 discussion: 4-term/14-bit beats the sigmoid baseline."""
+    x = bf16((rng.standard_normal(16384) * 1.5).astype(np.float32))
+    r = ref.gelu_exact(x)
+    ours = _mse(gelu_pallas(x), r)
+    sigmoid = _mse(ref.gelu_sigmoid(x), r)
+    assert ours < sigmoid, (ours, sigmoid)
+
+
+def test_more_terms_reduce_error(rng):
+    x = bf16((rng.standard_normal(8192) * 1.5).astype(np.float32))
+    r = ref.gelu_exact(x)
+    errs = [_mse(gelu_soe(x, terms=t, acc_bits=14), r) for t in (2, 3, 4)]
+    assert errs[0] > errs[1] > errs[2], errs
+
+
+def test_too_few_acc_bits_degrade(rng):
+    """Fig. 5: <=10-bit accumulators visibly deviate; >=11 bits stabilize."""
+    x = bf16((rng.standard_normal(8192) * 1.5).astype(np.float32))
+    r = ref.gelu_exact(x)
+    e8 = _mse(gelu_soe(x, terms=4, acc_bits=8), r)
+    e14 = _mse(gelu_soe(x, terms=4, acc_bits=14), r)
+    assert e8 > 4 * e14, (e8, e14)
+
+
+def test_gelu_zero_is_zero():
+    assert float(gelu_soe(jnp.zeros(4, jnp.float32))[0]) == 0.0
+
+
+def test_gelu_identity_for_large_positive():
+    x = bf16(jnp.asarray([3.0, 4.0, 8.0, 20.0], jnp.float32))
+    g = gelu_soe(x)
+    assert np.allclose(np.asarray(g), np.asarray(x), rtol=0.01)
+
+
+def test_gelu_near_zero_for_large_negative():
+    x = bf16(jnp.asarray([-4.0, -8.0, -20.0], jnp.float32))
+    g = np.asarray(gelu_soe(x))
+    assert np.all(np.abs(g) < 0.02), g
+
+
+def test_gelu_bounded_below():
+    """GELU's global minimum is ~-0.17; the approximation must respect it."""
+    x = bf16(np.linspace(-6, 6, 4001).astype(np.float32))
+    g = np.asarray(gelu_soe(x))
+    assert g.min() > -0.2
+
+
+def test_pallas_matches_jnp_body(rng):
+    x = bf16((rng.standard_normal(4096) * 2.0).astype(np.float32))
+    assert bool(jnp.all(gelu_pallas(x) == gelu_soe(x)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([256, 1024, 3072]),
+    scale=st.floats(0.2, 4.0),
+    terms=st.sampled_from([2, 3, 4, 5, 6]),
+    bits=st.sampled_from([8, 11, 14, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gelu_property_sweep(n, scale, terms, bits, seed):
+    r = np.random.default_rng(seed)
+    x = bf16((r.standard_normal(n) * scale).astype(np.float32))
+    g = np.asarray(gelu_soe(x, terms=terms, acc_bits=bits))
+    assert np.all(np.isfinite(g))
+    # |GELU(x)| <= |x| + small slack everywhere
+    assert np.all(np.abs(g) <= np.abs(np.asarray(x)) + 0.05)
+
+
+# --- sum-of-exponentials coefficients (appendix) ---------------------------
+
+
+def test_soe_coefficients_hit_documented_rmax():
+    x = jnp.asarray(np.linspace(0.0, C.X_CLIP, 2001).astype(np.float32))
+    q = np.asarray(ref.q_function(x), np.float64)
+    for terms, (_, _, rmax_doc) in C.SOE_COEFFS.items():
+        s = np.asarray(ref.soe_q(x, terms), np.float64)
+        rel = np.abs(s - q) / q
+        assert rel.max() < rmax_doc * 1.10, (terms, rel.max(), rmax_doc)
+
+
+def test_soe_sum_of_a_close_to_half():
+    """Eq. 7: sum(a) = 1/2 - r_max/2 for the r(0) = -r_max branch."""
+    for terms, (a, _, rmax) in C.SOE_COEFFS.items():
+        assert abs(sum(a) - 0.5) < max(0.06, rmax), (terms, sum(a))
+
+
+def test_soe_more_terms_tighter_rmax():
+    rmaxes = [C.SOE_COEFFS[t][2] for t in (2, 3, 4, 5)]
+    assert rmaxes == sorted(rmaxes, reverse=True)

@@ -1,0 +1,118 @@
+"""SoftEx softmax kernel vs exact oracle (paper Sec. V-B2, VI-A2)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.softmax import softmax_pallas, hw_recip
+from .conftest import bf16
+
+
+def test_rowsums_close_to_one(rng):
+    x = bf16((rng.standard_normal((32, 256)) * 3.0).astype(np.float32))
+    p = softmax_pallas(x)
+    s = np.asarray(p.sum(-1))
+    assert np.all(np.abs(s - 1.0) < 0.02), s  # bf16 output quantization
+
+
+def test_matches_exact_softmax(rng):
+    x = bf16((rng.standard_normal((16, 512)) * 2.0).astype(np.float32))
+    p = np.asarray(softmax_pallas(x), np.float64)
+    r = np.asarray(ref.softmax_exact(x), np.float64)
+    # Elementwise absolute error bounded by bf16 ulp of the largest prob.
+    assert np.abs(p - r).max() < 0.01
+    # Paper Sec. VI-A2: mean relative error ~0.44% on significant probs.
+    sig = r > 1e-3
+    rel = np.abs(p[sig] - r[sig]) / r[sig]
+    assert rel.mean() < 0.012, rel.mean()
+
+
+def test_better_than_exps_variant(rng):
+    """Paper: expp softmax has 3.2x lower MRE than the exps one."""
+    x = bf16((rng.standard_normal((16, 1024)) * 2.5).astype(np.float32))
+    r = np.asarray(ref.softmax_exact(x), np.float64)
+    sig = r > 1e-4
+    pp = np.asarray(softmax_pallas(x), np.float64)
+    ps = np.asarray(softmax_pallas(x, use_exps=True), np.float64)
+    mre_p = (np.abs(pp[sig] - r[sig]) / r[sig]).mean()
+    mre_s = (np.abs(ps[sig] - r[sig]) / r[sig]).mean()
+    assert mre_s > 1.5 * mre_p, (mre_s, mre_p)
+
+
+def test_shift_invariance(rng):
+    """softmax(x + c) ~= softmax(x): the max subtraction cancels common
+    offsets. Only approximate in bf16 — the add itself rounds x's low
+    mantissa bits away — so compare with a tolerance."""
+    x = bf16((rng.standard_normal((8, 128)) * 2.0).astype(np.float32))
+    p1 = np.asarray(softmax_pallas(x))
+    p2 = np.asarray(softmax_pallas(bf16(x + jnp.float32(8.0))))
+    assert np.abs(p1 - p2).max() < 0.01
+
+
+def test_outputs_in_unit_interval(rng):
+    x = bf16((rng.standard_normal((64, 128)) * 5.0).astype(np.float32))
+    p = softmax_pallas(x)
+    assert bool(jnp.all(p >= 0.0)) and bool(jnp.all(p <= 1.0))
+
+
+def test_argmax_preserved(rng):
+    x = bf16((rng.standard_normal((128, 64)) * 3.0).astype(np.float32))
+    p = softmax_pallas(x)
+    assert np.array_equal(
+        np.asarray(jnp.argmax(x, -1)), np.asarray(jnp.argmax(p, -1))
+    )
+
+
+def test_onehot_extreme_row():
+    """A row dominated by one huge score must yield ~one-hot output."""
+    x = np.full((1, 64), -30.0, np.float32)
+    x[0, 17] = 30.0
+    p = np.asarray(softmax_pallas(bf16(x)))
+    assert p[0, 17] > 0.99
+    assert p[0].sum() < 1.01
+
+
+def test_uniform_row():
+    x = np.zeros((1, 128), np.float32)
+    p = np.asarray(softmax_pallas(bf16(x)))
+    assert np.allclose(p, 1.0 / 128.0, rtol=0.01)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(1, 16),
+    cols=st.sampled_from([16, 64, 197, 256]),
+    scale=st.floats(0.1, 8.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_property_sweep(rows, cols, scale, seed):
+    r = np.random.default_rng(seed)
+    x = bf16((r.standard_normal((rows, cols)) * scale).astype(np.float32))
+    p = np.asarray(softmax_pallas(x))
+    assert np.all(np.isfinite(p))
+    assert np.all(np.abs(p.sum(-1) - 1.0) < 0.03)
+
+
+# --- Newton-Raphson reciprocal (Sec. V-B2b) --------------------------------
+
+
+def test_hw_recip_accuracy(rng):
+    d = jnp.asarray(
+        np.exp(rng.uniform(np.log(1e-6), np.log(1e6), 50_000)).astype(np.float32)
+    )
+    r = np.asarray(hw_recip(d), np.float64)
+    exact = 1.0 / np.asarray(d, np.float64)
+    rel = np.abs(r - exact) / exact
+    # Two Newton iterations: worst case ~0.39% = 1 bf16 ulp (the result is
+    # cast to bf16 before the normalization multiply, so this is exactly
+    # the precision the datapath needs — Sec. V-B2b).
+    assert rel.max() < 0.005, rel.max()
+    assert rel.mean() < 0.002
+
+
+def test_hw_recip_powers_of_two():
+    d = jnp.asarray([0.25, 0.5, 1.0, 2.0, 4.0, 1024.0], jnp.float32)
+    r = np.asarray(hw_recip(d))
+    assert np.allclose(r, 1.0 / np.asarray(d), rtol=5e-3)

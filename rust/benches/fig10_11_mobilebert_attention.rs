@@ -1,0 +1,74 @@
+//! Fig. 10 — system throughput @0.8V and energy efficiency @0.55V on
+//! MobileBERT's attention layer, SoftEx vs software softmax.
+//! Fig. 11 — runtime breakdown of the kernels inside the attention layer.
+//! Paper: up to 324 GOPS (75% of peak), 1.30 TOPS/W; sw exps >2.17x
+//! slower at large seq; glibc is 99% softmax.
+
+use softex::cluster::cores::ExpAlgo;
+use softex::coordinator::{execute_trace, ExecConfig, KernelClass};
+use softex::energy::{OP_EFFICIENCY, OP_THROUGHPUT};
+use softex::report;
+use softex::workload::trace::trace_attention_core;
+use softex::workload::{trace_model, ModelConfig};
+
+fn main() {
+    // Fig. 10: throughput/efficiency across sequence lengths
+    let mut rows = Vec::new();
+    for seq in [128usize, 256, 512] {
+        let mb = ModelConfig::mobilebert(seq);
+        let trace = trace_attention_core(&mb);
+        let hw = execute_trace(&ExecConfig::paper_accelerated(), &trace);
+        let sw = execute_trace(&ExecConfig::sw_nonlinearities(ExpAlgo::Exps), &trace);
+        rows.push(vec![
+            seq.to_string(),
+            report::f(hw.gops(&OP_THROUGHPUT), 0),
+            report::f(sw.gops(&OP_THROUGHPUT), 0),
+            report::f(hw.tops_per_w(&OP_EFFICIENCY), 2),
+            report::f(sw.tops_per_w(&OP_EFFICIENCY), 2),
+            format!("{:.2}x", sw.total_cycles() as f64 / hw.total_cycles() as f64),
+        ]);
+    }
+    println!(
+        "{}",
+        report::render_table(
+            "Fig. 10 — MobileBERT attention layer (paper: 324 GOPS, 1.30 TOPS/W @seq512)",
+            &["seq", "GOPS hw", "GOPS sw", "TOPS/W hw", "TOPS/W sw", "slowdown"],
+            &rows
+        )
+    );
+
+    // Fig. 11: kernel breakdown at seq 512
+    let mb = ModelConfig::mobilebert(512);
+    let trace = trace_attention_core(&mb);
+    let mut rows = Vec::new();
+    for (name, cfg) in [
+        ("SoftEx", ExecConfig::paper_accelerated()),
+        ("sw exps", ExecConfig::sw_nonlinearities(ExpAlgo::Exps)),
+        ("sw expp", ExecConfig::sw_nonlinearities(ExpAlgo::Expp)),
+        ("sw glibc", ExecConfig::sw_nonlinearities(ExpAlgo::Glibc)),
+    ] {
+        let m = execute_trace(&cfg, &trace);
+        rows.push(vec![
+            name.to_string(),
+            report::cycles(m.total_cycles()),
+            report::pct(m.fraction(KernelClass::MatMul)),
+            report::pct(m.fraction(KernelClass::Softmax)),
+        ]);
+    }
+    println!(
+        "{}",
+        report::render_table(
+            "Fig. 11 — attention-kernel runtime breakdown @seq512",
+            &["softmax impl", "cycles", "MatMul", "Softmax"],
+            &rows
+        )
+    );
+
+    // Sec. VII-C: full 24-layer MobileBERT
+    let full = execute_trace(&ExecConfig::paper_accelerated(), &trace_model(&mb));
+    println!(
+        "full MobileBERT: {:.0} GOPS, {:.0} ms (paper: 297 GOPS / 69% of peak, 152 ms)",
+        full.gops(&OP_THROUGHPUT),
+        full.seconds(&OP_THROUGHPUT) * 1e3
+    );
+}

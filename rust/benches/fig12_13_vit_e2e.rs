@@ -1,0 +1,54 @@
+//! Fig. 12 — ViT-base end-to-end throughput @0.8V / efficiency @0.55V.
+//! Fig. 13 — per-kernel runtime breakdown, SoftEx vs software.
+//! Paper: 310 GOPS (72% of peak), 1.58x throughput, 1.34 TOPS/W (1.42x),
+//! 113 ms; with sw nonlinearities GELU is the top bottleneck (28.8%).
+
+use softex::cluster::cores::ExpAlgo;
+use softex::coordinator::{execute_trace, ExecConfig, KernelClass};
+use softex::energy::{OP_EFFICIENCY, OP_THROUGHPUT};
+use softex::report;
+use softex::workload::{trace_model, ModelConfig};
+
+fn main() {
+    let vit = ModelConfig::vit_base();
+    let trace = trace_model(&vit);
+
+    let configs = [
+        ("SoftEx", ExecConfig::paper_accelerated()),
+        ("sw exps", ExecConfig::sw_nonlinearities(ExpAlgo::Exps)),
+        ("sw expp", ExecConfig::sw_nonlinearities(ExpAlgo::Expp)),
+        ("sw glibc", ExecConfig::sw_nonlinearities(ExpAlgo::Glibc)),
+    ];
+    let mut rows = Vec::new();
+    let mut metrics = Vec::new();
+    for (name, cfg) in &configs {
+        let m = execute_trace(cfg, &trace);
+        rows.push(vec![
+            name.to_string(),
+            report::f(m.seconds(&OP_THROUGHPUT) * 1e3, 1),
+            report::f(m.gops(&OP_THROUGHPUT), 0),
+            report::f(m.tops_per_w(&OP_EFFICIENCY), 2),
+            report::pct(m.fraction(KernelClass::MatMul)),
+            report::pct(m.fraction(KernelClass::Softmax)),
+            report::pct(m.fraction(KernelClass::Gelu)),
+            report::pct(m.fraction(KernelClass::Other)),
+        ]);
+        metrics.push(m);
+    }
+    println!(
+        "{}",
+        report::render_table(
+            "Fig. 12/13 — ViT-base end to end",
+            &["config", "ms", "GOPS", "TOPS/W", "MatMul", "Softmax", "GELU", "Other"],
+            &rows
+        )
+    );
+    let speedup = metrics[1].total_cycles() as f64 / metrics[0].total_cycles() as f64;
+    let eff = metrics[0].tops_per_w(&OP_EFFICIENCY) / metrics[1].tops_per_w(&OP_EFFICIENCY);
+    println!(
+        "SoftEx vs sw exps: {speedup:.2}x throughput (paper 1.58x), {eff:.2}x efficiency (paper 1.42x)"
+    );
+    println!(
+        "paper: 310 GOPS @0.8V (72% of 430 peak), 1.34 TOPS/W @0.55V, 113 ms; sw GELU 28.8% / softmax 15.1%"
+    );
+}

@@ -1,0 +1,51 @@
+//! Fig. 8 — SoftEx latency on 2048-long vectors (a: softmax, b: sum of
+//! exponentials) and area (c), sweeping the lane count 4..64.
+//! Paper shape: 4->8 lanes nearly doubles performance for +50% area;
+//! 64 lanes is ~2x the area of 32 for only ~1.5x softmax speed, while
+//! the sum of exponentials keeps scaling linearly.
+
+use softex::report;
+use softex::softex::phys::softex_area_mm2;
+use softex::softex::timing::{gelu_cycles, softmax_cycles};
+use softex::softex::SoftExConfig;
+
+fn main() {
+    let rows_n = 64; // rows of 2048-long vectors, as in the paper
+    let len = 2048;
+    let mut rows_out = Vec::new();
+    let mut prev: Option<(u64, u64, f64)> = None;
+    for lanes in [4usize, 8, 16, 32, 64] {
+        let cfg = SoftExConfig::with_lanes(lanes);
+        let sm = softmax_cycles(&cfg, rows_n, len, 0).total();
+        let soe = gelu_cycles(&cfg, rows_n * len);
+        let area = softex_area_mm2(&cfg);
+        let rel = prev
+            .map(|(psm, psoe, pa)| {
+                format!(
+                    "{:.2}x/{:.2}x/{:.2}x",
+                    psm as f64 / sm as f64,
+                    psoe as f64 / soe as f64,
+                    area / pa
+                )
+            })
+            .unwrap_or_else(|| "-".into());
+        rows_out.push(vec![
+            lanes.to_string(),
+            report::cycles(sm),
+            report::cycles(soe),
+            format!("{area:.4}"),
+            rel,
+        ]);
+        prev = Some((sm, soe, area));
+    }
+    println!(
+        "{}",
+        report::render_table(
+            "Fig. 8 — lane sweep on 2048-long vectors (softmax, sum-of-exp, area)",
+            &["lanes", "softmax", "sum-of-exp", "area mm^2", "gain vs prev (sm/soe/area)"],
+            &rows_out
+        )
+    );
+    println!("paper: 4->8 ~2x perf for 1.5x area; 32->64 ~1.5x softmax for ~1.9x area;");
+    println!("       16 lanes is the balanced choice (the paper's configuration).");
+}

@@ -1,0 +1,56 @@
+//! Fig. 9 — GELU on 2^14 elements: software-only (sigmoid) vs
+//! SoftEx-assisted (4-term sum of exponentials), runtime breakdown.
+//! Paper: 5.11x speedup / 5.29x energy vs sigmoid+exps software;
+//! 6.77x / 7.02x vs expp software.
+
+use softex::cluster::cores::{gelu_assisted_core_cycles, gelu_sw_cycles, GeluAlgo};
+use softex::energy::{energy_j, ActivityMode, OP_THROUGHPUT};
+use softex::report;
+use softex::softex::timing::gelu_cycles;
+use softex::softex::SoftExConfig;
+
+fn main() {
+    let n = 1usize << 14;
+    let cfg = SoftExConfig::default();
+    let hw_softex = gelu_cycles(&cfg, n);
+    let hw_cores = gelu_assisted_core_cycles(n);
+    let assisted = hw_softex + hw_cores;
+    let e_assisted = energy_j(ActivityMode::GeluHw, hw_softex, &OP_THROUGHPUT)
+        + energy_j(ActivityMode::CoresElementwise, hw_cores, &OP_THROUGHPUT);
+
+    let mut rows = vec![vec![
+        "SoftEx-assisted".to_string(),
+        report::cycles(assisted),
+        format!(
+            "SoftEx {} ({:.0}%), cores {} ({:.0}%)",
+            report::cycles(hw_softex),
+            100.0 * hw_softex as f64 / assisted as f64,
+            report::cycles(hw_cores),
+            100.0 * hw_cores as f64 / assisted as f64
+        ),
+        "1.00x / 1.00x".to_string(),
+    ]];
+    for (name, algo) in [
+        ("sw sigmoid (exps)", GeluAlgo::Sigmoid),
+        ("sw tanh", GeluAlgo::Tanh),
+        ("sw sum-of-exp (expp)", GeluAlgo::SoeExpp),
+    ] {
+        let c = gelu_sw_cycles(algo, n);
+        let e = energy_j(ActivityMode::GeluSw, c, &OP_THROUGHPUT);
+        rows.push(vec![
+            name.to_string(),
+            report::cycles(c),
+            "cores 100%".to_string(),
+            format!("{:.2}x / {:.2}x", c as f64 / assisted as f64, e / e_assisted),
+        ]);
+    }
+    println!(
+        "{}",
+        report::render_table(
+            "Fig. 9 — GELU on 2^14 elements (speedup/energy of SoftEx over each)",
+            &["implementation", "cycles", "breakdown", "time x / energy x"],
+            &rows
+        )
+    );
+    println!("paper: 5.11x/5.29x vs sigmoid sw; 6.77x/7.02x vs expp sw.");
+}

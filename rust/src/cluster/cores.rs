@@ -1,0 +1,212 @@
+//! Software-baseline cycle models for the 8 RISC-V cores.
+//!
+//! The paper's Fig. 7/9 software baselines run parallelized across the 8
+//! cores. We model their cost per element, calibrated on the paper's own
+//! anchor points (DESIGN.md §5):
+//!
+//! * exponential cost inside softmax at seq 128 (512 rows x 128 elems =
+//!   65.5k elements): glibc 15 Mcycles, exps 51.2 kcycles, expp 92.7
+//!   kcycles => 229 / 0.781 / 1.414 cycles/element on 8 cores;
+//! * total softmax sw cost: SoftEx is 6.2x faster at seq 128 and 10.8x at
+//!   seq 512 => the non-exp part grows with the row length (reduction
+//!   tree + online renormalization work): c_rest(L) = 0.385*log2(L)-2.14;
+//! * GELU: sigmoid-approx 7.2 cycles/element (from Fig. 13's 28.8% GELU
+//!   share on ViT), expp sum-of-exp in sw 9.5 c/e (Fig. 9's 6.77x);
+//! * generic bf16 elementwise op (ld + op + st): ~3.1 cycles/core.
+
+use super::NUM_CORES;
+
+/// Which exponential algorithm the software softmax uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExpAlgo {
+    Glibc,
+    /// Schraudolph's method (exps) — fastest, least accurate.
+    Exps,
+    /// The paper's corrected method (expp) in software.
+    Expp,
+}
+
+impl ExpAlgo {
+    /// Exponential cost in cycles per element, parallelized on 8 cores.
+    pub fn cycles_per_elem(self) -> f64 {
+        match self {
+            // 15 Mcycles / 65 536 elements
+            ExpAlgo::Glibc => 228.9,
+            // 51.2 kcycles / 65 536
+            ExpAlgo::Exps => 0.781,
+            // 92.7 kcycles / 65 536
+            ExpAlgo::Expp => 1.414,
+        }
+    }
+}
+
+/// Which GELU approximation the software baseline uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GeluAlgo {
+    /// x * sigmoid(1.702 x) with exps (Eq. 5) — the paper's sw baseline.
+    Sigmoid,
+    /// The tanh form (Eq. 4).
+    Tanh,
+    /// The sum-of-exponentials algorithm run purely in software with expp.
+    SoeExpp,
+}
+
+impl GeluAlgo {
+    /// Cycles per element on 8 cores.
+    pub fn cycles_per_elem(self) -> f64 {
+        match self {
+            GeluAlgo::Sigmoid => 7.2,
+            GeluAlgo::Tanh => 9.8,  // extra cube + tanh vs one sigmoid
+            GeluAlgo::SoeExpp => 9.5, // Fig. 9: 6.77x vs assisted 1.41 c/e
+        }
+    }
+}
+
+/// Generic bf16 elementwise op (load + fp op + store) per core, cycles.
+pub const CORE_OP_CYCLES: f64 = 3.1;
+
+/// Per-element cost of the non-exponential softmax work (max search,
+/// subtract, accumulate, normalize) on 8 cores, as a function of row
+/// length. Fitted on the Fig. 7 seq-128 and seq-512 anchors.
+pub fn softmax_rest_cycles_per_elem(len: usize) -> f64 {
+    (0.385 * (len as f64).log2() - 2.14).max(0.30)
+}
+
+/// Total software softmax cycles over `rows` rows of `len` elements.
+pub fn softmax_sw_cycles(algo: ExpAlgo, rows: usize, len: usize) -> u64 {
+    let elems = (rows * len) as f64;
+    (elems * (algo.cycles_per_elem() + softmax_rest_cycles_per_elem(len))).ceil() as u64
+}
+
+/// Total software GELU cycles over `n` elements.
+pub fn gelu_sw_cycles(algo: GeluAlgo, n: usize) -> u64 {
+    (n as f64 * algo.cycles_per_elem()).ceil() as u64
+}
+
+/// Core-side cycles of the SoftEx-*assisted* GELU (steps 1, 3, 4 of
+/// Algorithm 1: square, complement, multiply — 3 bf16 ops/element).
+pub fn gelu_assisted_core_cycles(n: usize) -> u64 {
+    (n as f64 * 3.0 * CORE_OP_CYCLES / NUM_CORES as f64).ceil() as u64
+}
+
+/// Elementwise kernels on the cores (LayerNorm, residual, bias), cycles
+/// for `n` elements with `ops_per_elem` fp ops each.
+pub fn elementwise_cycles(n: usize, ops_per_elem: f64) -> u64 {
+    (n as f64 * ops_per_elem * CORE_OP_CYCLES / NUM_CORES as f64).ceil() as u64
+}
+
+/// 8-core software matmul throughput in MACs/cycle (Fig. 1 baseline):
+/// ~2.7 cycles per bf16 FMA per core (load/load/fma + loop overhead on
+/// RV32 without SIMD), calibrated so a 12x4 RedMulE yields the paper's
+/// 12.3x whole-layer speedup.
+pub const SW_MATMUL_MACS_PER_CYCLE: f64 = 3.0;
+
+/// Software matmul cycles for an MxKxN problem.
+pub fn matmul_sw_cycles(m: usize, k: usize, n: usize) -> u64 {
+    ((m as u64 * k as u64 * n as u64) as f64 / SW_MATMUL_MACS_PER_CYCLE).ceil() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softex::{timing::softmax_cycles, SoftExConfig};
+
+    #[test]
+    fn exp_cost_ordering() {
+        assert!(ExpAlgo::Exps.cycles_per_elem() < ExpAlgo::Expp.cycles_per_elem());
+        assert!(ExpAlgo::Expp.cycles_per_elem() < ExpAlgo::Glibc.cycles_per_elem());
+    }
+
+    #[test]
+    fn anchor_exp_cycles_seq128() {
+        // 512 x 128 elements: exps ~51.2k, expp ~92.7k, glibc ~15M
+        let elems = 512.0 * 128.0;
+        assert!((elems * ExpAlgo::Exps.cycles_per_elem() - 51_200.0).abs() < 500.0);
+        assert!((elems * ExpAlgo::Expp.cycles_per_elem() - 92_700.0).abs() < 500.0);
+        assert!((elems * ExpAlgo::Glibc.cycles_per_elem() - 15.0e6).abs() < 2e5);
+    }
+
+    #[test]
+    fn fig7_speedup_seq128_about_6x() {
+        // Paper: SoftEx 6.2x faster than exps softmax at seq 128
+        let sw = softmax_sw_cycles(ExpAlgo::Exps, 512, 128);
+        let hw = softmax_cycles(&SoftExConfig::default(), 512, 128, 0).total();
+        let speedup = sw as f64 / hw as f64;
+        assert!((5.0..7.5).contains(&speedup), "{speedup}");
+    }
+
+    #[test]
+    fn fig7_speedup_seq512_about_11x() {
+        // Paper: 10.8x at seq 512
+        let sw = softmax_sw_cycles(ExpAlgo::Exps, 2048, 512);
+        let hw = softmax_cycles(&SoftExConfig::default(), 2048, 512, 0).total();
+        let speedup = sw as f64 / hw as f64;
+        assert!((9.0..12.5).contains(&speedup), "{speedup}");
+    }
+
+    #[test]
+    fn expp_softmax_only_about_31pct_slower_than_exps() {
+        // Sec. VII-B-c: "expp results in a softmax only 31% slower"
+        for (rows, len) in [(512usize, 128usize), (2048, 512)] {
+            let p = softmax_sw_cycles(ExpAlgo::Expp, rows, len) as f64;
+            let s = softmax_sw_cycles(ExpAlgo::Exps, rows, len) as f64;
+            let over = p / s - 1.0;
+            assert!((0.15..0.50).contains(&over), "{over}");
+        }
+    }
+
+    #[test]
+    fn glibc_softmax_is_exp_dominated() {
+        // Fig. 11 note: "in the glibc case runtime is 99% softmax"
+        let total = softmax_sw_cycles(ExpAlgo::Glibc, 512, 128) as f64;
+        let exp_part = 512.0 * 128.0 * ExpAlgo::Glibc.cycles_per_elem();
+        assert!(exp_part / total > 0.98);
+    }
+
+    #[test]
+    fn fig9_assisted_gelu_speedup_about_5x() {
+        // Paper: 5.11x vs sigmoid sw on 2^14 elements
+        let n = 1 << 14;
+        let sw = gelu_sw_cycles(GeluAlgo::Sigmoid, n) as f64;
+        let cfg = SoftExConfig::default();
+        let assisted = (crate::softex::timing::gelu_cycles(&cfg, n)
+            + gelu_assisted_core_cycles(n)) as f64;
+        let speedup = sw / assisted;
+        assert!((4.2..6.2).contains(&speedup), "{speedup}");
+    }
+
+    #[test]
+    fn fig9_expp_sw_gelu_speedup_about_6_8x() {
+        // Paper: 6.77x when the sw baseline uses expp sum-of-exp
+        let n = 1 << 14;
+        let sw = gelu_sw_cycles(GeluAlgo::SoeExpp, n) as f64;
+        let cfg = SoftExConfig::default();
+        let assisted = (crate::softex::timing::gelu_cycles(&cfg, n)
+            + gelu_assisted_core_cycles(n)) as f64;
+        let speedup = sw / assisted;
+        assert!((5.5..8.0).contains(&speedup), "{speedup}");
+    }
+
+    #[test]
+    fn rest_cost_grows_with_row_length() {
+        assert!(
+            softmax_rest_cycles_per_elem(512) > softmax_rest_cycles_per_elem(128)
+        );
+        // floor kicks in for short rows
+        assert_eq!(softmax_rest_cycles_per_elem(16), 0.30);
+    }
+
+    #[test]
+    fn sw_matmul_much_slower_than_redmule() {
+        // Fig. 1: 12x4 RedMulE gives ~12.3x over 8-core software
+        let sw = matmul_sw_cycles(197, 768, 768);
+        let hw = crate::redmule::matmul_cycles(
+            &crate::redmule::RedMuleConfig::new(12, 4),
+            197,
+            768,
+            768,
+        );
+        let speedup = sw as f64 / hw as f64;
+        assert!((10.0..17.0).contains(&speedup), "{speedup}");
+    }
+}

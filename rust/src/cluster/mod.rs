@@ -1,0 +1,18 @@
+//! The PULP cluster substrate (paper Sec. V-A): 8 RISC-V cores with
+//! private BF16/FP32 FPUs, a 32-bank / 256 KiB TCDM, an instruction
+//! cache, one RedMulE tensor unit and one SoftEx instance.
+//!
+//! * [`cores`] — cycle models of the *software* baselines the paper
+//!   benchmarks against (glibc / Schraudolph / expp softmax, sigmoid /
+//!   tanh / sum-of-exp GELU, 8-core matmul);
+//! * [`tcdm`]  — the banked scratchpad and its conflict model.
+
+pub mod cores;
+pub mod tcdm;
+
+/// Number of RISC-V cores in the cluster configuration under study.
+pub const NUM_CORES: usize = 8;
+/// TCDM capacity in bytes (256 KiB across 32 banks).
+pub const TCDM_BYTES: usize = 256 * 1024;
+/// Number of TCDM banks.
+pub const TCDM_BANKS: usize = 32;

@@ -1,0 +1,134 @@
+//! TCDM: the 256 KiB, 32-bank tightly-coupled data memory (Sec. V-A).
+//!
+//! SoftEx and RedMulE fetch through request/grant ports that can conflict
+//! on banks (Sec. V-B1). We model the expected slowdown of `r` concurrent
+//! requestors issuing one word-wide request per cycle to uniformly random
+//! banks: a bank serving k>=1 requests delays k-1 of them, so the
+//! expected service factor is E[max outstanding]/1. For word-interleaved
+//! *sequential* streams (the streamer's access pattern) conflicts only
+//! happen across engines, captured by `stream_conflict_factor`.
+
+use super::TCDM_BANKS;
+
+/// Expected cycles per access for `r` requestors hitting `b` banks with
+/// uniformly random addresses (closed form for the expected number of
+/// requests landing on an occupied bank).
+pub fn random_conflict_factor(requestors: usize, banks: usize) -> f64 {
+    if requestors <= 1 {
+        return 1.0;
+    }
+    let r = requestors as f64;
+    let b = banks as f64;
+    // expected number of distinct banks hit: b(1 - (1-1/b)^r);
+    // throughput = distinct banks served per cycle.
+    let served = b * (1.0 - (1.0 - 1.0 / b).powf(r));
+    r / served
+}
+
+/// Conflict factor for word-interleaved sequential streams: `streams`
+/// engines each sweeping consecutive addresses. Banks rotate, so two
+/// streams conflict only when their phases align: with random phases the
+/// collision probability per cycle is (streams-1)/banks.
+pub fn stream_conflict_factor(streams: usize) -> f64 {
+    1.0 + (streams.saturating_sub(1)) as f64 / TCDM_BANKS as f64
+}
+
+/// A bump-allocator view of the TCDM for double-buffering plans: tracks
+/// whether a working set fits in the scratchpad.
+#[derive(Clone, Debug)]
+pub struct TcdmAllocator {
+    capacity: usize,
+    used: usize,
+}
+
+impl TcdmAllocator {
+    pub fn new() -> Self {
+        Self { capacity: super::TCDM_BYTES, used: 0 }
+    }
+
+    /// Reserve `bytes`; Err if the working set exceeds the scratchpad.
+    pub fn alloc(&mut self, bytes: usize) -> Result<(), String> {
+        if self.used + bytes > self.capacity {
+            return Err(format!(
+                "TCDM overflow: {} + {} > {}",
+                self.used, bytes, self.capacity
+            ));
+        }
+        self.used += bytes;
+        Ok(())
+    }
+
+    pub fn free(&mut self, bytes: usize) {
+        self.used = self.used.saturating_sub(bytes);
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    pub fn available(&self) -> usize {
+        self.capacity - self.used
+    }
+}
+
+impl Default for TcdmAllocator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_requestor_no_conflicts() {
+        assert_eq!(random_conflict_factor(1, 32), 1.0);
+        assert_eq!(stream_conflict_factor(1), 1.0);
+    }
+
+    #[test]
+    fn conflict_factor_grows_with_requestors() {
+        let f8 = random_conflict_factor(8, TCDM_BANKS);
+        let f16 = random_conflict_factor(16, TCDM_BANKS);
+        assert!(f8 > 1.0 && f16 > f8, "{f8} {f16}");
+        // 8 requestors on 32 banks: ~12% slowdown territory
+        assert!((1.05..1.25).contains(&f8), "{f8}");
+    }
+
+    #[test]
+    fn more_banks_fewer_conflicts() {
+        assert!(random_conflict_factor(8, 64) < random_conflict_factor(8, 16));
+    }
+
+    #[test]
+    fn stream_conflicts_are_mild() {
+        // SoftEx + RedMulE + cores DMA: 3 streams on 32 banks
+        let f = stream_conflict_factor(3);
+        assert!((1.0..1.10).contains(&f), "{f}");
+    }
+
+    #[test]
+    fn allocator_tracks_capacity() {
+        let mut a = TcdmAllocator::new();
+        assert!(a.alloc(128 * 1024).is_ok());
+        assert!(a.alloc(128 * 1024).is_ok());
+        assert!(a.alloc(1).is_err());
+        a.free(64 * 1024);
+        assert!(a.alloc(64 * 1024).is_ok());
+        assert_eq!(a.available(), 0);
+    }
+
+    #[test]
+    fn mobilebert_attention_tile_fits_with_double_buffering() {
+        // 2 x (three 128x128 bf16 tiles + scores tile) must fit in 256 KiB
+        let mut a = TcdmAllocator::new();
+        let tile = 128 * 128 * 2;
+        for _ in 0..2 {
+            for _ in 0..4 {
+                a.alloc(tile).unwrap();
+            }
+        }
+        assert!(a.used() <= super::super::TCDM_BYTES);
+    }
+}

@@ -1,0 +1,122 @@
+//! Execution metrics: per-kernel-class cycles, energy, GOPS, TOPS/W.
+
+use std::collections::BTreeMap;
+
+use crate::energy::{cluster_power_w, ActivityMode, OP_EFFICIENCY, OP_THROUGHPUT};
+use crate::softex::phys::OperatingPoint;
+
+/// Kernel classes for the runtime-breakdown figures (Fig. 11/13).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum KernelClass {
+    MatMul,
+    Softmax,
+    Gelu,
+    Other,
+}
+
+impl KernelClass {
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelClass::MatMul => "MatMul",
+            KernelClass::Softmax => "Softmax",
+            KernelClass::Gelu => "GELU",
+            KernelClass::Other => "Other",
+        }
+    }
+}
+
+/// Aggregated result of executing a trace.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    /// Cycles per kernel class.
+    pub cycles: BTreeMap<KernelClass, u64>,
+    /// Energy-weighted cycles: (mode, cycles) pairs for power accounting.
+    pub mode_cycles: Vec<(ActivityMode, u64)>,
+    /// Total countable OPs (matmul 2/MAC + nonlinearity elements).
+    pub total_ops: u64,
+}
+
+impl Metrics {
+    pub fn add(&mut self, class: KernelClass, mode: ActivityMode, cycles: u64, ops: u64) {
+        *self.cycles.entry(class).or_insert(0) += cycles;
+        self.mode_cycles.push((mode, cycles));
+        self.total_ops += ops;
+    }
+
+    pub fn total_cycles(&self) -> u64 {
+        self.cycles.values().sum()
+    }
+
+    /// Fraction of total runtime spent in a class.
+    pub fn fraction(&self, class: KernelClass) -> f64 {
+        *self.cycles.get(&class).unwrap_or(&0) as f64 / self.total_cycles() as f64
+    }
+
+    /// Wall-clock seconds at an operating point.
+    pub fn seconds(&self, op: &OperatingPoint) -> f64 {
+        self.total_cycles() as f64 / op.freq_hz
+    }
+
+    /// Average throughput in GOPS at an operating point.
+    pub fn gops(&self, op: &OperatingPoint) -> f64 {
+        self.total_ops as f64 / self.seconds(op) / 1e9
+    }
+
+    /// Total energy in joules at an operating point.
+    pub fn energy_j(&self, op: &OperatingPoint) -> f64 {
+        self.mode_cycles
+            .iter()
+            .map(|(m, c)| cluster_power_w(*m, op) * *c as f64 / op.freq_hz)
+            .sum()
+    }
+
+    /// Energy efficiency in TOPS/W at an operating point.
+    pub fn tops_per_w(&self, op: &OperatingPoint) -> f64 {
+        self.total_ops as f64 / 1e12 / self.energy_j(op)
+    }
+
+    /// Convenience: (GOPS @0.8 V, TOPS/W @0.55 V), the paper's two
+    /// headline axes.
+    pub fn headline(&self) -> (f64, f64) {
+        (self.gops(&OP_THROUGHPUT), self.tops_per_w(&OP_EFFICIENCY))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_adds_up() {
+        let mut m = Metrics::default();
+        m.add(KernelClass::MatMul, ActivityMode::MatMul, 1000, 384_000);
+        m.add(KernelClass::Softmax, ActivityMode::SoftmaxHw, 100, 1000);
+        assert_eq!(m.total_cycles(), 1100);
+        assert_eq!(m.total_ops, 385_000);
+        assert!((m.fraction(KernelClass::MatMul) - 1000.0 / 1100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gops_at_peak_cycles() {
+        // 384 OPs/cycle at 1.12 GHz = 430 GOPS
+        let mut m = Metrics::default();
+        m.add(KernelClass::MatMul, ActivityMode::MatMul, 1_000_000, 384_000_000);
+        assert!((m.gops(&OP_THROUGHPUT) - 430.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn energy_uses_mode_powers() {
+        let mut a = Metrics::default();
+        a.add(KernelClass::Softmax, ActivityMode::SoftmaxHw, 1000, 1000);
+        let mut b = Metrics::default();
+        b.add(KernelClass::Softmax, ActivityMode::SoftmaxSw, 1000, 1000);
+        assert!(b.energy_j(&OP_THROUGHPUT) > 2.0 * a.energy_j(&OP_THROUGHPUT));
+    }
+
+    #[test]
+    fn efficiency_point_is_more_efficient() {
+        let mut m = Metrics::default();
+        m.add(KernelClass::MatMul, ActivityMode::MatMul, 1_000_000, 384_000_000);
+        assert!(m.tops_per_w(&OP_EFFICIENCY) > m.tops_per_w(&OP_THROUGHPUT));
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator: maps transformer op traces onto the cluster's engines
+//! and produces the cycle/energy/throughput metrics of Sec. VII.
+//!
+//! The paper's contribution at this level is the heterogeneous mapping
+//! itself — MatMuls on RedMulE, nonlinearities on SoftEx (or the cores,
+//! for the software baselines), elementwise glue on the cores — under
+//! double-buffered DMA so memory latency is hidden (Sec. VII-C: "under
+//! the assumption of sufficient memory bandwidth ... using double
+//! buffering to hide the memory-related latencies").
+
+pub mod exec;
+pub mod metrics;
+pub mod schedule;
+
+pub use exec::execute_trace;
+pub use metrics::{KernelClass, Metrics};
+pub use schedule::{EngineChoice, ExecConfig};

@@ -1,0 +1,90 @@
+//! Engine selection policy: which unit runs each kernel class.
+
+use crate::cluster::cores::{ExpAlgo, GeluAlgo};
+use crate::redmule::RedMuleConfig;
+use crate::softex::SoftExConfig;
+
+/// Where a nonlinearity runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineChoice {
+    /// On the SoftEx accelerator.
+    SoftEx,
+    /// In software on the 8 cores.
+    Cores,
+}
+
+/// Full execution configuration for a trace.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecConfig {
+    /// Tensor unit geometry; `None` = software matmul on the cores
+    /// (the Fig. 1 leftmost bar).
+    pub redmule: Option<RedMuleConfig>,
+    pub softex: SoftExConfig,
+    /// Softmax engine and, if on cores, the exponential algorithm.
+    pub softmax_engine: EngineChoice,
+    pub softmax_sw_algo: ExpAlgo,
+    /// GELU engine and, if on cores, the approximation.
+    pub gelu_engine: EngineChoice,
+    pub gelu_sw_algo: GeluAlgo,
+}
+
+impl ExecConfig {
+    /// The paper's full configuration: RedMulE 24x8 + SoftEx for both
+    /// nonlinearities.
+    pub fn paper_accelerated() -> Self {
+        Self {
+            redmule: Some(RedMuleConfig::default()),
+            softex: SoftExConfig::default(),
+            softmax_engine: EngineChoice::SoftEx,
+            softmax_sw_algo: ExpAlgo::Exps,
+            gelu_engine: EngineChoice::SoftEx,
+            gelu_sw_algo: GeluAlgo::Sigmoid,
+        }
+    }
+
+    /// The software-nonlinearity baseline (RedMulE for matmuls, exps
+    /// softmax + sigmoid GELU on the cores).
+    pub fn sw_nonlinearities(algo: ExpAlgo) -> Self {
+        Self {
+            softmax_engine: EngineChoice::Cores,
+            softmax_sw_algo: algo,
+            gelu_engine: EngineChoice::Cores,
+            gelu_sw_algo: GeluAlgo::Sigmoid,
+            ..Self::paper_accelerated()
+        }
+    }
+
+    /// Everything in software on the 8 cores (Fig. 1 leftmost bar).
+    pub fn all_software() -> Self {
+        Self {
+            redmule: None,
+            ..Self::sw_nonlinearities(ExpAlgo::Exps)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_uses_accelerators() {
+        let c = ExecConfig::paper_accelerated();
+        assert!(c.redmule.is_some());
+        assert_eq!(c.softmax_engine, EngineChoice::SoftEx);
+        assert_eq!(c.gelu_engine, EngineChoice::SoftEx);
+    }
+
+    #[test]
+    fn sw_baseline_keeps_tensor_unit() {
+        let c = ExecConfig::sw_nonlinearities(ExpAlgo::Glibc);
+        assert!(c.redmule.is_some());
+        assert_eq!(c.softmax_engine, EngineChoice::Cores);
+        assert_eq!(c.softmax_sw_algo, ExpAlgo::Glibc);
+    }
+
+    #[test]
+    fn all_software_has_no_redmule() {
+        assert!(ExecConfig::all_software().redmule.is_none());
+    }
+}

@@ -1,0 +1,215 @@
+//! expp: Schraudolph + polynomial mantissa correction (paper Sec. IV,
+//! Fig. 2).
+//!
+//! The `(1 + frac(x'))` factor of Schraudolph's method approximates
+//! `2^frac(x')`; expp replaces it with `(1 + P(frac(x')))` where P is one
+//! of two second-order polynomials in the hardware-friendly `a*x*(x+b)`
+//! form, selected by the MSB of the fraction:
+//!
+//!   P(x) = alpha * x * (x + gamma1)              x in [0, 0.5)
+//!   P(x) = not(beta * not(x) * (x + gamma2))     x in [0.5, 1)
+//!
+//! Constants: alpha = 7/32, beta = 7/16 (the paper's values); gamma1 =
+//! 3.25 (paper: 3.296875 — re-optimized for this datapath's 6 guard bits
+//! and round-to-nearest shifts, see DESIGN.md and coeffs.py); gamma2 =
+//! 2.171875 (paper's value). Everything below is integer arithmetic on
+//! the FRAC_BITS-wide fraction, mirroring `python/compile/kernels/expp.py`
+//! operation for operation.
+
+use crate::num::Bf16;
+
+use super::schraudolph::{assemble, split};
+use super::{FRAC_BITS, GUARD_BITS};
+
+/// alpha = ALPHA_NUM / 2^ALPHA_SHIFT = 7/32
+pub const ALPHA_NUM: i64 = 7;
+pub const ALPHA_SHIFT: u32 = 5;
+/// beta = BETA_NUM / 2^BETA_SHIFT = 7/16
+pub const BETA_NUM: i64 = 7;
+pub const BETA_SHIFT: u32 = 4;
+/// gamma1 * 2^FRAC_BITS (gamma1 = 3.25)
+pub const GAMMA1_FXP: i64 = 26624;
+/// gamma2 * 2^FRAC_BITS (gamma2 = 2.171875)
+pub const GAMMA2_FXP: i64 = 17792;
+
+const MASK: i64 = (1 << FRAC_BITS) - 1;
+const HALF: i64 = 1 << (FRAC_BITS - 1);
+
+/// The polynomial correction on the raw fraction: returns P(f) scaled to
+/// FRAC_BITS fractional bits, before the final rounding to 7 bits.
+#[inline]
+pub fn correct_fraction(f: i64) -> i64 {
+    debug_assert!((0..=MASK).contains(&f));
+    let p = if f < HALF {
+        (ALPHA_NUM * f * (f + GAMMA1_FXP) + (1 << (ALPHA_SHIFT + FRAC_BITS - 1)))
+            >> (ALPHA_SHIFT + FRAC_BITS)
+    } else {
+        let nf = MASK - f;
+        MASK - ((BETA_NUM * nf * (f + GAMMA2_FXP) + (1 << (BETA_SHIFT + FRAC_BITS - 1)))
+            >> (BETA_SHIFT + FRAC_BITS))
+    };
+    p.clamp(0, MASK)
+}
+
+/// The expp approximate exponential on a BF16 value.
+pub fn expp(x: Bf16) -> Bf16 {
+    if x.is_nan() {
+        return x;
+    }
+    if x.is_infinite() {
+        return if x.sign() { Bf16::ZERO } else { Bf16::INFINITY };
+    }
+    let (e_int, f) = split(x);
+    let p = correct_fraction(f as i64);
+    let p7 = ((p + (1 << (GUARD_BITS - 1))) >> GUARD_BITS) as i32; // RNE-ish
+    assemble(e_int, p7)
+}
+
+/// expp over a slice of f32 values (bf16-rounded on entry), the form the
+/// simulator's datapath uses.
+pub fn expp_slice(xs: &[f32]) -> Vec<f32> {
+    xs.iter().map(|&x| expp(Bf16::from_f32(x)).to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expp::glibc::exp_accurate;
+    use crate::prop::forall;
+
+    fn expp_f(x: f32) -> f32 {
+        expp(Bf16::from_f32(x)).to_f32()
+    }
+
+    #[test]
+    fn exact_at_zero() {
+        assert_eq!(expp_f(0.0), 1.0);
+    }
+
+    #[test]
+    fn near_e_at_one() {
+        let y = expp_f(1.0);
+        assert!(((y - std::f32::consts::E) / std::f32::consts::E).abs() < 0.006);
+    }
+
+    #[test]
+    fn error_bounds_match_design_doc() {
+        // DESIGN.md: MRE <= 0.20%, max <= 0.60% over the bf16-normal range
+        let mut rng = crate::rng::Xoshiro256::new(0xE4B);
+        let mut sum = 0.0f64;
+        let mut max: f64 = 0.0;
+        let mut n = 0u64;
+        for _ in 0..200_000 {
+            let x = Bf16::from_f32(rng.uniform_range(-87.0, 88.0) as f32);
+            let r = (x.to_f32() as f64).exp();
+            if !(1.2e-38..3.3e38).contains(&r) {
+                continue;
+            }
+            let y = expp(x).to_f32() as f64;
+            let rel = ((y - r) / r).abs();
+            sum += rel;
+            max = max.max(rel);
+            n += 1;
+        }
+        let mre = sum / n as f64;
+        assert!(mre < 0.0020, "MRE {mre}");
+        assert!(max < 0.0060, "max {max}");
+    }
+
+    #[test]
+    fn much_better_than_schraudolph() {
+        // Paper: 13x lower MRE than exps. Require >= 8x for robustness.
+        use crate::expp::schraudolph::exps;
+        let mut rng = crate::rng::Xoshiro256::new(0xE4C);
+        let (mut se, mut sp) = (0.0f64, 0.0f64);
+        for _ in 0..100_000 {
+            let x = Bf16::from_f32(rng.uniform_range(-80.0, 80.0) as f32);
+            let r = (x.to_f32() as f64).exp();
+            if !(1.2e-38..3.3e38).contains(&r) {
+                continue;
+            }
+            se += ((exps(x).to_f32() as f64 - r) / r).abs();
+            sp += ((expp(x).to_f32() as f64 - r) / r).abs();
+        }
+        assert!(se / sp > 8.0, "ratio {}", se / sp);
+    }
+
+    #[test]
+    fn monotone_nondecreasing_over_bf16_grid() {
+        // enumerate every finite bf16 value in [-20, 20], sorted
+        let mut vals: Vec<f32> = (0..=u16::MAX)
+            .map(|b| Bf16::from_bits(b))
+            .filter(|b| b.is_finite() && !b.is_nan())
+            .map(|b| b.to_f32())
+            .filter(|v| (-20.0..=20.0).contains(v))
+            .collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prev = -1.0f32;
+        for x in vals {
+            let y = expp(Bf16::from_f32(x)).to_f32();
+            assert!(y >= prev, "x={x} y={y} prev={prev}");
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn nonnegative_everywhere() {
+        forall(
+            "expp-nonneg",
+            2000,
+            |r| Bf16::from_f32(r.uniform_range(-300.0, 300.0) as f32),
+            |&x| expp(x).to_f32() >= 0.0,
+        );
+    }
+
+    #[test]
+    fn underflow_and_overflow() {
+        assert_eq!(expp_f(-95.0), 0.0);
+        assert!(expp_f(150.0).is_infinite());
+        assert_eq!(expp(Bf16::NEG_INFINITY), Bf16::ZERO);
+        assert_eq!(expp(Bf16::INFINITY), Bf16::INFINITY);
+    }
+
+    #[test]
+    fn agrees_with_accurate_exp_to_one_percent_mid_range() {
+        forall(
+            "expp-vs-glibc",
+            3000,
+            |r| Bf16::from_f32(r.uniform_range(-30.0, 10.0) as f32),
+            |&x| {
+                let y = expp(x).to_f32() as f64;
+                let r = exp_accurate(x).to_f32() as f64;
+                if r == 0.0 {
+                    return y == 0.0;
+                }
+                ((y - r) / r).abs() < 0.012 // incl. both roundings
+            },
+        );
+    }
+
+    #[test]
+    fn correction_endpoints() {
+        // P(0) = 0 and P(~1) ~ 1: continuity with the exponent step
+        assert_eq!(correct_fraction(0), 0);
+        let top = correct_fraction((1 << FRAC_BITS) - 1);
+        assert!(top > ((1 << FRAC_BITS) - 1) * 98 / 100);
+    }
+
+    #[test]
+    fn correction_branch_boundary_is_continuous() {
+        let below = correct_fraction(HALF - 1);
+        let above = correct_fraction(HALF);
+        // within a few output quanta of each other
+        assert!((below - above).abs() < 64, "{below} vs {above}");
+    }
+
+    #[test]
+    fn outputs_are_valid_bf16() {
+        forall(
+            "expp-valid",
+            2000,
+            |r| Bf16::from_f32(r.uniform_range(-90.0, 90.0) as f32),
+            |&x| !expp(x).is_nan(),
+        );
+    }
+}

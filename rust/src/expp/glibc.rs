@@ -1,0 +1,39 @@
+//! Accurate exponential baseline (the role glibc plays in the paper).
+//!
+//! Computed in f64 and rounded once to bf16: correctly-rounded for every
+//! bf16 input, which is what a correctly-rounded libm achieves.
+
+use crate::num::Bf16;
+
+/// Correctly-rounded bf16 exponential.
+pub fn exp_accurate(x: Bf16) -> Bf16 {
+    Bf16::from_f32((x.to_f32() as f64).exp() as f32)
+}
+
+/// Cost of one glibc `expf` call on a RISC-V core, in cycles. Calibrated
+/// from the paper's Fig. 7 discussion: at seq 128 the exponentials cost
+/// 15 Mcycles for 512x128 elements on 8 cores => ~229 cycles/element
+/// parallelized, ~1830 cycles on one core (soft-float internals dominate).
+pub const GLIBC_EXP_CYCLES_PER_CORE: f64 = 1830.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values() {
+        assert_eq!(exp_accurate(Bf16::ZERO).to_f32(), 1.0);
+        let e = exp_accurate(Bf16::ONE).to_f32();
+        assert!(((e - std::f32::consts::E) / std::f32::consts::E).abs() < 0.004);
+    }
+
+    #[test]
+    fn correctly_rounded_against_f64() {
+        let mut rng = crate::rng::Xoshiro256::new(1);
+        for _ in 0..10_000 {
+            let x = Bf16::from_f32(rng.uniform_range(-80.0, 80.0) as f32);
+            let want = Bf16::from_f32((x.to_f32() as f64).exp() as f32);
+            assert_eq!(exp_accurate(x), want);
+        }
+    }
+}

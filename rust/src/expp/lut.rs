@@ -1,0 +1,70 @@
+//! Bit-exact LUT acceleration of expp (§Perf, L3 hot path).
+//!
+//! expp is a *pure function of the 16-bit input pattern*, so a 65536 x
+//! u16 table (128 KiB, built once) is bit-identical to the integer
+//! datapath by construction — this is a simulator optimization only; the
+//! silicon datapath remains the Fig. 2 circuit (the paper's argument for
+//! not using LUTs is hardware area, which does not apply to the model).
+//!
+//! Before/after on the host (EXPERIMENTS.md §Perf): 14.0 -> ~1 ns/elem.
+
+use std::sync::OnceLock;
+
+use crate::num::Bf16;
+
+use super::correction::expp;
+
+static TABLE: OnceLock<Box<[u16; 65536]>> = OnceLock::new();
+
+fn table() -> &'static [u16; 65536] {
+    TABLE.get_or_init(|| {
+        let mut t = vec![0u16; 65536].into_boxed_slice();
+        for bits in 0..=u16::MAX {
+            t[bits as usize] = expp(Bf16::from_bits(bits)).to_bits();
+        }
+        t.try_into().expect("65536 entries")
+    })
+}
+
+/// LUT-backed expp, bit-identical to [`expp`].
+#[inline]
+pub fn expp_fast(x: Bf16) -> Bf16 {
+    Bf16::from_bits(table()[x.to_bits() as usize])
+}
+
+/// LUT-backed expp over a slice of f32 values (bf16-rounded on entry).
+pub fn expp_fast_slice(xs: &[f32]) -> Vec<f32> {
+    let t = table();
+    xs.iter()
+        .map(|&x| Bf16::from_bits(t[Bf16::from_f32(x).to_bits() as usize]).to_f32())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_is_bit_identical_everywhere() {
+        // the whole point: exhaustively provable equivalence
+        for bits in 0..=u16::MAX {
+            let b = Bf16::from_bits(bits);
+            let want = expp(b);
+            let got = expp_fast(b);
+            if want.is_nan() {
+                assert!(got.is_nan(), "bits {bits:#06x}");
+            } else {
+                assert_eq!(got, want, "bits {bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn slice_form_matches() {
+        let xs = vec![-3.25f32, 0.0, 1.0, -88.0, 42.0];
+        assert_eq!(
+            expp_fast_slice(&xs),
+            crate::expp::correction::expp_slice(&xs)
+        );
+    }
+}

@@ -1,0 +1,32 @@
+//! The paper's exponential approximations over BF16 (Sec. IV).
+//!
+//! * [`schraudolph::exps`] — Algorithm 2, plain Schraudolph's method;
+//! * [`correction::expp`] — Schraudolph enhanced with the polynomial
+//!   mantissa correction of Fig. 2 (the paper's first contribution);
+//! * [`glibc::exp_accurate`] — the accurate baseline (f64 `exp`, rounded
+//!   to bf16), playing glibc's role in the paper's comparisons;
+//! * [`error`] — the relative-error statistics harness behind Sec. VI-A.
+//!
+//! All functions are defined bf16-bit-pattern to bf16-bit-pattern and are
+//! kept in lock-step with `python/compile/kernels/expp.py` (the golden
+//! vectors exported by `make artifacts` pin both sides).
+
+pub mod correction;
+pub mod error;
+pub mod glibc;
+pub mod lut;
+pub mod schraudolph;
+
+pub use correction::expp;
+pub use glibc::exp_accurate;
+pub use lut::expp_fast;
+pub use schraudolph::exps;
+
+/// 1/ln(2) as f32 — the constant the multiplier datapath holds. Written
+/// as an f64-literal cast so it rounds to exactly the same f32 the Python
+/// side's `jnp.float32(1.4426950408889634)` produces.
+pub const INV_LN2: f32 = 1.442_695_040_888_963_4_f64 as f32;
+
+/// Fractional bits kept for frac(x'): 7 mantissa bits + 6 guard bits.
+pub const FRAC_BITS: u32 = 13;
+pub const GUARD_BITS: u32 = 6;

@@ -1,0 +1,117 @@
+//! Schraudolph's method on BF16 inputs (paper Algorithm 2).
+//!
+//! exp(x) = 2^(x/ln2) ~ 2^int(x') * (1 + frac(x')): scale the input into
+//! the exponent/mantissa layout of the output float and reinterpret.
+
+use crate::num::Bf16;
+
+use super::{FRAC_BITS, GUARD_BITS, INV_LN2};
+
+/// Shared front half of exps/expp: returns (e_int, f) where `e_int` is
+/// floor(x') and `f` holds frac(x') with `FRAC_BITS` bits.
+#[inline]
+pub(super) fn split(x: Bf16) -> (i32, i32) {
+    let t = x.to_f32() * INV_LN2;
+    // |t| <= 128 * 1.443; * 2^13 is an exact power-of-two scale in f32.
+    let k = (t * (1u32 << FRAC_BITS) as f32).floor() as i32;
+    (k >> FRAC_BITS, k & ((1 << FRAC_BITS) - 1))
+}
+
+/// Shared back half: assemble the bf16 pattern from the integer exponent
+/// and the 7-bit corrected mantissa, saturating to +inf / flushing to 0.
+#[inline]
+pub(super) fn assemble(mut e_int: i32, mut p7: i32) -> Bf16 {
+    e_int += p7 >> 7; // mantissa carry (P rounded to 1.0)
+    p7 &= 0x7F;
+    let exp_field = e_int + 127;
+    if exp_field >= 0xFF {
+        return Bf16::INFINITY;
+    }
+    if exp_field <= 0 {
+        return Bf16::ZERO; // flush denormal outputs
+    }
+    Bf16::from_bits(((exp_field as u16) << 7) | p7 as u16)
+}
+
+/// Plain Schraudolph: truncate frac(x') to the 7-bit mantissa, no
+/// polynomial correction.
+pub fn exps(x: Bf16) -> Bf16 {
+    if x.is_nan() {
+        return x;
+    }
+    if x.is_infinite() {
+        return if x.sign() { Bf16::ZERO } else { Bf16::INFINITY };
+    }
+    let (e_int, f) = split(x);
+    assemble(e_int, f >> GUARD_BITS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exps_f(x: f32) -> f32 {
+        exps(Bf16::from_f32(x)).to_f32()
+    }
+
+    #[test]
+    fn exact_at_zero() {
+        assert_eq!(exps_f(0.0), 1.0);
+    }
+
+    #[test]
+    fn exact_at_ln2_multiples() {
+        // x' integer => frac = 0 => result is exactly 2^k
+        for k in -10..=10 {
+            let x = (k as f32) * std::f32::consts::LN_2;
+            let y = exps_f(x);
+            let rel = (y - (k as f32).exp2()) / (k as f32).exp2();
+            // x itself rounds to bf16 so allow the input quantization
+            assert!(rel.abs() < 0.02, "k={k} y={y}");
+        }
+    }
+
+    #[test]
+    fn known_error_magnitude() {
+        // Schraudolph's max relative error is ~6.1% (at frac ~ 0.5ish);
+        // check we're in that ballpark, not bit-perfect (it's approximate).
+        let mut max_rel: f64 = 0.0;
+        let mut i = 0u32;
+        while i < 2000 {
+            let x = -8.0 + (i as f32) * 0.008;
+            let y = exps_f(x) as f64;
+            let r = (x as f64).exp();
+            max_rel = max_rel.max(((y - r) / r).abs());
+            i += 1;
+        }
+        assert!(max_rel > 0.02 && max_rel < 0.075, "{max_rel}");
+    }
+
+    #[test]
+    fn underflow_to_zero() {
+        assert_eq!(exps_f(-100.0), 0.0);
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert!(exps_f(200.0).is_infinite());
+    }
+
+    #[test]
+    fn infinite_inputs() {
+        assert_eq!(exps(Bf16::NEG_INFINITY), Bf16::ZERO);
+        assert_eq!(exps(Bf16::INFINITY), Bf16::INFINITY);
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let mut prev = 0.0f32;
+        let mut x = -30.0f32;
+        while x < 30.0 {
+            let y = exps_f(x);
+            assert!(y >= prev, "x={x}");
+            prev = y;
+            x += 0.0625;
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! # SoftEx: edge GenAI acceleration template — full-system simulation
+//!
+//! Rust implementation of Belano et al., *A Flexible Template for Edge
+//! Generative AI with High-Accuracy Accelerated Softmax & GELU* (2024).
+//!
+//! The paper's artifact is silicon; here every hardware block is rebuilt
+//! as a bit-accurate functional model plus cycle/energy/area analytical
+//! models (see DESIGN.md §1 for the substitution table):
+//!
+//! * [`num`] — bit-exact BF16 / fixed-point arithmetic;
+//! * [`expp`] — the approximate exponential (Sec. IV);
+//! * [`softex`] — the SoftEx softmax/GELU accelerator (Sec. V-B);
+//! * [`redmule`] — the 24x8 RedMulE tensor-unit model;
+//! * [`cluster`] — the 8-core PULP cluster, TCDM, software baselines;
+//! * [`workload`] — transformer workloads (ViT, MobileBERT, GPT-2 XL);
+//! * [`coordinator`] — the L3 scheduler mapping workloads onto engines;
+//! * [`mesh`] — the FlooNoC compute-mesh scalability model (Sec. VIII);
+//! * [`energy`] — area/power/energy models calibrated to Sec. VII;
+//! * [`runtime`] — PJRT loading/execution of the AOT JAX artifacts;
+//! * [`report`] — paper-style table rendering for the benches.
+
+pub mod cluster;
+pub mod coordinator;
+pub mod energy;
+pub mod expp;
+pub mod mesh;
+pub mod num;
+pub mod prop;
+pub mod redmule;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod softex;
+pub mod workload;

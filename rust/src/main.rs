@@ -1,0 +1,250 @@
+//! softex CLI — the L3 leader entrypoint.
+//!
+//! Subcommands (no clap in the offline vendored set; hand-rolled):
+//!   run <model> [--sw-nonlin] [--exp exps|expp|glibc]   end-to-end sim
+//!   softmax --rows R --len L [--lanes N]                one softmax job
+//!   gelu --n N [--terms T] [--bits B]                   one GELU job
+//!   mesh [--max 8] [--trials 16384]                     Fig. 15 sweep
+//!   verify [--artifacts DIR]                            golden checks
+//!   info                                                cluster summary
+
+use std::collections::HashMap;
+
+use softex::cluster::cores::ExpAlgo;
+use softex::coordinator::{execute_trace, ExecConfig, KernelClass};
+use softex::energy::{OP_EFFICIENCY, OP_THROUGHPUT};
+use softex::mesh::sweep_mesh;
+use softex::report;
+use softex::runtime::Engine;
+use softex::softex::phys;
+use softex::softex::SoftExConfig;
+use softex::workload::{gen, trace_model, ModelConfig};
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn model_by_name(name: &str) -> Option<ModelConfig> {
+    match name {
+        "vit" | "vit-base" => Some(ModelConfig::vit_base()),
+        "mobilebert" => Some(ModelConfig::mobilebert(512)),
+        "gpt2-xl" => Some(ModelConfig::gpt2_xl()),
+        "vit-tiny" => Some(ModelConfig::vit_tiny()),
+        _ => None,
+    }
+}
+
+fn cmd_run(pos: &[String], flags: &HashMap<String, String>) {
+    let name = pos.first().map(String::as_str).unwrap_or("vit");
+    let Some(model) = model_by_name(name) else {
+        eprintln!("unknown model `{name}` (vit, mobilebert, gpt2-xl, vit-tiny)");
+        std::process::exit(1);
+    };
+    let algo = match flags.get("exp").map(String::as_str) {
+        Some("glibc") => ExpAlgo::Glibc,
+        Some("expp") => ExpAlgo::Expp,
+        _ => ExpAlgo::Exps,
+    };
+    let cfg = if flags.contains_key("sw-nonlin") {
+        ExecConfig::sw_nonlinearities(algo)
+    } else {
+        ExecConfig::paper_accelerated()
+    };
+    let m = execute_trace(&cfg, &trace_model(&model));
+    let rows: Vec<Vec<String>> = [
+        KernelClass::MatMul,
+        KernelClass::Softmax,
+        KernelClass::Gelu,
+        KernelClass::Other,
+    ]
+    .iter()
+    .map(|k| {
+        vec![
+            k.label().to_string(),
+            report::cycles(*m.cycles.get(k).unwrap_or(&0)),
+            report::pct(m.fraction(*k)),
+        ]
+    })
+    .collect();
+    println!(
+        "{}",
+        report::render_table(
+            &format!("{} end-to-end ({:?} nonlinearities)", model.name, cfg.softmax_engine),
+            &["kernel", "cycles", "share"],
+            &rows
+        )
+    );
+    println!(
+        "total: {} | {:.1} ms @0.8V | {:.0} GOPS @0.8V | {:.2} TOPS/W @0.55V",
+        report::cycles(m.total_cycles()),
+        m.seconds(&OP_THROUGHPUT) * 1e3,
+        m.gops(&OP_THROUGHPUT),
+        m.tops_per_w(&OP_EFFICIENCY)
+    );
+}
+
+fn cmd_softmax(flags: &HashMap<String, String>) {
+    let rows: usize = flags.get("rows").map_or(512, |v| v.parse().unwrap());
+    let len: usize = flags.get("len").map_or(128, |v| v.parse().unwrap());
+    let lanes: usize = flags.get("lanes").map_or(16, |v| v.parse().unwrap());
+    let cfg = SoftExConfig::with_lanes(lanes);
+    let scores = gen::attention_scores(rows, len, 0x5EED);
+    let r = softex::softex::run_softmax(&cfg, &scores, rows, len);
+    println!(
+        "softmax [{rows}x{len}] on {lanes} lanes: {} (acc {}, inv {}, norm {}), {} max-rescales",
+        report::cycles(r.cycles.total()),
+        report::cycles(r.cycles.accumulation),
+        report::cycles(r.cycles.inversion),
+        report::cycles(r.cycles.normalization),
+        r.rescales
+    );
+    let worst = r
+        .out
+        .chunks(len)
+        .map(|row| (row.iter().sum::<f32>() - 1.0).abs())
+        .fold(0.0f32, f32::max);
+    println!("worst |rowsum - 1| = {worst:.4}");
+}
+
+fn cmd_gelu(flags: &HashMap<String, String>) {
+    let n: usize = flags.get("n").map_or(16384, |v| v.parse().unwrap());
+    let terms: usize = flags.get("terms").map_or(4, |v| v.parse().unwrap());
+    let bits: u32 = flags.get("bits").map_or(14, |v| v.parse().unwrap());
+    let cfg = SoftExConfig { terms, acc_frac_bits: bits, ..Default::default() };
+    let xs = gen::gelu_inputs(n, 0x6E1);
+    let r = softex::softex::run_gelu(&cfg, &xs);
+    let mse: f64 = xs
+        .iter()
+        .zip(&r.out)
+        .map(|(&x, &y)| {
+            let d = y as f64 - softex::softex::coeffs::gelu_ref(x as f64);
+            d * d
+        })
+        .sum::<f64>()
+        / n as f64;
+    println!(
+        "GELU n={n} terms={terms} bits={bits}: {} SoftEx cycles, MSE vs exact {mse:.3e}",
+        report::cycles(r.softex_cycles)
+    );
+}
+
+fn cmd_mesh(flags: &HashMap<String, String>) {
+    let max: usize = flags.get("max").map_or(8, |v| v.parse().unwrap());
+    let trials: u32 = flags.get("trials").map_or(1 << 14, |v| v.parse().unwrap());
+    let sizes: Vec<usize> = (1..=max).collect();
+    let pts = sweep_mesh(&sizes, trials, 0xFEED);
+    let rows: Vec<Vec<String>> = pts
+        .iter()
+        .map(|p| {
+            vec![
+                format!("{}x{}", p.n, p.n),
+                report::f(p.total_tops, 2),
+                report::f(p.per_cluster_gops, 0),
+                report::f(p.dram_gbs, 2),
+                report::f(p.tops_per_w, 3),
+                report::pct(p.slowdown),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::render_table(
+            "Fig. 15 — GPT-2 XL on an n x n FlooNoC mesh",
+            &["mesh", "TOPS", "GOPS/cluster", "DRAM GB/s", "TOPS/W", "NoC slowdown"],
+            &rows
+        )
+    );
+}
+
+fn cmd_verify(flags: &HashMap<String, String>) {
+    let dir = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| softex::runtime::Manifest::default_dir().display().to_string());
+    let mut engine = match Engine::new(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("cannot open artifacts in `{dir}`: {e:#}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    let names: Vec<String> = engine
+        .manifest()
+        .artifacts
+        .iter()
+        .map(|a| a.name.clone())
+        .collect();
+    let mut failures = 0;
+    for name in names {
+        match engine.verify_golden(&name) {
+            Ok((err, _, want)) => {
+                let scale = want.iter().fold(1e-9f32, |m, v| m.max(v.abs()));
+                let ok = err <= (1e-4f32).max(scale * 8e-3);
+                if !ok {
+                    failures += 1;
+                }
+                println!("{:<22} max|err| = {:.3e}  {}", name, err, if ok { "OK" } else { "FAIL" });
+            }
+            Err(e) => {
+                failures += 1;
+                println!("{name:<22} ERROR: {e:#}");
+            }
+        }
+    }
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}
+
+fn cmd_info() {
+    let cfg = SoftExConfig::default();
+    println!("SoftEx-augmented PULP cluster (Belano et al., 2024) — simulation");
+    println!("  cores: 8x RV32IMFC+xpulpnn, TCDM 256 KiB / 32 banks");
+    println!("  tensor unit: RedMulE 24x8 bf16 FMAs (430 GOPS @0.8V peak)");
+    println!(
+        "  SoftEx: {} lanes, {}-bit lane accumulators, {} sum-of-exp terms",
+        cfg.lanes, cfg.acc_frac_bits, cfg.terms
+    );
+    println!(
+        "  SoftEx area: {:.4} mm^2 ({:.2}% of the {:.2} mm^2 cluster)",
+        phys::softex_area_mm2(&cfg),
+        phys::softex_cluster_share(&cfg) * 100.0,
+        phys::CLUSTER_AREA_MM2
+    );
+    println!("  operating points: 0.80V/1.12GHz (throughput), 0.55V/460MHz (efficiency)");
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_flags(&args);
+    match pos.first().map(String::as_str) {
+        Some("run") => cmd_run(&pos[1..], &flags),
+        Some("softmax") => cmd_softmax(&flags),
+        Some("gelu") => cmd_gelu(&flags),
+        Some("mesh") => cmd_mesh(&flags),
+        Some("verify") => cmd_verify(&flags),
+        Some("info") | None => cmd_info(),
+        Some(other) => {
+            eprintln!("unknown command `{other}`");
+            eprintln!("usage: softex [run|softmax|gelu|mesh|verify|info] [flags]");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! FlooNoC compute-mesh scalability model (paper Sec. VIII).
+//!
+//! * [`noc`] — link/router parameters (0.15 pJ/B/hop, 512-bit wide
+//!   channel) and the per-chunk transfer accounting;
+//! * [`dataflow`] — the output-stationary systolic tiling and softmax
+//!   row-block marshaling of Fig. 14;
+//! * [`montecarlo`] — the conflict-delay Monte Carlo: per-hop uniform
+//!   [0, 0.5]-cycle delays per transaction, overall slowdown = expected
+//!   maximum total delay over all monotone top-left -> bottom-right
+//!   paths (the paper's assumptions i–iii);
+//! * [`scaling`] — the n x n sweep producing Fig. 15.
+
+pub mod dataflow;
+pub mod montecarlo;
+pub mod noc;
+pub mod scaling;
+
+pub use scaling::{sweep_mesh, MeshPoint};

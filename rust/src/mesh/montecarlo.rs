@@ -1,0 +1,133 @@
+//! Conflict-delay Monte Carlo (paper Sec. VIII assumptions i–iii).
+//!
+//! Per chunk, every hop adds a conflict delay that is the sum of per-beat
+//! uniform [0, 0.5]-cycle delays over the transactions it carries; the
+//! overall slowdown of the mesh is the *maximum* total delay over all
+//! monotone paths from the top-left to the bottom-right tile (computed by
+//! dynamic programming over the DAG — equivalent to the paper's NetworkX
+//! longest-path evaluation), averaged over Monte Carlo trials.
+//!
+//! Traffic per hop grows with the mesh edge (more tiles stream through
+//! each router): we model `beats(n) = BEATS_8x8 * (n-1)/7`, calibrated so
+//! the 8x8 mesh reproduces the paper's 17.4% slowdown while meshes below
+//! 4x4 see "almost no overheads".
+
+use crate::rng::Xoshiro256;
+
+use super::noc::CHUNK_COMPUTE_CYCLES;
+
+/// Equivalent wide-channel beats crossing each hop per chunk at n=8
+/// (512 beats of the 32KB packet + request/response and narrow-channel
+/// overhead, fitted to the paper's 8x8 slowdown — DESIGN.md §5).
+pub const BEATS_PER_HOP_8X8: f64 = 596.0;
+
+/// Per-beat conflict delay distribution: uniform [0, 0.5] cycles.
+pub const MAX_DELAY_PER_BEAT: f64 = 0.5;
+
+/// Expected per-hop transactions for an n x n mesh.
+pub fn beats_per_hop(n: usize) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    BEATS_PER_HOP_8X8 * (n as f64 - 1.0) / 7.0
+}
+
+/// One Monte Carlo trial: sample every hop's delay, return the longest
+/// top-left -> bottom-right monotone path delay (cycles).
+///
+/// Hop delays are Irwin-Hall sums of `beats` uniforms; for beats >> 1 we
+/// sample the normal approximation N(beats/4, beats/48) (exact mean/var),
+/// clamped at 0 — identical in distribution at these counts but O(1).
+fn trial(n: usize, beats: f64, rng: &mut Xoshiro256) -> f64 {
+    let mean = beats * MAX_DELAY_PER_BEAT / 2.0;
+    let sd = (beats / 48.0_f64).sqrt() * MAX_DELAY_PER_BEAT * 2.0_f64.sqrt();
+    // delay of entering cell (i,j) from the left or top: DP longest path
+    let mut row = vec![0.0f64; n];
+    let sample = |rng: &mut Xoshiro256| (mean + sd * rng.normal()).max(0.0);
+    for i in 0..n {
+        for j in 0..n {
+            if i == 0 && j == 0 {
+                row[0] = 0.0;
+                continue;
+            }
+            let from_left = if j > 0 { row[j - 1] + sample(rng) } else { f64::NEG_INFINITY };
+            let from_top = if i > 0 { row[j] + sample(rng) } else { f64::NEG_INFINITY };
+            row[j] = from_left.max(from_top);
+        }
+    }
+    row[n - 1]
+}
+
+/// Expected critical-path conflict delay per chunk for an n x n mesh,
+/// over `trials` Monte Carlo trials (the paper uses 2^16).
+pub fn expected_path_delay(n: usize, trials: u32, seed: u64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let beats = beats_per_hop(n);
+    let mut rng = Xoshiro256::new(seed);
+    let sum: f64 = (0..trials).map(|_| trial(n, beats, &mut rng)).sum();
+    sum / trials as f64
+}
+
+/// Relative slowdown of the mesh vs conflict-free execution.
+pub fn mesh_slowdown(n: usize, trials: u32, seed: u64) -> f64 {
+    expected_path_delay(n, trials, seed) / CHUNK_COMPUTE_CYCLES as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_cluster_no_slowdown() {
+        assert_eq!(mesh_slowdown(1, 100, 1), 0.0);
+    }
+
+    #[test]
+    fn slowdown_monotone_in_mesh_size() {
+        let mut prev = -1.0;
+        for n in [2, 3, 4, 5, 6, 8] {
+            let s = mesh_slowdown(n, 2000, 42);
+            assert!(s > prev, "n={n}: {s} <= {prev}");
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn paper_anchor_8x8_is_17_4_pct() {
+        let s = mesh_slowdown(8, 1 << 14, 7);
+        assert!((0.155..0.195).contains(&s), "{s}");
+    }
+
+    #[test]
+    fn small_meshes_nearly_free() {
+        // "the interconnect causes almost no overheads below 4x4"
+        for n in [2, 3] {
+            let s = mesh_slowdown(n, 4000, 9);
+            assert!(s < 0.05, "n={n}: {s}");
+        }
+    }
+
+    #[test]
+    fn five_by_five_becomes_significant() {
+        let s = mesh_slowdown(5, 8000, 11);
+        assert!((0.05..0.14).contains(&s), "{s}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        assert_eq!(mesh_slowdown(4, 500, 3), mesh_slowdown(4, 500, 3));
+    }
+
+    #[test]
+    fn longest_path_at_least_average_path() {
+        // sanity on the DP: max-path >= straight-path expectation
+        let n = 6;
+        let beats = beats_per_hop(n);
+        let hops = 2.0 * (n - 1) as f64;
+        let straight = hops * beats * MAX_DELAY_PER_BEAT / 2.0;
+        let e = expected_path_delay(n, 4000, 5);
+        assert!(e >= straight, "{e} < {straight}");
+    }
+}

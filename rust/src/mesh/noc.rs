@@ -1,0 +1,54 @@
+//! FlooNoC link/router model (Fischer et al. [53]; paper Sec. VIII).
+
+/// NoC transfer energy (paper: "efficient (0.15 pJ/B/hop) ... AXI4 links").
+pub const PJ_PER_BYTE_PER_HOP: f64 = 0.15;
+
+/// Wide-channel width in bits (high-bandwidth, latency-insensitive).
+pub const WIDE_CHANNEL_BITS: usize = 512;
+
+/// Chunk size the dataflow streams between clusters: 16K elements / 32 KB.
+pub const CHUNK_BYTES: usize = 32 * 1024;
+
+/// Beats (cycles) to move one chunk across one link on the wide channel.
+pub const fn beats_per_chunk() -> u64 {
+    (CHUNK_BYTES / (WIDE_CHANNEL_BITS / 8)) as u64 // 512
+}
+
+/// Cycles to transfer four chunks (the paper's per-phase traffic:
+/// "transferring four 32KB packets takes 2048 cycles").
+pub const fn four_chunk_cycles() -> u64 {
+    4 * beats_per_chunk()
+}
+
+/// Compute cycles per chunk: the paper states the four-packet transfer is
+/// 16.9% of the average chunk-processing time => ~12.1 kcycles.
+pub const CHUNK_COMPUTE_CYCLES: u64 = 12_118;
+
+/// NoC energy in joules for moving `bytes` over `hops` hops.
+pub fn transfer_energy_j(bytes: u64, hops: u64) -> f64 {
+    bytes as f64 * hops as f64 * PJ_PER_BYTE_PER_HOP * 1e-12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beats_match_paper() {
+        assert_eq!(beats_per_chunk(), 512);
+        assert_eq!(four_chunk_cycles(), 2048);
+    }
+
+    #[test]
+    fn transfer_is_16_9_pct_of_chunk_time() {
+        let frac = four_chunk_cycles() as f64 / CHUNK_COMPUTE_CYCLES as f64;
+        assert!((frac - 0.169).abs() < 0.002, "{frac}");
+    }
+
+    #[test]
+    fn energy_model() {
+        // one 32KB chunk over one hop: 32768 * 0.15 pJ = 4.9 nJ
+        let e = transfer_energy_j(CHUNK_BYTES as u64, 1);
+        assert!((e - 4.9152e-9).abs() < 1e-12, "{e}");
+    }
+}

@@ -1,0 +1,128 @@
+//! The Fig. 15 sweep: mesh sizes 1x1 .. 8x8 on GPT-2 XL prompt mode.
+
+use super::montecarlo::mesh_slowdown;
+use super::{dataflow, noc};
+
+/// Per-cluster peak on GPT-2 XL: 80% tensor-unit utilization of the
+/// 430 GOPS peak (Sec. VIII: "utilization is on average 80%, translating
+/// to a maximum achievable performance per cluster of 345 GOPS").
+pub const CLUSTER_PEAK_GOPS: f64 = 430.0 * 0.80;
+
+/// Fraction of cluster power that does not scale with useful work
+/// (leakage + clock tree + idle logic); fitted so the 8x8 mesh is 7.44%
+/// less efficient than 1x1 at a 17.4% throughput loss (DESIGN.md §5).
+pub const STATIC_POWER_FRACTION: f64 = 0.382;
+
+/// Cluster power on GPT-2 XL at 0.8 V (matmul-dominated), watts.
+pub const CLUSTER_POWER_W: f64 = 0.529;
+
+/// One row of Fig. 15.
+#[derive(Clone, Copy, Debug)]
+pub struct MeshPoint {
+    pub n: usize,
+    /// Average throughput of each cluster (GOPS).
+    pub per_cluster_gops: f64,
+    /// Ensemble throughput (TOPS).
+    pub total_tops: f64,
+    /// External DRAM bandwidth demand (GB/s).
+    pub dram_gbs: f64,
+    /// Energy efficiency at 0.8 V (TOPS/W), relative model.
+    pub tops_per_w: f64,
+    /// NoC share of total power.
+    pub noc_power_frac: f64,
+    /// Monte Carlo slowdown vs conflict-free.
+    pub slowdown: f64,
+}
+
+/// Evaluate one mesh size with `trials` Monte Carlo trials.
+pub fn eval_mesh(n: usize, trials: u32, seed: u64) -> MeshPoint {
+    let slow = mesh_slowdown(n, trials, seed);
+    let rel_throughput = 1.0 / (1.0 + slow);
+    let per_cluster = CLUSTER_PEAK_GOPS * rel_throughput;
+    let total_tops = per_cluster * (n * n) as f64 / 1e3;
+
+    // NoC power: every chunk moved one hop costs 0.15 pJ/B; per cluster
+    // per chunk-time four 32KB packets cross ~1 hop on average.
+    let chunk_time_s = noc::CHUNK_COMPUTE_CYCLES as f64 / 1.12e9;
+    let noc_w_per_cluster = if n > 1 {
+        noc::transfer_energy_j(4 * noc::CHUNK_BYTES as u64, 1) / chunk_time_s
+    } else {
+        0.0
+    };
+    let cluster_w = CLUSTER_POWER_W + noc_w_per_cluster;
+
+    // efficiency: dynamic power tracks useful work, static does not
+    let eff_rel = rel_throughput
+        / (rel_throughput * (1.0 - STATIC_POWER_FRACTION) + STATIC_POWER_FRACTION);
+    let base_eff = CLUSTER_PEAK_GOPS / 1e3 / CLUSTER_POWER_W; // TOPS/W at n=1
+    let tops_per_w = base_eff * eff_rel * (CLUSTER_POWER_W / cluster_w);
+
+    MeshPoint {
+        n,
+        per_cluster_gops: per_cluster,
+        total_tops,
+        dram_gbs: dataflow::dram_bandwidth_gbs(n),
+        tops_per_w,
+        noc_power_frac: noc_w_per_cluster / cluster_w,
+        slowdown: slow,
+    }
+}
+
+/// The full Fig. 15 sweep over mesh sizes.
+pub fn sweep_mesh(sizes: &[usize], trials: u32, seed: u64) -> Vec<MeshPoint> {
+    sizes.iter().map(|&n| eval_mesh(n, trials, seed + n as u64)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T: u32 = 1 << 13;
+
+    #[test]
+    fn single_cluster_hits_345_gops() {
+        let p = eval_mesh(1, T, 1);
+        assert!((p.per_cluster_gops - 344.0).abs() < 1.5, "{}", p.per_cluster_gops);
+    }
+
+    #[test]
+    fn paper_anchor_8x8_throughput() {
+        // Fig. 15: 18.2 TOPS total, 285 GOPS per cluster (82.6% of 1x1)
+        let p = eval_mesh(8, T, 2);
+        assert!((270.0..300.0).contains(&p.per_cluster_gops), "{}", p.per_cluster_gops);
+        assert!((17.2..19.2).contains(&p.total_tops), "{}", p.total_tops);
+    }
+
+    #[test]
+    fn paper_anchor_8x8_efficiency_drop() {
+        // 8x8 only 7.44% less efficient than 1x1
+        let p1 = eval_mesh(1, T, 3);
+        let p8 = eval_mesh(8, T, 4);
+        let drop = 1.0 - p8.tops_per_w / p1.tops_per_w;
+        assert!((0.04..0.11).contains(&drop), "{drop}");
+    }
+
+    #[test]
+    fn noc_power_is_negligible() {
+        // Sec. VIII: NoC is 0.29% of total power at 8x8
+        let p = eval_mesh(8, T, 5);
+        assert!(p.noc_power_frac < 0.01, "{}", p.noc_power_frac);
+        assert!(p.noc_power_frac > 0.0005, "{}", p.noc_power_frac);
+    }
+
+    #[test]
+    fn total_throughput_scales_superlinearly_vs_single() {
+        // 8x8 = 52.8x a single cluster in the paper
+        let p1 = eval_mesh(1, T, 6);
+        let p8 = eval_mesh(8, T, 7);
+        let scale = p8.total_tops / p1.total_tops;
+        assert!((48.0..58.0).contains(&scale), "{scale}");
+    }
+
+    #[test]
+    fn sweep_produces_all_sizes() {
+        let pts = sweep_mesh(&[1, 2, 4, 8], 2000, 9);
+        assert_eq!(pts.len(), 4);
+        assert!(pts.windows(2).all(|w| w[0].total_tops < w[1].total_tops));
+    }
+}

@@ -1,0 +1,249 @@
+//! Bit-exact BFloat16.
+//!
+//! BF16 is f32 with the low 16 mantissa bits dropped. The cluster's FPUs,
+//! the RedMulE FMAs and the SoftEx MAUs all compute "in f32, round the
+//! result to bf16" — which is exactly what XLA's CPU backend does for
+//! `bf16` HLO ops, so this type is bit-compatible with the JAX/Pallas L1
+//! kernels (`x.astype(bfloat16)` uses the same round-to-nearest-even).
+
+/// A BFloat16 value stored as its 16-bit pattern.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+    pub const ONE: Bf16 = Bf16(0x3F80);
+    pub const INFINITY: Bf16 = Bf16(0x7F80);
+    pub const NEG_INFINITY: Bf16 = Bf16(0xFF80);
+    /// Smallest positive normal (2^-126).
+    pub const MIN_POSITIVE: Bf16 = Bf16(0x0080);
+    /// Largest finite value (~3.39e38).
+    pub const MAX: Bf16 = Bf16(0x7F7F);
+
+    /// Round an f32 to bf16 with round-to-nearest-even (IEEE default).
+    #[inline]
+    pub fn from_f32(x: f32) -> Bf16 {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // Quiet NaN, preserving the sign bit.
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+        Bf16((rounded >> 16) as u16)
+    }
+
+    /// Widen to f32 (exact).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    /// Raw bit pattern.
+    #[inline]
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    #[inline]
+    pub fn from_bits(b: u16) -> Bf16 {
+        Bf16(b)
+    }
+
+    /// Biased exponent field (8 bits).
+    #[inline]
+    pub fn exponent(self) -> u16 {
+        (self.0 >> 7) & 0xFF
+    }
+
+    /// Mantissa field (7 bits).
+    #[inline]
+    pub fn mantissa(self) -> u16 {
+        self.0 & 0x7F
+    }
+
+    #[inline]
+    pub fn sign(self) -> bool {
+        self.0 & 0x8000 != 0
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        self.exponent() == 0xFF && self.mantissa() != 0
+    }
+
+    #[inline]
+    pub fn is_infinite(self) -> bool {
+        self.exponent() == 0xFF && self.mantissa() == 0
+    }
+
+    #[inline]
+    pub fn is_finite(self) -> bool {
+        self.exponent() != 0xFF
+    }
+
+    /// Hardware arithmetic: compute in f32, round the result (one rounding).
+    #[inline]
+    pub fn mul(self, rhs: Bf16) -> Bf16 {
+        Bf16::from_f32(self.to_f32() * rhs.to_f32())
+    }
+
+    #[inline]
+    pub fn add(self, rhs: Bf16) -> Bf16 {
+        Bf16::from_f32(self.to_f32() + rhs.to_f32())
+    }
+
+    #[inline]
+    pub fn sub(self, rhs: Bf16) -> Bf16 {
+        Bf16::from_f32(self.to_f32() - rhs.to_f32())
+    }
+
+    /// Fused multiply-add with a single final rounding (the MAU/FMA path).
+    /// f64 holds a bf16×bf16 product and bf16 addend exactly, so computing
+    /// in f64 then rounding via f32 is a correctly-rounded single-rounding
+    /// FMA for bf16 operands.
+    #[inline]
+    pub fn fma(self, mul: Bf16, add: Bf16) -> Bf16 {
+        let exact = (self.to_f32() as f64) * (mul.to_f32() as f64) + (add.to_f32() as f64);
+        Bf16::from_f32(exact as f32)
+    }
+
+    /// One unit in the last place of this value's binade, as f32.
+    pub fn ulp(self) -> f32 {
+        if !self.is_finite() {
+            return f32::NAN;
+        }
+        let e = self.exponent() as i32;
+        if e == 0 {
+            // denormal: fixed quantum 2^-133
+            return (2.0f32).powi(-133);
+        }
+        (2.0f32).powi(e - 127 - 7)
+    }
+}
+
+/// Round a whole f32 slice to bf16 values kept in f32 storage.
+pub fn quantize_slice(xs: &[f32]) -> Vec<f32> {
+    xs.iter().map(|&x| Bf16::from_f32(x).to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    #[test]
+    fn constants_roundtrip() {
+        assert_eq!(Bf16::ONE.to_f32(), 1.0);
+        assert_eq!(Bf16::ZERO.to_f32(), 0.0);
+        assert!(Bf16::INFINITY.to_f32().is_infinite());
+        assert_eq!(Bf16::MIN_POSITIVE.to_f32(), 1.1754944e-38);
+    }
+
+    #[test]
+    fn widening_is_exact() {
+        // every bf16 pattern widens and re-rounds to itself
+        for bits in 0..=u16::MAX {
+            let b = Bf16::from_bits(bits);
+            if b.is_nan() {
+                continue;
+            }
+            assert_eq!(Bf16::from_f32(b.to_f32()).to_bits(), bits);
+        }
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        // 1.0 + 0.5ulp(=2^-8) is a tie; must round to even mantissa (1.0)
+        let tie = f32::from_bits(0x3F80_8000);
+        assert_eq!(Bf16::from_f32(tie).to_bits(), 0x3F80);
+        // 1.0078125 (mantissa ..01) + tie rounds up to even (..10)
+        let tie_up = f32::from_bits(0x3F81_8000);
+        assert_eq!(Bf16::from_f32(tie_up).to_bits(), 0x3F82);
+    }
+
+    #[test]
+    fn rounding_error_bounded_by_half_ulp() {
+        forall(
+            "bf16-halfulp",
+            2000,
+            |r| r.uniform_range(-1e6, 1e6) as f32,
+            |&x| {
+                let b = Bf16::from_f32(x);
+                (b.to_f32() - x).abs() <= 0.5 * b.ulp() * 1.0000001
+            },
+        );
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        assert!(Bf16::from_f32(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn overflow_rounds_to_infinity() {
+        assert!(Bf16::from_f32(3.4e38).is_infinite());
+        assert_eq!(Bf16::from_f32(-3.4e38), Bf16::NEG_INFINITY);
+    }
+
+    #[test]
+    fn mul_single_rounding() {
+        let a = Bf16::from_f32(1.5);
+        let b = Bf16::from_f32(3.0);
+        assert_eq!(a.mul(b).to_f32(), 4.5);
+    }
+
+    #[test]
+    fn add_commutes() {
+        forall(
+            "bf16-add-comm",
+            500,
+            |r| {
+                (
+                    Bf16::from_f32(r.uniform_range(-100.0, 100.0) as f32),
+                    Bf16::from_f32(r.uniform_range(-100.0, 100.0) as f32),
+                )
+            },
+            |&(a, b)| a.add(b) == b.add(a),
+        );
+    }
+
+    #[test]
+    fn fma_matches_exact_for_representable() {
+        // 1.5 * 2.0 + 0.25 = 3.25, exactly representable
+        let r = Bf16::from_f32(1.5).fma(Bf16::from_f32(2.0), Bf16::from_f32(0.25));
+        assert_eq!(r.to_f32(), 3.25);
+    }
+
+    #[test]
+    fn fma_single_rounding_beats_two_roundings_somewhere() {
+        // Exhaustive-ish search for a case where mul-then-add double
+        // rounding differs from the fused result, proving fma is fused.
+        let mut found = false;
+        let mut rng = crate::rng::Xoshiro256::new(5);
+        for _ in 0..200_000 {
+            let a = Bf16::from_f32(rng.uniform_range(0.5, 2.0) as f32);
+            let b = Bf16::from_f32(rng.uniform_range(0.5, 2.0) as f32);
+            let c = Bf16::from_f32(rng.uniform_range(-2.0, 2.0) as f32);
+            if a.mul(b).add(c) != a.fma(b, c) {
+                found = true;
+                break;
+            }
+        }
+        assert!(found, "fma behaves identically to mul+add: not fused?");
+    }
+
+    #[test]
+    fn ulp_scales_with_binade() {
+        assert_eq!(Bf16::from_f32(1.0).ulp(), 1.0 / 128.0);
+        assert_eq!(Bf16::from_f32(2.0).ulp(), 1.0 / 64.0);
+        assert_eq!(Bf16::from_f32(0.5).ulp(), 1.0 / 256.0);
+    }
+
+    #[test]
+    fn quantize_slice_idempotent() {
+        let xs = vec![0.1, -2.7, 3.14159, 1e-20, 1e20];
+        let q1 = quantize_slice(&xs);
+        let q2 = quantize_slice(&q1);
+        assert_eq!(q1, q2);
+    }
+}

@@ -1,0 +1,137 @@
+//! Truncating fixed-point accumulators — the SoftEx GELU lane accumulator
+//! (paper Sec. V-B3).
+//!
+//! The lane accumulator exploits that the sum-of-exponentials partial sums
+//! are bounded in (0, 0.5], so a narrow fixed-point adder replaces a full
+//! floating-point one. Additions *truncate* the incoming product toward
+//! zero ("this approach has the drawback of quantizing relatively small
+//! values to zero"), which is the accuracy/area trade Fig. 5 sweeps.
+
+/// Fixed-point accumulator with `frac_bits` fractional bits.
+#[derive(Clone, Copy, Debug)]
+pub struct FixedAcc {
+    acc: i64,
+    frac_bits: u32,
+}
+
+impl FixedAcc {
+    pub fn new(frac_bits: u32) -> Self {
+        assert!((1..=30).contains(&frac_bits), "unreasonable width");
+        Self { acc: 0, frac_bits }
+    }
+
+    /// Truncating add of a non-negative f32 product (the bf16 a_i * e_i).
+    #[inline]
+    pub fn add_trunc(&mut self, x: f32) {
+        debug_assert!(x >= 0.0, "lane accumulator inputs are positive");
+        let scaled = (x as f64) * (1u64 << self.frac_bits) as f64;
+        self.acc += scaled.floor() as i64;
+    }
+
+    /// Current value as f32 (the back-conversion to bf16 happens upstream).
+    #[inline]
+    pub fn value(&self) -> f32 {
+        self.acc as f64 as f32 / (1u64 << self.frac_bits) as f32
+    }
+
+    /// Raw integer contents (for bit-level tests).
+    pub fn raw(&self) -> i64 {
+        self.acc
+    }
+
+    pub fn frac_bits(&self) -> u32 {
+        self.frac_bits
+    }
+
+    pub fn reset(&mut self) {
+        self.acc = 0;
+    }
+
+    /// One quantum of this accumulator.
+    pub fn quantum(&self) -> f32 {
+        1.0 / (1u64 << self.frac_bits) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    #[test]
+    fn exact_for_representable_values() {
+        let mut a = FixedAcc::new(14);
+        a.add_trunc(0.5);
+        a.add_trunc(0.25);
+        assert_eq!(a.value(), 0.75);
+        assert_eq!(a.raw(), (0.75 * 16384.0) as i64);
+    }
+
+    #[test]
+    fn truncates_toward_zero() {
+        let mut a = FixedAcc::new(14);
+        // 1.9 quanta -> 1 quantum
+        a.add_trunc(1.9 / 16384.0);
+        assert_eq!(a.raw(), 1);
+    }
+
+    #[test]
+    fn small_values_quantize_to_zero() {
+        // the paper's stated drawback, relied on by the Fig. 5 sweep
+        let mut a = FixedAcc::new(8);
+        a.add_trunc(1e-4); // << 1/256
+        assert_eq!(a.value(), 0.0);
+    }
+
+    #[test]
+    fn error_bounded_by_n_quanta() {
+        forall(
+            "fixed-acc-error",
+            300,
+            |r| {
+                let n = 2 + r.below(6) as usize;
+                (0..n)
+                    .map(|_| r.uniform_range(0.0, 0.125) as f32)
+                    .collect::<Vec<_>>()
+            },
+            |xs| {
+                let mut a = FixedAcc::new(14);
+                for &x in xs {
+                    a.add_trunc(x);
+                }
+                let exact: f64 = xs.iter().map(|&x| x as f64).sum();
+                let err = exact - a.value() as f64;
+                err >= 0.0 && err <= xs.len() as f64 * a.quantum() as f64
+            },
+        );
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let xs: Vec<f32> = (0..4).map(|i| 0.1 + 0.01 * i as f32).collect();
+        let exact: f64 = xs.iter().map(|&x| x as f64).sum();
+        let mut errs = vec![];
+        for bits in [8, 11, 14] {
+            let mut a = FixedAcc::new(bits);
+            for &x in &xs {
+                a.add_trunc(x);
+            }
+            errs.push((exact - a.value() as f64).abs());
+        }
+        assert!(errs[0] >= errs[1] && errs[1] >= errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut a = FixedAcc::new(14);
+        a.add_trunc(0.3);
+        a.reset();
+        assert_eq!(a.value(), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_width() {
+        let _ = FixedAcc::new(0);
+    }
+}

@@ -1,0 +1,80 @@
+//! f32 bit-pattern helpers shared by the expp unit and the reciprocal seed.
+
+/// Decompose an f32 into (sign, biased exponent, 23-bit mantissa).
+#[inline]
+pub fn decompose(x: f32) -> (bool, i32, u32) {
+    let b = x.to_bits();
+    ((b >> 31) != 0, ((b >> 23) & 0xFF) as i32, b & 0x7F_FFFF)
+}
+
+/// Newton-Raphson reciprocal of a positive f32 exactly as the SoftEx
+/// denominator accumulator computes it (paper Sec. V-B2b):
+///
+/// * exponent of the seed is exactly `253 - e` (i.e. `2B - 1 - E`);
+/// * seed mantissa is the parabola `(1-M)^2 / 2` with `1-M` approximated
+///   by the one's complement `not(M)`;
+/// * two Newton iterations `r <- r * (2 - d*r)` on the FP32 FMA.
+///
+/// Must stay in lock-step with `hw_recip` in
+/// `python/compile/kernels/softmax.py` (golden-vector tested).
+pub fn hw_recip(d: f32) -> f32 {
+    debug_assert!(d > 0.0 && d.is_finite());
+    let bits = d.to_bits();
+    let e = ((bits >> 23) & 0xFF) as i32;
+    let m = bits & 0x7F_FFFF;
+    let nm = 0x7F_FFFF - m; // not(M)
+    let mf = nm as f32 * (2.0f32).powi(-23);
+    let seed_mant = mf * mf * 0.5;
+    let seed_exp = 253 - e;
+    let seed_pow = f32::from_bits((seed_exp as u32) << 23);
+    let mut r = seed_pow * (1.0 + seed_mant);
+    r = r * (2.0 - d * r);
+    r = r * (2.0 - d * r);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    #[test]
+    fn decompose_one() {
+        assert_eq!(decompose(1.0), (false, 127, 0));
+        assert_eq!(decompose(-2.5), (true, 128, 0x20_0000));
+    }
+
+    #[test]
+    fn recip_powers_of_two() {
+        for &d in &[0.25f32, 0.5, 1.0, 2.0, 1024.0] {
+            let r = hw_recip(d);
+            assert!((r * d - 1.0).abs() < 5e-3, "d={d} r={r}");
+        }
+    }
+
+    #[test]
+    fn recip_relative_error_bounded() {
+        // worst case ~0.39% = 1 bf16 ulp after two Newton iterations
+        forall(
+            "hw-recip",
+            5000,
+            |r| (r.uniform_range(-13.0, 13.0)).exp2() as f32,
+            |&d| {
+                let r = hw_recip(d);
+                ((r as f64) * (d as f64) - 1.0).abs() < 0.0040
+            },
+        );
+    }
+
+    #[test]
+    fn recip_monotone_decreasing_coarse() {
+        let mut prev = f32::INFINITY;
+        for i in 1..1000 {
+            let d = i as f32 * 0.37;
+            let r = hw_recip(d);
+            // allow tiny non-monotonicity within the error bound
+            assert!(r <= prev * 1.005, "d={d}");
+            prev = r;
+        }
+    }
+}

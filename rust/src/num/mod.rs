@@ -1,0 +1,16 @@
+//! Bit-exact numeric substrates for the hardware models.
+//!
+//! * [`bf16`] — BFloat16 with round-to-nearest-even, the cluster's native
+//!   Transformer precision (paper Sec. I: "running at the native BFloat16
+//!   precision of Transformers").
+//! * [`fixed`] — truncating fixed-point accumulators (the SoftEx GELU
+//!   lane accumulators, Sec. V-B3).
+//! * [`fp`] — f32 bit-pattern helpers shared by the expp unit and the
+//!   Newton-Raphson reciprocal seed.
+
+pub mod bf16;
+pub mod fixed;
+pub mod fp;
+
+pub use bf16::Bf16;
+pub use fixed::FixedAcc;

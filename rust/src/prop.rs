@@ -1,0 +1,59 @@
+//! Minimal property-testing harness (proptest is not in the offline
+//! vendored crate set).
+//!
+//! `forall` runs a property over `n` random cases drawn from a generator;
+//! on failure it re-runs the generator from the failing seed and reports
+//! it, so a failure line like `prop failed at seed=...` is directly
+//! reproducible with `check_one`.
+
+use crate::rng::Xoshiro256;
+
+/// Run `prop` over `n` random cases produced by `gen`. Panics with the
+/// reproducing seed on the first failure.
+pub fn forall<T, G, P>(name: &str, n: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Xoshiro256) -> T,
+    P: FnMut(&T) -> bool,
+    T: std::fmt::Debug,
+{
+    for case in 0..n {
+        let seed = 0xC0FFEE_u64.wrapping_add(case as u64);
+        let mut rng = Xoshiro256::new(seed);
+        let value = gen(&mut rng);
+        if !prop(&value) {
+            panic!("prop `{name}` failed at seed={seed} case={case}: {value:?}");
+        }
+    }
+}
+
+/// Re-run a single case (for debugging a failure seed from `forall`).
+pub fn check_one<T, G, P>(seed: u64, mut gen: G, mut prop: P) -> bool
+where
+    G: FnMut(&mut Xoshiro256) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let mut rng = Xoshiro256::new(seed);
+    let value = gen(&mut rng);
+    prop(&value)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("unit-interval", 100, |r| r.uniform(), |u| (0.0..1.0).contains(u));
+    }
+
+    #[test]
+    #[should_panic(expected = "prop `always-false` failed")]
+    fn forall_reports_failures() {
+        forall("always-false", 10, |r| r.next_u64(), |_| false);
+    }
+
+    #[test]
+    fn check_one_reproduces() {
+        assert!(check_one(0xC0FFEE, |r| r.uniform(), |u| (0.0..1.0).contains(u)));
+    }
+}

@@ -1,0 +1,170 @@
+//! RedMulE tensor-processing-unit model (Tortorella et al. [23]; paper
+//! Sec. V-A integrates a 24x8 instance).
+//!
+//! Functional: tiled bf16 matmul with f32 accumulation (what the PE
+//! array's BF16 FMAs with wide accumulators compute — also what the L2
+//! JAX graph's `redmule_matmul` lowers to, keeping numerics aligned).
+//!
+//! Timing: output-stationary array of `rows x cols` FMAs; ideal cycles
+//! are MACs / (rows*cols); a utilization factor (pipeline fill/drain,
+//! edge tiles, TCDM stalls) scales them. Calibration: the paper's
+//! compound attention throughput of 324 GOPS out of 430 GOPS peak implies
+//! ~0.85 utilization on transformer-shaped matmuls (DESIGN.md §5).
+
+use crate::num::Bf16;
+
+/// RedMulE configuration: the PE array geometry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RedMuleConfig {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Default for RedMuleConfig {
+    fn default() -> Self {
+        Self { rows: 24, cols: 8 } // the paper's instance
+    }
+}
+
+impl RedMuleConfig {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols }
+    }
+
+    /// MAC units in the array.
+    pub fn macs(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Peak throughput in OPs/cycle (1 MAC = 2 OPs, Sec. VII-A).
+    pub fn peak_ops_per_cycle(&self) -> f64 {
+        (self.macs() * 2) as f64
+    }
+}
+
+/// Utilization on transformer-shaped matmuls (calibrated, DESIGN.md §5).
+pub const MATMUL_UTILIZATION: f64 = 0.85;
+
+/// Cycle cost of an MxKxN matmul on this array.
+pub fn matmul_cycles(cfg: &RedMuleConfig, m: usize, k: usize, n: usize) -> u64 {
+    let macs = (m as u64) * (k as u64) * (n as u64);
+    let ideal = macs as f64 / cfg.macs() as f64;
+    // fill/drain: one extra pass of the array pipeline per tile column
+    let tiles = ((m + cfg.rows - 1) / cfg.rows) as f64 * ((n + cfg.cols - 1) / cfg.cols) as f64;
+    let fill_drain = tiles * (cfg.rows + cfg.cols) as f64;
+    ((ideal / MATMUL_UTILIZATION) + fill_drain).ceil() as u64
+}
+
+/// Functional bf16 matmul with f32 accumulation: c[m][n] = sum_k a*b.
+/// Row-major slices; returns row-major m x n (f32 values, *not* re-rounded
+/// to bf16 — RedMulE keeps wide accumulators, and downstream consumers
+/// quantize at the next operator boundary, matching the L2 graph).
+pub fn matmul_f32acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = Bf16::from_f32(a[i * k + kk]).to_f32();
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * Bf16::from_f32(bv).to_f32();
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::bf16::quantize_slice;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn default_is_24x8() {
+        let c = RedMuleConfig::default();
+        assert_eq!(c.macs(), 192);
+        assert_eq!(c.peak_ops_per_cycle(), 384.0);
+    }
+
+    #[test]
+    fn peak_throughput_is_430_gops_at_1_12ghz() {
+        // Sec. VII-C: 430 GOPS at 0.8 V
+        let gops = RedMuleConfig::default().peak_ops_per_cycle() * 1.12e9 / 1e9;
+        assert!((gops - 430.0).abs() < 1.0, "{gops}");
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let n = 8;
+        let mut eye = vec![0.0f32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let x = quantize_slice(&Xoshiro256::new(1).normal_vec_f32(n * n, 1.0));
+        let y = matmul_f32acc(&x, &eye, n, n, n);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn matmul_matches_f64_reference() {
+        let (m, k, n) = (13, 37, 9);
+        let mut rng = Xoshiro256::new(2);
+        let a = quantize_slice(&rng.normal_vec_f32(m * k, 1.0));
+        let b = quantize_slice(&rng.normal_vec_f32(k * n, 1.0));
+        let c = matmul_f32acc(&a, &b, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let exact: f64 = (0..k)
+                    .map(|kk| a[i * k + kk] as f64 * b[kk * n + j] as f64)
+                    .sum();
+                let got = c[i * n + j] as f64;
+                assert!(
+                    (got - exact).abs() < 1e-3 * (exact.abs() + 1.0),
+                    "({i},{j}): {got} vs {exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cycles_scale_with_work() {
+        let cfg = RedMuleConfig::default();
+        let c1 = matmul_cycles(&cfg, 192, 512, 192);
+        let c2 = matmul_cycles(&cfg, 192, 1024, 192);
+        let r = c2 as f64 / c1 as f64;
+        assert!(r > 1.9 && r < 2.1, "{r}");
+    }
+
+    #[test]
+    fn bigger_array_is_faster_but_sublinear_on_small_matmuls() {
+        // the Fig. 1 motivation: growing the array stops paying off
+        let small = RedMuleConfig::new(12, 4);
+        let big = RedMuleConfig::new(24, 8);
+        let cs = matmul_cycles(&small, 64, 64, 64);
+        let cb = matmul_cycles(&big, 64, 64, 64);
+        let speedup = cs as f64 / cb as f64;
+        assert!(speedup > 1.5 && speedup < 4.0, "{speedup}");
+    }
+
+    #[test]
+    fn utilization_near_calibrated_value_on_transformer_shapes() {
+        let cfg = RedMuleConfig::default();
+        let (m, k, n) = (512, 512, 512);
+        let cycles = matmul_cycles(&cfg, m, k, n);
+        let ideal = (m * k * n) as f64 / cfg.macs() as f64;
+        let util = ideal / cycles as f64;
+        assert!((0.78..=0.86).contains(&util), "{util}");
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn rejects_bad_shapes() {
+        matmul_f32acc(&[0.0; 10], &[0.0; 10], 3, 4, 5);
+    }
+}

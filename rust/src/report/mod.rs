@@ -1,0 +1,84 @@
+//! Paper-style plain-text table rendering for the bench harnesses.
+
+/// Render a table with a title, column headers and string rows.
+pub fn render_table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let hdr: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Format a float with engineering-style precision.
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+/// Format a percentage.
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+/// Format a cycle count as k/M cycles.
+pub fn cycles(c: u64) -> String {
+    if c >= 10_000_000 {
+        format!("{:.1} Mcyc", c as f64 / 1e6)
+    } else if c >= 10_000 {
+        format!("{:.1} kcyc", c as f64 / 1e3)
+    } else {
+        format!("{c} cyc")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            "Demo",
+            &["name", "value"],
+            &[
+                vec!["a".into(), "1.0".into()],
+                vec!["longer".into(), "2.5".into()],
+            ],
+        );
+        assert!(t.contains("== Demo =="));
+        assert!(t.contains("longer"));
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f(3.14159, 2), "3.14");
+        assert_eq!(pct(0.174), "17.4%");
+        assert_eq!(cycles(14_200), "14.2 kcyc");
+        assert_eq!(cycles(15_000_000), "15.0 Mcyc");
+        assert_eq!(cycles(512), "512 cyc");
+    }
+}

@@ -1,0 +1,190 @@
+//! Artifact manifest and golden-vector parsing.
+//!
+//! `make artifacts` (python/compile/aot.py) writes, per entry point:
+//!   * `<name>.hlo.txt`    — HLO text for the PJRT loader;
+//!   * `<name>.golden.txt` — one concrete (inputs, outputs) evaluation
+//!     in JAX, the cross-layer numeric contract;
+//! plus `manifest.txt` with `name | in_sig | out_sig` lines.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// A single tensor signature: shape + dtype.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    /// Parse "197x197:float32" (scalars: "10:float32" is a 1-D vector).
+    pub fn parse(s: &str) -> Result<Self> {
+        let (shape_s, dtype) = s
+            .split_once(':')
+            .with_context(|| format!("bad tensor sig `{s}`"))?;
+        let shape = shape_s
+            .split('x')
+            .map(|d| d.parse::<usize>().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { shape, dtype: dtype.to_string() })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    pub hlo_path: PathBuf,
+    pub golden_path: PathBuf,
+}
+
+/// The artifact directory index.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Load `manifest.txt` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let mut artifacts = Vec::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let parts: Vec<&str> = line.split('|').map(str::trim).collect();
+            if parts.len() != 3 {
+                bail!("malformed manifest line: `{line}`");
+            }
+            let name = parts[0].to_string();
+            let parse_sigs = |s: &str| -> Result<Vec<TensorSig>> {
+                s.split(',').map(|t| TensorSig::parse(t.trim())).collect()
+            };
+            artifacts.push(Artifact {
+                hlo_path: dir.join(format!("{name}.hlo.txt")),
+                golden_path: dir.join(format!("{name}.golden.txt")),
+                name,
+                inputs: parse_sigs(parts[1])?,
+                outputs: parse_sigs(parts[2])?,
+            });
+        }
+        Ok(Self { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+}
+
+/// Parsed golden vectors: flat f32 inputs and outputs.
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub inputs: Vec<Vec<f32>>,
+    pub outputs: Vec<Vec<f32>>,
+}
+
+impl Golden {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading golden {}", path.as_ref().display()))?;
+        let mut lines = text.lines();
+        let mut inputs = Vec::new();
+        let mut outputs = Vec::new();
+        while let Some(header) = lines.next() {
+            let header = header.trim();
+            if header.is_empty() {
+                continue;
+            }
+            let mut it = header.split_whitespace();
+            let kind = it.next().context("empty golden header")?;
+            let _sig = it.next();
+            let len: usize = it.next().context("missing len")?.parse()?;
+            let data_line = lines.next().context("missing data line")?;
+            let vals: Vec<f32> = data_line
+                .split_whitespace()
+                .map(|v| v.parse::<f32>().context("bad float"))
+                .collect::<Result<Vec<_>>>()?;
+            if vals.len() != len {
+                bail!("golden length mismatch: {} vs {}", vals.len(), len);
+            }
+            match kind {
+                "in" => inputs.push(vals),
+                "out" => outputs.push(vals),
+                other => bail!("bad golden record `{other}`"),
+            }
+        }
+        Ok(Self { inputs, outputs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        Manifest::default_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn tensor_sig_parsing() {
+        let t = TensorSig::parse("197x197:float32").unwrap();
+        assert_eq!(t.shape, vec![197, 197]);
+        assert_eq!(t.numel(), 38809);
+        assert_eq!(t.dtype, "float32");
+        assert!(TensorSig::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn manifest_loads_if_built() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(Manifest::default_dir()).unwrap();
+        assert!(m.artifacts.len() >= 8, "{}", m.artifacts.len());
+        let sm = m.get("softmax_128x128").expect("softmax artifact");
+        assert_eq!(sm.inputs[0].shape, vec![128, 128]);
+        assert!(sm.hlo_path.exists());
+        assert!(sm.golden_path.exists());
+    }
+
+    #[test]
+    fn goldens_parse_and_match_sigs() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(Manifest::default_dir()).unwrap();
+        for a in &m.artifacts {
+            let g = Golden::load(&a.golden_path).unwrap();
+            assert_eq!(g.inputs.len(), a.inputs.len(), "{}", a.name);
+            assert_eq!(g.outputs.len(), a.outputs.len(), "{}", a.name);
+            for (v, sig) in g.inputs.iter().zip(&a.inputs) {
+                assert_eq!(v.len(), sig.numel(), "{}", a.name);
+            }
+        }
+    }
+
+    #[test]
+    fn golden_rejects_malformed() {
+        let dir = std::env::temp_dir().join("softex_golden_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.golden.txt");
+        std::fs::write(&p, "in 4:float32 4\n1.0 2.0\n").unwrap();
+        assert!(Golden::load(&p).is_err());
+    }
+}

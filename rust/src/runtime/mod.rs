@@ -1,0 +1,13 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! request-path bridge: HLO *text* (jax >= 0.5 serialized protos are
+//! rejected by xla_extension 0.5.1 — 64-bit instruction ids) is parsed by
+//! `HloModuleProto::from_text_file`, compiled on the PJRT CPU client and
+//! executed with concrete buffers.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{Artifact, Golden, Manifest};
+pub use pjrt::Engine;

@@ -1,0 +1,244 @@
+//! The PJRT execution engine: compile-once / execute-many over the AOT
+//! artifacts (the pattern of /opt/xla-example/load_hlo).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::{Artifact, Golden, Manifest};
+
+/// A PJRT CPU client plus a cache of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create the engine over an artifacts directory.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Self { client, manifest, compiled: HashMap::new() })
+    }
+
+    /// Engine over the default `artifacts/` directory.
+    pub fn from_default_artifacts() -> Result<Self> {
+        Self::new(Manifest::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&Artifact> {
+        self.manifest
+            .get(name)
+            .with_context(|| format!("unknown artifact `{name}`"))
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let art = self.artifact(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            art.hlo_path
+                .to_str()
+                .context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text for `{name}`"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of `{name}`"))?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on flat f32 inputs (shapes from the manifest).
+    /// Returns the flat f32 single output (all our artifacts are lowered
+    /// with `return_tuple=True` and have exactly one result).
+    pub fn run(&mut self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        self.prepare(name)?;
+        let art = self.artifact(name)?.clone();
+        anyhow::ensure!(
+            inputs.len() == art.inputs.len(),
+            "`{name}` expects {} inputs, got {}",
+            art.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, sig) in inputs.iter().zip(&art.inputs) {
+            anyhow::ensure!(
+                data.len() == sig.numel(),
+                "`{name}` input length {} != {:?}",
+                data.len(),
+                sig.shape
+            );
+            let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims)?;
+            literals.push(lit);
+        }
+        let exe = self.compiled.get(name).expect("prepared above");
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        Ok(result.to_vec::<f32>()?)
+    }
+
+    /// Run the artifact on its golden inputs and return
+    /// (max_abs_err, got, want) against the golden outputs.
+    pub fn verify_golden(&mut self, name: &str) -> Result<(f32, Vec<f32>, Vec<f32>)> {
+        let art = self.artifact(name)?.clone();
+        let golden = Golden::load(&art.golden_path)?;
+        let got = self.run(name, &golden.inputs)?;
+        let want = golden.outputs[0].clone();
+        anyhow::ensure!(got.len() == want.len(), "output length mismatch");
+        // NB: fold with f32::max would silently ignore NaN (max(0, NaN)
+        // = 0); force non-finite diffs to +inf so they can never pass.
+        let max_err = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| {
+                let d = (a - b).abs();
+                if d.is_finite() { d } else { f32::INFINITY }
+            })
+            .fold(0.0f32, f32::max);
+        Ok((max_err, got, want))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        Manifest::default_dir().join("manifest.txt").exists()
+    }
+
+    macro_rules! require_artifacts {
+        () => {
+            if !artifacts_available() {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        };
+    }
+
+    #[test]
+    fn engine_loads_and_runs_matmul() {
+        require_artifacts!();
+        let mut e = Engine::from_default_artifacts().unwrap();
+        let (err, got, _want) = e.verify_golden("matmul_256").unwrap();
+        // jax's bundled XLA and the crate's xla_extension 0.5.1 may order
+        // the f32 reduction differently: allow a few ulp of the ~16-wide
+        // bf16 dot products.
+        assert!(err <= 1e-4, "matmul golden mismatch: {err}");
+        assert_eq!(got.len(), 256 * 256);
+    }
+
+    #[test]
+    fn expp_kernel_golden_is_bit_exact() {
+        require_artifacts!();
+        let mut e = Engine::from_default_artifacts().unwrap();
+        let (err, _, _) = e.verify_golden("expp_16384").unwrap();
+        assert_eq!(err, 0.0, "expp artifact vs golden");
+    }
+
+    #[test]
+    fn softmax_kernel_golden_is_bit_exact() {
+        require_artifacts!();
+        let mut e = Engine::from_default_artifacts().unwrap();
+        let (err, _, _) = e.verify_golden("softmax_128x128").unwrap();
+        assert_eq!(err, 0.0);
+    }
+
+    #[test]
+    fn gelu_kernel_golden_is_bit_exact() {
+        require_artifacts!();
+        let mut e = Engine::from_default_artifacts().unwrap();
+        let (err, _, _) = e.verify_golden("gelu_16384").unwrap();
+        assert_eq!(err, 0.0);
+    }
+
+    #[test]
+    fn vit_tiny_forward_runs() {
+        require_artifacts!();
+        let mut e = Engine::from_default_artifacts().unwrap();
+        let (err, got, want) = e.verify_golden("vit_tiny_forward").unwrap();
+        assert_eq!(got.len(), 10);
+        // End-to-end float graph across two different XLA builds (jax's
+        // bundled runtime vs xla_extension 0.5.1): reduction orders in
+        // matmul/LayerNorm differ and compound over 4 transformer layers.
+        let scale = want.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert!(err <= scale * 8e-3, "err {err} scale {scale}");
+    }
+
+    #[test]
+    fn rust_softex_matches_pallas_softmax_golden() {
+        // The cross-layer contract: the Rust functional model and the
+        // Pallas kernel agree on the softmax outputs to <= 2 bf16 ulp of
+        // the largest probability (the online-vs-global max denominator
+        // path differs by bounded rounding).
+        require_artifacts!();
+        let m = Manifest::load(Manifest::default_dir()).unwrap();
+        let art = m.get("softmax_128x128").unwrap();
+        let g = Golden::load(&art.golden_path).unwrap();
+        let r = crate::softex::run_softmax(
+            &crate::softex::SoftExConfig::default(),
+            &g.inputs[0],
+            128,
+            128,
+        );
+        let max_err = r
+            .out
+            .iter()
+            .zip(&g.outputs[0])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err <= 0.016, "rust vs pallas softmax: {max_err}");
+    }
+
+    #[test]
+    fn rust_expp_matches_pallas_expp_golden_bitexact() {
+        require_artifacts!();
+        let m = Manifest::load(Manifest::default_dir()).unwrap();
+        let art = m.get("expp_16384").unwrap();
+        let g = Golden::load(&art.golden_path).unwrap();
+        let ours = crate::expp::correction::expp_slice(&g.inputs[0]);
+        for (i, (a, b)) in ours.iter().zip(&g.outputs[0]).enumerate() {
+            assert_eq!(a, b, "expp bit mismatch at {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn rust_gelu_matches_pallas_gelu_golden_bitexact() {
+        require_artifacts!();
+        let m = Manifest::load(Manifest::default_dir()).unwrap();
+        let art = m.get("gelu_16384").unwrap();
+        let g = Golden::load(&art.golden_path).unwrap();
+        let r = crate::softex::run_gelu(&crate::softex::SoftExConfig::default(), &g.inputs[0]);
+        for (i, (a, b)) in r.out.iter().zip(&g.outputs[0]).enumerate() {
+            assert_eq!(a, b, "gelu bit mismatch at {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        require_artifacts!();
+        let mut e = Engine::from_default_artifacts().unwrap();
+        assert!(e.run("no_such_thing", &[]).is_err());
+    }
+
+    #[test]
+    fn wrong_input_shape_errors() {
+        require_artifacts!();
+        let mut e = Engine::from_default_artifacts().unwrap();
+        let r = e.run("expp_16384", &[vec![0.0f32; 7]]);
+        assert!(r.is_err());
+    }
+}

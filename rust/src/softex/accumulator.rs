@@ -1,0 +1,174 @@
+//! The denominator accumulator (paper Sec. V-B2a/b): a single pipelined
+//! FP32 FMA that
+//!
+//! 1. accumulates the exponentiated scores *online*, rescaling the
+//!    partial denominator by `expp(curr_max - new_max)` whenever the
+//!    running maximum is updated (Eq. 2) — in-flight operations are
+//!    rescaled sequentially using the FMA itself, stalling the pipeline;
+//! 2. once accumulation completes, computes the reciprocal with two
+//!    Newton-Raphson iterations seeded from the exponent/parabola trick.
+//!
+//! Accumulation is performed in FP32 because "the contributions from
+//! relatively small inputs, generally the majority, would otherwise be
+//! lost" (Sec. V-B1).
+
+use crate::expp::lut::expp_fast as expp;
+use crate::num::fp::hw_recip;
+use crate::num::Bf16;
+
+use super::datapath::{Expu, Mau};
+
+/// Result of the online accumulation pass over one vector.
+#[derive(Clone, Copy, Debug)]
+pub struct AccumResult {
+    /// Global maximum of the vector (bf16).
+    pub max: Bf16,
+    /// The denominator sum(expp(x_i - max)) in FP32.
+    pub denominator: f32,
+    /// How many times the running max was updated after the first chunk
+    /// (each one stalls the FMA pipeline for a sequential rescale).
+    pub rescales: u32,
+}
+
+/// Online accumulation over `xs` processed `lanes` elements per cycle.
+/// Bit-faithful to the datapath: bf16 subtract (MAU), expp (EXPU), f32
+/// adder tree per chunk, f32 accumulate, f32 rescale multiplies.
+pub fn accumulate_online(xs: &[f32], lanes: usize) -> AccumResult {
+    assert!(!xs.is_empty(), "empty softmax vector");
+    let mau = Mau;
+    let expu = Expu;
+    let mut cur_max = Bf16::from_f32(f32::NEG_INFINITY);
+    let mut den: f32 = 0.0;
+    let mut rescales: u32 = 0;
+    let mut first = true;
+
+    for chunk in xs.chunks(lanes) {
+        // max unit: find the chunk max, update the running max
+        let mut chunk_max = Bf16::from_f32(chunk[0]);
+        for &v in &chunk[1..] {
+            let b = Bf16::from_f32(v);
+            if b.to_f32() > chunk_max.to_f32() {
+                chunk_max = b;
+            }
+        }
+        if chunk_max.to_f32() > cur_max.to_f32() {
+            if !first {
+                // rescale the in-flight partial denominator (Eq. 2)
+                let scale = expp(mau.sub(cur_max, chunk_max));
+                den *= scale.to_f32();
+                rescales += 1;
+            }
+            cur_max = chunk_max;
+        }
+        first = false;
+        // lane array: subtract max (bf16), exponentiate, f32 adder tree
+        let mut tree: f32 = 0.0;
+        for &v in chunk {
+            let shifted = mau.sub(Bf16::from_f32(v), cur_max);
+            tree += expu.exp(shifted).to_f32();
+        }
+        den += tree;
+    }
+    AccumResult { max: cur_max, denominator: den, rescales }
+}
+
+/// The inversion step: Newton-Raphson reciprocal of the denominator,
+/// returned in FP32 (cast to bf16 by the normalization path).
+pub fn invert(denominator: f32) -> f32 {
+    hw_recip(denominator)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::bf16::quantize_slice;
+    use crate::rng::Xoshiro256;
+
+    fn gen(n: usize, sigma: f32, seed: u64) -> Vec<f32> {
+        quantize_slice(&Xoshiro256::new(seed).normal_vec_f32(n, sigma))
+    }
+
+    #[test]
+    fn max_is_global_max() {
+        let xs = gen(1000, 2.0, 1);
+        let r = accumulate_online(&xs, 16);
+        let want = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert_eq!(r.max.to_f32(), want);
+    }
+
+    #[test]
+    fn denominator_close_to_exact() {
+        let xs = gen(512, 2.0, 2);
+        let r = accumulate_online(&xs, 16);
+        let m = r.max.to_f32() as f64;
+        let exact: f64 = xs.iter().map(|&x| ((x as f64) - m).exp()).sum();
+        let rel = (r.denominator as f64 - exact).abs() / exact;
+        assert!(rel < 0.01, "rel {rel}");
+    }
+
+    #[test]
+    fn monotonically_increasing_input_worst_case() {
+        // the "pathologic case" called out in Sec. V-B2a: every chunk
+        // raises the max, forcing a rescale each time
+        let xs: Vec<f32> = (0..256).map(|i| i as f32 * 0.25 - 40.0).collect();
+        let xs = quantize_slice(&xs);
+        let r = accumulate_online(&xs, 16);
+        assert_eq!(r.rescales, 256 / 16 - 1);
+        let m = r.max.to_f32() as f64;
+        let exact: f64 = xs.iter().map(|&x| ((x as f64) - m).exp()).sum();
+        let rel = (r.denominator as f64 - exact).abs() / exact;
+        assert!(rel < 0.02, "rel {rel}");
+    }
+
+    #[test]
+    fn decreasing_input_never_rescales() {
+        let xs: Vec<f32> = (0..256).map(|i| -(i as f32) * 0.1).collect();
+        let r = accumulate_online(&quantize_slice(&xs), 16);
+        assert_eq!(r.rescales, 0);
+    }
+
+    #[test]
+    fn order_independent_up_to_rounding() {
+        let mut xs = gen(512, 3.0, 7);
+        let r1 = accumulate_online(&xs, 16);
+        xs.reverse();
+        let r2 = accumulate_online(&xs, 16);
+        assert_eq!(r1.max, r2.max);
+        let rel =
+            ((r1.denominator - r2.denominator) / r1.denominator).abs();
+        assert!(rel < 0.01, "rel {rel}");
+    }
+
+    #[test]
+    fn denominator_at_least_one() {
+        // expp(max - max) = 1 is always a term
+        let xs = gen(128, 1.0, 9);
+        let r = accumulate_online(&xs, 16);
+        assert!(r.denominator >= 0.99);
+    }
+
+    #[test]
+    fn invert_times_denominator_is_one() {
+        for &d in &[1.0f32, 3.7, 128.0, 1.7e4] {
+            assert!((invert(d) * d - 1.0).abs() < 0.005);
+        }
+    }
+
+    #[test]
+    fn single_element_vector() {
+        let r = accumulate_online(&[2.5], 16);
+        assert_eq!(r.max.to_f32(), 2.5);
+        assert!((r.denominator - 1.0).abs() < 1e-6);
+        assert_eq!(r.rescales, 0);
+    }
+
+    #[test]
+    fn lane_width_does_not_change_result_much() {
+        let xs = gen(333, 2.0, 11);
+        let r16 = accumulate_online(&xs, 16);
+        let r4 = accumulate_online(&xs, 4);
+        assert_eq!(r16.max, r4.max);
+        let rel = ((r16.denominator - r4.denominator) / r16.denominator).abs();
+        assert!(rel < 0.005, "rel {rel}");
+    }
+}

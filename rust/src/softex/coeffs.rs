@@ -1,0 +1,146 @@
+//! Sum-of-exponentials coefficients for the Gaussian Q-function
+//! (paper Sec. III-C / Appendix; fitted per Tanash & Riihonen over
+//! [0, 2.8] in relative error with r(0) = -r_max).
+//!
+//! Mirror of `python/compile/kernels/coeffs.py::SOE_COEFFS` — the two must
+//! stay identical (cross-checked by the golden-vector runtime tests).
+
+/// (a_i, b_i) weight pairs plus the achieved max relative error, per term
+/// count N_w in 2..=6.
+pub fn soe_coeffs(terms: usize) -> (&'static [f64], &'static [f64], f64) {
+    match terms {
+        2 => (&A2, &B2, 5.471e-2),
+        3 => (&A3, &B3, 1.699e-2),
+        4 => (&A4, &B4, 6.48e-3),
+        5 => (&A5, &B5, 2.78e-3),
+        6 => (&A6, &B6, 3.91e-3),
+        _ => panic!("sum-of-exponentials fitted for 2..=6 terms, got {terms}"),
+    }
+}
+
+static A2: [f64; 2] = [0.26146600, 0.21117873];
+static B2: [f64; 2] = [0.59746135, 3.44125356];
+
+static A3: [f64; 3] = [0.22798227, 0.17528598, 0.08823792];
+static B3: [f64; 3] = [0.57503648, 1.76040176, 24.68097028];
+
+static A4: [f64; 4] = [0.21045943, 0.15579257, 0.09396217, 0.03654393];
+static B4: [f64; 4] = [0.56364560, 1.36409451, 7.84896545, 154.48448138];
+
+static A5: [f64; 5] = [0.19670326, 0.14468806, 0.09417818, 0.04673172, 0.01630930];
+static B5: [f64; 5] = [0.55494203, 1.17119911, 4.57679345, 35.82410459, 800.63105373];
+
+static A6: [f64; 6] = [
+    0.08128476, 0.10819573, 0.10611694, 0.11645327, 0.06321428, 0.02277756,
+];
+static B6: [f64; 6] = [
+    0.48864579, 0.64132223, 0.89753052, 2.68102317, 18.86970997, 407.38806911,
+];
+
+/// GELU(x) ~ x for x > X_CLIP; Phi(x) ~ 0 below -X_CLIP (Sec. VI-B).
+pub const X_CLIP: f64 = 2.8;
+
+
+/// erfc with ~1e-12 accuracy (Taylor series / continued-fraction hybrid).
+/// Public because the accuracy benches (Fig. 5) and the GELU tests need an
+/// exact Gaussian-CDF oracle and the std library has no erf.
+pub fn erfc_ref(x: f64) -> f64 {
+    if x < 0.0 {
+        return 2.0 - erfc_ref(-x);
+    }
+    if x < 2.0 {
+        let mut term = x;
+        let mut sum = x;
+        let x2 = x * x;
+        for n in 1..200 {
+            term *= -x2 / n as f64;
+            let add = term / (2 * n + 1) as f64;
+            sum += add;
+            if add.abs() < 1e-17 {
+                break;
+            }
+        }
+        1.0 - 2.0 / std::f64::consts::PI.sqrt() * sum
+    } else {
+        let mut cf = 0.0f64;
+        for k in (1..=60).rev() {
+            cf = (k as f64 / 2.0) / (x + cf);
+        }
+        (-x * x).exp() / ((x + cf) * std::f64::consts::PI.sqrt())
+    }
+}
+
+/// The Gaussian Q-function via [`erfc_ref`] (test/bench oracle).
+pub fn q_ref(x: f64) -> f64 {
+    erfc_ref(x / std::f64::consts::SQRT_2) / 2.0
+}
+
+/// Exact GELU via the Gaussian CDF (test/bench oracle).
+pub fn gelu_ref(x: f64) -> f64 {
+    x * (1.0 - q_ref(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_term_counts_available() {
+        for t in 2..=6 {
+            let (a, b, rmax) = soe_coeffs(t);
+            assert_eq!(a.len(), t);
+            assert_eq!(b.len(), t);
+            assert!(rmax > 0.0 && rmax < 0.1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "fitted for 2..=6")]
+    fn rejects_unfitted_term_count() {
+        soe_coeffs(7);
+    }
+
+    #[test]
+    fn weights_positive_and_b_sorted() {
+        for t in 2..=6 {
+            let (a, b, _) = soe_coeffs(t);
+            assert!(a.iter().all(|&v| v > 0.0));
+            assert!(b.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn sum_of_a_close_to_half() {
+        // Eq. 7 constraint: sum(a) = 1/2 - r_max/2
+        for t in 2..=6 {
+            let (a, _, rmax) = soe_coeffs(t);
+            let s: f64 = a.iter().sum();
+            assert!((s - 0.5).abs() < rmax.max(0.06), "t={t} sum={s}");
+        }
+    }
+
+    #[test]
+    fn approximation_error_within_documented_rmax() {
+        // evaluate against an erfc-based Q on a grid
+        let q = super::q_ref;
+        for t in 2..=6 {
+            let (a, b, rmax) = soe_coeffs(t);
+            let mut worst: f64 = 0.0;
+            for i in 0..=1400 {
+                let x = i as f64 * 0.002; // [0, 2.8]
+                let approx: f64 =
+                    a.iter().zip(b).map(|(ai, bi)| ai * (-bi * x * x).exp()).sum();
+                let exact = q(x);
+                worst = worst.max(((approx - exact) / exact).abs());
+            }
+            assert!(worst < rmax * 1.12, "t={t} worst={worst} rmax={rmax}");
+        }
+    }
+
+    #[test]
+    fn erfc_ref_sane() {
+        assert!((erfc_ref(0.0) - 1.0).abs() < 1e-12);
+        assert!((erfc_ref(1.0) - 0.15729920705028513).abs() < 1e-10);
+        assert!((erfc_ref(3.0) - 2.209049699858544e-5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,76 @@
+//! SoftEx configuration — the accelerator is parametric (paper Sec. V-B1).
+
+/// Hardware configuration of one SoftEx instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SoftExConfig {
+    /// Number of datapath lanes N (elements consumed per cycle).
+    /// The paper's experiments use N = 16 => a 256-bit memory interface.
+    pub lanes: usize,
+    /// Fractional bits of the GELU lane accumulators (paper: 14).
+    pub acc_frac_bits: u32,
+    /// Terms in the GELU sum of exponentials N_w (paper: 4).
+    pub terms: usize,
+    /// Effective stall cycles charged per running-max rescale: the FMA
+    /// pipeline keeps streaming while in-flight ops are rescaled, so the
+    /// observable cost is ~half the physical 4-stage depth.
+    pub fma_pipeline_depth: u32,
+}
+
+impl Default for SoftExConfig {
+    fn default() -> Self {
+        Self {
+            lanes: 16,
+            acc_frac_bits: 14,
+            terms: 4,
+            fma_pipeline_depth: 2,
+        }
+    }
+}
+
+impl SoftExConfig {
+    pub fn with_lanes(lanes: usize) -> Self {
+        Self { lanes, ..Self::default() }
+    }
+
+    /// Memory interface width in bits (16-bit elements, one per lane).
+    pub fn mem_bits(&self) -> usize {
+        self.lanes * 16
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(1..=128).contains(&self.lanes) {
+            return Err(format!("lanes {} out of range 1..=128", self.lanes));
+        }
+        if !(4..=24).contains(&self.acc_frac_bits) {
+            return Err(format!("acc bits {} out of range 4..=24", self.acc_frac_bits));
+        }
+        if !(2..=6).contains(&self.terms) {
+            return Err(format!("terms {} out of range 2..=6", self.terms));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper() {
+        let c = SoftExConfig::default();
+        assert_eq!(c.lanes, 16);
+        assert_eq!(c.mem_bits(), 256);
+        assert_eq!(c.acc_frac_bits, 14);
+        assert_eq!(c.terms, 4);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn rejects_silly_configs() {
+        assert!(SoftExConfig { lanes: 0, ..Default::default() }.validate().is_err());
+        assert!(SoftExConfig { terms: 9, ..Default::default() }.validate().is_err());
+        assert!(
+            SoftExConfig { acc_frac_bits: 2, ..Default::default() }.validate().is_err()
+        );
+    }
+}

@@ -1,0 +1,128 @@
+//! Lane datapath primitives (paper Fig. 4): the BF16 Multiplication and
+//! Addition Unit (MAU), the Exponential Unit (EXPU) and the fixed-point
+//! lane accumulator. Thin, bit-exact wrappers shared by the softmax and
+//! GELU job models so that both go through the *same* arithmetic as the
+//! RTL lanes would.
+
+use crate::expp::lut::expp_fast;
+use crate::num::{Bf16, FixedAcc};
+
+/// BF16 Multiplication-and-Addition Unit: one fused `a*b + c` per cycle.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Mau;
+
+impl Mau {
+    /// Fused multiply-add, single bf16 rounding.
+    #[inline]
+    pub fn fma(&self, a: Bf16, b: Bf16, c: Bf16) -> Bf16 {
+        a.fma(b, c)
+    }
+
+    /// Subtract (the max-offset path in the softmax accumulation step).
+    #[inline]
+    pub fn sub(&self, a: Bf16, b: Bf16) -> Bf16 {
+        a.sub(b)
+    }
+
+    /// Multiply (the normalization path and the GELU weighting path).
+    #[inline]
+    pub fn mul(&self, a: Bf16, b: Bf16) -> Bf16 {
+        a.mul(b)
+    }
+}
+
+/// BF16 Exponential Unit implementing expp (Sec. IV).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Expu;
+
+impl Expu {
+    /// expp via the bit-exact LUT (§Perf: the simulator's hottest op).
+    #[inline]
+    pub fn exp(&self, x: Bf16) -> Bf16 {
+        expp_fast(x)
+    }
+}
+
+/// GELU-mode lane accumulator: bf16 multiplier + truncating fixed-point
+/// adder (Sec. V-B3). Values are bounded in (0, 0.5], so no exponent
+/// logic is needed.
+#[derive(Clone, Debug)]
+pub struct LaneAccumulator {
+    acc: FixedAcc,
+}
+
+impl LaneAccumulator {
+    pub fn new(frac_bits: u32) -> Self {
+        Self { acc: FixedAcc::new(frac_bits) }
+    }
+
+    /// Weight the exponentiated value by `a_i` in bf16, then accumulate
+    /// the product in fixed point (truncating).
+    #[inline]
+    pub fn weight_and_add(&mut self, e: Bf16, a_i: Bf16) {
+        let prod = e.mul(a_i);
+        self.acc.add_trunc(prod.to_f32().max(0.0));
+    }
+
+    /// Back-convert the accumulated sum to bf16.
+    pub fn to_bf16(&self) -> Bf16 {
+        Bf16::from_f32(self.acc.value())
+    }
+
+    pub fn reset(&mut self) {
+        self.acc.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mau_fma_is_fused() {
+        let m = Mau;
+        assert_eq!(
+            m.fma(Bf16::from_f32(1.5), Bf16::from_f32(2.0), Bf16::from_f32(0.25))
+                .to_f32(),
+            3.25
+        );
+    }
+
+    #[test]
+    fn expu_matches_expp() {
+        let e = Expu;
+        assert_eq!(e.exp(Bf16::ZERO), Bf16::ONE);
+        assert_eq!(
+            e.exp(Bf16::from_f32(-5.0)),
+            crate::expp::correction::expp(Bf16::from_f32(-5.0))
+        );
+    }
+
+    #[test]
+    fn lane_acc_accumulates_weighted_terms() {
+        let mut l = LaneAccumulator::new(14);
+        // 0.25 * 1.0 + 0.25 * 0.5 = 0.375, all exactly representable
+        l.weight_and_add(Bf16::from_f32(1.0), Bf16::from_f32(0.25));
+        l.weight_and_add(Bf16::from_f32(0.5), Bf16::from_f32(0.25));
+        assert_eq!(l.to_bf16().to_f32(), 0.375);
+    }
+
+    #[test]
+    fn lane_acc_truncation_bias_is_negative() {
+        // truncation can only under-estimate
+        let mut l = LaneAccumulator::new(8);
+        let e = Bf16::from_f32(0.7311);
+        let a = Bf16::from_f32(0.2105);
+        l.weight_and_add(e, a);
+        let exact = e.mul(a).to_f32();
+        assert!(l.to_bf16().to_f32() <= exact);
+    }
+
+    #[test]
+    fn lane_acc_reset() {
+        let mut l = LaneAccumulator::new(14);
+        l.weight_and_add(Bf16::ONE, Bf16::from_f32(0.5));
+        l.reset();
+        assert_eq!(l.to_bf16(), Bf16::ZERO);
+    }
+}

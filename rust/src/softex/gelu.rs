@@ -1,0 +1,199 @@
+//! The SoftEx-assisted GELU job (paper Sec. V-B3, Algorithm 1).
+//!
+//! SoftEx accelerates only step 2 — the sum of exponentials — while the
+//! cores perform the squaring (step 1), the complement (step 3) and the
+//! final multiply (step 4). The functional model below computes all four
+//! steps bit-faithfully; the cycle split between SoftEx and the cores is
+//! reported separately so the cluster model can compose them.
+
+use crate::num::Bf16;
+
+use super::coeffs::soe_coeffs;
+use super::config::SoftExConfig;
+use super::datapath::{Expu, LaneAccumulator, Mau};
+use super::timing::gelu_cycles;
+
+/// Output of a GELU job over `n` activations.
+#[derive(Clone, Debug)]
+pub struct GeluResult {
+    /// bf16 GELU values in f32 storage.
+    pub out: Vec<f32>,
+    /// Cycles spent in the SoftEx sum-of-exponentials step.
+    pub softex_cycles: u64,
+    /// Number of bf16 core-ops per element left in software (steps 1,3,4).
+    pub core_ops_per_elem: u32,
+}
+
+/// The sum-of-exponentials Phi-half: s = sum_i bf16(a_i) * expp(bf16(-b_i) * x2).
+/// Exposed for the Fig. 5 sweep (accuracy vs terms x acc bits).
+pub fn sum_of_exponentials(cfg: &SoftExConfig, x2: Bf16) -> Bf16 {
+    let (a, b, _) = soe_coeffs(cfg.terms);
+    let mau = Mau;
+    let expu = Expu;
+    let mut lane = LaneAccumulator::new(cfg.acc_frac_bits);
+    for (&ai, &bi) in a.iter().zip(b) {
+        let t = mau.mul(x2, Bf16::from_f32(-bi as f32));
+        let e = expu.exp(t);
+        lane.weight_and_add(e, Bf16::from_f32(ai as f32));
+    }
+    lane.to_bf16()
+}
+
+/// Full GELU of one bf16 value (all four steps).
+pub fn gelu_one(cfg: &SoftExConfig, x: Bf16) -> Bf16 {
+    let mau = Mau;
+    let x2 = mau.mul(x, x); // step 1 (cores)
+    let s = sum_of_exponentials(cfg, x2); // step 2 (SoftEx)
+    let phi = if x.to_f32() > 0.0 {
+        Bf16::from_f32(1.0 - s.to_f32()) // step 3 (cores)
+    } else {
+        s
+    };
+    mau.mul(x, phi) // step 4 (cores)
+}
+
+/// Run the GELU job over a slice of f32 values (bf16-rounded on entry).
+pub fn run_gelu(cfg: &SoftExConfig, xs: &[f32]) -> GeluResult {
+    cfg.validate().expect("invalid SoftEx config");
+    let out = xs
+        .iter()
+        .map(|&x| gelu_one(cfg, Bf16::from_f32(x)).to_f32())
+        .collect();
+    GeluResult {
+        out,
+        softex_cycles: gelu_cycles(cfg, xs.len()),
+        core_ops_per_elem: 3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::bf16::quantize_slice;
+    use crate::rng::Xoshiro256;
+    use crate::softex::coeffs::erfc_ref;
+
+    fn cfg() -> SoftExConfig {
+        SoftExConfig::default()
+    }
+
+    fn gelu_exact(x: f64) -> f64 {
+        let phi = 1.0 - erfc_ref(x / std::f64::consts::SQRT_2) / 2.0;
+        x * phi
+    }
+
+    fn mse_vs_exact(cfg: &SoftExConfig, xs: &[f32]) -> f64 {
+        let r = run_gelu(cfg, xs);
+        xs.iter()
+            .zip(&r.out)
+            .map(|(&x, &y)| {
+                let d = y as f64 - gelu_exact(x as f64);
+                d * d
+            })
+            .sum::<f64>()
+            / xs.len() as f64
+    }
+
+    #[test]
+    fn zero_maps_to_zero() {
+        assert_eq!(gelu_one(&cfg(), Bf16::ZERO), Bf16::ZERO);
+    }
+
+    #[test]
+    fn identity_for_large_positive() {
+        for v in [3.0f32, 5.0, 16.0] {
+            let y = gelu_one(&cfg(), Bf16::from_f32(v)).to_f32();
+            assert!(((y - v) / v).abs() < 0.01, "{v} -> {y}");
+        }
+    }
+
+    #[test]
+    fn near_zero_for_large_negative() {
+        for v in [-4.0f32, -8.0, -20.0] {
+            let y = gelu_one(&cfg(), Bf16::from_f32(v)).to_f32();
+            assert!(y.abs() < 0.02, "{v} -> {y}");
+        }
+    }
+
+    #[test]
+    fn close_to_exact_gelu() {
+        let xs = quantize_slice(&Xoshiro256::new(1).normal_vec_f32(8192, 1.5));
+        let mse = mse_vs_exact(&cfg(), &xs);
+        assert!(mse < 2e-5, "mse {mse}");
+    }
+
+    #[test]
+    fn respects_global_minimum() {
+        // GELU's minimum is ~-0.1700 at x~-0.7518
+        let xs: Vec<f32> = (0..1200).map(|i| -6.0 + i as f32 * 0.01).collect();
+        let r = run_gelu(&cfg(), &quantize_slice(&xs));
+        let min = r.out.iter().cloned().fold(f32::INFINITY, f32::min);
+        assert!(min > -0.2 && min < -0.12, "{min}");
+    }
+
+    #[test]
+    fn fig5_more_terms_reduce_error() {
+        let xs = quantize_slice(&Xoshiro256::new(2).normal_vec_f32(8192, 1.5));
+        let mut prev = f64::INFINITY;
+        for terms in 2..=4 {
+            let c = SoftExConfig { terms, ..cfg() };
+            let mse = mse_vs_exact(&c, &xs);
+            assert!(mse < prev, "terms={terms} mse={mse} prev={prev}");
+            prev = mse;
+        }
+    }
+
+    #[test]
+    fn fig5_narrow_accumulators_degrade() {
+        let xs = quantize_slice(&Xoshiro256::new(3).normal_vec_f32(8192, 1.5));
+        let e8 = mse_vs_exact(&SoftExConfig { acc_frac_bits: 8, ..cfg() }, &xs);
+        let e14 = mse_vs_exact(&SoftExConfig { acc_frac_bits: 14, ..cfg() }, &xs);
+        assert!(e8 > 4.0 * e14, "e8={e8} e14={e14}");
+    }
+
+    #[test]
+    fn fig5_many_terms_with_narrow_acc_backfires() {
+        // Sec. VI-B: "accuracy degradation with <=10 bits and many terms
+        // is due to smaller addends being truncated" — 6 terms @ 8 bits
+        // must not beat 3 terms @ 8 bits the way it does at 14 bits.
+        let xs = quantize_slice(&Xoshiro256::new(4).normal_vec_f32(16384, 1.5));
+        let narrow6 = mse_vs_exact(
+            &SoftExConfig { terms: 6, acc_frac_bits: 8, ..cfg() },
+            &xs,
+        );
+        let wide6 = mse_vs_exact(
+            &SoftExConfig { terms: 6, acc_frac_bits: 14, ..cfg() },
+            &xs,
+        );
+        assert!(narrow6 > 3.0 * wide6, "narrow6={narrow6} wide6={wide6}");
+    }
+
+    #[test]
+    fn magnitude_never_exceeds_input() {
+        let xs = quantize_slice(&Xoshiro256::new(5).normal_vec_f32(4096, 3.0));
+        let r = run_gelu(&cfg(), &xs);
+        for (&x, &y) in xs.iter().zip(&r.out) {
+            assert!(y.abs() <= x.abs() + 0.05, "x={x} y={y}");
+        }
+    }
+
+    #[test]
+    fn softex_cycles_match_bandwidth_model() {
+        let xs = vec![0.5f32; 16384];
+        let r = run_gelu(&cfg(), &xs);
+        // N/N_w = 4 elements per cycle + setup
+        assert_eq!(r.softex_cycles, super::gelu_cycles(&cfg(), 16384));
+        assert_eq!(r.core_ops_per_elem, 3);
+    }
+
+    #[test]
+    fn sum_of_exponentials_bounded_half() {
+        // the lane accumulator's fixed-point bound: s in (0, 0.5]
+        let mut rng = Xoshiro256::new(6);
+        for _ in 0..2000 {
+            let x = Bf16::from_f32(rng.uniform_range(0.0, 9.0) as f32);
+            let s = sum_of_exponentials(&cfg(), x).to_f32();
+            assert!((0.0..=0.5001).contains(&s), "{s}");
+        }
+    }
+}

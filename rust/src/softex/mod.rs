@@ -1,0 +1,28 @@
+//! SoftEx: the paper's softmax & GELU accelerator (Sec. V-B).
+//!
+//! Functional model (bit-exact with the Pallas L1 kernels) plus the
+//! cycle/area/power models behind the Sec. VII evaluation:
+//!
+//! * [`config`]  — lane count, accumulator width, sum-of-exp terms;
+//! * [`coeffs`]  — the sum-of-exponentials a/b weight tables;
+//! * [`datapath`] — MAU / EXPU / lane-accumulator primitives;
+//! * [`accumulator`] — the FP32 denominator accumulator with online-max
+//!   rescaling and the Newton-Raphson inversion step;
+//! * [`softmax`] — the three-step softmax job (accumulate / invert /
+//!   normalize);
+//! * [`gelu`]   — the sum-of-exponentials GELU job;
+//! * [`timing`] — the streamer/pipeline cycle model;
+//! * [`phys`]   — area and power breakdowns (Fig. 6, Fig. 8c).
+
+pub mod accumulator;
+pub mod coeffs;
+pub mod config;
+pub mod datapath;
+pub mod gelu;
+pub mod phys;
+pub mod softmax;
+pub mod timing;
+
+pub use config::SoftExConfig;
+pub use gelu::{run_gelu, GeluResult};
+pub use softmax::{run_softmax, SoftmaxResult};

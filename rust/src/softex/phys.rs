@@ -1,0 +1,140 @@
+//! SoftEx area and power models (paper Fig. 6, Sec. VII-B a/b),
+//! GlobalFoundries 12LP+ at the paper's operating points.
+//!
+//! Area: linear-in-lanes with a fixed controller/FIFO part, calibrated on
+//! the paper's two anchors — 0.039 mm^2 at N=16 and the "+50% from 4 to 8
+//! lanes" observation of Fig. 8c (which pins fixed = 4 * per-lane).
+//!
+//! Power: mode-dependent totals from Sec. VII-B-b with the component
+//! shares the paper reports.
+
+use super::config::SoftExConfig;
+
+/// mm^2 per lane (MAU + EXPU + lane accumulator + streamer + adder-tree
+/// slice), from the N=16 => 0.039 mm^2 anchor with fixed = 4p.
+pub const AREA_PER_LANE_MM2: f64 = 0.039 / 20.0;
+/// Lane-independent area (controller, FSM, FIFOs, denominator FMA).
+pub const AREA_FIXED_MM2: f64 = 4.0 * AREA_PER_LANE_MM2;
+
+/// Total cluster area (paper: 1.21 mm^2) and its 1.1mm x 1.1mm layout.
+pub const CLUSTER_AREA_MM2: f64 = 1.21;
+
+/// Component shares of SoftEx area at N=16 (Fig. 6).
+pub const AREA_SHARES: &[(&str, f64)] = &[
+    ("adder tree", 0.233),
+    ("MAUs", 0.172),
+    ("streamer", 0.155),
+    ("lane accumulators", 0.115),
+    ("exponential units", 0.101),
+    ("controller/FIFOs/other", 0.224),
+];
+
+/// SoftEx area in mm^2 for a given lane count.
+pub fn softex_area_mm2(cfg: &SoftExConfig) -> f64 {
+    AREA_FIXED_MM2 + cfg.lanes as f64 * AREA_PER_LANE_MM2
+}
+
+/// Fraction of the cluster occupied by SoftEx.
+pub fn softex_cluster_share(cfg: &SoftExConfig) -> f64 {
+    softex_area_mm2(cfg) / CLUSTER_AREA_MM2
+}
+
+/// Operating point of the cluster (Sec. VII-A).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OperatingPoint {
+    pub vdd: f64,
+    pub freq_hz: f64,
+}
+
+/// 0.80 V / 1.12 GHz — maximum throughput.
+pub const OP_THROUGHPUT: OperatingPoint = OperatingPoint { vdd: 0.80, freq_hz: 1.12e9 };
+/// 0.55 V / 460 MHz — maximum efficiency.
+pub const OP_EFFICIENCY: OperatingPoint = OperatingPoint { vdd: 0.55, freq_hz: 460e6 };
+
+/// SoftEx average power in watts by mode and operating point
+/// (Sec. VII-B-b anchors, linear interpolation in lane count from N=16).
+pub fn softex_power_w(cfg: &SoftExConfig, op: &OperatingPoint, gelu_mode: bool) -> f64 {
+    let at16 = match (gelu_mode, op.vdd > 0.7) {
+        (false, true) => 53.2e-3,
+        (false, false) => 9.87e-3,
+        (true, true) => 50.8e-3,
+        (true, false) => 9.46e-3,
+    };
+    at16 * (softex_area_mm2(cfg) / softex_area_mm2(&SoftExConfig::default()))
+}
+
+/// SoftEx power component shares (Sec. VII-B-b).
+pub fn power_shares(gelu_mode: bool) -> &'static [(&'static str, f64)] {
+    if gelu_mode {
+        &[
+            ("lane accumulators", 0.22),
+            ("MAUs", 0.20),
+            ("exponential units", 0.16),
+            ("other", 0.42),
+        ]
+    } else {
+        &[
+            ("MAUs", 0.242),
+            ("adder tree", 0.105),
+            ("exponential units", 0.137),
+            ("other", 0.516),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn n16_matches_paper_area() {
+        let a = softex_area_mm2(&SoftExConfig::default());
+        assert!((a - 0.039).abs() < 1e-9, "{a}");
+        let share = softex_cluster_share(&SoftExConfig::default());
+        assert!((share - 0.0322).abs() < 0.0005, "{share}"); // 3.22%
+    }
+
+    #[test]
+    fn fig8c_4_to_8_lanes_is_plus_50pct() {
+        let a4 = softex_area_mm2(&SoftExConfig::with_lanes(4));
+        let a8 = softex_area_mm2(&SoftExConfig::with_lanes(8));
+        assert!(((a8 / a4) - 1.5).abs() < 0.01, "{}", a8 / a4);
+    }
+
+    #[test]
+    fn fig8c_64_lanes_twice_32() {
+        let a32 = softex_area_mm2(&SoftExConfig::with_lanes(32));
+        let a64 = softex_area_mm2(&SoftExConfig::with_lanes(64));
+        let r = a64 / a32;
+        assert!(r > 1.8 && r < 2.0, "{r}"); // "almost two times as large"
+    }
+
+    #[test]
+    fn area_shares_sum_to_one() {
+        let s: f64 = AREA_SHARES.iter().map(|(_, v)| v).sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_anchors() {
+        let c = SoftExConfig::default();
+        assert!((softex_power_w(&c, &OP_THROUGHPUT, false) - 53.2e-3).abs() < 1e-6);
+        assert!((softex_power_w(&c, &OP_EFFICIENCY, false) - 9.87e-3).abs() < 1e-6);
+        assert!((softex_power_w(&c, &OP_THROUGHPUT, true) - 50.8e-3).abs() < 1e-6);
+        assert!((softex_power_w(&c, &OP_EFFICIENCY, true) - 9.46e-3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn power_shares_sum_to_one() {
+        for mode in [false, true] {
+            let s: f64 = power_shares(mode).iter().map(|(_, v)| v).sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn operating_points_match_paper() {
+        assert_eq!(OP_THROUGHPUT.freq_hz, 1.12e9);
+        assert_eq!(OP_EFFICIENCY.freq_hz, 460e6);
+    }
+}

@@ -1,0 +1,195 @@
+//! The three-step SoftEx softmax job (paper Sec. V-B2): accumulation,
+//! inversion, normalization. Functional output is bit-faithful to the
+//! datapath; the cycle breakdown comes from [`super::timing`].
+
+use crate::num::Bf16;
+
+use super::accumulator::{accumulate_online, invert};
+use super::config::SoftExConfig;
+use super::datapath::{Expu, Mau};
+use super::timing::{softmax_cycles, SoftmaxCycles};
+
+/// Output of a softmax job over a row-major [rows x len] score matrix.
+#[derive(Clone, Debug)]
+pub struct SoftmaxResult {
+    /// Row-major probabilities, bf16 values in f32 storage.
+    pub out: Vec<f32>,
+    pub rows: usize,
+    pub len: usize,
+    pub cycles: SoftmaxCycles,
+    /// Total running-max updates across all rows.
+    pub rescales: u64,
+}
+
+/// Run the accelerator over `rows` vectors of length `len` stored
+/// row-major in `scores` (f32 holding bf16 values).
+pub fn run_softmax(cfg: &SoftExConfig, scores: &[f32], rows: usize, len: usize) -> SoftmaxResult {
+    assert_eq!(scores.len(), rows * len, "score matrix shape mismatch");
+    cfg.validate().expect("invalid SoftEx config");
+    let mau = Mau;
+    let expu = Expu;
+    let mut out = vec![0.0f32; scores.len()];
+    let mut rescales = 0u64;
+
+    for r in 0..rows {
+        let row = &scores[r * len..(r + 1) * len];
+        // --- accumulation step (online max + denominator) ---
+        let acc = accumulate_online(row, cfg.lanes);
+        rescales += acc.rescales as u64;
+        // --- inversion step (Newton-Raphson on the FP32 FMA) ---
+        let recip = Bf16::from_f32(invert(acc.denominator));
+        // --- normalization step: re-stream, offset, exponentiate, scale
+        let dst = &mut out[r * len..(r + 1) * len];
+        for (o, &v) in dst.iter_mut().zip(row) {
+            let shifted = mau.sub(Bf16::from_f32(v), acc.max);
+            let e = expu.exp(shifted);
+            *o = mau.mul(e, recip).to_f32();
+        }
+    }
+    let cycles = softmax_cycles(cfg, rows, len, rescales);
+    SoftmaxResult { out, rows, len, cycles, rescales }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::bf16::quantize_slice;
+    use crate::prop::forall;
+    use crate::rng::Xoshiro256;
+
+    fn cfg() -> SoftExConfig {
+        SoftExConfig::default()
+    }
+
+    fn gen(rows: usize, len: usize, sigma: f32, seed: u64) -> Vec<f32> {
+        quantize_slice(&Xoshiro256::new(seed).normal_vec_f32(rows * len, sigma))
+    }
+
+    fn exact_softmax(row: &[f32]) -> Vec<f64> {
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let e: Vec<f64> = row.iter().map(|&x| ((x as f64) - m).exp()).collect();
+        let s: f64 = e.iter().sum();
+        e.into_iter().map(|v| v / s).collect()
+    }
+
+    #[test]
+    fn rows_sum_to_one() {
+        let s = gen(32, 256, 2.0, 1);
+        let r = run_softmax(&cfg(), &s, 32, 256);
+        for row in r.out.chunks(256) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 0.02, "{sum}");
+        }
+    }
+
+    #[test]
+    fn close_to_exact_softmax() {
+        let s = gen(8, 512, 2.0, 2);
+        let r = run_softmax(&cfg(), &s, 8, 512);
+        for (row_in, row_out) in s.chunks(512).zip(r.out.chunks(512)) {
+            let exact = exact_softmax(row_in);
+            for (&got, want) in row_out.iter().zip(exact) {
+                assert!((got as f64 - want).abs() < 0.008, "{got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn argmax_preserved() {
+        let s = gen(64, 128, 3.0, 3);
+        let r = run_softmax(&cfg(), &s, 64, 128);
+        for (row_in, row_out) in s.chunks(128).zip(r.out.chunks(128)) {
+            let ai = row_in
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            let ao = row_out
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(ai, ao);
+        }
+    }
+
+    #[test]
+    fn outputs_in_unit_interval() {
+        forall(
+            "softmax-unit",
+            30,
+            |r| {
+                let len = 16 + (r.below(240) as usize);
+                quantize_slice(&r.normal_vec_f32(len, 4.0))
+            },
+            |row| {
+                let r = run_softmax(&cfg(), row, 1, row.len());
+                r.out.iter().all(|&p| (0.0..=1.0).contains(&p))
+            },
+        );
+    }
+
+    #[test]
+    fn onehot_on_dominant_score() {
+        let mut row = vec![-20.0f32; 64];
+        row[41] = 20.0;
+        let r = run_softmax(&cfg(), &quantize_slice(&row), 1, 64);
+        assert!(r.out[41] > 0.99);
+    }
+
+    #[test]
+    fn uniform_row_gives_uniform_probs() {
+        let row = vec![0.5f32; 128];
+        let r = run_softmax(&cfg(), &row, 1, 128);
+        for &p in &r.out {
+            assert!((p - 1.0 / 128.0).abs() < 1e-4, "{p}");
+        }
+    }
+
+    #[test]
+    fn cycle_model_attached() {
+        let s = gen(512, 128, 2.0, 5);
+        let r = run_softmax(&cfg(), &s, 512, 128);
+        // the Sec. VII-B anchor: ~14.2 kcycles (+ rescale stalls)
+        assert!((13_500..20_000).contains(&r.cycles.total()), "{:?}", r.cycles);
+    }
+
+    #[test]
+    fn non_multiple_of_lanes_length() {
+        let s = gen(4, 197, 2.0, 6); // the ViT geometry
+        let r = run_softmax(&cfg(), &s, 4, 197);
+        for row in r.out.chunks(197) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 0.02);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn rejects_shape_mismatch() {
+        run_softmax(&cfg(), &[0.0; 100], 3, 32);
+    }
+
+    #[test]
+    fn matches_paper_softmax_mre() {
+        // Sec. VI-A2: MRE of outputs ~0.44% on 1024-long vectors. Allow
+        // a generous band; significant probabilities only.
+        let s = gen(4, 1024, 2.0, 7);
+        let r = run_softmax(&cfg(), &s, 4, 1024);
+        let mut rel_sum = 0.0f64;
+        let mut n = 0u64;
+        for (row_in, row_out) in s.chunks(1024).zip(r.out.chunks(1024)) {
+            let exact = exact_softmax(row_in);
+            for (&got, want) in row_out.iter().zip(exact) {
+                if want > 1e-5 {
+                    rel_sum += ((got as f64 - want) / want).abs();
+                    n += 1;
+                }
+            }
+        }
+        let mre = rel_sum / n as f64;
+        assert!(mre < 0.012, "MRE {mre}");
+    }
+}

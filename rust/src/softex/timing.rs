@@ -1,0 +1,152 @@
+//! SoftEx cycle model (paper Sec. VII-B, calibrated in DESIGN.md §5).
+//!
+//! The streamer consumes/produces `lanes` 16-bit elements per cycle over
+//! the 256-bit TCDM port. Per softmax vector of length L:
+//!
+//! * accumulation: ceil(L/N) cycles of streaming, plus a pipeline stall
+//!   of `fma_pipeline_depth` cycles per running-max update (the in-flight
+//!   rescale of Sec. V-B2a);
+//! * inversion: two Newton iterations on the FMA — overlapped with the
+//!   next vector's accumulation in multi-row jobs, contributing an
+//!   amortized `INV_AMORTIZED` cycles (calibration anchor: 512 rows of
+//!   L=128 take 14.2 kcycles total => ~27.7 cycles/row = 3*ceil(128/16)
+//!   + ~4);
+//! * normalization: loads and stores alternate on the single memory port
+//!   => 2*ceil(L/N) cycles.
+//!
+//! GELU mode: inputs are held for N_w cycles while the weights cycle, so
+//! a burst of N elements takes N_w cycles; output bandwidth N/N_w
+//! elements/cycle (Sec. V-B3).
+
+use super::config::SoftExConfig;
+
+/// Amortized inversion + row-turnaround cost in a multi-row job.
+pub const INV_AMORTIZED: u64 = 4;
+/// Full inversion latency when it cannot be overlapped (single vector):
+/// seed + 2 Newton iterations on a 4-stage FMA pipeline.
+pub const INV_STANDALONE: u64 = 20;
+/// One-off job setup: HWPE register programming via the peripheral port.
+pub const JOB_SETUP: u64 = 64;
+
+#[inline]
+fn ceil_div(a: usize, b: usize) -> u64 {
+    ((a + b - 1) / b) as u64
+}
+
+/// Cycle breakdown of one softmax job.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SoftmaxCycles {
+    pub accumulation: u64,
+    pub inversion: u64,
+    pub normalization: u64,
+    pub setup: u64,
+}
+
+impl SoftmaxCycles {
+    pub fn total(&self) -> u64 {
+        self.accumulation + self.inversion + self.normalization + self.setup
+    }
+}
+
+/// Cycle cost of softmax over `rows` vectors of length `len`, with
+/// `total_rescales` running-max updates observed by the functional model.
+pub fn softmax_cycles(
+    cfg: &SoftExConfig,
+    rows: usize,
+    len: usize,
+    total_rescales: u64,
+) -> SoftmaxCycles {
+    let per_row_stream = ceil_div(len, cfg.lanes);
+    let inv = if rows > 1 { INV_AMORTIZED * rows as u64 } else { INV_STANDALONE };
+    SoftmaxCycles {
+        accumulation: per_row_stream * rows as u64
+            + total_rescales * cfg.fma_pipeline_depth as u64,
+        inversion: inv,
+        normalization: 2 * per_row_stream * rows as u64,
+        setup: JOB_SETUP,
+    }
+}
+
+/// Cycle cost of the accelerated sum-of-exponentials step over `n`
+/// elements: each N-element burst is held for N_w weight cycles.
+pub fn gelu_cycles(cfg: &SoftExConfig, n: usize) -> u64 {
+    JOB_SETUP + ceil_div(n, cfg.lanes) * cfg.terms as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_anchor_mobilebert_seq128() {
+        // Paper Sec. VII-B: 512 rows x 128 elems => 14.2 kcycles total.
+        let cfg = SoftExConfig::default();
+        let c = softmax_cycles(&cfg, 512, 128, 0);
+        let total = c.total();
+        assert!(
+            (13_500..15_500).contains(&total),
+            "total {total} outside the 14.2 kcycle anchor band"
+        );
+    }
+
+    #[test]
+    fn normalization_is_two_passes() {
+        let cfg = SoftExConfig::default();
+        let c = softmax_cycles(&cfg, 1, 256, 0);
+        assert_eq!(c.normalization, 2 * c.accumulation);
+    }
+
+    #[test]
+    fn rescales_add_pipeline_stalls() {
+        let cfg = SoftExConfig::default();
+        let a = softmax_cycles(&cfg, 4, 128, 0);
+        let b = softmax_cycles(&cfg, 4, 128, 10);
+        assert_eq!(b.total() - a.total(), 10 * cfg.fma_pipeline_depth as u64);
+    }
+
+    #[test]
+    fn doubling_lanes_roughly_halves_streaming() {
+        let c16 = softmax_cycles(&SoftExConfig::with_lanes(16), 64, 2048, 0);
+        let c32 = softmax_cycles(&SoftExConfig::with_lanes(32), 64, 2048, 0);
+        let ratio = c16.total() as f64 / c32.total() as f64;
+        assert!(ratio > 1.8 && ratio < 2.05, "{ratio}");
+    }
+
+    #[test]
+    fn diminishing_returns_for_many_lanes_short_vectors() {
+        // Fig. 8: a 64-lane unit is barely faster than 32 lanes when the
+        // vector is not much longer than the lane array.
+        let c32 = softmax_cycles(&SoftExConfig::with_lanes(32), 64, 96, 0);
+        let c64 = softmax_cycles(&SoftExConfig::with_lanes(64), 64, 96, 0);
+        let gain = c32.total() as f64 / c64.total() as f64;
+        assert!(gain < 1.5, "{gain}");
+    }
+
+    #[test]
+    fn gelu_bandwidth_is_lanes_over_terms() {
+        let cfg = SoftExConfig::default();
+        let n = 16384;
+        let c = gelu_cycles(&cfg, n) - JOB_SETUP;
+        assert_eq!(c, (n as u64 / 16) * 4); // N/N_w = 4 elem/cycle
+    }
+
+    #[test]
+    fn gelu_scales_linearly_in_rows_even_at_high_bandwidth() {
+        // Sec. VII-B-e: the sum of exponentials keeps scaling with lanes
+        let cfg64 = SoftExConfig::with_lanes(64);
+        let cfg32 = SoftExConfig::with_lanes(32);
+        let r = (gelu_cycles(&cfg32, 2048 * 8) - JOB_SETUP) as f64
+            / (gelu_cycles(&cfg64, 2048 * 8) - JOB_SETUP) as f64;
+        assert!((r - 2.0).abs() < 0.05, "{r}");
+    }
+
+    #[test]
+    fn single_row_uses_standalone_inversion() {
+        let cfg = SoftExConfig::default();
+        assert_eq!(softmax_cycles(&cfg, 1, 128, 0).inversion, INV_STANDALONE);
+        assert_eq!(
+            softmax_cycles(&cfg, 2, 128, 0).inversion,
+            2 * INV_AMORTIZED
+        );
+    }
+}

@@ -1,0 +1,193 @@
+//! Model geometries for the paper's evaluation workloads.
+
+/// A transformer encoder/decoder stack geometry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub layers: usize,
+    /// Embedding size d.
+    pub d_model: usize,
+    pub heads: usize,
+    /// Per-head dimension d_h.
+    pub d_head: usize,
+    /// FFN hidden size.
+    pub d_ff: usize,
+    /// Sequence length used in the paper's experiment.
+    pub seq: usize,
+    /// Whether the FFN activation is GELU (vs ReLU-family).
+    pub gelu_ffn: bool,
+}
+
+impl ModelConfig {
+    /// ViT-base (Sec. VII-D): 12 layers, d=768, 12 heads, FFN 3072,
+    /// fixed sequence length 197 (196 patches + CLS).
+    pub fn vit_base() -> Self {
+        Self {
+            name: "ViT-base",
+            layers: 12,
+            d_model: 768,
+            heads: 12,
+            d_head: 64,
+            d_ff: 3072,
+            seq: 197,
+            gelu_ffn: true,
+        }
+    }
+
+    /// MobileBERT (Sec. VII-C): 24 encoder layers, 4 heads of d_h=128
+    /// over the 512-wide intra-block representation; the stacked
+    /// bottleneck FFNs are folded into one d_ff=128 equivalent so the
+    /// per-layer op count matches the paper's end-to-end numbers
+    /// (DESIGN.md §5: 45 GOP total at seq 512).
+    pub fn mobilebert(seq: usize) -> Self {
+        Self {
+            name: "MobileBERT",
+            layers: 24,
+            d_model: 512,
+            heads: 4,
+            d_head: 128,
+            d_ff: 128,
+            seq,
+            gelu_ffn: false,
+        }
+    }
+
+    /// GPT-2 XL (Sec. VIII): 48 layers, d=1600, 25 heads, FFN 6400,
+    /// prompt mode with a 1024-token context.
+    pub fn gpt2_xl() -> Self {
+        Self {
+            name: "GPT-2 XL",
+            layers: 48,
+            d_model: 1600,
+            heads: 25,
+            d_head: 64,
+            d_ff: 6400,
+            seq: 1024,
+            gelu_ffn: true,
+        }
+    }
+
+    /// The tiny ViT used for end-to-end numeric validation (matches
+    /// `python/compile/model.py::VIT_TINY`).
+    pub fn vit_tiny() -> Self {
+        Self {
+            name: "ViT-tiny",
+            layers: 4,
+            d_model: 128,
+            heads: 4,
+            d_head: 32,
+            d_ff: 512,
+            seq: 65,
+            gelu_ffn: true,
+        }
+    }
+
+    // ---- op counts (1 MAC = 2 OPs, Sec. VII-A) ----
+
+    /// MACs in the Q/K/V/O projections of one layer.
+    pub fn projection_macs(&self) -> u64 {
+        4 * self.seq as u64 * self.d_model as u64 * (self.heads * self.d_head) as u64
+    }
+
+    /// MACs in the score (QK^T) and context (PV) matmuls of one layer.
+    pub fn attention_macs(&self) -> u64 {
+        2 * self.heads as u64 * self.seq as u64 * self.seq as u64 * self.d_head as u64
+    }
+
+    /// MACs in the FFN of one layer.
+    pub fn ffn_macs(&self) -> u64 {
+        2 * self.seq as u64 * self.d_model as u64 * self.d_ff as u64
+    }
+
+    /// Total MACs of one layer.
+    pub fn layer_macs(&self) -> u64 {
+        self.projection_macs() + self.attention_macs() + self.ffn_macs()
+    }
+
+    /// Total OPs of the full model (2 OPs per MAC).
+    pub fn total_ops(&self) -> u64 {
+        2 * self.layer_macs() * self.layers as u64
+    }
+
+    /// Softmax elements per layer (heads x seq x seq).
+    pub fn softmax_elems(&self) -> u64 {
+        self.heads as u64 * self.seq as u64 * self.seq as u64
+    }
+
+    /// Softmax rows per layer and their length.
+    pub fn softmax_shape(&self) -> (usize, usize) {
+        (self.heads * self.seq, self.seq)
+    }
+
+    /// GELU elements per layer (seq x d_ff), zero if the FFN is not GELU.
+    pub fn gelu_elems(&self) -> u64 {
+        if self.gelu_ffn {
+            self.seq as u64 * self.d_ff as u64
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vit_base_total_ops_match_paper() {
+        // Paper: 113 ms at 310 GOPS => ~35 GOP end to end
+        let v = ModelConfig::vit_base();
+        let gop = v.total_ops() as f64 / 1e9;
+        assert!((33.0..37.0).contains(&gop), "{gop}");
+    }
+
+    #[test]
+    fn vit_base_geometry() {
+        let v = ModelConfig::vit_base();
+        assert_eq!(v.heads * v.d_head, v.d_model);
+        assert_eq!(v.softmax_shape(), (12 * 197, 197));
+        assert_eq!(v.gelu_elems(), 197 * 3072);
+    }
+
+    #[test]
+    fn mobilebert_total_ops_match_paper() {
+        // Paper Sec. VII-C: 297 GOPS x 152 ms => ~45 GOP at seq 512
+        let m = ModelConfig::mobilebert(512);
+        let gop = m.total_ops() as f64 / 1e9;
+        assert!((41.0..49.0).contains(&gop), "{gop}");
+    }
+
+    #[test]
+    fn mobilebert_attention_layer_ops() {
+        // attention-only part at seq 512: ~0.54 GOP of QK^T+PV
+        let m = ModelConfig::mobilebert(512);
+        let gop = 2.0 * m.attention_macs() as f64 / 1e9;
+        assert!((0.5..0.6).contains(&gop), "{gop}");
+    }
+
+    #[test]
+    fn gpt2_xl_is_large() {
+        let g = ModelConfig::gpt2_xl();
+        // prompt-mode forward: O(10^12) OPs
+        assert!(g.total_ops() > 3_000_000_000_000);
+        assert_eq!(g.heads * g.d_head, g.d_model);
+    }
+
+    #[test]
+    fn vit_tiny_matches_python_model() {
+        let t = ModelConfig::vit_tiny();
+        assert_eq!((t.layers, t.d_model, t.heads, t.d_ff, t.seq), (4, 128, 4, 512, 65));
+    }
+
+    #[test]
+    fn softmax_elems_consistent_with_shape() {
+        for m in [
+            ModelConfig::vit_base(),
+            ModelConfig::mobilebert(256),
+            ModelConfig::gpt2_xl(),
+        ] {
+            let (rows, len) = m.softmax_shape();
+            assert_eq!(m.softmax_elems(), (rows * len) as u64);
+        }
+    }
+}

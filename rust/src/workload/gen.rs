@@ -1,0 +1,59 @@
+//! Synthetic activation generators (DESIGN.md §1).
+//!
+//! The paper benchmarks accuracy on activations captured from MobileBERT
+//! / ViT / GPT-2. We do not have those checkpoints; we synthesize inputs
+//! with matched first/second moments, which the accuracy metrics of
+//! Sec. VI are robust to (they measure the *function* approximation, not
+//! the model): pre-softmax attention scores ~ N(0, 2.0) after the
+//! 1/sqrt(d_h) scaling; GELU inputs (post-W1 FFN activations) ~ N(0, 1.5).
+
+use crate::num::bf16::quantize_slice;
+use crate::rng::Xoshiro256;
+
+/// Std-dev of synthetic pre-softmax attention scores.
+pub const ATTN_SCORE_SIGMA: f32 = 2.0;
+/// Std-dev of synthetic GELU inputs.
+pub const GELU_INPUT_SIGMA: f32 = 1.5;
+
+/// Row-major [rows x len] synthetic attention scores, bf16 values.
+pub fn attention_scores(rows: usize, len: usize, seed: u64) -> Vec<f32> {
+    quantize_slice(&Xoshiro256::new(seed).normal_vec_f32(rows * len, ATTN_SCORE_SIGMA))
+}
+
+/// Synthetic FFN activations feeding GELU, bf16 values.
+pub fn gelu_inputs(n: usize, seed: u64) -> Vec<f32> {
+    quantize_slice(&Xoshiro256::new(seed).normal_vec_f32(n, GELU_INPUT_SIGMA))
+}
+
+/// Uniform exp-input samples over the paper's Sec. VI-A1 range.
+pub fn exp_inputs(n: usize, seed: u64) -> Vec<f32> {
+    quantize_slice(&Xoshiro256::new(seed).uniform_vec_f32(n, -87.0, 88.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scores_have_requested_moments() {
+        let xs = attention_scores(64, 256, 1);
+        let n = xs.len() as f64;
+        let mean = xs.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var = xs.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.05, "{mean}");
+        assert!((var.sqrt() - ATTN_SCORE_SIGMA as f64).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(gelu_inputs(100, 7), gelu_inputs(100, 7));
+        assert_ne!(gelu_inputs(100, 7), gelu_inputs(100, 8));
+    }
+
+    #[test]
+    fn values_are_bf16() {
+        for &v in attention_scores(4, 16, 2).iter() {
+            assert_eq!(crate::num::Bf16::from_f32(v).to_f32(), v);
+        }
+    }
+}

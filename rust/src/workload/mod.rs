@@ -1,0 +1,15 @@
+//! Transformer workloads (paper Sec. III-A, VII-C/D, VIII).
+//!
+//! * [`config`] — model geometries: ViT-base, MobileBERT, GPT-2 XL and
+//!   the tiny ViT used for end-to-end numeric validation;
+//! * [`trace`]  — lowering a model into the kernel-level op sequence the
+//!   coordinator schedules (MatMul / Softmax / GELU / LayerNorm / ...);
+//! * [`gen`]    — synthetic activation generators with the distributions
+//!   used for accuracy benchmarking (DESIGN.md §1).
+
+pub mod config;
+pub mod gen;
+pub mod trace;
+
+pub use config::ModelConfig;
+pub use trace::{trace_layer, trace_model, Op};

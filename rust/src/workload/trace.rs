@@ -1,0 +1,167 @@
+//! Kernel-level op traces: the unit of work the coordinator schedules.
+
+use super::config::ModelConfig;
+
+/// One schedulable kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Dense matmul, row-major MxK @ KxN.
+    MatMul { m: usize, k: usize, n: usize },
+    /// Row-wise softmax over `rows` rows of `len` scores.
+    Softmax { rows: usize, len: usize },
+    /// Elementwise GELU over n activations.
+    Gelu { n: usize },
+    /// LayerNorm over n elements (mean/var/scale ~ 5 passes).
+    LayerNorm { n: usize },
+    /// Residual add over n elements.
+    Residual { n: usize },
+    /// Bias add over n elements.
+    Bias { n: usize },
+}
+
+impl Op {
+    /// MACs if this is a matmul (for GOPS accounting), else 0.
+    pub fn macs(&self) -> u64 {
+        match *self {
+            Op::MatMul { m, k, n } => m as u64 * k as u64 * n as u64,
+            _ => 0,
+        }
+    }
+
+    /// Countable OPs (2/MAC for matmuls, 1/element for the rest, the
+    /// paper's GOPS accounting includes nonlinearity elements too).
+    pub fn ops(&self) -> u64 {
+        match *self {
+            Op::MatMul { .. } => 2 * self.macs(),
+            Op::Softmax { rows, len } => (rows * len) as u64,
+            Op::Gelu { n } | Op::LayerNorm { n } | Op::Residual { n } | Op::Bias { n } => n as u64,
+        }
+    }
+}
+
+/// The op sequence of one encoder layer (pre-LN transformer block).
+pub fn trace_layer(cfg: &ModelConfig) -> Vec<Op> {
+    let s = cfg.seq;
+    let d = cfg.d_model;
+    let dh = cfg.d_head;
+    let h = cfg.heads;
+    let inner = h * dh;
+    let mut ops = vec![
+        Op::LayerNorm { n: s * d },
+        // fused QKV projection
+        Op::MatMul { m: s, k: d, n: 3 * inner },
+        Op::Bias { n: 3 * s * inner },
+    ];
+    // per-head score and context matmuls + the row-wise softmax
+    for _ in 0..h {
+        ops.push(Op::MatMul { m: s, k: dh, n: s }); // Q K^T
+    }
+    ops.push(Op::Softmax { rows: h * s, len: s });
+    for _ in 0..h {
+        ops.push(Op::MatMul { m: s, k: s, n: dh }); // P V
+    }
+    ops.push(Op::MatMul { m: s, k: inner, n: d }); // output projection
+    ops.push(Op::Bias { n: s * d });
+    ops.push(Op::Residual { n: s * d });
+    // FFN
+    ops.push(Op::LayerNorm { n: s * d });
+    ops.push(Op::MatMul { m: s, k: d, n: cfg.d_ff });
+    ops.push(Op::Bias { n: s * cfg.d_ff });
+    if cfg.gelu_ffn {
+        ops.push(Op::Gelu { n: s * cfg.d_ff });
+    }
+    ops.push(Op::MatMul { m: s, k: cfg.d_ff, n: d });
+    ops.push(Op::Bias { n: s * d });
+    ops.push(Op::Residual { n: s * d });
+    ops
+}
+
+/// The full model trace (layers repeated).
+pub fn trace_model(cfg: &ModelConfig) -> Vec<Op> {
+    let layer = trace_layer(cfg);
+    let mut ops = Vec::with_capacity(layer.len() * cfg.layers);
+    for _ in 0..cfg.layers {
+        ops.extend_from_slice(&layer);
+    }
+    ops
+}
+
+/// Only the attention core (QK^T -> softmax -> PV), the workload of the
+/// paper's Fig. 10/11 "attention layer" experiment.
+pub fn trace_attention_core(cfg: &ModelConfig) -> Vec<Op> {
+    let s = cfg.seq;
+    let dh = cfg.d_head;
+    let h = cfg.heads;
+    let mut ops = Vec::new();
+    for _ in 0..h {
+        ops.push(Op::MatMul { m: s, k: dh, n: s });
+    }
+    ops.push(Op::Softmax { rows: h * s, len: s });
+    for _ in 0..h {
+        ops.push(Op::MatMul { m: s, k: s, n: dh });
+    }
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_trace_macs_match_config() {
+        for cfg in [
+            ModelConfig::vit_base(),
+            ModelConfig::mobilebert(512),
+            ModelConfig::gpt2_xl(),
+        ] {
+            let macs: u64 = trace_layer(&cfg).iter().map(|o| o.macs()).sum();
+            assert_eq!(macs, cfg.layer_macs(), "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn model_trace_is_layers_times_layer() {
+        let cfg = ModelConfig::vit_tiny();
+        assert_eq!(
+            trace_model(&cfg).len(),
+            trace_layer(&cfg).len() * cfg.layers
+        );
+    }
+
+    #[test]
+    fn softmax_shape_matches_config() {
+        let cfg = ModelConfig::vit_base();
+        let (rows, len) = cfg.softmax_shape();
+        let found = trace_layer(&cfg)
+            .iter()
+            .any(|o| matches!(o, Op::Softmax { rows: r, len: l } if *r == rows && *l == len));
+        assert!(found);
+    }
+
+    #[test]
+    fn gelu_absent_for_relu_models() {
+        let mb = ModelConfig::mobilebert(128);
+        assert!(!trace_layer(&mb).iter().any(|o| matches!(o, Op::Gelu { .. })));
+        let vit = ModelConfig::vit_base();
+        assert!(trace_layer(&vit).iter().any(|o| matches!(o, Op::Gelu { .. })));
+    }
+
+    #[test]
+    fn attention_core_ops_match_paper_anchor() {
+        // MobileBERT seq 512 attention core: ~0.54 GOP of matmul
+        let cfg = ModelConfig::mobilebert(512);
+        let ops: u64 = trace_attention_core(&cfg)
+            .iter()
+            .map(|o| if o.macs() > 0 { o.ops() } else { 0 })
+            .sum();
+        let gop = ops as f64 / 1e9;
+        assert!((0.5..0.6).contains(&gop), "{gop}");
+    }
+
+    #[test]
+    fn op_ops_accounting() {
+        assert_eq!(Op::MatMul { m: 2, k: 3, n: 4 }.ops(), 48);
+        assert_eq!(Op::Softmax { rows: 4, len: 8 }.ops(), 32);
+        assert_eq!(Op::Gelu { n: 100 }.ops(), 100);
+    }
+}

@@ -1,0 +1,146 @@
+//! Cross-module integration tests: coordinator x softex x redmule x
+//! energy over full workload traces, plus failure injection on the
+//! artifact loader. (Unit tests live inside each module; this file
+//! exercises the composed system the way the examples do.)
+
+use softex::cluster::cores::ExpAlgo;
+use softex::coordinator::{execute_trace, ExecConfig, KernelClass};
+use softex::energy::{OP_EFFICIENCY, OP_THROUGHPUT};
+use softex::mesh::scaling::eval_mesh;
+use softex::prop::forall;
+use softex::softex::{run_gelu, run_softmax, SoftExConfig};
+use softex::workload::{gen, trace_model, ModelConfig};
+
+#[test]
+fn every_model_executes_on_every_config() {
+    let models = [
+        ModelConfig::vit_tiny(),
+        ModelConfig::vit_base(),
+        ModelConfig::mobilebert(128),
+    ];
+    let configs = [
+        ExecConfig::paper_accelerated(),
+        ExecConfig::sw_nonlinearities(ExpAlgo::Exps),
+        ExecConfig::sw_nonlinearities(ExpAlgo::Glibc),
+        ExecConfig::all_software(),
+    ];
+    for m in &models {
+        let trace = trace_model(m);
+        for c in &configs {
+            let r = execute_trace(c, &trace);
+            assert!(r.total_cycles() > 0, "{} produced zero cycles", m.name);
+            assert!(r.total_ops > 0);
+            assert!(r.gops(&OP_THROUGHPUT).is_finite());
+            assert!(r.tops_per_w(&OP_EFFICIENCY) > 0.0);
+        }
+    }
+}
+
+#[test]
+fn accelerated_never_slower_than_software() {
+    for m in [ModelConfig::vit_base(), ModelConfig::mobilebert(256)] {
+        let trace = trace_model(&m);
+        let hw = execute_trace(&ExecConfig::paper_accelerated(), &trace);
+        let sw = execute_trace(&ExecConfig::sw_nonlinearities(ExpAlgo::Exps), &trace);
+        let all_sw = execute_trace(&ExecConfig::all_software(), &trace);
+        assert!(hw.total_cycles() < sw.total_cycles(), "{}", m.name);
+        assert!(sw.total_cycles() < all_sw.total_cycles(), "{}", m.name);
+    }
+}
+
+#[test]
+fn fractions_sum_to_one() {
+    let m = execute_trace(
+        &ExecConfig::paper_accelerated(),
+        &trace_model(&ModelConfig::vit_base()),
+    );
+    let total: f64 = [
+        KernelClass::MatMul,
+        KernelClass::Softmax,
+        KernelClass::Gelu,
+        KernelClass::Other,
+    ]
+    .iter()
+    .map(|k| m.fraction(*k))
+    .sum();
+    assert!((total - 1.0).abs() < 1e-9, "{total}");
+}
+
+#[test]
+fn softmax_then_gelu_functional_composition() {
+    // attention-probabilities -> (pretend context) -> GELU: outputs stay
+    // bounded and finite through composed bit-exact models
+    let cfg = SoftExConfig::default();
+    let scores = gen::attention_scores(32, 197, 0xC0);
+    let sm = run_softmax(&cfg, &scores, 32, 197);
+    let g = run_gelu(&cfg, &sm.out);
+    assert!(g.out.iter().all(|v| v.is_finite()));
+    // GELU of probabilities in [0,1] is in [0, ~0.85]
+    assert!(g.out.iter().all(|&v| (-0.2..=1.0).contains(&v)));
+}
+
+#[test]
+fn lane_sweep_preserves_functional_output() {
+    // cycle model changes with lanes; the math must not
+    let scores = gen::attention_scores(8, 256, 0xD1);
+    let base = run_softmax(&SoftExConfig::with_lanes(16), &scores, 8, 256);
+    for lanes in [4usize, 8, 32, 64] {
+        let r = run_softmax(&SoftExConfig::with_lanes(lanes), &scores, 8, 256);
+        let max_diff = r
+            .out
+            .iter()
+            .zip(&base.out)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        // only the online-accumulation chunking differs -> <= 1 ulp of
+        // the largest probability
+        assert!(max_diff <= 0.01, "lanes={lanes}: {max_diff}");
+    }
+}
+
+#[test]
+fn mesh_and_cluster_models_agree_at_n1() {
+    // a 1x1 "mesh" must reproduce the standalone cluster peak
+    let p = eval_mesh(1, 1000, 1);
+    assert!((p.per_cluster_gops - 344.0).abs() < 1.5);
+    assert_eq!(p.total_tops, p.per_cluster_gops / 1e3);
+}
+
+#[test]
+fn property_all_traces_have_matmul_majority_under_acceleration() {
+    forall(
+        "matmul-majority",
+        8,
+        |r| 64 + (r.below(192) as usize),
+        |&seq| {
+            let m = execute_trace(
+                &ExecConfig::paper_accelerated(),
+                &trace_model(&ModelConfig::mobilebert(seq)),
+            );
+            m.fraction(KernelClass::MatMul) > 0.5
+        },
+    );
+}
+
+// ---- failure injection on the artifact loader ----
+
+#[test]
+fn loader_rejects_truncated_golden() {
+    let dir = std::env::temp_dir().join("softex_it_trunc");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("g.golden.txt"), "in 4:float32 4\n1 2 3\n").unwrap();
+    assert!(softex::runtime::Golden::load(dir.join("g.golden.txt")).is_err());
+}
+
+#[test]
+fn loader_rejects_bad_manifest_line() {
+    let dir = std::env::temp_dir().join("softex_it_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), "only two | fields\n").unwrap();
+    assert!(softex::runtime::Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn engine_errors_cleanly_on_missing_dir() {
+    assert!(softex::runtime::Engine::new("/definitely/not/here").is_err());
+}
