@@ -13,7 +13,14 @@ use softex::softex::{run_softmax, SoftExConfig};
 use softex::workload::trace::trace_attention_core;
 use softex::workload::{gen, trace_model, ModelConfig};
 
-fn main() -> anyhow::Result<()> {
+fn pjrt_attention_golden() -> softex::anyhow::Result<()> {
+    let mut engine = Engine::from_default_artifacts()?;
+    let (err, _, _) = engine.verify_golden("attention_head_128")?;
+    println!("attention_head_128 artifact golden max|err| = {err:.2e}\n");
+    Ok(())
+}
+
+fn main() {
     let cfg = SoftExConfig::default();
 
     // --- softmax kernel vs software, over sequence length ---------------
@@ -45,9 +52,10 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- numerics through the PJRT path on the attention head -----------
-    let mut engine = Engine::from_default_artifacts()?;
-    let (err, _, _) = engine.verify_golden("attention_head_128")?;
-    println!("attention_head_128 artifact golden max|err| = {err:.2e}\n");
+    // (skipped with a note when artifacts/backend are unavailable)
+    if let Err(e) = pjrt_attention_golden() {
+        println!("(PJRT golden check skipped: {e})\n");
+    }
 
     // --- full attention layer and full model ----------------------------
     let mb = ModelConfig::mobilebert(512);
@@ -74,5 +82,4 @@ fn main() -> anyhow::Result<()> {
         full.seconds(&OP_THROUGHPUT) * 1e3
     );
     println!("mobilebert_attention OK");
-    Ok(())
 }

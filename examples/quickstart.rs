@@ -1,9 +1,9 @@
 //! Quickstart: the three-layer flow in one page.
 //!
-//! 1. Load an AOT JAX/Pallas artifact (L1+L2, compiled by `make
-//!    artifacts`) through the PJRT runtime and execute it from Rust.
-//! 2. Run the same softmax on the bit-accurate SoftEx hardware model and
-//!    compare outputs.
+//! 1. Run a softmax job on the bit-accurate SoftEx hardware model.
+//! 2. Cross-check against the AOT JAX/Pallas artifact through the PJRT
+//!    runtime (skipped with a note when the artifacts or the PJRT
+//!    backend are unavailable — see DESIGN.md §4).
 //! 3. Ask the cycle/energy model what the job costs on the cluster.
 //!
 //! Run: cargo run --release --example quickstart
@@ -11,21 +11,13 @@
 use softex::energy::{energy_j, ActivityMode, OP_THROUGHPUT};
 use softex::report;
 use softex::runtime::Engine;
-use softex::softex::{run_softmax, SoftExConfig};
+use softex::softex::{run_softmax, SoftExConfig, SoftmaxResult};
 use softex::workload::gen;
 
-fn main() -> anyhow::Result<()> {
-    // --- 1. request-path execution of the Pallas softmax kernel --------
+fn pjrt_cross_check(scores: &[f32], hw: &SoftmaxResult) -> softex::anyhow::Result<()> {
     let mut engine = Engine::from_default_artifacts()?;
-    let rows = 128;
-    let len = 128;
-    let scores = gen::attention_scores(rows, len, 42);
-    let pallas_out = engine.run("softmax_128x128", &[scores.clone()])?;
+    let pallas_out = engine.run("softmax_128x128", &[scores.to_vec()])?;
     println!("PJRT softmax_128x128: {} outputs", pallas_out.len());
-
-    // --- 2. the same job on the SoftEx hardware model -------------------
-    let cfg = SoftExConfig::default();
-    let hw = run_softmax(&cfg, &scores, rows, len);
     let max_diff = hw
         .out
         .iter()
@@ -34,6 +26,27 @@ fn main() -> anyhow::Result<()> {
         .fold(0.0f32, f32::max);
     println!("SoftEx model vs Pallas kernel: max |diff| = {max_diff:.2e}");
     assert!(max_diff < 0.02, "cross-layer contract violated");
+    Ok(())
+}
+
+fn main() {
+    // --- 1. the softmax job on the SoftEx hardware model ----------------
+    let rows = 128;
+    let len = 128;
+    let scores = gen::attention_scores(rows, len, 42);
+    let cfg = SoftExConfig::default();
+    let hw = run_softmax(&cfg, &scores, rows, len);
+    let worst = hw
+        .out
+        .chunks(len)
+        .map(|row| (row.iter().sum::<f32>() - 1.0).abs())
+        .fold(0.0f32, f32::max);
+    println!("SoftEx softmax [{rows}x{len}]: worst |rowsum - 1| = {worst:.4}");
+
+    // --- 2. cross-check against the Pallas kernel when available --------
+    if let Err(e) = pjrt_cross_check(&scores, &hw) {
+        println!("(PJRT cross-check skipped: {e})");
+    }
 
     // --- 3. what does it cost on the cluster? ---------------------------
     let e = energy_j(ActivityMode::SoftmaxHw, hw.cycles.total(), &OP_THROUGHPUT);
@@ -46,5 +59,4 @@ fn main() -> anyhow::Result<()> {
         e * 1e6
     );
     println!("quickstart OK");
-    Ok(())
 }

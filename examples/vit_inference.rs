@@ -3,7 +3,9 @@
 //! Part A — real numerics: run the tiny ViT (4 layers, d=128, ~0.8 M
 //! params, weights baked at AOT time) through the PJRT artifact on a
 //! batch of fresh synthetic "images", check logits are finite, stable and
-//! match the JAX golden evaluation; time the request path.
+//! match the JAX golden evaluation; time the request path. Skipped with a
+//! note when the artifacts or the PJRT backend are unavailable
+//! (DESIGN.md §4).
 //!
 //! Part B — the paper's ViT-base experiment (Fig. 12/13): full-system
 //! simulation with SoftEx vs software nonlinearities, reporting the
@@ -22,8 +24,7 @@ use softex::rng::Xoshiro256;
 use softex::runtime::Engine;
 use softex::workload::{trace_model, ModelConfig};
 
-fn main() -> anyhow::Result<()> {
-    // ---------------- Part A: real tiny-ViT inference ------------------
+fn pjrt_tiny_vit_requests() -> softex::anyhow::Result<()> {
     let mut engine = Engine::from_default_artifacts()?;
     let cfg = ModelConfig::vit_tiny();
     let (seq, d) = (cfg.seq, cfg.d_model);
@@ -64,6 +65,14 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
     println!("predicted classes: {preds:?}");
+    Ok(())
+}
+
+fn main() {
+    // ---------------- Part A: real tiny-ViT inference ------------------
+    if let Err(e) = pjrt_tiny_vit_requests() {
+        println!("(PJRT part skipped: {e})");
+    }
 
     // ---------------- Part B: ViT-base system simulation ----------------
     let vit = ModelConfig::vit_base();
@@ -96,5 +105,4 @@ fn main() -> anyhow::Result<()> {
         "SoftEx gain: {speedup:.2}x throughput (paper: 1.58x), {eff_gain:.2}x efficiency (paper: 1.42x)"
     );
     println!("vit_inference OK");
-    Ok(())
 }

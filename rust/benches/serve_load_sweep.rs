@@ -1,0 +1,67 @@
+//! Serving load sweep: latency percentiles and sustained GOPS across
+//! mesh sizes (1x1, 2x2, 4x4), scheduling policies, and offered loads.
+//!
+//! The offered load is expressed as a fraction rho of the mesh's
+//! aggregate service capacity on the edge-default mix: rho = 0.4 is an
+//! underloaded system, 0.8 near saturation, 1.2 overloaded (queues grow
+//! for the whole run).
+//!
+//! Run: cargo bench --bench serve_load_sweep
+
+use std::time::Instant;
+
+use softex::energy::OP_THROUGHPUT;
+use softex::server::{
+    summary_table, ArrivalProcess, BatchScheduler, Policy, RequestGen, ServerConfig, WorkloadMix,
+};
+
+fn main() {
+    let t0 = Instant::now();
+    let n_requests = 600;
+    let seed = 0x10AD;
+    let mix = WorkloadMix::edge_default();
+
+    // mean uncontended service time of the mix on one cluster
+    let mut probe = BatchScheduler::new(ServerConfig::new(1, Policy::Fifo));
+    let total_w: f64 = mix.entries().iter().map(|(_, w)| w).sum();
+    let mean_service: f64 = mix
+        .entries()
+        .iter()
+        .map(|(c, w)| probe.service_cycles(*c) as f64 * w / total_w)
+        .sum();
+    println!(
+        "edge-default mix: mean service {:.1} Mcycles/request ({:.2} ms @0.8V)\n",
+        mean_service / 1e6,
+        mean_service / OP_THROUGHPUT.freq_hz * 1e3
+    );
+
+    for rho in [0.4f64, 0.8, 1.2] {
+        let mut reports = Vec::new();
+        for mesh in [1usize, 2, 4] {
+            let clusters = (mesh * mesh) as f64;
+            let mean_gap = mean_service / (clusters * rho);
+            for policy in [Policy::Fifo, Policy::ContinuousBatching, Policy::MeshSharded] {
+                let reqs = RequestGen::new(
+                    seed,
+                    ArrivalProcess::Poisson { mean_gap },
+                    mix.clone(),
+                )
+                .generate(n_requests);
+                let mut sched = BatchScheduler::new(ServerConfig::new(mesh, policy));
+                reports.push(sched.run(&reqs));
+            }
+        }
+        println!(
+            "{}",
+            summary_table(
+                &format!("serve sweep — rho = {rho} ({n_requests} requests, edge-default mix)"),
+                &reports
+            )
+        );
+    }
+
+    println!(
+        "sweep wall time: {:.2} s (9 configurations x 3 loads, deterministic seed {seed:#x})",
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,132 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The vendored crate set of this build has no external dependencies, so
+//! the small subset of `anyhow` the runtime layer uses (string-typed
+//! errors, `Result`, `Context`, `bail!`/`ensure!`) is provided here.
+//! In-crate code imports it as `crate::anyhow::...`; downstream code (the
+//! examples) as `softex::anyhow::...`.
+
+use std::fmt;
+
+/// A string-typed error with accumulated context, in the `anyhow::Error`
+/// role. Deliberately does *not* implement `std::error::Error`, so the
+/// blanket `From<E: Error>` below stays coherent (the same design anyhow
+/// itself uses).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Self::msg(e)
+    }
+}
+
+/// `anyhow::Result`: defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures, as `anyhow::Context` does.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*)
+        }
+    };
+}
+
+pub use crate::{bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parses(s: &str) -> Result<usize> {
+        let v = s.parse::<usize>().context("not a number")?;
+        ensure!(v < 100, "{v} too large");
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parses("42").unwrap(), 42);
+        let e = parses("nope").unwrap_err();
+        assert!(format!("{e}").contains("not a number"), "{e}");
+    }
+
+    #[test]
+    fn ensure_bails_with_message() {
+        let e = parses("1000").unwrap_err();
+        assert!(format!("{e}").contains("too large"), "{e}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(format!("{e:#}"), "missing field");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u32, std::fmt::Error> = Ok(7);
+        let v = ok.with_context(|| -> String { unreachable!("not evaluated on Ok") });
+        assert_eq!(v.unwrap(), 7);
+    }
+}

@@ -1,5 +1,9 @@
 //! Trace execution: walk the op list, dispatch each kernel to its engine
 //! model, and accumulate metrics.
+//!
+//! The cost of a single kernel is exposed through [`op_cost`] so callers
+//! that schedule at op granularity (the `server` serving simulator) see
+//! the same cycle model as the aggregated [`execute_trace`] path.
 
 use crate::cluster::cores;
 use crate::energy::ActivityMode;
@@ -10,6 +14,128 @@ use crate::workload::Op;
 use super::metrics::{KernelClass, Metrics};
 use super::schedule::{EngineChoice, ExecConfig};
 
+/// Physical engine a kernel occupies while it runs. The serving
+/// simulator's per-engine queues are keyed on this.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Engine {
+    /// The RedMulE tensor unit (or the cores when `redmule` is `None` —
+    /// the software matmul occupies the same serial resource).
+    TensorUnit,
+    /// The SoftEx accelerator (plus its core-assist share for GELU).
+    SoftEx,
+    /// The 8 general-purpose cores.
+    Cores,
+}
+
+/// Cycle/energy cost of a single kernel under a configuration.
+#[derive(Clone, Debug)]
+pub struct OpCost {
+    pub class: KernelClass,
+    pub engine: Engine,
+    /// Engine-occupancy cycles (the sum over `parts`).
+    pub cycles: u64,
+    /// Countable OPs contributed by this kernel.
+    pub ops: u64,
+    /// (activity mode, cycles) pairs for power accounting.
+    pub parts: Vec<(ActivityMode, u64)>,
+}
+
+/// Resolve one op to its engine, cycle cost and energy parts.
+pub fn op_cost(cfg: &ExecConfig, op: &Op) -> OpCost {
+    match *op {
+        Op::MatMul { m, k, n } => {
+            let cycles = match &cfg.redmule {
+                Some(r) => redmule::matmul_cycles(r, m, k, n),
+                None => cores::matmul_sw_cycles(m, k, n),
+            };
+            OpCost {
+                class: KernelClass::MatMul,
+                engine: Engine::TensorUnit,
+                cycles,
+                ops: op.ops(),
+                parts: vec![(ActivityMode::MatMul, cycles)],
+            }
+        }
+        Op::Softmax { rows, len } => match cfg.softmax_engine {
+            EngineChoice::SoftEx => {
+                // Timing-level rescale estimate: with i.i.d. scores the
+                // expected number of chunk-max updates per row is the
+                // harmonic number of the chunk count, ~ln(chunks)+0.58
+                // (the functional path reports exact counts).
+                let chunks = ((len + cfg.softex.lanes - 1) / cfg.softex.lanes) as f64;
+                let est_rescales = (rows as f64 * (chunks.ln() + 0.58)).round() as u64;
+                let cycles = timing::softmax_cycles(&cfg.softex, rows, len, est_rescales).total();
+                OpCost {
+                    class: KernelClass::Softmax,
+                    engine: Engine::SoftEx,
+                    cycles,
+                    ops: op.ops(),
+                    parts: vec![(ActivityMode::SoftmaxHw, cycles)],
+                }
+            }
+            EngineChoice::Cores => {
+                let cycles = cores::softmax_sw_cycles(cfg.softmax_sw_algo, rows, len);
+                OpCost {
+                    class: KernelClass::Softmax,
+                    engine: Engine::Cores,
+                    cycles,
+                    ops: op.ops(),
+                    parts: vec![(ActivityMode::SoftmaxSw, cycles)],
+                }
+            }
+        },
+        Op::Gelu { n } => match cfg.gelu_engine {
+            EngineChoice::SoftEx => {
+                let hw = timing::gelu_cycles(&cfg.softex, n);
+                let sw = cores::gelu_assisted_core_cycles(n);
+                OpCost {
+                    class: KernelClass::Gelu,
+                    engine: Engine::SoftEx,
+                    cycles: hw + sw,
+                    ops: op.ops(),
+                    parts: vec![
+                        (ActivityMode::GeluHw, hw),
+                        (ActivityMode::CoresElementwise, sw),
+                    ],
+                }
+            }
+            EngineChoice::Cores => {
+                let cycles = cores::gelu_sw_cycles(cfg.gelu_sw_algo, n);
+                OpCost {
+                    class: KernelClass::Gelu,
+                    engine: Engine::Cores,
+                    cycles,
+                    ops: op.ops(),
+                    parts: vec![(ActivityMode::GeluSw, cycles)],
+                }
+            }
+        },
+        Op::LayerNorm { n } => elementwise_cost(cores::elementwise_cycles(n, 4.0), op.ops()),
+        Op::Bias { n } => {
+            // RedMulE computes Z = X*W + Y, so the bias is fused into
+            // the matmul for free; only the software-matmul baseline
+            // pays for it on the cores.
+            let cycles = if cfg.redmule.is_some() {
+                0
+            } else {
+                cores::elementwise_cycles(n, 1.0)
+            };
+            elementwise_cost(cycles, op.ops())
+        }
+        Op::Residual { n } => elementwise_cost(cores::elementwise_cycles(n, 1.0), op.ops()),
+    }
+}
+
+fn elementwise_cost(cycles: u64, ops: u64) -> OpCost {
+    OpCost {
+        class: KernelClass::Other,
+        engine: Engine::Cores,
+        cycles,
+        ops,
+        parts: vec![(ActivityMode::CoresElementwise, cycles)],
+    }
+}
+
 /// Execute a trace under a configuration, returning aggregated metrics.
 /// Timing-level execution: numeric execution of the same kernels happens
 /// through `runtime::` (PJRT artifacts) and `softex::`/`redmule::`
@@ -17,63 +143,7 @@ use super::schedule::{EngineChoice, ExecConfig};
 pub fn execute_trace(cfg: &ExecConfig, trace: &[Op]) -> Metrics {
     let mut m = Metrics::default();
     for op in trace {
-        match *op {
-            Op::MatMul { m: mm, k, n } => {
-                let cycles = match &cfg.redmule {
-                    Some(r) => redmule::matmul_cycles(r, mm, k, n),
-                    None => cores::matmul_sw_cycles(mm, k, n),
-                };
-                m.add(KernelClass::MatMul, ActivityMode::MatMul, cycles, op.ops());
-            }
-            Op::Softmax { rows, len } => match cfg.softmax_engine {
-                EngineChoice::SoftEx => {
-                    // Timing-level rescale estimate: with i.i.d. scores the
-                    // expected number of chunk-max updates per row is the
-                    // harmonic number of the chunk count, ~ln(chunks)+0.58
-                    // (the functional path reports exact counts).
-                    let chunks = ((len + cfg.softex.lanes - 1) / cfg.softex.lanes) as f64;
-                    let est_rescales =
-                        (rows as f64 * (chunks.ln() + 0.58)).round() as u64;
-                    let c = timing::softmax_cycles(&cfg.softex, rows, len, est_rescales);
-                    m.add(KernelClass::Softmax, ActivityMode::SoftmaxHw, c.total(), op.ops());
-                }
-                EngineChoice::Cores => {
-                    let c = cores::softmax_sw_cycles(cfg.softmax_sw_algo, rows, len);
-                    m.add(KernelClass::Softmax, ActivityMode::SoftmaxSw, c, op.ops());
-                }
-            },
-            Op::Gelu { n } => match cfg.gelu_engine {
-                EngineChoice::SoftEx => {
-                    let hw = timing::gelu_cycles(&cfg.softex, n);
-                    let sw = cores::gelu_assisted_core_cycles(n);
-                    m.add(KernelClass::Gelu, ActivityMode::GeluHw, hw, op.ops());
-                    m.add(KernelClass::Gelu, ActivityMode::CoresElementwise, sw, 0);
-                }
-                EngineChoice::Cores => {
-                    let c = cores::gelu_sw_cycles(cfg.gelu_sw_algo, n);
-                    m.add(KernelClass::Gelu, ActivityMode::GeluSw, c, op.ops());
-                }
-            },
-            Op::LayerNorm { n } => {
-                let c = cores::elementwise_cycles(n, 4.0);
-                m.add(KernelClass::Other, ActivityMode::CoresElementwise, c, op.ops());
-            }
-            Op::Bias { n } => {
-                // RedMulE computes Z = X*W + Y, so the bias is fused into
-                // the matmul for free; only the software-matmul baseline
-                // pays for it on the cores.
-                let c = if cfg.redmule.is_some() {
-                    0
-                } else {
-                    cores::elementwise_cycles(n, 1.0)
-                };
-                m.add(KernelClass::Other, ActivityMode::CoresElementwise, c, op.ops());
-            }
-            Op::Residual { n } => {
-                let c = cores::elementwise_cycles(n, 1.0);
-                m.add(KernelClass::Other, ActivityMode::CoresElementwise, c, op.ops());
-            }
-        }
+        m.add_cost(&op_cost(cfg, op));
     }
     m
 }
@@ -83,8 +153,8 @@ mod tests {
     use super::*;
     use crate::cluster::cores::ExpAlgo;
     use crate::energy::{OP_EFFICIENCY, OP_THROUGHPUT};
-    use crate::workload::{trace_model, ModelConfig};
     use crate::workload::trace::trace_attention_core;
+    use crate::workload::{trace_model, ModelConfig};
 
     #[test]
     fn vit_e2e_headline_throughput() {
@@ -212,5 +282,48 @@ mod tests {
             &trace_attention_core(&mb),
         );
         assert!(m.fraction(KernelClass::Softmax) > 0.95);
+    }
+
+    #[test]
+    fn op_cost_agrees_with_execute_trace() {
+        // per-op costs must sum to exactly what the aggregate path reports
+        let cfg = ExecConfig::paper_accelerated();
+        let trace = trace_model(&ModelConfig::vit_tiny());
+        let m = execute_trace(&cfg, &trace);
+        let cycles: u64 = trace.iter().map(|o| op_cost(&cfg, o).cycles).sum();
+        let ops: u64 = trace.iter().map(|o| op_cost(&cfg, o).ops).sum();
+        assert_eq!(cycles, m.total_cycles());
+        assert_eq!(ops, m.total_ops);
+    }
+
+    #[test]
+    fn op_cost_engine_assignment() {
+        let cfg = ExecConfig::paper_accelerated();
+        let mm = op_cost(&cfg, &Op::MatMul { m: 64, k: 64, n: 64 });
+        assert_eq!(mm.engine, Engine::TensorUnit);
+        let sm = op_cost(&cfg, &Op::Softmax { rows: 64, len: 128 });
+        assert_eq!(sm.engine, Engine::SoftEx);
+        let ln = op_cost(&cfg, &Op::LayerNorm { n: 1024 });
+        assert_eq!(ln.engine, Engine::Cores);
+
+        let sw = ExecConfig::sw_nonlinearities(ExpAlgo::Exps);
+        assert_eq!(op_cost(&sw, &Op::Softmax { rows: 64, len: 128 }).engine, Engine::Cores);
+    }
+
+    #[test]
+    fn op_cost_parts_sum_to_cycles() {
+        let cfg = ExecConfig::paper_accelerated();
+        for op in [
+            Op::MatMul { m: 31, k: 65, n: 129 },
+            Op::Softmax { rows: 16, len: 200 },
+            Op::Gelu { n: 5000 },
+            Op::LayerNorm { n: 4096 },
+            Op::Bias { n: 4096 },
+            Op::Residual { n: 4096 },
+        ] {
+            let c = op_cost(&cfg, &op);
+            let parts: u64 = c.parts.iter().map(|(_, cy)| cy).sum();
+            assert_eq!(parts, c.cycles, "{op:?}");
+        }
     }
 }

@@ -43,6 +43,14 @@ impl Metrics {
         self.total_ops += ops;
     }
 
+    /// Fold one kernel's resolved cost (from [`super::exec::op_cost`])
+    /// into the aggregate.
+    pub fn add_cost(&mut self, cost: &super::exec::OpCost) {
+        *self.cycles.entry(cost.class).or_insert(0) += cost.cycles;
+        self.mode_cycles.extend_from_slice(&cost.parts);
+        self.total_ops += cost.ops;
+    }
+
     pub fn total_cycles(&self) -> u64 {
         self.cycles.values().sum()
     }

@@ -12,6 +12,6 @@ pub mod exec;
 pub mod metrics;
 pub mod schedule;
 
-pub use exec::execute_trace;
+pub use exec::{execute_trace, op_cost, Engine, OpCost};
 pub use metrics::{KernelClass, Metrics};
 pub use schedule::{EngineChoice, ExecConfig};

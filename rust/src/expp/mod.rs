@@ -17,6 +17,9 @@ pub mod glibc;
 pub mod lut;
 pub mod schraudolph;
 
+#[cfg(test)]
+mod tests;
+
 pub use correction::expp;
 pub use glibc::exp_accurate;
 pub use lut::expp_fast;

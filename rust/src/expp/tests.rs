@@ -1,0 +1,76 @@
+//! Accuracy regression pinning the paper's headline expp claim
+//! (Sec. VI-A1): on the attention-relevant range [-20, 0] (post max
+//! subtraction every softmax operand is non-positive), the corrected
+//! Schraudolph exponential tracks the accurate bf16 exponential
+//! ([`glibc::exp_accurate`], the glibc role) to a mean relative error
+//! well under the paper's 0.14%, with the max error bounded.
+
+use crate::num::Bf16;
+use crate::rng::Xoshiro256;
+
+use super::{exp_accurate, expp, exps};
+
+/// Seeded sweep of expp vs the accurate bf16 exponential over [lo, hi]:
+/// returns (mean_rel, max_rel, samples).
+fn sweep_vs_glibc(lo: f64, hi: f64, n: u64, seed: u64) -> (f64, f64, u64) {
+    let mut rng = Xoshiro256::new(seed);
+    let (mut sum, mut max, mut count) = (0.0f64, 0.0f64, 0u64);
+    for _ in 0..n {
+        let x = Bf16::from_f32(rng.uniform_range(lo, hi) as f32);
+        let approx = expp(x).to_f32() as f64;
+        let exact = exp_accurate(x).to_f32() as f64;
+        debug_assert!(exact > 0.0);
+        let rel = ((approx - exact) / exact).abs();
+        sum += rel;
+        max = max.max(rel);
+        count += 1;
+    }
+    (sum / count as f64, max, count)
+}
+
+#[test]
+fn headline_mre_vs_glibc_below_0_14_pct() {
+    // Paper headline: expp MRE 0.14%. Against the bf16-rounded accurate
+    // exponential on [-20, 0] ours measures ~0.09%.
+    let (mean, _, n) = sweep_vs_glibc(-20.0, 0.0, 200_000, 0xACC);
+    assert_eq!(n, 200_000);
+    assert!(mean <= 0.0014, "MRE {:.4}% exceeds 0.14%", mean * 100.0);
+}
+
+#[test]
+fn max_error_vs_glibc_bounded() {
+    // Paper max: 0.78%; ours measures ~0.77% on this range (the worst
+    // single bf16 input). Pin a 0.9% ceiling so datapath edits that
+    // widen the tail fail loudly.
+    let (_, max, _) = sweep_vs_glibc(-20.0, 0.0, 200_000, 0xACC);
+    assert!(max <= 0.009, "max rel err {:.4}% exceeds 0.9%", max * 100.0);
+}
+
+#[test]
+fn sweep_is_seed_deterministic() {
+    let a = sweep_vs_glibc(-20.0, 0.0, 50_000, 7);
+    let b = sweep_vs_glibc(-20.0, 0.0, 50_000, 7);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn correction_beats_plain_schraudolph_on_softmax_range() {
+    // the mantissa correction must stay an order of magnitude better
+    // than plain Schraudolph on the same samples
+    let mut rng = Xoshiro256::new(0xBEE);
+    let (mut sum_p, mut sum_s, mut n) = (0.0f64, 0.0f64, 0u64);
+    for _ in 0..100_000 {
+        let x = Bf16::from_f32(rng.uniform_range(-20.0, 0.0) as f32);
+        let exact = exp_accurate(x).to_f32() as f64;
+        sum_p += ((expp(x).to_f32() as f64 - exact) / exact).abs();
+        sum_s += ((exps(x).to_f32() as f64 - exact) / exact).abs();
+        n += 1;
+    }
+    let (mre_p, mre_s) = (sum_p / n as f64, sum_s / n as f64);
+    assert!(
+        mre_s > 10.0 * mre_p,
+        "expp {:.4}% vs exps {:.4}%",
+        mre_p * 100.0,
+        mre_s * 100.0
+    );
+}

@@ -5,7 +5,8 @@
 //!
 //! The paper's artifact is silicon; here every hardware block is rebuilt
 //! as a bit-accurate functional model plus cycle/energy/area analytical
-//! models (see DESIGN.md §1 for the substitution table):
+//! models (see `DESIGN.md` §1 at the repository root for the substitution
+//! table):
 //!
 //! * [`num`] — bit-exact BF16 / fixed-point arithmetic;
 //! * [`expp`] — the approximate exponential (Sec. IV);
@@ -15,9 +16,15 @@
 //! * [`workload`] — transformer workloads (ViT, MobileBERT, GPT-2 XL);
 //! * [`coordinator`] — the L3 scheduler mapping workloads onto engines;
 //! * [`mesh`] — the FlooNoC compute-mesh scalability model (Sec. VIII);
+//! * [`server`] — the multi-request serving simulator layered on the
+//!   coordinator and mesh models (`DESIGN.md` §6);
 //! * [`energy`] — area/power/energy models calibrated to Sec. VII;
-//! * [`runtime`] — PJRT loading/execution of the AOT JAX artifacts;
+//! * [`runtime`] — PJRT loading/execution of the AOT JAX artifacts
+//!   (gated off in offline builds, `DESIGN.md` §4);
 //! * [`report`] — paper-style table rendering for the benches.
+
+#[doc(hidden)]
+pub mod anyhow;
 
 pub mod cluster;
 pub mod coordinator;
@@ -30,5 +37,6 @@ pub mod redmule;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod server;
 pub mod softex;
 pub mod workload;

@@ -5,6 +5,7 @@
 //!   softmax --rows R --len L [--lanes N]                one softmax job
 //!   gelu --n N [--terms T] [--bits B]                   one GELU job
 //!   mesh [--max 8] [--trials 16384]                     Fig. 15 sweep
+//!   serve [--requests N] [--mesh n] [--policy P]        serving sim
 //!   verify [--artifacts DIR]                            golden checks
 //!   info                                                cluster summary
 
@@ -16,6 +17,9 @@ use softex::energy::{OP_EFFICIENCY, OP_THROUGHPUT};
 use softex::mesh::sweep_mesh;
 use softex::report;
 use softex::runtime::Engine;
+use softex::server::{
+    ArrivalProcess, BatchScheduler, Policy, RequestGen, ServerConfig, WorkloadMix,
+};
 use softex::softex::phys;
 use softex::softex::SoftExConfig;
 use softex::workload::{gen, trace_model, ModelConfig};
@@ -173,6 +177,33 @@ fn cmd_mesh(flags: &HashMap<String, String>) {
     );
 }
 
+fn cmd_serve(flags: &HashMap<String, String>) {
+    let n: usize = flags.get("requests").map_or(1000, |v| v.parse().unwrap());
+    let mesh: usize = flags.get("mesh").map_or(2, |v| v.parse().unwrap());
+    let seed: u64 = flags.get("seed").map_or(0x5EED, |v| v.parse().unwrap());
+    let mean_gap: f64 = flags.get("gap").map_or(2.0e6, |v| v.parse().unwrap());
+    let policy = match flags.get("policy").map(String::as_str) {
+        Some("fifo") => Policy::Fifo,
+        Some("mesh") | Some("mesh-shard") => Policy::MeshSharded,
+        Some("cb") | Some("cont-batch") | None => Policy::ContinuousBatching,
+        Some(other) => {
+            eprintln!("unknown policy `{other}` (fifo, cb, mesh)");
+            std::process::exit(1);
+        }
+    };
+    let mut generator = RequestGen::new(
+        seed,
+        ArrivalProcess::Poisson { mean_gap },
+        WorkloadMix::edge_default(),
+    );
+    let requests = generator.generate(n);
+    let mut server_cfg = ServerConfig::new(mesh, policy);
+    server_cfg.seed = seed;
+    let mut sched = BatchScheduler::new(server_cfg);
+    let rep = sched.run(&requests);
+    println!("{}", rep.render());
+}
+
 fn cmd_verify(flags: &HashMap<String, String>) {
     let dir = flags
         .get("artifacts")
@@ -239,11 +270,12 @@ fn main() {
         Some("softmax") => cmd_softmax(&flags),
         Some("gelu") => cmd_gelu(&flags),
         Some("mesh") => cmd_mesh(&flags),
+        Some("serve") => cmd_serve(&flags),
         Some("verify") => cmd_verify(&flags),
         Some("info") | None => cmd_info(),
         Some(other) => {
             eprintln!("unknown command `{other}`");
-            eprintln!("usage: softex [run|softmax|gelu|mesh|verify|info] [flags]");
+            eprintln!("usage: softex [run|softmax|gelu|mesh|serve|verify|info] [flags]");
             std::process::exit(2);
         }
     }

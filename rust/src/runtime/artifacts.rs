@@ -9,7 +9,7 @@
 use std::fs;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::anyhow::{bail, Context, Result};
 
 /// A single tensor signature: shape + dtype.
 #[derive(Clone, Debug, PartialEq, Eq)]

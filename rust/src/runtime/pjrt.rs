@@ -1,26 +1,42 @@
 //! The PJRT execution engine: compile-once / execute-many over the AOT
-//! artifacts (the pattern of /opt/xla-example/load_hlo).
+//! artifacts.
+//!
+//! Online PJRT execution needs the `xla_extension` bindings, which are not
+//! part of the offline vendored crate set this build runs against; the
+//! backend is therefore gated off (DESIGN.md §4). The [`Engine`] keeps its
+//! full API — manifest loading and artifact lookup work, and every method
+//! that would launch XLA returns a descriptive error instead of linking
+//! against the missing bindings. Most of the cross-layer numeric contract
+//! is still enforced backend-free: the softmax/expp/gelu/matmul golden
+//! vectors written by `make artifacts` are compared against the Rust
+//! functional models in this module's tests (only the end-to-end
+//! `vit_tiny_forward` golden needs the online backend, since there is no
+//! Rust functional model of the full ViT graph).
 
-use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::anyhow::{bail, Context, Result};
 
 use super::artifacts::{Artifact, Golden, Manifest};
 
-/// A PJRT CPU client plus a cache of compiled executables.
+/// Error text every gated entry point reports.
+const BACKEND_UNAVAILABLE: &str =
+    "PJRT backend unavailable: this build has no xla_extension bindings \
+     (offline vendored set); use the Rust functional models or rebuild \
+     with the PJRT toolchain";
+
+/// The artifact execution engine. In this offline build it can open an
+/// artifacts directory and answer manifest queries, but `prepare`/`run`
+/// report the missing backend.
 pub struct Engine {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl Engine {
     /// Create the engine over an artifacts directory.
     pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let manifest = Manifest::load(dir)?;
-        Ok(Self { client, manifest, compiled: HashMap::new() })
+        Ok(Self { manifest })
     }
 
     /// Engine over the default `artifacts/` directory.
@@ -38,77 +54,32 @@ impl Engine {
             .with_context(|| format!("unknown artifact `{name}`"))
     }
 
-    /// Compile (or fetch from cache) an artifact's executable.
+    /// Compile an artifact's executable — gated off in this build.
     pub fn prepare(&mut self, name: &str) -> Result<()> {
-        if self.compiled.contains_key(name) {
-            return Ok(());
-        }
-        let art = self.artifact(name)?.clone();
-        let proto = xla::HloModuleProto::from_text_file(
-            art.hlo_path
-                .to_str()
-                .context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text for `{name}`"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("PJRT compile of `{name}`"))?;
-        self.compiled.insert(name.to_string(), exe);
-        Ok(())
+        let _ = self.artifact(name)?;
+        bail!("cannot compile `{name}`: {BACKEND_UNAVAILABLE}")
     }
 
-    /// Execute an artifact on flat f32 inputs (shapes from the manifest).
-    /// Returns the flat f32 single output (all our artifacts are lowered
-    /// with `return_tuple=True` and have exactly one result).
+    /// Execute an artifact on flat f32 inputs — gated off in this build.
     pub fn run(&mut self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
-        self.prepare(name)?;
-        let art = self.artifact(name)?.clone();
-        anyhow::ensure!(
-            inputs.len() == art.inputs.len(),
-            "`{name}` expects {} inputs, got {}",
-            art.inputs.len(),
-            inputs.len()
-        );
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, sig) in inputs.iter().zip(&art.inputs) {
-            anyhow::ensure!(
-                data.len() == sig.numel(),
-                "`{name}` input length {} != {:?}",
-                data.len(),
-                sig.shape
+        let art = self.artifact(name)?;
+        if inputs.len() != art.inputs.len() {
+            bail!(
+                "`{name}` expects {} inputs, got {}",
+                art.inputs.len(),
+                inputs.len()
             );
-            let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data).reshape(&dims)?;
-            literals.push(lit);
         }
-        let exe = self.compiled.get(name).expect("prepared above");
-        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()?
-            .to_tuple1()?;
-        Ok(result.to_vec::<f32>()?)
+        bail!("cannot run `{name}`: {BACKEND_UNAVAILABLE}")
     }
 
-    /// Run the artifact on its golden inputs and return
-    /// (max_abs_err, got, want) against the golden outputs.
+    /// Run the artifact on its golden inputs and compare against the
+    /// golden outputs — gated off in this build (the golden files still
+    /// load, so the error pinpoints the backend, not the artifacts).
     pub fn verify_golden(&mut self, name: &str) -> Result<(f32, Vec<f32>, Vec<f32>)> {
         let art = self.artifact(name)?.clone();
-        let golden = Golden::load(&art.golden_path)?;
-        let got = self.run(name, &golden.inputs)?;
-        let want = golden.outputs[0].clone();
-        anyhow::ensure!(got.len() == want.len(), "output length mismatch");
-        // NB: fold with f32::max would silently ignore NaN (max(0, NaN)
-        // = 0); force non-finite diffs to +inf so they can never pass.
-        let max_err = got
-            .iter()
-            .zip(&want)
-            .map(|(a, b)| {
-                let d = (a - b).abs();
-                if d.is_finite() { d } else { f32::INFINITY }
-            })
-            .fold(0.0f32, f32::max);
-        Ok((max_err, got, want))
+        let _golden = Golden::load(&art.golden_path)?;
+        bail!("cannot verify `{name}`: {BACKEND_UNAVAILABLE}")
     }
 }
 
@@ -120,71 +91,53 @@ mod tests {
         Manifest::default_dir().join("manifest.txt").exists()
     }
 
-    macro_rules! require_artifacts {
-        () => {
-            if !artifacts_available() {
-                eprintln!("skipping: artifacts not built (run `make artifacts`)");
-                return;
-            }
-        };
+    fn synthetic_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("softex_pjrt_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "toy | 4:float32 | 4:float32\n",
+        )
+        .unwrap();
+        dir
     }
 
     #[test]
-    fn engine_loads_and_runs_matmul() {
-        require_artifacts!();
-        let mut e = Engine::from_default_artifacts().unwrap();
-        let (err, got, _want) = e.verify_golden("matmul_256").unwrap();
-        // jax's bundled XLA and the crate's xla_extension 0.5.1 may order
-        // the f32 reduction differently: allow a few ulp of the ~16-wide
-        // bf16 dot products.
-        assert!(err <= 1e-4, "matmul golden mismatch: {err}");
-        assert_eq!(got.len(), 256 * 256);
+    fn engine_opens_manifest_and_answers_queries() {
+        let mut e = Engine::new(synthetic_dir("open")).unwrap();
+        assert!(e.artifact("toy").is_ok());
+        assert!(e.artifact("absent").is_err());
+        assert_eq!(e.manifest().artifacts.len(), 1);
+        let err = e.prepare("toy").unwrap_err();
+        assert!(format!("{err}").contains("PJRT backend unavailable"), "{err}");
     }
 
     #[test]
-    fn expp_kernel_golden_is_bit_exact() {
-        require_artifacts!();
-        let mut e = Engine::from_default_artifacts().unwrap();
-        let (err, _, _) = e.verify_golden("expp_16384").unwrap();
-        assert_eq!(err, 0.0, "expp artifact vs golden");
+    fn run_reports_missing_backend_not_bad_inputs() {
+        let mut e = Engine::new(synthetic_dir("run")).unwrap();
+        // wrong arity is still diagnosed before the backend gate
+        let err = e.run("toy", &[]).unwrap_err();
+        assert!(format!("{err}").contains("expects 1 inputs"), "{err}");
+        let err = e.run("toy", &[vec![0.0; 4]]).unwrap_err();
+        assert!(format!("{err}").contains("PJRT backend unavailable"), "{err}");
     }
 
     #[test]
-    fn softmax_kernel_golden_is_bit_exact() {
-        require_artifacts!();
-        let mut e = Engine::from_default_artifacts().unwrap();
-        let (err, _, _) = e.verify_golden("softmax_128x128").unwrap();
-        assert_eq!(err, 0.0);
+    fn engine_errors_cleanly_on_missing_dir() {
+        assert!(Engine::new("/definitely/not/here").is_err());
     }
 
-    #[test]
-    fn gelu_kernel_golden_is_bit_exact() {
-        require_artifacts!();
-        let mut e = Engine::from_default_artifacts().unwrap();
-        let (err, _, _) = e.verify_golden("gelu_16384").unwrap();
-        assert_eq!(err, 0.0);
-    }
-
-    #[test]
-    fn vit_tiny_forward_runs() {
-        require_artifacts!();
-        let mut e = Engine::from_default_artifacts().unwrap();
-        let (err, got, want) = e.verify_golden("vit_tiny_forward").unwrap();
-        assert_eq!(got.len(), 10);
-        // End-to-end float graph across two different XLA builds (jax's
-        // bundled runtime vs xla_extension 0.5.1): reduction orders in
-        // matmul/LayerNorm differ and compound over 4 transformer layers.
-        let scale = want.iter().fold(0.0f32, |m, v| m.max(v.abs()));
-        assert!(err <= scale * 8e-3, "err {err} scale {scale}");
-    }
+    // ---- the cross-layer numeric contract, backend-free ----------------
+    // The golden vectors are one concrete JAX evaluation per kernel; the
+    // Rust functional models must reproduce them (bit-exactly for the
+    // elementwise kernels). Skipped when `make artifacts` has not run.
 
     #[test]
     fn rust_softex_matches_pallas_softmax_golden() {
-        // The cross-layer contract: the Rust functional model and the
-        // Pallas kernel agree on the softmax outputs to <= 2 bf16 ulp of
-        // the largest probability (the online-vs-global max denominator
-        // path differs by bounded rounding).
-        require_artifacts!();
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
         let m = Manifest::load(Manifest::default_dir()).unwrap();
         let art = m.get("softmax_128x128").unwrap();
         let g = Golden::load(&art.golden_path).unwrap();
@@ -204,8 +157,31 @@ mod tests {
     }
 
     #[test]
+    fn rust_redmule_matches_jax_matmul_golden() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let m = Manifest::load(Manifest::default_dir()).unwrap();
+        let art = m.get("matmul_256").unwrap();
+        let g = Golden::load(&art.golden_path).unwrap();
+        let c = crate::redmule::matmul_f32acc(&g.inputs[0], &g.inputs[1], 256, 256, 256);
+        // both sides compute bf16 x bf16 products accumulated in f32;
+        // the bound absorbs any reduction-order difference
+        let max_err = c
+            .iter()
+            .zip(&g.outputs[0])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err <= 1e-3, "redmule model vs JAX matmul golden: {max_err}");
+    }
+
+    #[test]
     fn rust_expp_matches_pallas_expp_golden_bitexact() {
-        require_artifacts!();
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
         let m = Manifest::load(Manifest::default_dir()).unwrap();
         let art = m.get("expp_16384").unwrap();
         let g = Golden::load(&art.golden_path).unwrap();
@@ -217,7 +193,10 @@ mod tests {
 
     #[test]
     fn rust_gelu_matches_pallas_gelu_golden_bitexact() {
-        require_artifacts!();
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
         let m = Manifest::load(Manifest::default_dir()).unwrap();
         let art = m.get("gelu_16384").unwrap();
         let g = Golden::load(&art.golden_path).unwrap();
@@ -225,20 +204,5 @@ mod tests {
         for (i, (a, b)) in r.out.iter().zip(&g.outputs[0]).enumerate() {
             assert_eq!(a, b, "gelu bit mismatch at {i}: {a} vs {b}");
         }
-    }
-
-    #[test]
-    fn unknown_artifact_errors() {
-        require_artifacts!();
-        let mut e = Engine::from_default_artifacts().unwrap();
-        assert!(e.run("no_such_thing", &[]).is_err());
-    }
-
-    #[test]
-    fn wrong_input_shape_errors() {
-        require_artifacts!();
-        let mut e = Engine::from_default_artifacts().unwrap();
-        let r = e.run("expp_16384", &[vec![0.0f32; 7]]);
-        assert!(r.is_err());
     }
 }

@@ -1,0 +1,28 @@
+//! Multi-request serving simulator (DESIGN.md §6).
+//!
+//! The paper evaluates single end-to-end inferences; a production-scale
+//! deployment serves many concurrent users. This subsystem layers a
+//! request-level model on top of the per-trace executor — the system-level
+//! step SOLE and VEXP take beyond kernel benchmarks:
+//!
+//! * [`request`] — request classes (ViT-tiny/base, MobileBERT, GPT-2 XL
+//!   prompt+decode), weighted workload mixes, and seeded Poisson/burst
+//!   arrival streams;
+//! * [`scheduler`] — pluggable batch-scheduling policies (FIFO,
+//!   continuous batching with per-engine queues for RedMulE vs SoftEx,
+//!   mesh-sharded execution over n x n clusters) mapping concurrent
+//!   requests onto cluster-cycle timelines via `coordinator::op_cost`;
+//! * [`stats`] — [`ServeReport`]: latency percentiles (p50/p95/p99),
+//!   sustained GOPS, queue depths, and energy at both paper operating
+//!   points.
+//!
+//! Everything is deterministic under a fixed seed; see
+//! `examples/serving.rs` and `benches/serve_load_sweep.rs`.
+
+pub mod request;
+pub mod scheduler;
+pub mod stats;
+
+pub use request::{ArrivalProcess, Request, RequestClass, RequestGen, WorkloadMix};
+pub use scheduler::{BatchScheduler, Policy, ServerConfig};
+pub use stats::{summary_table, ServeReport};

@@ -1,0 +1,290 @@
+//! Request classes, workload mixes, and seeded arrival streams.
+//!
+//! A request is one end-to-end inference: a vision forward pass, an
+//! encoder pass, or a GPT-2 XL prompt ingestion followed by a number of
+//! autoregressive decode steps. Streams are produced by [`RequestGen`]
+//! from a seeded arrival process, so the same seed always yields the
+//! same stream (the determinism contract of `examples/serving.rs`).
+
+use crate::rng::Xoshiro256;
+use crate::workload::{trace_decode_step, trace_model, ModelConfig, Op};
+
+/// The workload a request carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum RequestClass {
+    /// The tiny 4-layer ViT (numeric-validation model).
+    VitTiny,
+    /// ViT-base at the paper's seq 197 (Sec. VII-D).
+    VitBase,
+    /// MobileBERT encoder at a given sequence length (Sec. VII-C).
+    MobileBert { seq: usize },
+    /// GPT-2 XL: `prompt` tokens ingested in one pass, then `decode`
+    /// autoregressive steps over the growing KV cache (Sec. VIII).
+    Gpt2Xl { prompt: usize, decode: usize },
+}
+
+impl RequestClass {
+    pub fn label(&self) -> String {
+        match *self {
+            RequestClass::VitTiny => "ViT-tiny".to_string(),
+            RequestClass::VitBase => "ViT-base".to_string(),
+            RequestClass::MobileBert { seq } => format!("MobileBERT/{seq}"),
+            RequestClass::Gpt2Xl { prompt, decode } => format!("GPT-2 XL/{prompt}+{decode}"),
+        }
+    }
+
+    /// The model geometry behind the request (GPT-2 XL at its prompt
+    /// length; decode steps are sliced separately).
+    pub fn model(&self) -> ModelConfig {
+        match *self {
+            RequestClass::VitTiny => ModelConfig::vit_tiny(),
+            RequestClass::VitBase => ModelConfig::vit_base(),
+            RequestClass::MobileBert { seq } => ModelConfig::mobilebert(seq),
+            RequestClass::Gpt2Xl { prompt, .. } => ModelConfig {
+                seq: prompt,
+                ..ModelConfig::gpt2_xl()
+            },
+        }
+    }
+
+    /// Kernel-level op sequence of the whole request: the full forward
+    /// pass, plus per-token decode slices for GPT-2 XL.
+    pub fn trace(&self) -> Vec<Op> {
+        let model = self.model();
+        let mut ops = trace_model(&model);
+        if let RequestClass::Gpt2Xl { prompt, decode } = *self {
+            for step in 0..decode {
+                ops.extend(trace_decode_step(&model, prompt + step));
+            }
+        }
+        ops
+    }
+}
+
+/// A weighted mix of request classes.
+#[derive(Clone, Debug)]
+pub struct WorkloadMix {
+    entries: Vec<(RequestClass, f64)>,
+}
+
+impl WorkloadMix {
+    pub fn new(entries: Vec<(RequestClass, f64)>) -> Self {
+        assert!(!entries.is_empty(), "empty workload mix");
+        assert!(
+            entries.iter().all(|(_, w)| *w > 0.0),
+            "mix weights must be positive"
+        );
+        Self { entries }
+    }
+
+    /// One class only.
+    pub fn single(class: RequestClass) -> Self {
+        Self::new(vec![(class, 1.0)])
+    }
+
+    /// The edge-serving mix the examples and benches use: vision-heavy
+    /// traffic with a tail of encoder and language requests.
+    pub fn edge_default() -> Self {
+        Self::new(vec![
+            (RequestClass::VitTiny, 0.45),
+            (RequestClass::MobileBert { seq: 128 }, 0.20),
+            (RequestClass::VitBase, 0.15),
+            (RequestClass::MobileBert { seq: 512 }, 0.10),
+            (RequestClass::Gpt2Xl { prompt: 128, decode: 16 }, 0.10),
+        ])
+    }
+
+    pub fn entries(&self) -> &[(RequestClass, f64)] {
+        &self.entries
+    }
+
+    pub fn classes(&self) -> impl Iterator<Item = RequestClass> + '_ {
+        self.entries.iter().map(|(c, _)| *c)
+    }
+
+    /// Sample a class by cumulative-weight inversion (seeded).
+    pub fn sample(&self, rng: &mut Xoshiro256) -> RequestClass {
+        let total: f64 = self.entries.iter().map(|(_, w)| w).sum();
+        let mut u = rng.uniform() * total;
+        for (c, w) in &self.entries {
+            if u < *w {
+                return *c;
+            }
+            u -= w;
+        }
+        // floating-point slack: fall back to the last entry
+        self.entries[self.entries.len() - 1].0
+    }
+}
+
+/// Arrival process of the request stream, in cluster cycles.
+#[derive(Clone, Copy, Debug)]
+pub enum ArrivalProcess {
+    /// Poisson arrivals: exponential inter-arrival gaps with the given
+    /// mean (cycles).
+    Poisson { mean_gap: f64 },
+    /// Bursty arrivals: `size` back-to-back requests, then a fixed gap
+    /// of `gap` cycles before the next burst.
+    Burst { size: usize, gap: u64 },
+}
+
+/// One serving request.
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    pub id: usize,
+    pub class: RequestClass,
+    /// Arrival time in cluster cycles.
+    pub arrival: u64,
+}
+
+/// Seeded generator of request streams: same seed, same stream.
+#[derive(Clone, Debug)]
+pub struct RequestGen {
+    rng: Xoshiro256,
+    process: ArrivalProcess,
+    mix: WorkloadMix,
+    clock: f64,
+    emitted: usize,
+}
+
+impl RequestGen {
+    pub fn new(seed: u64, process: ArrivalProcess, mix: WorkloadMix) -> Self {
+        Self {
+            rng: Xoshiro256::new(seed),
+            process,
+            mix,
+            clock: 0.0,
+            emitted: 0,
+        }
+    }
+
+    fn next_gap(&mut self) -> f64 {
+        match self.process {
+            ArrivalProcess::Poisson { mean_gap } => {
+                // inverse-CDF exponential; 1 - u > 0 keeps ln finite
+                -mean_gap * (1.0 - self.rng.uniform()).ln()
+            }
+            ArrivalProcess::Burst { size, gap } => {
+                if self.emitted > 0 && self.emitted % size.max(1) == 0 {
+                    gap as f64
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Generate the next `n` requests, arrival times non-decreasing.
+    pub fn generate(&mut self, n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|_| {
+                let gap = self.next_gap();
+                self.clock += gap;
+                let class = self.mix.sample(&mut self.rng);
+                let r = Request {
+                    id: self.emitted,
+                    class,
+                    arrival: self.clock as u64,
+                };
+                self.emitted += 1;
+                r
+            })
+            .collect()
+    }
+
+    pub fn mix(&self) -> &WorkloadMix {
+        &self.mix
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_stream() {
+        let mk = || {
+            RequestGen::new(
+                7,
+                ArrivalProcess::Poisson { mean_gap: 1.0e6 },
+                WorkloadMix::edge_default(),
+            )
+            .generate(200)
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.id, x.class, x.arrival), (y.id, y.class, y.arrival));
+        }
+    }
+
+    #[test]
+    fn poisson_mean_gap_is_respected() {
+        let mut g = RequestGen::new(
+            3,
+            ArrivalProcess::Poisson { mean_gap: 5.0e5 },
+            WorkloadMix::single(RequestClass::VitTiny),
+        );
+        let rs = g.generate(20_000);
+        let span = rs.last().unwrap().arrival as f64;
+        let mean = span / (rs.len() - 1) as f64;
+        assert!((mean - 5.0e5).abs() < 2.5e4, "{mean}");
+    }
+
+    #[test]
+    fn arrivals_are_monotone() {
+        let mut g = RequestGen::new(
+            9,
+            ArrivalProcess::Poisson { mean_gap: 1.0e4 },
+            WorkloadMix::edge_default(),
+        );
+        let rs = g.generate(1000);
+        assert!(rs.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    }
+
+    #[test]
+    fn burst_process_clusters_arrivals() {
+        let mut g = RequestGen::new(
+            1,
+            ArrivalProcess::Burst { size: 4, gap: 1_000_000 },
+            WorkloadMix::single(RequestClass::VitTiny),
+        );
+        let rs = g.generate(12);
+        // three bursts of four identical arrival times
+        for burst in rs.chunks(4) {
+            assert!(burst.iter().all(|r| r.arrival == burst[0].arrival));
+        }
+        assert_eq!(rs[4].arrival - rs[3].arrival, 1_000_000);
+    }
+
+    #[test]
+    fn mix_sampling_tracks_weights() {
+        let mix = WorkloadMix::edge_default();
+        let mut rng = Xoshiro256::new(42);
+        let n = 50_000;
+        let tiny = (0..n)
+            .filter(|_| mix.sample(&mut rng) == RequestClass::VitTiny)
+            .count();
+        let frac = tiny as f64 / n as f64;
+        assert!((frac - 0.45).abs() < 0.02, "{frac}");
+    }
+
+    #[test]
+    fn gpt2_trace_appends_decode_slices() {
+        let short = RequestClass::Gpt2Xl { prompt: 64, decode: 0 }.trace().len();
+        let long = RequestClass::Gpt2Xl { prompt: 64, decode: 4 }.trace().len();
+        assert!(long > short);
+        let per_step = (long - short) / 4;
+        assert_eq!(short + 4 * per_step, long);
+    }
+
+    #[test]
+    fn class_traces_are_nonempty_and_mixed_engine() {
+        for class in WorkloadMix::edge_default().classes() {
+            let t = class.trace();
+            assert!(!t.is_empty(), "{}", class.label());
+            assert!(t.iter().any(|o| matches!(o, Op::MatMul { .. })));
+            assert!(t.iter().any(|o| matches!(o, Op::Softmax { .. })));
+        }
+    }
+}

@@ -1,0 +1,501 @@
+//! Batch scheduling policies mapping request streams onto cluster-cycle
+//! timelines.
+//!
+//! The simulator is deterministic: given the same request stream and
+//! configuration it produces bit-identical reports. Service times come
+//! from `coordinator::op_cost` — the exact cycle model the single-trace
+//! `execute_trace` path uses — so serving results stay anchored to the
+//! paper's calibration.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+
+use crate::coordinator::{op_cost, Engine, ExecConfig, Metrics};
+use crate::energy::{OP_EFFICIENCY, OP_THROUGHPUT};
+use crate::mesh::montecarlo::mesh_slowdown;
+
+use super::request::{Request, RequestClass};
+use super::stats::ServeReport;
+
+/// Scheduling policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// One global FIFO queue; each request occupies a whole cluster for
+    /// its full service time.
+    Fifo,
+    /// Continuous batching: per-cluster per-engine ready queues for the
+    /// two accelerators (RedMulE vs SoftEx), scheduled event-driven so
+    /// one request's matmuls backfill the tensor unit while another is
+    /// in its softmax phase. Core elementwise glue is latency-only (the
+    /// 8 cores absorb it without cross-request contention).
+    ContinuousBatching,
+    /// Each request is sharded round-robin across all n x n clusters
+    /// (the Fig. 15 dataflow) and pays the Monte Carlo NoC conflict
+    /// slowdown; requests are serialized over the whole mesh.
+    MeshSharded,
+}
+
+impl Policy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::ContinuousBatching => "cont-batch",
+            Policy::MeshSharded => "mesh-shard",
+        }
+    }
+}
+
+/// Server configuration: mesh size, policy, per-cluster execution config.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub mesh_n: usize,
+    pub policy: Policy,
+    pub exec: ExecConfig,
+    /// Monte Carlo trials for the NoC slowdown (MeshSharded only).
+    pub noc_trials: u32,
+    /// Seed for the NoC Monte Carlo.
+    pub seed: u64,
+}
+
+impl ServerConfig {
+    pub fn new(mesh_n: usize, policy: Policy) -> Self {
+        assert!(mesh_n >= 1, "mesh must be at least 1x1");
+        Self {
+            mesh_n,
+            policy,
+            exec: ExecConfig::paper_accelerated(),
+            noc_trials: 4096,
+            seed: 0x5EED,
+        }
+    }
+
+    pub fn clusters(&self) -> usize {
+        self.mesh_n * self.mesh_n
+    }
+}
+
+/// One engine-occupancy segment of a request.
+#[derive(Clone, Copy, Debug)]
+struct Segment {
+    engine: Engine,
+    cycles: u64,
+}
+
+/// Pre-resolved cost of one request class under an `ExecConfig`.
+#[derive(Clone, Debug)]
+struct ClassCost {
+    /// Adjacent same-engine ops merged into engine segments.
+    segments: Vec<Segment>,
+    /// Total engine-occupancy cycles (sum over segments).
+    service_cycles: u64,
+    ops: u64,
+    energy_j_throughput: f64,
+    energy_j_efficiency: f64,
+}
+
+fn class_cost(exec: &ExecConfig, class: RequestClass) -> ClassCost {
+    let mut segments: Vec<Segment> = Vec::new();
+    let mut metrics = Metrics::default();
+    let mut ops = 0u64;
+    for op in class.trace() {
+        let cost = op_cost(exec, &op);
+        ops += cost.ops;
+        if cost.cycles > 0 {
+            match segments.last_mut() {
+                Some(s) if s.engine == cost.engine => s.cycles += cost.cycles,
+                _ => segments.push(Segment {
+                    engine: cost.engine,
+                    cycles: cost.cycles,
+                }),
+            }
+        }
+        metrics.add_cost(&cost);
+    }
+    ClassCost {
+        service_cycles: segments.iter().map(|s| s.cycles).sum(),
+        segments,
+        ops,
+        energy_j_throughput: metrics.energy_j(&OP_THROUGHPUT),
+        energy_j_efficiency: metrics.energy_j(&OP_EFFICIENCY),
+    }
+}
+
+/// The batch scheduler: simulates a request stream under a policy and
+/// produces a [`ServeReport`].
+pub struct BatchScheduler {
+    cfg: ServerConfig,
+    costs: BTreeMap<RequestClass, ClassCost>,
+}
+
+impl BatchScheduler {
+    pub fn new(cfg: ServerConfig) -> Self {
+        Self {
+            cfg,
+            costs: BTreeMap::new(),
+        }
+    }
+
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
+    fn resolve_costs(&mut self, requests: &[Request]) {
+        for r in requests {
+            self.service_cycles(r.class);
+        }
+    }
+
+    /// Uncontended single-cluster service time of a class, cycles.
+    pub fn service_cycles(&mut self, class: RequestClass) -> u64 {
+        if !self.costs.contains_key(&class) {
+            let cost = class_cost(&self.cfg.exec, class);
+            self.costs.insert(class, cost);
+        }
+        self.costs[&class].service_cycles
+    }
+
+    /// Simulate a stream (must be sorted by arrival, as [`super::RequestGen`]
+    /// emits it) and report latency/throughput/energy.
+    pub fn run(&mut self, requests: &[Request]) -> ServeReport {
+        assert!(!requests.is_empty(), "empty request stream");
+        assert!(
+            requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "requests must be sorted by arrival"
+        );
+        self.resolve_costs(requests);
+        let completions = match self.cfg.policy {
+            Policy::Fifo => self.run_fifo(requests),
+            Policy::ContinuousBatching => self.run_continuous(requests),
+            Policy::MeshSharded => self.run_mesh_sharded(requests),
+        };
+        self.build_report(requests, &completions)
+    }
+
+    fn run_fifo(&self, requests: &[Request]) -> Vec<u64> {
+        let clusters = self.cfg.clusters();
+        let mut free = vec![0u64; clusters];
+        let mut completions = Vec::with_capacity(requests.len());
+        for r in requests {
+            let cost = &self.costs[&r.class];
+            let (ci, _) = free
+                .iter()
+                .enumerate()
+                .min_by_key(|&(i, f)| (*f, i))
+                .expect("at least one cluster");
+            let start = r.arrival.max(free[ci]);
+            let end = start + cost.service_cycles.max(1);
+            free[ci] = end;
+            completions.push(end);
+        }
+        completions
+    }
+
+    /// Event-driven list scheduling per cluster: each request is a chain
+    /// of segments; RedMulE and SoftEx are serial resources with a ready
+    /// queue each (FIFO by ready time), core glue advances the chain
+    /// without cross-request contention. Events are executed in global
+    /// start-time order, so an accelerator backfills with whichever
+    /// request is ready the moment it frees up.
+    fn run_continuous(&self, requests: &[Request]) -> Vec<u64> {
+        let clusters = self.cfg.clusters();
+        // deterministic least-accumulated-service admission
+        let mut load = vec![0u64; clusters];
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); clusters];
+        for (idx, r) in requests.iter().enumerate() {
+            let cost = &self.costs[&r.class];
+            let ci = (0..clusters)
+                .min_by_key(|&i| (load[i], i))
+                .expect("at least one cluster");
+            load[ci] += cost.service_cycles;
+            members[ci].push(idx);
+        }
+        let mut completions = vec![0u64; requests.len()];
+        for member in &members {
+            self.simulate_cluster(requests, member, &mut completions);
+        }
+        completions
+    }
+
+    fn simulate_cluster(
+        &self,
+        requests: &[Request],
+        member: &[usize],
+        completions: &mut [u64],
+    ) {
+        struct Chain<'a> {
+            segs: &'a [Segment],
+            next: usize,
+            t: u64,
+        }
+        // Advance through uncontended core segments; return the ready
+        // accelerator index (0 = tensor unit, 1 = SoftEx) or None when
+        // the chain is finished.
+        fn advance(chain: &mut Chain) -> Option<usize> {
+            while chain.next < chain.segs.len() {
+                let seg = chain.segs[chain.next];
+                match seg.engine {
+                    Engine::Cores => {
+                        chain.t += seg.cycles;
+                        chain.next += 1;
+                    }
+                    Engine::TensorUnit => return Some(0),
+                    Engine::SoftEx => return Some(1),
+                }
+            }
+            None
+        }
+
+        let mut chains: Vec<Chain> = member
+            .iter()
+            .map(|&i| Chain {
+                segs: &self.costs[&requests[i].class].segments,
+                next: 0,
+                t: requests[i].arrival,
+            })
+            .collect();
+        // ready queues per accelerator, keyed (ready time, chain index)
+        let mut queues: [BinaryHeap<Reverse<(u64, usize)>>; 2] =
+            [BinaryHeap::new(), BinaryHeap::new()];
+        let mut free = [0u64; 2];
+        let mut remaining = chains.len();
+
+        for ci in 0..chains.len() {
+            match advance(&mut chains[ci]) {
+                Some(e) => queues[e].push(Reverse((chains[ci].t, ci))),
+                None => {
+                    completions[member[ci]] = chains[ci].t.max(requests[member[ci]].arrival + 1);
+                    remaining -= 1;
+                }
+            }
+        }
+        while remaining > 0 {
+            // the globally earliest next start across both accelerators
+            let mut best: Option<(u64, usize)> = None;
+            for (e, queue) in queues.iter().enumerate() {
+                if let Some(&Reverse((ready, _))) = queue.peek() {
+                    let start = ready.max(free[e]);
+                    if best.map_or(true, |b| (start, e) < b) {
+                        best = Some((start, e));
+                    }
+                }
+            }
+            let (start, e) = best.expect("ready queue cannot be empty mid-run");
+            let Reverse((_, ci)) = queues[e].pop().expect("peeked above");
+            let chain = &mut chains[ci];
+            let end = start + chain.segs[chain.next].cycles;
+            free[e] = end;
+            chain.t = end;
+            chain.next += 1;
+            match advance(chain) {
+                Some(ne) => queues[ne].push(Reverse((chain.t, ci))),
+                None => {
+                    completions[member[ci]] = chain.t.max(requests[member[ci]].arrival + 1);
+                    remaining -= 1;
+                }
+            }
+        }
+    }
+
+    fn run_mesh_sharded(&self, requests: &[Request]) -> Vec<u64> {
+        let clusters = self.cfg.clusters();
+        let slow = if clusters > 1 {
+            mesh_slowdown(self.cfg.mesh_n, self.cfg.noc_trials, self.cfg.seed)
+        } else {
+            0.0
+        };
+        let mut free = 0u64;
+        let mut completions = Vec::with_capacity(requests.len());
+        for r in requests {
+            let cost = &self.costs[&r.class];
+            let service = (cost.service_cycles as f64 * (1.0 + slow) / clusters as f64)
+                .ceil()
+                .max(1.0) as u64;
+            let start = r.arrival.max(free);
+            free = start + service;
+            completions.push(free);
+        }
+        completions
+    }
+
+    fn build_report(&self, requests: &[Request], completions: &[u64]) -> ServeReport {
+        let mut latencies: Vec<u64> = requests
+            .iter()
+            .zip(completions)
+            .map(|(r, &c)| c - r.arrival)
+            .collect();
+        latencies.sort_unstable();
+
+        let first_arrival = requests.iter().map(|r| r.arrival).min().unwrap_or(0);
+        let last_completion = completions.iter().copied().max().unwrap_or(0);
+        let makespan = (last_completion - first_arrival).max(1);
+
+        let (mut total_ops, mut busy, mut e_thr, mut e_eff) = (0u64, 0u64, 0.0f64, 0.0f64);
+        for r in requests {
+            let cost = &self.costs[&r.class];
+            total_ops += cost.ops;
+            busy += cost.service_cycles;
+            e_thr += cost.energy_j_throughput;
+            e_eff += cost.energy_j_efficiency;
+        }
+
+        // in-system depth sampled at arrival instants: depth_i is the
+        // number of earlier requests still incomplete at arrival i.
+        // Arrivals are non-decreasing, so a min-heap of in-flight
+        // completions drains monotonically (O(n log n)).
+        let (mut depth_sum, mut depth_max) = (0usize, 0usize);
+        let mut in_flight: BinaryHeap<Reverse<u64>> = BinaryHeap::new();
+        let mut drained = 0usize;
+        for (i, r) in requests.iter().enumerate() {
+            while let Some(&Reverse(c)) = in_flight.peek() {
+                if c > r.arrival {
+                    break;
+                }
+                in_flight.pop();
+                drained += 1;
+            }
+            let depth = i - drained;
+            depth_sum += depth;
+            depth_max = depth_max.max(depth);
+            in_flight.push(Reverse(completions[i]));
+        }
+
+        ServeReport {
+            label: format!(
+                "{}@{}x{}",
+                self.cfg.policy.label(),
+                self.cfg.mesh_n,
+                self.cfg.mesh_n
+            ),
+            clusters: self.cfg.clusters(),
+            n_requests: requests.len(),
+            latencies,
+            makespan,
+            total_ops,
+            busy_cycles: busy,
+            energy_j_throughput: e_thr,
+            energy_j_efficiency: e_eff,
+            mean_queue_depth: depth_sum as f64 / requests.len() as f64,
+            max_queue_depth: depth_max,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::request::{ArrivalProcess, RequestGen, WorkloadMix};
+
+    fn stream(seed: u64, n: usize, mean_gap: f64) -> Vec<Request> {
+        RequestGen::new(
+            seed,
+            ArrivalProcess::Poisson { mean_gap },
+            WorkloadMix::edge_default(),
+        )
+        .generate(n)
+    }
+
+    #[test]
+    fn segments_merge_adjacent_engines() {
+        let cost = class_cost(
+            &ExecConfig::paper_accelerated(),
+            RequestClass::VitTiny,
+        );
+        assert!(!cost.segments.is_empty());
+        assert!(cost
+            .segments
+            .windows(2)
+            .all(|w| w[0].engine != w[1].engine));
+        assert_eq!(
+            cost.service_cycles,
+            cost.segments.iter().map(|s| s.cycles).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn service_time_matches_execute_trace() {
+        use crate::coordinator::execute_trace;
+        let exec = ExecConfig::paper_accelerated();
+        let class = RequestClass::MobileBert { seq: 128 };
+        let mut s = BatchScheduler::new(ServerConfig::new(1, Policy::Fifo));
+        let agg = execute_trace(&exec, &class.trace());
+        assert_eq!(s.service_cycles(class), agg.total_cycles());
+    }
+
+    #[test]
+    fn fifo_single_cluster_serializes() {
+        let mut s = BatchScheduler::new(ServerConfig::new(1, Policy::Fifo));
+        let reqs = stream(5, 40, 1.0); // everything arrives at ~0
+        let rep = s.run(&reqs);
+        let busy = rep.busy_cycles;
+        // near-zero arrivals on one cluster: makespan ~= total service
+        assert!(rep.makespan >= busy, "{} < {busy}", rep.makespan);
+        assert!(rep.makespan <= busy + 100, "{} vs {busy}", rep.makespan);
+    }
+
+    #[test]
+    fn more_clusters_never_hurt_fifo_makespan_here() {
+        let reqs = stream(7, 120, 1.0e5);
+        let m1 = BatchScheduler::new(ServerConfig::new(1, Policy::Fifo)).run(&reqs);
+        let m4 = BatchScheduler::new(ServerConfig::new(4, Policy::Fifo)).run(&reqs);
+        assert!(m4.makespan < m1.makespan, "{} vs {}", m4.makespan, m1.makespan);
+        assert!(m4.mean_queue_depth <= m1.mean_queue_depth);
+    }
+
+    #[test]
+    fn continuous_batching_at_most_fifo_under_burst() {
+        // all requests at t=0 on one cluster: FIFO makespan is the serial
+        // sum; per-engine overlap can only shorten it
+        let reqs: Vec<Request> = RequestGen::new(
+            11,
+            ArrivalProcess::Burst { size: 64, gap: 0 },
+            WorkloadMix::edge_default(),
+        )
+        .generate(64);
+        let fifo = BatchScheduler::new(ServerConfig::new(1, Policy::Fifo)).run(&reqs);
+        let cb =
+            BatchScheduler::new(ServerConfig::new(1, Policy::ContinuousBatching)).run(&reqs);
+        assert!(cb.makespan <= fifo.makespan, "{} vs {}", cb.makespan, fifo.makespan);
+    }
+
+    #[test]
+    fn mesh_sharding_cuts_unloaded_latency() {
+        // at negligible load every request runs alone: sharding over 16
+        // clusters divides service by ~16 at a few percent NoC cost
+        let reqs = stream(13, 30, 1.0e12);
+        let fifo = BatchScheduler::new(ServerConfig::new(4, Policy::Fifo)).run(&reqs);
+        let shard = BatchScheduler::new(ServerConfig::new(4, Policy::MeshSharded)).run(&reqs);
+        assert!(shard.p99() < fifo.p99(), "{} vs {}", shard.p99(), fifo.p99());
+        assert!(shard.p50() * 8 < fifo.p50() * 10); // at least ~1.25x better
+    }
+
+    #[test]
+    fn deterministic_reports() {
+        let reqs = stream(17, 100, 5.0e5);
+        let a = BatchScheduler::new(ServerConfig::new(2, Policy::ContinuousBatching)).run(&reqs);
+        let b = BatchScheduler::new(ServerConfig::new(2, Policy::ContinuousBatching)).run(&reqs);
+        assert_eq!(a.latencies, b.latencies);
+        assert_eq!(a.p99(), b.p99());
+        assert_eq!(a.makespan, b.makespan);
+    }
+
+    #[test]
+    fn latency_never_below_service() {
+        let reqs = stream(19, 60, 2.0e6);
+        let mut s = BatchScheduler::new(ServerConfig::new(2, Policy::Fifo));
+        let min_service = WorkloadMix::edge_default()
+            .classes()
+            .map(|c| s.service_cycles(c))
+            .min()
+            .unwrap();
+        let rep = s.run(&reqs);
+        assert!(rep.latencies[0] >= min_service);
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted by arrival")]
+    fn rejects_unsorted_streams() {
+        let mut reqs = stream(23, 10, 1.0e6);
+        reqs.reverse();
+        BatchScheduler::new(ServerConfig::new(1, Policy::Fifo)).run(&reqs);
+    }
+}

@@ -1,0 +1,190 @@
+//! Serving-run accounting: latency percentiles, sustained throughput,
+//! queue depths, energy.
+//!
+//! Energy is accounted per activity mode through `coordinator::Metrics`
+//! at both paper operating points (`energy::OP_THROUGHPUT` for the
+//! latency axis, `energy::OP_EFFICIENCY` for the efficiency axis); NoC
+//! transfer energy is negligible at these scales (Sec. VIII: 0.29% of
+//! power at 8x8) and is not added.
+
+use crate::report;
+use crate::softex::phys::{OperatingPoint, OP_THROUGHPUT};
+
+/// Aggregated result of simulating one request stream under one policy.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// `policy@NxN` label for tables.
+    pub label: String,
+    pub clusters: usize,
+    pub n_requests: usize,
+    /// Per-request latencies (completion - arrival), sorted, cycles.
+    pub latencies: Vec<u64>,
+    /// First arrival to last completion, cycles.
+    pub makespan: u64,
+    /// Total countable OPs served.
+    pub total_ops: u64,
+    /// Engine-busy cycles summed over requests (before any mesh
+    /// derating); with continuous batching engines overlap, so this can
+    /// exceed `clusters * makespan / 3`.
+    pub busy_cycles: u64,
+    /// Energy at 0.8 V / 1.12 GHz, joules.
+    pub energy_j_throughput: f64,
+    /// Energy at 0.55 V / 460 MHz, joules.
+    pub energy_j_efficiency: f64,
+    /// Mean number of in-system requests observed at arrival instants.
+    pub mean_queue_depth: f64,
+    /// Peak number of in-system requests observed at arrival instants.
+    pub max_queue_depth: usize,
+}
+
+impl ServeReport {
+    /// Nearest-rank percentile over the sorted latencies, p in [0, 100].
+    pub fn percentile(&self, p: f64) -> u64 {
+        assert!(!self.latencies.is_empty(), "empty report");
+        let last = self.latencies.len() - 1;
+        let idx = ((p / 100.0) * last as f64).round() as usize;
+        self.latencies[idx.min(last)]
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(99.0)
+    }
+
+    /// Cycles to milliseconds at an operating point.
+    pub fn ms(cycles: u64, op: &OperatingPoint) -> f64 {
+        cycles as f64 / op.freq_hz * 1e3
+    }
+
+    /// Sustained throughput over the whole run at an operating point.
+    pub fn sustained_gops(&self, op: &OperatingPoint) -> f64 {
+        self.total_ops as f64 / (self.makespan as f64 / op.freq_hz) / 1e9
+    }
+
+    /// Engine-busy share of the mesh over the run (can exceed 1.0 when
+    /// continuous batching overlaps engines inside a cluster).
+    pub fn utilization(&self) -> f64 {
+        self.busy_cycles as f64 / (self.clusters as f64 * self.makespan as f64)
+    }
+
+    /// One row for [`summary_table`].
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.label.clone(),
+            report::f(Self::ms(self.p50(), &OP_THROUGHPUT), 2),
+            report::f(Self::ms(self.p95(), &OP_THROUGHPUT), 2),
+            report::f(Self::ms(self.p99(), &OP_THROUGHPUT), 2),
+            report::f(self.sustained_gops(&OP_THROUGHPUT), 0),
+            report::pct(self.utilization()),
+            report::f(self.mean_queue_depth, 1),
+            report::f(self.energy_j_throughput * 1e3, 1),
+        ]
+    }
+
+    /// Standalone table for a single run.
+    pub fn render(&self) -> String {
+        let mut out = report::render_table(
+            &format!(
+                "Serving run — {} ({} requests on {} clusters)",
+                self.label, self.n_requests, self.clusters
+            ),
+            &SUMMARY_HEADERS,
+            &[self.row()],
+        );
+        out.push_str(&format!(
+            "makespan {:.1} ms @0.8V | {:.2} J @0.8V / {:.2} J @0.55V | max depth {}\n",
+            Self::ms(self.makespan, &OP_THROUGHPUT),
+            self.energy_j_throughput,
+            self.energy_j_efficiency,
+            self.max_queue_depth
+        ));
+        out
+    }
+}
+
+/// Column headers shared by [`ServeReport::row`].
+pub const SUMMARY_HEADERS: [&str; 8] = [
+    "policy@mesh",
+    "p50 ms",
+    "p95 ms",
+    "p99 ms",
+    "GOPS",
+    "util",
+    "depth",
+    "mJ @0.8V",
+];
+
+/// Render several runs as one comparison table.
+pub fn summary_table(title: &str, reports: &[ServeReport]) -> String {
+    let rows: Vec<Vec<String>> = reports.iter().map(|r| r.row()).collect();
+    report::render_table(title, &SUMMARY_HEADERS, &rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with(latencies: Vec<u64>) -> ServeReport {
+        let n = latencies.len();
+        ServeReport {
+            label: "test@1x1".into(),
+            clusters: 1,
+            n_requests: n,
+            latencies,
+            makespan: 1_000_000,
+            total_ops: 384_000_000,
+            busy_cycles: 900_000,
+            energy_j_throughput: 1.0e-3,
+            energy_j_efficiency: 2.0e-4,
+            mean_queue_depth: 1.5,
+            max_queue_depth: 4,
+        }
+    }
+
+    #[test]
+    fn percentiles_are_order_statistics() {
+        let r = report_with((1..=100).collect());
+        // index round(0.5 * 99) = 50 -> the 51st order statistic
+        assert_eq!(r.p50(), 51);
+        assert_eq!(r.p95(), 95);
+        assert_eq!(r.p99(), 99);
+        assert_eq!(r.percentile(0.0), 1);
+        assert_eq!(r.percentile(100.0), 100);
+    }
+
+    #[test]
+    fn percentiles_monotone() {
+        let r = report_with(vec![5, 7, 7, 9, 30, 31, 31, 40, 120, 400]);
+        assert!(r.p50() <= r.p95() && r.p95() <= r.p99());
+    }
+
+    #[test]
+    fn sustained_gops_uses_makespan() {
+        // 384 MOP in 1 Mcycle at 1.12 GHz = 430 GOPS
+        let r = report_with(vec![1; 10]);
+        let gops = r.sustained_gops(&OP_THROUGHPUT);
+        assert!((gops - 430.0).abs() < 1.0, "{gops}");
+    }
+
+    #[test]
+    fn utilization_is_busy_share() {
+        let r = report_with(vec![1; 10]);
+        assert!((r.utilization() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tables_render() {
+        let r = report_with((1..=10).collect());
+        let t = r.render();
+        assert!(t.contains("test@1x1"), "{t}");
+        let s = summary_table("sweep", &[r.clone(), r]);
+        assert_eq!(s.lines().count(), 5);
+    }
+}

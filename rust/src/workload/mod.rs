@@ -12,4 +12,4 @@ pub mod gen;
 pub mod trace;
 
 pub use config::ModelConfig;
-pub use trace::{trace_layer, trace_model, Op};
+pub use trace::{trace_decode_step, trace_layer, trace_model, Op};

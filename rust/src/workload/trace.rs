@@ -86,6 +86,51 @@ pub fn trace_model(cfg: &ModelConfig) -> Vec<Op> {
     ops
 }
 
+/// One autoregressive decode step: a single query token attends over a
+/// `ctx`-token KV cache, through all layers. This is the per-token unit
+/// the serving simulator schedules for GPT-2 XL decode after the prompt
+/// has been ingested with [`trace_model`] at `seq = prompt_len`.
+pub fn trace_decode_step(cfg: &ModelConfig, ctx: usize) -> Vec<Op> {
+    assert!(ctx > 0, "decode step needs a non-empty context");
+    let d = cfg.d_model;
+    let dh = cfg.d_head;
+    let h = cfg.heads;
+    let inner = h * dh;
+    let mut layer = vec![
+        Op::LayerNorm { n: d },
+        // fused QKV projection of the one new token
+        Op::MatMul { m: 1, k: d, n: 3 * inner },
+        Op::Bias { n: 3 * inner },
+    ];
+    // per-head score row against the cached keys + row-wise softmax
+    for _ in 0..h {
+        layer.push(Op::MatMul { m: 1, k: dh, n: ctx }); // q K^T
+    }
+    layer.push(Op::Softmax { rows: h, len: ctx });
+    for _ in 0..h {
+        layer.push(Op::MatMul { m: 1, k: ctx, n: dh }); // p V
+    }
+    layer.push(Op::MatMul { m: 1, k: inner, n: d }); // output projection
+    layer.push(Op::Bias { n: d });
+    layer.push(Op::Residual { n: d });
+    // FFN on the one token
+    layer.push(Op::LayerNorm { n: d });
+    layer.push(Op::MatMul { m: 1, k: d, n: cfg.d_ff });
+    layer.push(Op::Bias { n: cfg.d_ff });
+    if cfg.gelu_ffn {
+        layer.push(Op::Gelu { n: cfg.d_ff });
+    }
+    layer.push(Op::MatMul { m: 1, k: cfg.d_ff, n: d });
+    layer.push(Op::Bias { n: d });
+    layer.push(Op::Residual { n: d });
+
+    let mut ops = Vec::with_capacity(layer.len() * cfg.layers);
+    for _ in 0..cfg.layers {
+        ops.extend_from_slice(&layer);
+    }
+    ops
+}
+
 /// Only the attention core (QK^T -> softmax -> PV), the workload of the
 /// paper's Fig. 10/11 "attention layer" experiment.
 pub fn trace_attention_core(cfg: &ModelConfig) -> Vec<Op> {
@@ -156,6 +201,37 @@ mod tests {
             .sum();
         let gop = ops as f64 / 1e9;
         assert!((0.5..0.6).contains(&gop), "{gop}");
+    }
+
+    #[test]
+    fn decode_step_is_seq1_except_attention() {
+        // a decode step's matmul work equals the seq=1 layer work plus
+        // the ctx-proportional attention reads, repeated over all layers
+        let g = ModelConfig::gpt2_xl();
+        let ctx = 256;
+        let macs: u64 = trace_decode_step(&g, ctx).iter().map(|o| o.macs()).sum();
+        let seq1 = ModelConfig { seq: 1, ..g };
+        let expected_layer =
+            seq1.projection_macs() + seq1.ffn_macs() + 2 * g.heads as u64 * ctx as u64 * g.d_head as u64;
+        assert_eq!(macs, expected_layer * g.layers as u64);
+    }
+
+    #[test]
+    fn decode_step_softmax_covers_context() {
+        let g = ModelConfig::gpt2_xl();
+        let found = trace_decode_step(&g, 300)
+            .iter()
+            .any(|o| matches!(o, Op::Softmax { rows, len } if *rows == g.heads && *len == 300));
+        assert!(found);
+    }
+
+    #[test]
+    fn decode_step_cost_grows_with_context() {
+        let g = ModelConfig::gpt2_xl();
+        let ops_at = |ctx: usize| -> u64 {
+            trace_decode_step(&g, ctx).iter().map(|o| o.ops()).sum()
+        };
+        assert!(ops_at(1024) > ops_at(128));
     }
 
     #[test]

@@ -1,0 +1,117 @@
+//! Property tests over the functional accelerator models, via the
+//! in-crate `prop::forall` harness (proptest is not vendored).
+//!
+//! * every softmax row sums to 1 within a bf16-ulp-scale tolerance,
+//!   across random shapes and seeds;
+//! * `run_gelu` is monotonically non-decreasing on sorted inputs over
+//!   the monotone domain of GELU (x >= -0.70, right of its global
+//!   minimum at x ~ -0.7518), up to bf16 output quantization.
+
+use softex::num::bf16::quantize_slice;
+use softex::prop::forall;
+use softex::rng::Xoshiro256;
+use softex::softex::{run_gelu, run_softmax, SoftExConfig};
+
+/// 5 bf16 ulps at 1.0 (ulp(1.0) = 2^-8): the accumulated rounding of the
+/// online-max denominator path, measured at <= 0.006 across lengths.
+const ROWSUM_TOL: f32 = 5.0 / 256.0;
+
+/// One bf16 mantissa step at the GELU output scale; adjacent sorted
+/// inputs may quantize to outputs one step out of order.
+const GELU_SLACK: f32 = 2.0e-3;
+
+#[test]
+fn prop_softmax_rows_sum_to_one() {
+    forall(
+        "softmax-rowsum",
+        40,
+        |r| {
+            let rows = 1 + r.below(8) as usize;
+            let len = 8 + r.below(504) as usize;
+            let sigma = 0.5 + 3.5 * r.uniform() as f32;
+            let scores = quantize_slice(&r.normal_vec_f32(rows * len, sigma));
+            (rows, len, scores)
+        },
+        |(rows, len, scores)| {
+            let out = run_softmax(&SoftExConfig::default(), scores, *rows, *len).out;
+            out.chunks(*len).all(|row| {
+                let sum: f32 = row.iter().sum();
+                (sum - 1.0).abs() <= ROWSUM_TOL
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_softmax_rowsum_across_lane_configs() {
+    // the chunked online accumulation must hold the bound for any lane
+    // geometry, not just the paper's 16
+    forall(
+        "softmax-rowsum-lanes",
+        25,
+        |r| {
+            let lanes = [4usize, 8, 16, 32, 64][r.below(5) as usize];
+            let len = 16 + r.below(400) as usize;
+            let scores = quantize_slice(&r.normal_vec_f32(len, 2.0));
+            (lanes, scores)
+        },
+        |(lanes, scores)| {
+            let cfg = SoftExConfig::with_lanes(*lanes);
+            let out = run_softmax(&cfg, scores, 1, scores.len()).out;
+            let sum: f32 = out.iter().sum();
+            (sum - 1.0).abs() <= ROWSUM_TOL
+        },
+    );
+}
+
+#[test]
+fn prop_gelu_monotone_on_sorted_inputs() {
+    forall(
+        "gelu-monotone",
+        40,
+        |r| {
+            let n = 32 + r.below(2016) as usize;
+            let mut xs: Vec<f32> = (0..n)
+                .map(|_| r.uniform_range(-0.70, 6.0) as f32)
+                .collect();
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            quantize_slice(&xs)
+        },
+        |xs| {
+            let out = run_gelu(&SoftExConfig::default(), xs).out;
+            out.windows(2).all(|w| w[1] >= w[0] - GELU_SLACK)
+        },
+    );
+}
+
+#[test]
+fn gelu_monotone_on_dense_grid() {
+    // deterministic fine grid over the whole monotone domain
+    let xs: Vec<f32> = (0..13_500).map(|i| -0.70 + i as f32 * 5.0e-4).collect();
+    let xs = quantize_slice(&xs);
+    let out = run_gelu(&SoftExConfig::default(), &xs).out;
+    for (i, w) in out.windows(2).enumerate() {
+        assert!(
+            w[1] >= w[0] - GELU_SLACK,
+            "non-monotone at x={}: {} -> {}",
+            xs[i],
+            w[0],
+            w[1]
+        );
+    }
+}
+
+#[test]
+fn softmax_rowsum_tolerance_is_ulp_scale() {
+    // the measured deviation stays well inside the asserted band: the
+    // bound is ulp-scale slack, not a loose cop-out
+    let mut rng = Xoshiro256::new(0x50F7);
+    let scores = quantize_slice(&rng.normal_vec_f32(64 * 512, 2.0));
+    let out = run_softmax(&SoftExConfig::default(), &scores, 64, 512).out;
+    let worst = out
+        .chunks(512)
+        .map(|row| (row.iter().sum::<f32>() - 1.0).abs())
+        .fold(0.0f32, f32::max);
+    assert!(worst <= ROWSUM_TOL, "worst {worst}");
+    assert!(worst > 0.0, "suspiciously exact — rounding model changed?");
+}

@@ -1,0 +1,135 @@
+//! Integration tests for the `server` serving simulator: determinism,
+//! policy behavior, and scaling across mesh sizes.
+
+use softex::energy::OP_THROUGHPUT;
+use softex::server::{
+    summary_table, ArrivalProcess, BatchScheduler, Policy, RequestGen, ServerConfig, WorkloadMix,
+};
+
+fn poisson_stream(seed: u64, n: usize, mean_gap: f64) -> Vec<softex::server::Request> {
+    RequestGen::new(
+        seed,
+        ArrivalProcess::Poisson { mean_gap },
+        WorkloadMix::edge_default(),
+    )
+    .generate(n)
+}
+
+#[test]
+fn same_seed_reproduces_identical_tail_latency() {
+    let run = || {
+        let reqs = poisson_stream(0x5E21, 300, 1.0e6);
+        let mut sched = BatchScheduler::new(ServerConfig::new(2, Policy::ContinuousBatching));
+        sched.run(&reqs)
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.p99(), b.p99());
+    assert_eq!(a.latencies, b.latencies);
+    assert_eq!(a.makespan, b.makespan);
+    assert!((a.energy_j_throughput - b.energy_j_throughput).abs() == 0.0);
+}
+
+#[test]
+fn saturated_throughput_scales_with_mesh() {
+    // heavy overload: bigger meshes must sustain far more GOPS
+    let reqs = poisson_stream(3, 200, 1.0e5);
+    let gops = |mesh: usize| {
+        BatchScheduler::new(ServerConfig::new(mesh, Policy::Fifo))
+            .run(&reqs)
+            .sustained_gops(&OP_THROUGHPUT)
+    };
+    let (g1, g2, g4) = (gops(1), gops(2), gops(4));
+    assert!(g2 > 2.0 * g1, "2x2 {g2} vs 1x1 {g1}");
+    assert!(g4 > 2.0 * g2, "4x4 {g4} vs 2x2 {g2}");
+}
+
+#[test]
+fn queue_depth_shrinks_with_more_clusters() {
+    let reqs = poisson_stream(5, 200, 5.0e5);
+    let depth = |mesh: usize| {
+        BatchScheduler::new(ServerConfig::new(mesh, Policy::Fifo))
+            .run(&reqs)
+            .mean_queue_depth
+    };
+    let (d1, d4) = (depth(1), depth(4));
+    assert!(d4 < d1, "depth 4x4 {d4} vs 1x1 {d1}");
+}
+
+#[test]
+fn continuous_batching_beats_or_matches_fifo_on_bursts() {
+    // a burst of mixed requests on one cluster: per-engine overlap can
+    // only reduce the serialized makespan
+    let reqs = RequestGen::new(
+        9,
+        ArrivalProcess::Burst { size: 48, gap: 0 },
+        WorkloadMix::edge_default(),
+    )
+    .generate(48);
+    let fifo = BatchScheduler::new(ServerConfig::new(1, Policy::Fifo)).run(&reqs);
+    let cb = BatchScheduler::new(ServerConfig::new(1, Policy::ContinuousBatching)).run(&reqs);
+    assert!(
+        cb.makespan <= fifo.makespan,
+        "cb {} vs fifo {}",
+        cb.makespan,
+        fifo.makespan
+    );
+    assert_eq!(cb.total_ops, fifo.total_ops);
+}
+
+#[test]
+fn mesh_sharding_trades_throughput_for_latency_when_idle() {
+    // nearly idle system: sharding each request over 16 clusters beats
+    // whole-cluster FIFO latency despite the NoC slowdown
+    let reqs = poisson_stream(11, 40, 1.0e11);
+    let fifo = BatchScheduler::new(ServerConfig::new(4, Policy::Fifo)).run(&reqs);
+    let shard = BatchScheduler::new(ServerConfig::new(4, Policy::MeshSharded)).run(&reqs);
+    assert!(
+        shard.p99() < fifo.p99(),
+        "shard {} vs fifo {}",
+        shard.p99(),
+        fifo.p99()
+    );
+}
+
+#[test]
+fn percentiles_are_monotone_and_positive() {
+    let reqs = poisson_stream(13, 150, 1.0e6);
+    for policy in [Policy::Fifo, Policy::ContinuousBatching, Policy::MeshSharded] {
+        let rep = BatchScheduler::new(ServerConfig::new(2, policy)).run(&reqs);
+        assert!(rep.p50() > 0);
+        assert!(rep.p50() <= rep.p95());
+        assert!(rep.p95() <= rep.p99());
+        assert!(rep.utilization() > 0.0);
+    }
+}
+
+#[test]
+fn summary_table_lists_every_run() {
+    let reqs = poisson_stream(17, 60, 1.0e6);
+    let reports: Vec<_> = [Policy::Fifo, Policy::ContinuousBatching]
+        .into_iter()
+        .map(|p| BatchScheduler::new(ServerConfig::new(1, p)).run(&reqs))
+        .collect();
+    let table = summary_table("policies", &reports);
+    assert!(table.contains("fifo@1x1"), "{table}");
+    assert!(table.contains("cont-batch@1x1"), "{table}");
+    assert!(table.contains("p99 ms"), "{table}");
+}
+
+#[test]
+fn energy_accounting_is_load_independent_but_policy_stable() {
+    // energy is per-request work; the same stream must cost the same
+    // joules under every policy
+    let reqs = poisson_stream(19, 80, 1.0e6);
+    let e = |policy| {
+        BatchScheduler::new(ServerConfig::new(2, policy))
+            .run(&reqs)
+            .energy_j_throughput
+    };
+    let (a, b, c) = (
+        e(Policy::Fifo),
+        e(Policy::ContinuousBatching),
+        e(Policy::MeshSharded),
+    );
+    assert!((a - b).abs() < 1e-12 && (b - c).abs() < 1e-12, "{a} {b} {c}");
+}

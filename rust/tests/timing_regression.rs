@@ -1,0 +1,88 @@
+//! Timing-model regression pins for the paper's headline speedups, on
+//! the Fig. 10/11 MobileBERT shapes. Future refactors of the cycle
+//! models must not silently drift out of these bands:
+//!
+//! * softmax: SoftEx vs software (exps) in [8x, 12x] at seq 512
+//!   (paper Fig. 7: 10.8x);
+//! * GELU: SoftEx-assisted vs software sigmoid in [4x, 6x] on the
+//!   Fig. 9 workload of 2^14 elements (paper: 5.11x).
+
+use softex::cluster::cores::{
+    gelu_assisted_core_cycles, gelu_sw_cycles, softmax_sw_cycles, ExpAlgo, GeluAlgo,
+};
+use softex::coordinator::{execute_trace, ExecConfig};
+use softex::softex::timing::{gelu_cycles, softmax_cycles};
+use softex::softex::SoftExConfig;
+use softex::workload::{ModelConfig, Op};
+
+/// The Fig. 10/11 attention shape: MobileBERT at seq 512 has 4 heads of
+/// 512 rows => a 2048 x 512 softmax job per layer.
+fn mobilebert_softmax_shape() -> (usize, usize) {
+    ModelConfig::mobilebert(512).softmax_shape()
+}
+
+#[test]
+fn softex_softmax_speedup_pinned_8x_to_12x() {
+    let (rows, len) = mobilebert_softmax_shape();
+    assert_eq!((rows, len), (2048, 512));
+    let sw = softmax_sw_cycles(ExpAlgo::Exps, rows, len);
+    let hw = softmax_cycles(&SoftExConfig::default(), rows, len, 0).total();
+    let speedup = sw as f64 / hw as f64;
+    assert!(
+        (8.0..=12.0).contains(&speedup),
+        "softmax speedup {speedup:.2}x drifted out of [8, 12] (paper: 10.8x)"
+    );
+}
+
+#[test]
+fn softex_softmax_speedup_holds_through_coordinator() {
+    // the coordinator path adds the estimated rescale stalls; the band
+    // must hold there too, since that is what end-to-end runs see
+    let (rows, len) = mobilebert_softmax_shape();
+    let trace = [Op::Softmax { rows, len }];
+    let hw = execute_trace(&ExecConfig::paper_accelerated(), &trace);
+    let sw = execute_trace(&ExecConfig::sw_nonlinearities(ExpAlgo::Exps), &trace);
+    let speedup = sw.total_cycles() as f64 / hw.total_cycles() as f64;
+    assert!(
+        (8.0..=12.0).contains(&speedup),
+        "coordinator softmax speedup {speedup:.2}x out of [8, 12]"
+    );
+}
+
+#[test]
+fn softex_gelu_speedup_pinned_4x_to_6x() {
+    let n = 1usize << 14;
+    let sw = gelu_sw_cycles(GeluAlgo::Sigmoid, n);
+    let assisted = gelu_cycles(&SoftExConfig::default(), n) + gelu_assisted_core_cycles(n);
+    let speedup = sw as f64 / assisted as f64;
+    assert!(
+        (4.0..=6.0).contains(&speedup),
+        "GELU speedup {speedup:.2}x drifted out of [4, 6] (paper: 5.11x)"
+    );
+}
+
+#[test]
+fn softex_gelu_speedup_holds_through_coordinator() {
+    let trace = [Op::Gelu { n: 1 << 14 }];
+    let hw = execute_trace(&ExecConfig::paper_accelerated(), &trace);
+    let sw = execute_trace(&ExecConfig::sw_nonlinearities(ExpAlgo::Exps), &trace);
+    let speedup = sw.total_cycles() as f64 / hw.total_cycles() as f64;
+    assert!(
+        (4.0..=6.0).contains(&speedup),
+        "coordinator GELU speedup {speedup:.2}x out of [4, 6]"
+    );
+}
+
+#[test]
+fn softmax_seq128_anchor_stays_near_6x() {
+    // the paper's second softmax anchor (Fig. 7: 6.2x at seq 128) guards
+    // the length-dependence of the software cost model
+    let (rows, len) = ModelConfig::mobilebert(128).softmax_shape();
+    let sw = softmax_sw_cycles(ExpAlgo::Exps, rows, len);
+    let hw = softmax_cycles(&SoftExConfig::default(), rows, len, 0).total();
+    let speedup = sw as f64 / hw as f64;
+    assert!(
+        (5.0..=7.5).contains(&speedup),
+        "seq-128 softmax speedup {speedup:.2}x out of [5, 7.5] (paper: 6.2x)"
+    );
+}
