@@ -1,0 +1,108 @@
+//! Fleet scaling sweep: global tail latency, goodput, shed rate, and
+//! utilization imbalance across cluster count x offered load x
+//! dispatch policy.
+//!
+//! The offered load is expressed as a fraction rho of the fleet's
+//! aggregate service capacity on the edge-default mix: rho = 0.6 is an
+//! underloaded fleet, 1.0 at nominal capacity, 1.3 overloaded (the
+//! regime where admission control starts to matter).
+//!
+//! Run: cargo bench --bench fleet_scaling
+
+use std::time::Instant;
+
+use softex::coordinator::ExecConfig;
+use softex::energy::OP_THROUGHPUT;
+use softex::fleet::{fleet_table, Admission, DispatchPolicy, Fleet, FleetConfig};
+use softex::report;
+use softex::server::{
+    ArrivalProcess, CostModel, RequestClass, RequestGen, ServeReport, WorkloadMix,
+};
+
+fn main() {
+    let t0 = Instant::now();
+    let n_requests = 400;
+    let seed = 0xF1EE7;
+    let mix = WorkloadMix::edge_default();
+
+    let mut costs = CostModel::new(ExecConfig::paper_accelerated());
+    let mean_service = costs.mean_service_cycles(&mix);
+    println!(
+        "edge-default mix: mean service {:.1} Mcycles/request ({:.2} ms @0.8V)\n",
+        mean_service / 1e6,
+        mean_service / OP_THROUGHPUT.freq_hz * 1e3
+    );
+
+    for rho in [0.6f64, 1.0, 1.3] {
+        let mut reports = Vec::new();
+        for clusters in [2usize, 4, 8, 16] {
+            let mean_gap = mean_service / (clusters as f64 * rho);
+            for policy in DispatchPolicy::ALL {
+                let requests = RequestGen::new(
+                    seed,
+                    ArrivalProcess::Poisson { mean_gap },
+                    mix.clone(),
+                )
+                .generate(n_requests);
+                let mut cfg = FleetConfig::new(clusters, policy);
+                cfg.seed = seed;
+                reports.push(Fleet::new(cfg).run(&requests));
+            }
+        }
+        println!(
+            "{}",
+            fleet_table(
+                &format!("fleet sweep — rho = {rho} ({n_requests} requests, edge-default mix)"),
+                &reports
+            )
+        );
+    }
+
+    // admission control at overload: open vs shed vs downgrade on p2c@8
+    let clusters = 8usize;
+    let mean_gap = mean_service / (clusters as f64 * 1.3);
+    let requests = RequestGen::new(
+        seed,
+        ArrivalProcess::Poisson { mean_gap },
+        mix.clone(),
+    )
+    .generate(n_requests);
+    // SLO between GPT-2 XL's downgraded and full service, so downgrade
+    // admission has something to rescue (cf. examples/fleet.rs)
+    let full = costs.service_cycles(RequestClass::Gpt2Xl {
+        prompt: 128,
+        decode: 16,
+    });
+    let lite = costs.service_cycles(RequestClass::Gpt2Xl {
+        prompt: 128,
+        decode: 4,
+    });
+    let deadline = (full + lite) / 2;
+    println!(
+        "admission control at rho = 1.3 on p2c@8 ({} ms SLO):",
+        report::f(ServeReport::ms(deadline, &OP_THROUGHPUT), 0)
+    );
+    for admission in [
+        Admission::Open,
+        Admission::Shed { deadline },
+        Admission::Downgrade { deadline },
+    ] {
+        let mut cfg = FleetConfig::new(clusters, DispatchPolicy::PowerOfTwoChoices);
+        cfg.seed = seed;
+        cfg.admission = admission;
+        let rep = Fleet::new(cfg).run(&requests);
+        println!(
+            "  {:<32} p99 {:>8} ms | goodput {:>5} GOPS | shed {:>5} | downgraded {}",
+            format!("{admission:?}"),
+            report::f(ServeReport::ms(rep.p99(), &OP_THROUGHPUT), 1),
+            report::f(rep.goodput_gops(&OP_THROUGHPUT), 0),
+            report::pct(rep.shed_rate()),
+            rep.n_downgraded,
+        );
+    }
+
+    println!(
+        "\nsweep wall time: {:.2} s (16 fleet configs x 3 loads + admission, seed {seed:#x})",
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -10,9 +10,11 @@
 
 use std::time::Instant;
 
+use softex::coordinator::ExecConfig;
 use softex::energy::OP_THROUGHPUT;
 use softex::server::{
-    summary_table, ArrivalProcess, BatchScheduler, Policy, RequestGen, ServerConfig, WorkloadMix,
+    summary_table, ArrivalProcess, BatchScheduler, CostModel, Policy, RequestGen, ServerConfig,
+    WorkloadMix,
 };
 
 fn main() {
@@ -22,13 +24,7 @@ fn main() {
     let mix = WorkloadMix::edge_default();
 
     // mean uncontended service time of the mix on one cluster
-    let mut probe = BatchScheduler::new(ServerConfig::new(1, Policy::Fifo));
-    let total_w: f64 = mix.entries().iter().map(|(_, w)| w).sum();
-    let mean_service: f64 = mix
-        .entries()
-        .iter()
-        .map(|(c, w)| probe.service_cycles(*c) as f64 * w / total_w)
-        .sum();
+    let mean_service = CostModel::new(ExecConfig::paper_accelerated()).mean_service_cycles(&mix);
     println!(
         "edge-default mix: mean service {:.1} Mcycles/request ({:.2} ms @0.8V)\n",
         mean_service / 1e6,

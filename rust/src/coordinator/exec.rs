@@ -62,7 +62,7 @@ pub fn op_cost(cfg: &ExecConfig, op: &Op) -> OpCost {
                 // expected number of chunk-max updates per row is the
                 // harmonic number of the chunk count, ~ln(chunks)+0.58
                 // (the functional path reports exact counts).
-                let chunks = ((len + cfg.softex.lanes - 1) / cfg.softex.lanes) as f64;
+                let chunks = len.div_ceil(cfg.softex.lanes) as f64;
                 let est_rescales = (rows as f64 * (chunks.ln() + 0.58)).round() as u64;
                 let cycles = timing::softmax_cycles(&cfg.softex, rows, len, est_rescales).total();
                 OpCost {

@@ -1,0 +1,472 @@
+//! The fleet front-end: assigns a shared request stream across N
+//! clusters under a pluggable load-balancing policy, with SLO-aware
+//! admission control.
+//!
+//! The dispatcher runs strictly serially over the arrival-ordered
+//! stream (it is the front door, not the fleet), so its decisions —
+//! including the power-of-two-choices RNG draws — are a pure function
+//! of (stream, config, seed). Thread count never enters here, which is
+//! what makes the whole fleet simulation bit-deterministic.
+//!
+//! Queue-delay prediction uses a per-cluster FIFO work horizon: the
+//! cycle at which everything already dispatched to a cluster would
+//! drain if served back-to-back, with service times from
+//! `coordinator::op_cost` (via [`CostModel`]). This is an
+//! approximation of the cluster's actual schedule: continuous
+//! batching usually finishes earlier by overlapping engines, but
+//! per-request engine contention can also push an individual admitted
+//! request past its predicted completion — the SLO is enforced on the
+//! prediction, not re-checked after simulation.
+
+use crate::rng::Xoshiro256;
+use crate::server::{CostModel, Request, RequestClass};
+
+/// Load-balancing policy of the fleet dispatcher.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Cyclic assignment, blind to load.
+    RoundRobin,
+    /// Scan every cluster, join the one with the least outstanding
+    /// work (by predicted backlog, not request count — the mix is too
+    /// heterogeneous for counts to mean anything).
+    JoinShortestQueue,
+    /// Sample two distinct clusters, join the less loaded — the
+    /// classic O(1) approximation of JSQ (Mitzenmacher).
+    PowerOfTwoChoices,
+    /// Split every request into one shard per cluster (the sprayer-rs
+    /// spray-across-paths idea), paying the FlooNoC conflict penalty of
+    /// `mesh::montecarlo` for the fleet-wide mesh.
+    Spray,
+}
+
+impl DispatchPolicy {
+    pub const ALL: [DispatchPolicy; 4] = [
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::JoinShortestQueue,
+        DispatchPolicy::PowerOfTwoChoices,
+        DispatchPolicy::Spray,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "rr",
+            DispatchPolicy::JoinShortestQueue => "jsq",
+            DispatchPolicy::PowerOfTwoChoices => "p2c",
+            DispatchPolicy::Spray => "spray",
+        }
+    }
+
+    /// Parse a CLI policy name; `None` for unknown names.
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "rr" | "round-robin" => Some(DispatchPolicy::RoundRobin),
+            "jsq" | "join-shortest-queue" => Some(DispatchPolicy::JoinShortestQueue),
+            "p2c" | "power-of-two" => Some(DispatchPolicy::PowerOfTwoChoices),
+            "spray" => Some(DispatchPolicy::Spray),
+            _ => None,
+        }
+    }
+}
+
+/// SLO admission control at the dispatcher (deadline in cycles).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Admit everything.
+    Open,
+    /// Shed requests whose predicted latency exceeds the deadline.
+    Shed { deadline: u64 },
+    /// Downgrade an over-deadline request to its cheaper class variant
+    /// ([`RequestClass::downgraded`]); shed only if the downgraded
+    /// prediction still misses (or no downgrade exists).
+    Downgrade { deadline: u64 },
+}
+
+/// Where one offered request ended up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Whole request on one cluster (class may be a downgrade).
+    Assigned {
+        cluster: usize,
+        class: RequestClass,
+        downgraded: bool,
+    },
+    /// Split into one shard per cluster (spray policy).
+    Sprayed {
+        class: RequestClass,
+        downgraded: bool,
+    },
+    /// Refused at the door: predicted deadline miss.
+    Shed,
+}
+
+/// One admitted spray shard; every cluster executes an identical copy.
+#[derive(Clone, Copy, Debug)]
+pub struct Shard {
+    pub arrival: u64,
+    /// Per-cluster shard service, cycles (NoC-inflated).
+    pub cycles: u64,
+    /// The (possibly downgraded) class the shard belongs to.
+    pub class: RequestClass,
+}
+
+/// The dispatcher's output: outcomes in arrival order plus the
+/// per-cluster work it produced.
+#[derive(Clone, Debug)]
+pub struct DispatchPlan {
+    /// Outcome per offered request, parallel to the input stream.
+    pub outcomes: Vec<Outcome>,
+    /// Per-cluster whole-request streams, each sorted by arrival
+    /// (empty under spray).
+    pub streams: Vec<Vec<Request>>,
+    /// Admitted spray shards in arrival order (empty unless spray).
+    pub shards: Vec<Shard>,
+}
+
+/// Serial front-end state: per-cluster backlog horizons, the
+/// round-robin cursor, and the p2c candidate RNG.
+pub struct Dispatcher {
+    policy: DispatchPolicy,
+    admission: Admission,
+    clusters: usize,
+    /// Cycle at which each cluster's dispatched work would drain FIFO.
+    backlog: Vec<u64>,
+    rng: Xoshiro256,
+    rr_next: usize,
+    /// Spray shard inflation: (1 + NoC slowdown) / clusters.
+    spray_scale: f64,
+}
+
+impl Dispatcher {
+    pub fn new(
+        policy: DispatchPolicy,
+        admission: Admission,
+        clusters: usize,
+        seed: u64,
+        spray_slowdown: f64,
+    ) -> Self {
+        assert!(clusters >= 1, "fleet needs at least one cluster");
+        Self {
+            policy,
+            admission,
+            clusters,
+            backlog: vec![0; clusters],
+            rng: Xoshiro256::new(seed),
+            rr_next: 0,
+            spray_scale: (1.0 + spray_slowdown) / clusters as f64,
+        }
+    }
+
+    fn shard_cycles(&self, service: u64) -> u64 {
+        ((service as f64 * self.spray_scale).ceil() as u64).max(1)
+    }
+
+    /// Outstanding dispatched work on a cluster at an arrival instant.
+    fn outstanding(&self, cluster: usize, arrival: u64) -> u64 {
+        self.backlog[cluster].saturating_sub(arrival)
+    }
+
+    /// Candidate cluster for a whole-request policy. Chosen before
+    /// admission so the RNG stream and round-robin cursor advance
+    /// identically whether or not the request is admitted.
+    fn choose(&mut self, arrival: u64) -> usize {
+        match self.policy {
+            DispatchPolicy::RoundRobin => {
+                let c = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.clusters;
+                c
+            }
+            DispatchPolicy::JoinShortestQueue => {
+                let mut best = 0;
+                for c in 1..self.clusters {
+                    if self.outstanding(c, arrival) < self.outstanding(best, arrival) {
+                        best = c;
+                    }
+                }
+                best
+            }
+            DispatchPolicy::PowerOfTwoChoices => {
+                if self.clusters == 1 {
+                    return 0;
+                }
+                let a = self.rng.below(self.clusters as u64) as usize;
+                let mut b = self.rng.below(self.clusters as u64 - 1) as usize;
+                if b >= a {
+                    b += 1;
+                }
+                let (oa, ob) = (self.outstanding(a, arrival), self.outstanding(b, arrival));
+                if ob < oa || (ob == oa && b < a) {
+                    b
+                } else {
+                    a
+                }
+            }
+            // spray spans every cluster; the choice is unused
+            DispatchPolicy::Spray => 0,
+        }
+    }
+
+    /// FIFO-backlog latency prediction for admitting `class` now.
+    fn predicted_latency(
+        &self,
+        arrival: u64,
+        class: RequestClass,
+        cluster: usize,
+        costs: &mut CostModel,
+    ) -> u64 {
+        let service = costs.service_cycles(class);
+        match self.policy {
+            DispatchPolicy::Spray => {
+                let shard = self.shard_cycles(service);
+                (0..self.clusters)
+                    .map(|c| arrival.max(self.backlog[c]) + shard)
+                    .max()
+                    .expect("at least one cluster")
+                    - arrival
+            }
+            _ => arrival.max(self.backlog[cluster]) + service - arrival,
+        }
+    }
+
+    fn admitted(&self, class: RequestClass, cluster: usize, downgraded: bool) -> Outcome {
+        match self.policy {
+            DispatchPolicy::Spray => Outcome::Sprayed { class, downgraded },
+            _ => Outcome::Assigned {
+                cluster,
+                class,
+                downgraded,
+            },
+        }
+    }
+
+    /// Admission decision for one request on its candidate cluster.
+    fn admit(&self, r: &Request, cluster: usize, costs: &mut CostModel) -> Outcome {
+        let deadline = match self.admission {
+            Admission::Open => return self.admitted(r.class, cluster, false),
+            Admission::Shed { deadline } | Admission::Downgrade { deadline } => deadline,
+        };
+        if self.predicted_latency(r.arrival, r.class, cluster, costs) <= deadline {
+            return self.admitted(r.class, cluster, false);
+        }
+        if let Admission::Downgrade { .. } = self.admission {
+            if let Some(cheaper) = r.class.downgraded() {
+                if self.predicted_latency(r.arrival, cheaper, cluster, costs) <= deadline {
+                    return self.admitted(cheaper, cluster, true);
+                }
+            }
+        }
+        Outcome::Shed
+    }
+
+    /// Walk the arrival-ordered stream once, producing the plan.
+    pub fn dispatch(&mut self, requests: &[Request], costs: &mut CostModel) -> DispatchPlan {
+        let mut outcomes = Vec::with_capacity(requests.len());
+        let mut streams: Vec<Vec<Request>> = vec![Vec::new(); self.clusters];
+        let mut shards = Vec::new();
+        for r in requests {
+            let cluster = self.choose(r.arrival);
+            let outcome = self.admit(r, cluster, costs);
+            match outcome {
+                Outcome::Assigned { cluster, class, .. } => {
+                    let service = costs.service_cycles(class);
+                    let start = r.arrival.max(self.backlog[cluster]);
+                    self.backlog[cluster] = start + service;
+                    streams[cluster].push(Request {
+                        id: r.id,
+                        class,
+                        arrival: r.arrival,
+                    });
+                }
+                Outcome::Sprayed { class, .. } => {
+                    let shard = self.shard_cycles(costs.service_cycles(class));
+                    for backlog in self.backlog.iter_mut() {
+                        *backlog = r.arrival.max(*backlog) + shard;
+                    }
+                    shards.push(Shard {
+                        arrival: r.arrival,
+                        cycles: shard,
+                        class,
+                    });
+                }
+                Outcome::Shed => {}
+            }
+            outcomes.push(outcome);
+        }
+        DispatchPlan {
+            outcomes,
+            streams,
+            shards,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ExecConfig;
+    use crate::server::{ArrivalProcess, RequestGen, WorkloadMix};
+
+    fn costs() -> CostModel {
+        CostModel::new(ExecConfig::paper_accelerated())
+    }
+
+    fn stream(seed: u64, n: usize, mean_gap: f64) -> Vec<Request> {
+        RequestGen::new(
+            seed,
+            ArrivalProcess::Poisson { mean_gap },
+            WorkloadMix::edge_default(),
+        )
+        .generate(n)
+    }
+
+    #[test]
+    fn policy_labels_roundtrip_through_parse() {
+        for p in DispatchPolicy::ALL {
+            assert_eq!(DispatchPolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(DispatchPolicy::parse("nope"), None);
+        assert_eq!(DispatchPolicy::parse(""), None);
+    }
+
+    #[test]
+    fn round_robin_cycles_clusters() {
+        let mut d = Dispatcher::new(DispatchPolicy::RoundRobin, Admission::Open, 3, 1, 0.0);
+        let reqs = stream(2, 9, 1.0e6);
+        let plan = d.dispatch(&reqs, &mut costs());
+        for (i, o) in plan.outcomes.iter().enumerate() {
+            match *o {
+                Outcome::Assigned { cluster, .. } => assert_eq!(cluster, i % 3),
+                _ => panic!("round-robin sheds nothing under open admission"),
+            }
+        }
+        assert_eq!(plan.streams.iter().map(Vec::len).sum::<usize>(), 9);
+    }
+
+    #[test]
+    fn jsq_prefers_idle_clusters() {
+        // two clusters, simultaneous arrivals: JSQ must alternate, never
+        // stack both on one cluster
+        let mut d = Dispatcher::new(
+            DispatchPolicy::JoinShortestQueue,
+            Admission::Open,
+            2,
+            1,
+            0.0,
+        );
+        let reqs: Vec<Request> = RequestGen::new(
+            3,
+            ArrivalProcess::Burst { size: 4, gap: 0 },
+            WorkloadMix::single(RequestClass::VitTiny),
+        )
+        .generate(4);
+        let plan = d.dispatch(&reqs, &mut costs());
+        assert_eq!(plan.streams[0].len(), 2);
+        assert_eq!(plan.streams[1].len(), 2);
+    }
+
+    #[test]
+    fn p2c_is_deterministic_and_in_range() {
+        let reqs = stream(5, 200, 1.0e5);
+        let run = || {
+            let mut d = Dispatcher::new(
+                DispatchPolicy::PowerOfTwoChoices,
+                Admission::Open,
+                8,
+                42,
+                0.0,
+            );
+            d.dispatch(&reqs, &mut costs())
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.outcomes, b.outcomes);
+        for o in &a.outcomes {
+            match *o {
+                Outcome::Assigned { cluster, .. } => assert!(cluster < 8),
+                _ => panic!("open admission never sheds"),
+            }
+        }
+    }
+
+    #[test]
+    fn spray_emits_one_shard_per_request() {
+        let reqs = stream(7, 20, 1.0e6);
+        let mut d = Dispatcher::new(DispatchPolicy::Spray, Admission::Open, 4, 1, 0.10);
+        let mut cm = costs();
+        let plan = d.dispatch(&reqs, &mut cm);
+        assert_eq!(plan.shards.len(), 20);
+        assert!(plan.streams.iter().all(Vec::is_empty));
+        // shard = ceil(service * 1.10 / 4), always within [1, service]
+        for (s, r) in plan.shards.iter().zip(&reqs) {
+            let service = cm.service_cycles(r.class);
+            assert!(s.cycles >= 1 && s.cycles < service, "{} vs {service}", s.cycles);
+        }
+    }
+
+    #[test]
+    fn shed_admission_rejects_predicted_misses() {
+        // deadline far below any service time: everything is shed
+        let reqs = stream(9, 10, 1.0e6);
+        let mut d = Dispatcher::new(
+            DispatchPolicy::JoinShortestQueue,
+            Admission::Shed { deadline: 10 },
+            2,
+            1,
+            0.0,
+        );
+        let plan = d.dispatch(&reqs, &mut costs());
+        assert!(plan.outcomes.iter().all(|o| *o == Outcome::Shed));
+        assert!(plan.streams.iter().all(Vec::is_empty));
+    }
+
+    #[test]
+    fn downgrade_admission_substitutes_cheaper_classes() {
+        // deadline between the ViT-tiny and ViT-base service times:
+        // ViT-base requests must be admitted as downgraded ViT-tiny
+        let mut cm = costs();
+        let tiny = cm.service_cycles(RequestClass::VitTiny);
+        let base = cm.service_cycles(RequestClass::VitBase);
+        let deadline = (tiny + base) / 2;
+        // widely spaced arrivals so queueing never dominates
+        let reqs: Vec<Request> = (0..6)
+            .map(|i| Request {
+                id: i,
+                class: RequestClass::VitBase,
+                arrival: i as u64 * 100 * base,
+            })
+            .collect();
+        let mut d = Dispatcher::new(
+            DispatchPolicy::RoundRobin,
+            Admission::Downgrade { deadline },
+            2,
+            1,
+            0.0,
+        );
+        let plan = d.dispatch(&reqs, &mut cm);
+        for o in &plan.outcomes {
+            match *o {
+                Outcome::Assigned {
+                    class, downgraded, ..
+                } => {
+                    assert_eq!(class, RequestClass::VitTiny);
+                    assert!(downgraded);
+                }
+                _ => panic!("downgrade should admit, not shed: {o:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn per_cluster_streams_stay_sorted() {
+        let reqs = stream(11, 300, 2.0e5);
+        for policy in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::JoinShortestQueue,
+            DispatchPolicy::PowerOfTwoChoices,
+        ] {
+            let mut d = Dispatcher::new(policy, Admission::Open, 4, 9, 0.0);
+            let plan = d.dispatch(&reqs, &mut costs());
+            for s in &plan.streams {
+                assert!(s.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+            }
+        }
+    }
+}

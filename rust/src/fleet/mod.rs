@@ -1,0 +1,386 @@
+//! Fleet-scale dispatcher (DESIGN.md §7): multi-cluster scale-out
+//! serving with pluggable load balancing.
+//!
+//! PR 1's `server` simulator scales a single SoftEx mesh *up*; this
+//! subsystem scales *out*: N independent clusters — each wrapping its
+//! own [`BatchScheduler`] with a seed derived deterministically from
+//! the fleet seed — behind a front-end [`Dispatcher`] that balances a
+//! shared request stream:
+//!
+//! * [`dispatch`] — round-robin, join-shortest-queue,
+//!   power-of-two-choices, and spray (one shard per cluster, paying
+//!   the FlooNoC conflict penalty of `mesh::montecarlo` for the
+//!   fleet-wide mesh), plus SLO-aware admission control (shed or
+//!   downgrade requests whose FIFO-backlog-predicted latency misses a
+//!   deadline, with service times from `coordinator::op_cost`);
+//! * [`report`] — [`FleetReport`]: global p50/p95/p99 over every
+//!   cluster, goodput vs offered load, shed rate, and per-cluster
+//!   utilization imbalance.
+//!
+//! Per-cluster simulations run on `std::thread` scoped threads.
+//! Dispatch is strictly serial and each cluster simulation is an
+//! independent deterministic function of its stream and derived seed,
+//! so the result is bit-identical for any worker-thread count —
+//! `rust/tests/fleet.rs` pins this contract.
+
+pub mod dispatch;
+pub mod report;
+
+use crate::mesh::montecarlo::{mesh_edge_for, mesh_slowdown};
+use crate::server::stats::queue_depths;
+use crate::server::{
+    BatchScheduler, CostModel, Latencies, Policy, Request, ServeReport, ServerConfig,
+};
+
+pub use dispatch::{Admission, DispatchPlan, DispatchPolicy, Dispatcher, Outcome, Shard};
+pub use report::{fleet_table, FleetReport};
+
+/// Derive the per-cluster seed from the fleet seed: one SplitMix64
+/// scramble over the cluster index, so cluster RNG streams (e.g. the
+/// mesh-sharded NoC Monte Carlo) are decorrelated but reproducible
+/// from the single fleet seed regardless of which thread runs them.
+pub fn derive_seed(fleet_seed: u64, cluster: usize) -> u64 {
+    let mut z = fleet_seed ^ (cluster as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Fleet configuration: cluster count, dispatch policy, admission
+/// control, the per-cluster scheduler template, and worker threads.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub clusters: usize,
+    pub policy: DispatchPolicy,
+    pub admission: Admission,
+    /// Per-cluster scheduler template; its `seed` is re-derived per
+    /// cluster via [`derive_seed`]. Defaults to a single 1x1 cluster
+    /// running continuous batching.
+    pub cluster: ServerConfig,
+    /// Fleet seed: drives the p2c candidate RNG, the spray NoC Monte
+    /// Carlo, and every derived per-cluster seed.
+    pub seed: u64,
+    /// Worker threads for the per-cluster simulations. Results are
+    /// bit-identical for any value >= 1; threads only decide who runs
+    /// which cluster.
+    pub threads: usize,
+    /// Monte Carlo trials for the spray NoC penalty.
+    pub noc_trials: u32,
+}
+
+impl FleetConfig {
+    pub fn new(clusters: usize, policy: DispatchPolicy) -> Self {
+        assert!(clusters >= 1, "fleet needs at least one cluster");
+        Self {
+            clusters,
+            policy,
+            admission: Admission::Open,
+            cluster: ServerConfig::new(1, Policy::ContinuousBatching),
+            seed: 0xF1EE7,
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            noc_trials: 4096,
+        }
+    }
+}
+
+/// What one simulation pass hands back to the report builder.
+struct SimOutput {
+    reports: Vec<ServeReport>,
+    /// Global admitted-request latencies (each request once).
+    latencies: Latencies,
+    /// Absolute cycle of the last completion, 0 if nothing ran.
+    last_completion: u64,
+}
+
+/// The fleet simulator: dispatch, per-cluster simulation, aggregation.
+pub struct Fleet {
+    cfg: FleetConfig,
+    costs: CostModel,
+}
+
+impl Fleet {
+    pub fn new(cfg: FleetConfig) -> Self {
+        let costs = CostModel::new(cfg.cluster.exec);
+        Self { cfg, costs }
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.cfg
+    }
+
+    /// Simulate a shared stream (sorted by arrival) through the fleet.
+    pub fn run(&mut self, requests: &[Request]) -> FleetReport {
+        assert!(
+            requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "requests must be sorted by arrival"
+        );
+        let spray_slowdown = if self.cfg.policy == DispatchPolicy::Spray && self.cfg.clusters > 1 {
+            let edge = mesh_edge_for(self.cfg.clusters);
+            mesh_slowdown(edge, self.cfg.noc_trials, self.cfg.seed)
+        } else {
+            0.0
+        };
+        let mut dispatcher = Dispatcher::new(
+            self.cfg.policy,
+            self.cfg.admission,
+            self.cfg.clusters,
+            self.cfg.seed,
+            spray_slowdown,
+        );
+        let plan = dispatcher.dispatch(requests, &mut self.costs);
+        let sim = match self.cfg.policy {
+            DispatchPolicy::Spray => self.run_spray(&plan),
+            _ => self.run_assigned(&plan),
+        };
+        self.build_report(requests, &plan, sim)
+    }
+
+    /// Whole-request policies: one independent [`BatchScheduler`] per
+    /// cluster, simulated on scoped worker threads. Cluster indices are
+    /// chunked contiguously over the workers; each writes only its own
+    /// result slots, so the merge by index is race-free and the output
+    /// does not depend on the thread count.
+    fn run_assigned(&self, plan: &DispatchPlan) -> SimOutput {
+        let clusters = self.cfg.clusters;
+        let threads = self.cfg.threads.clamp(1, clusters);
+        let chunk = clusters.div_ceil(threads);
+        let mut reports: Vec<Option<ServeReport>> = (0..clusters).map(|_| None).collect();
+        let cfg = &self.cfg;
+        let streams = &plan.streams;
+        std::thread::scope(|scope| {
+            for (t, out) in reports.chunks_mut(chunk).enumerate() {
+                scope.spawn(move || {
+                    for (i, slot) in out.iter_mut().enumerate() {
+                        let c = t * chunk + i;
+                        let mut server_cfg = cfg.cluster.clone();
+                        server_cfg.seed = derive_seed(cfg.seed, c);
+                        let mut sched = BatchScheduler::new(server_cfg);
+                        let mut rep = sched.run(&streams[c]);
+                        rep.label = format!("c{c}:{}", rep.label);
+                        *slot = Some(rep);
+                    }
+                });
+            }
+        });
+        let reports: Vec<ServeReport> = reports
+            .into_iter()
+            .map(|r| r.expect("every cluster simulated"))
+            .collect();
+        let latencies = Latencies::merged(reports.iter().map(|r| &r.latencies));
+        let last_completion = streams
+            .iter()
+            .zip(&reports)
+            .filter(|(s, _)| !s.is_empty())
+            .map(|(s, r)| s[0].arrival + r.makespan)
+            .max()
+            .unwrap_or(0);
+        SimOutput {
+            reports,
+            latencies,
+            last_completion,
+        }
+    }
+
+    /// Spray: every admitted request becomes one NoC-inflated shard on
+    /// *each* cluster, so all clusters execute the identical FIFO shard
+    /// timeline — computed once and replicated (a request completes
+    /// when its slowest shard does; with identical timelines that is
+    /// the shared completion time).
+    fn run_spray(&mut self, plan: &DispatchPlan) -> SimOutput {
+        let shards = &plan.shards;
+        let mut free = 0u64;
+        let mut completions = Vec::with_capacity(shards.len());
+        for s in shards {
+            let start = s.arrival.max(free);
+            free = start + s.cycles;
+            completions.push(free);
+        }
+        let arrivals: Vec<u64> = shards.iter().map(|s| s.arrival).collect();
+        let latency_samples: Vec<u64> = arrivals
+            .iter()
+            .zip(&completions)
+            .map(|(&a, &c)| c - a)
+            .collect();
+        let first_arrival = arrivals.first().copied().unwrap_or(0);
+        let last_completion = completions.last().copied().unwrap_or(0);
+        let (mean_depth, max_depth) = queue_depths(&arrivals, &completions);
+
+        let clusters = self.cfg.clusters as u64;
+        let (mut ops, mut busy, mut e_thr, mut e_eff) = (0u64, 0u64, 0.0f64, 0.0f64);
+        for s in shards {
+            ops += self.costs.ops(s.class) / clusters;
+            busy += s.cycles;
+            let (thr, eff) = self.costs.energy_j(s.class);
+            e_thr += thr / clusters as f64;
+            e_eff += eff / clusters as f64;
+        }
+        let latencies = Latencies::from_unsorted(latency_samples);
+        let proto = ServeReport {
+            label: String::new(),
+            clusters: 1,
+            n_requests: shards.len(),
+            latencies: latencies.clone(),
+            makespan: (last_completion.saturating_sub(first_arrival)).max(1),
+            total_ops: ops,
+            busy_cycles: busy,
+            energy_j_throughput: e_thr,
+            energy_j_efficiency: e_eff,
+            mean_queue_depth: mean_depth,
+            max_queue_depth: max_depth,
+        };
+        let reports = (0..self.cfg.clusters)
+            .map(|c| {
+                let mut r = proto.clone();
+                r.label = format!("c{c}:spray");
+                r
+            })
+            .collect();
+        SimOutput {
+            reports,
+            latencies,
+            last_completion,
+        }
+    }
+
+    fn build_report(
+        &mut self,
+        requests: &[Request],
+        plan: &DispatchPlan,
+        sim: SimOutput,
+    ) -> FleetReport {
+        let (mut n_admitted, mut n_downgraded, mut n_shed) = (0usize, 0usize, 0usize);
+        let (mut offered_ops, mut served_ops) = (0u64, 0u64);
+        for (r, o) in requests.iter().zip(&plan.outcomes) {
+            offered_ops += self.costs.ops(r.class);
+            match *o {
+                Outcome::Shed => n_shed += 1,
+                Outcome::Assigned {
+                    class, downgraded, ..
+                }
+                | Outcome::Sprayed { class, downgraded } => {
+                    n_admitted += 1;
+                    if downgraded {
+                        n_downgraded += 1;
+                    }
+                    served_ops += self.costs.ops(class);
+                }
+            }
+        }
+        let first_arrival = requests.first().map(|r| r.arrival).unwrap_or(0);
+        let last_arrival = requests.last().map(|r| r.arrival).unwrap_or(0);
+        let (e_thr, e_eff) = sim.reports.iter().fold((0.0f64, 0.0f64), |(t, e), r| {
+            (t + r.energy_j_throughput, e + r.energy_j_efficiency)
+        });
+        FleetReport {
+            label: format!("{}@{}", self.cfg.policy.label(), self.cfg.clusters),
+            clusters: self.cfg.clusters,
+            policy: self.cfg.policy,
+            n_offered: requests.len(),
+            n_admitted,
+            n_downgraded,
+            n_shed,
+            latencies: sim.latencies,
+            makespan: (sim.last_completion.saturating_sub(first_arrival)).max(1),
+            offered_span: (last_arrival - first_arrival).max(1),
+            offered_ops,
+            served_ops,
+            energy_j_throughput: e_thr,
+            energy_j_efficiency: e_eff,
+            per_cluster: sim.reports,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::{ArrivalProcess, RequestGen, WorkloadMix};
+
+    fn stream(seed: u64, n: usize, mean_gap: f64) -> Vec<Request> {
+        RequestGen::new(
+            seed,
+            ArrivalProcess::Poisson { mean_gap },
+            WorkloadMix::edge_default(),
+        )
+        .generate(n)
+    }
+
+    #[test]
+    fn derived_seeds_are_distinct() {
+        let mut seen = std::collections::BTreeSet::new();
+        for c in 0..256 {
+            assert!(seen.insert(derive_seed(0xF1EE7, c)), "collision at {c}");
+        }
+        // and stable across calls
+        assert_eq!(derive_seed(1, 7), derive_seed(1, 7));
+        assert_ne!(derive_seed(1, 7), derive_seed(2, 7));
+    }
+
+    #[test]
+    fn single_cluster_fleet_matches_batch_scheduler() {
+        let reqs = stream(3, 120, 1.0e6);
+        let mut cfg = FleetConfig::new(1, DispatchPolicy::RoundRobin);
+        cfg.threads = 1;
+        let fleet = Fleet::new(cfg.clone()).run(&reqs);
+        let mut server_cfg = cfg.cluster.clone();
+        server_cfg.seed = derive_seed(cfg.seed, 0);
+        let single = BatchScheduler::new(server_cfg).run(&reqs);
+        assert_eq!(fleet.latencies, single.latencies);
+        assert_eq!(fleet.p99(), single.p99());
+        assert_eq!(fleet.n_admitted, 120);
+        assert_eq!(fleet.n_shed, 0);
+    }
+
+    #[test]
+    fn counts_are_conserved() {
+        for policy in DispatchPolicy::ALL {
+            let reqs = stream(5, 150, 5.0e5);
+            let mut cfg = FleetConfig::new(4, policy);
+            cfg.threads = 2;
+            let rep = Fleet::new(cfg).run(&reqs);
+            assert_eq!(rep.n_offered, 150, "{}", rep.label);
+            assert_eq!(rep.n_admitted + rep.n_shed, 150);
+            assert_eq!(rep.n_shed, 0); // open admission
+            assert_eq!(rep.latencies.len(), rep.n_admitted);
+            assert_eq!(rep.served_ops, rep.offered_ops);
+            assert_eq!(rep.per_cluster.len(), 4);
+        }
+    }
+
+    #[test]
+    fn fleet_report_renders() {
+        let reqs = stream(7, 60, 1.0e6);
+        let rep = Fleet::new(FleetConfig::new(3, DispatchPolicy::PowerOfTwoChoices)).run(&reqs);
+        let text = rep.render();
+        assert!(text.contains("p2c@3"), "{text}");
+        assert!(text.contains("c2"), "{text}");
+        let table = fleet_table("sweep", &[rep.clone(), rep]);
+        assert_eq!(table.lines().count(), 5);
+    }
+
+    #[test]
+    fn spray_ops_energy_are_conserved_within_rounding() {
+        let reqs = stream(9, 80, 1.0e6);
+        let open = Fleet::new(FleetConfig::new(4, DispatchPolicy::RoundRobin)).run(&reqs);
+        let spray = Fleet::new(FleetConfig::new(4, DispatchPolicy::Spray)).run(&reqs);
+        // per-shard integer division loses at most `clusters` OPs/request
+        let lost = open.served_ops - spray.per_cluster.iter().map(|r| r.total_ops).sum::<u64>();
+        assert!(lost <= 4 * 80, "{lost}");
+        let e: f64 = spray.per_cluster.iter().map(|r| r.energy_j_throughput).sum();
+        assert!((e - open.energy_j_throughput).abs() / open.energy_j_throughput < 1e-9);
+    }
+
+    #[test]
+    fn more_clusters_cut_tail_latency_under_load() {
+        let reqs = stream(11, 200, 3.0e5);
+        let p99 = |clusters| {
+            Fleet::new(FleetConfig::new(clusters, DispatchPolicy::JoinShortestQueue))
+                .run(&reqs)
+                .p99()
+        };
+        let (a, b) = (p99(2), p99(8));
+        assert!(b < a, "8 clusters {b} vs 2 clusters {a}");
+    }
+}

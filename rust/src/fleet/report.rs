@@ -1,0 +1,173 @@
+//! Fleet-wide accounting: global tail latencies over every cluster,
+//! goodput vs offered load, shed/downgrade rates, and per-cluster
+//! utilization imbalance.
+
+use crate::report;
+use crate::server::{Latencies, ServeReport};
+use crate::softex::phys::{OperatingPoint, OP_THROUGHPUT};
+
+use super::dispatch::DispatchPolicy;
+
+/// Aggregated result of one fleet run: per-cluster [`ServeReport`]s
+/// plus the global view the dispatcher owns (admission counts, global
+/// percentiles, offered vs served load).
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    /// `policy@N` label for tables.
+    pub label: String,
+    pub clusters: usize,
+    pub policy: DispatchPolicy,
+    /// Requests offered to the dispatcher.
+    pub n_offered: usize,
+    /// Requests admitted (including downgraded ones).
+    pub n_admitted: usize,
+    /// Admitted requests that were downgraded to a cheaper class.
+    pub n_downgraded: usize,
+    /// Requests shed at the door.
+    pub n_shed: usize,
+    /// Global admitted-request latencies; under spray each request
+    /// counts once (not once per shard).
+    pub latencies: Latencies,
+    /// First offered arrival to last fleet completion, cycles (>= 1).
+    pub makespan: u64,
+    /// Arrival span of the offered stream, cycles (>= 1).
+    pub offered_span: u64,
+    /// Countable OPs of the offered stream (at original classes).
+    pub offered_ops: u64,
+    /// Countable OPs actually served (downgrades shrink this).
+    pub served_ops: u64,
+    /// Energy summed over clusters at 0.8 V / 1.12 GHz, joules.
+    pub energy_j_throughput: f64,
+    /// Energy summed over clusters at 0.55 V / 460 MHz, joules.
+    pub energy_j_efficiency: f64,
+    /// One report per cluster, indexed by cluster id.
+    pub per_cluster: Vec<ServeReport>,
+}
+
+impl FleetReport {
+    pub fn p50(&self) -> u64 {
+        self.latencies.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.latencies.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.latencies.percentile(99.0)
+    }
+
+    /// Fraction of offered requests shed at the door.
+    pub fn shed_rate(&self) -> f64 {
+        if self.n_offered == 0 {
+            0.0
+        } else {
+            self.n_shed as f64 / self.n_offered as f64
+        }
+    }
+
+    /// Goodput: OPs actually served per second over the fleet makespan.
+    pub fn goodput_gops(&self, op: &OperatingPoint) -> f64 {
+        self.served_ops as f64 / (self.makespan as f64 / op.freq_hz) / 1e9
+    }
+
+    /// Offered load: OPs per second the stream asked for over its
+    /// arrival span.
+    pub fn offered_gops(&self, op: &OperatingPoint) -> f64 {
+        self.offered_ops as f64 / (self.offered_span as f64 / op.freq_hz) / 1e9
+    }
+
+    /// Per-cluster engine-busy share of the fleet makespan.
+    pub fn cluster_utilizations(&self) -> Vec<f64> {
+        self.per_cluster
+            .iter()
+            .map(|r| r.busy_cycles as f64 / self.makespan as f64)
+            .collect()
+    }
+
+    /// Max-to-mean utilization ratio across clusters: 1.0 is perfectly
+    /// balanced, `clusters` means one cluster carried everything. 1.0
+    /// when the fleet did no work at all.
+    pub fn utilization_imbalance(&self) -> f64 {
+        let utils = self.cluster_utilizations();
+        let mean = utils.iter().sum::<f64>() / utils.len() as f64;
+        if mean <= 0.0 {
+            return 1.0;
+        }
+        utils.iter().fold(0.0f64, |m, &u| m.max(u)) / mean
+    }
+
+    /// One row for [`fleet_table`].
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.label.clone(),
+            report::f(ServeReport::ms(self.p50(), &OP_THROUGHPUT), 2),
+            report::f(ServeReport::ms(self.p95(), &OP_THROUGHPUT), 2),
+            report::f(ServeReport::ms(self.p99(), &OP_THROUGHPUT), 2),
+            report::f(self.goodput_gops(&OP_THROUGHPUT), 0),
+            report::f(self.offered_gops(&OP_THROUGHPUT), 0),
+            report::pct(self.shed_rate()),
+            report::f(self.utilization_imbalance(), 2),
+        ]
+    }
+
+    /// Standalone report: global summary plus a per-cluster table.
+    pub fn render(&self) -> String {
+        let mut out = report::render_table(
+            &format!(
+                "Fleet run — {} ({} offered, {} admitted, {} downgraded, {} shed)",
+                self.label, self.n_offered, self.n_admitted, self.n_downgraded, self.n_shed
+            ),
+            &FLEET_HEADERS,
+            &[self.row()],
+        );
+        let utils = self.cluster_utilizations();
+        let rows: Vec<Vec<String>> = self
+            .per_cluster
+            .iter()
+            .zip(&utils)
+            .enumerate()
+            .map(|(c, (r, &u))| {
+                vec![
+                    format!("c{c}"),
+                    r.n_requests.to_string(),
+                    report::f(ServeReport::ms(r.p50(), &OP_THROUGHPUT), 2),
+                    report::f(ServeReport::ms(r.p99(), &OP_THROUGHPUT), 2),
+                    report::pct(u),
+                    report::f(r.energy_j_throughput * 1e3, 1),
+                ]
+            })
+            .collect();
+        out.push_str(&report::render_table(
+            "per-cluster",
+            &["cluster", "reqs", "p50 ms", "p99 ms", "util", "mJ @0.8V"],
+            &rows,
+        ));
+        out.push_str(&format!(
+            "makespan {:.1} ms @0.8V | {:.2} J @0.8V / {:.2} J @0.55V | imbalance {:.2}\n",
+            ServeReport::ms(self.makespan, &OP_THROUGHPUT),
+            self.energy_j_throughput,
+            self.energy_j_efficiency,
+            self.utilization_imbalance()
+        ));
+        out
+    }
+}
+
+/// Column headers shared by [`FleetReport::row`].
+pub const FLEET_HEADERS: [&str; 8] = [
+    "policy@N",
+    "p50 ms",
+    "p95 ms",
+    "p99 ms",
+    "goodput",
+    "offered",
+    "shed",
+    "imbal",
+];
+
+/// Render several fleet runs as one comparison table.
+pub fn fleet_table(title: &str, reports: &[FleetReport]) -> String {
+    let rows: Vec<Vec<String>> = reports.iter().map(|r| r.row()).collect();
+    report::render_table(title, &FLEET_HEADERS, &rows)
+}

@@ -18,6 +18,10 @@
 //! * [`mesh`] — the FlooNoC compute-mesh scalability model (Sec. VIII);
 //! * [`server`] — the multi-request serving simulator layered on the
 //!   coordinator and mesh models (`DESIGN.md` §6);
+//! * [`fleet`] — the fleet-scale dispatcher: N clusters behind
+//!   pluggable load balancing (round-robin, join-shortest-queue,
+//!   power-of-two-choices, spray) with SLO-aware admission control
+//!   (`DESIGN.md` §7);
 //! * [`energy`] — area/power/energy models calibrated to Sec. VII;
 //! * [`runtime`] — PJRT loading/execution of the AOT JAX artifacts
 //!   (gated off in offline builds, `DESIGN.md` §4);
@@ -30,6 +34,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod energy;
 pub mod expp;
+pub mod fleet;
 pub mod mesh;
 pub mod num;
 pub mod prop;

@@ -6,6 +6,7 @@
 //!   gelu --n N [--terms T] [--bits B]                   one GELU job
 //!   mesh [--max 8] [--trials 16384]                     Fig. 15 sweep
 //!   serve [--requests N] [--mesh n] [--policy P]        serving sim
+//!   fleet [--clusters N] [--policy P] [--threads T]     fleet dispatcher
 //!   verify [--artifacts DIR]                            golden checks
 //!   info                                                cluster summary
 
@@ -14,23 +15,29 @@ use std::collections::HashMap;
 use softex::cluster::cores::ExpAlgo;
 use softex::coordinator::{execute_trace, ExecConfig, KernelClass};
 use softex::energy::{OP_EFFICIENCY, OP_THROUGHPUT};
+use softex::fleet::{Admission, DispatchPolicy, Fleet, FleetConfig};
 use softex::mesh::sweep_mesh;
 use softex::report;
 use softex::runtime::Engine;
 use softex::server::{
-    ArrivalProcess, BatchScheduler, Policy, RequestGen, ServerConfig, WorkloadMix,
+    ArrivalProcess, BatchScheduler, CostModel, Policy, RequestGen, ServerConfig, WorkloadMix,
 };
 use softex::softex::phys;
 use softex::softex::SoftExConfig;
 use softex::workload::{gen, trace_model, ModelConfig};
 
+/// Split `--flag value`, `--flag=value`, and bare `--flag` (-> "true")
+/// arguments from positionals.
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut pos = Vec::new();
     let mut flags = HashMap::new();
     let mut i = 0;
     while i < args.len() {
         if let Some(name) = args[i].strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            if let Some((key, value)) = name.split_once('=') {
+                flags.insert(key.to_string(), value.to_string());
+                i += 1;
+            } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
                 flags.insert(name.to_string(), args[i + 1].clone());
                 i += 2;
             } else {
@@ -177,6 +184,10 @@ fn cmd_mesh(flags: &HashMap<String, String>) {
     );
 }
 
+const SERVE_USAGE: &str =
+    "usage: softex serve [--requests N] [--mesh N] [--gap CYCLES] [--seed S] \
+     [--policy fifo|cb|mesh]";
+
 fn cmd_serve(flags: &HashMap<String, String>) {
     let n: usize = flags.get("requests").map_or(1000, |v| v.parse().unwrap());
     let mesh: usize = flags.get("mesh").map_or(2, |v| v.parse().unwrap());
@@ -187,8 +198,9 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         Some("mesh") | Some("mesh-shard") => Policy::MeshSharded,
         Some("cb") | Some("cont-batch") | None => Policy::ContinuousBatching,
         Some(other) => {
-            eprintln!("unknown policy `{other}` (fifo, cb, mesh)");
-            std::process::exit(1);
+            eprintln!("unknown serve policy `{other}` (expected fifo, cb, or mesh)");
+            eprintln!("{SERVE_USAGE}");
+            std::process::exit(2);
         }
     };
     let mut generator = RequestGen::new(
@@ -201,6 +213,125 @@ fn cmd_serve(flags: &HashMap<String, String>) {
     server_cfg.seed = seed;
     let mut sched = BatchScheduler::new(server_cfg);
     let rep = sched.run(&requests);
+    println!("{}", rep.render());
+}
+
+const FLEET_USAGE: &str =
+    "usage: softex fleet [--clusters N] [--policy rr|jsq|p2c|spray] [--requests N] \
+     [--rho LOAD | --gap CYCLES] [--burst SIZE] [--seed S] [--threads T] \
+     [--slo-ms MS [--admission shed|downgrade]]";
+
+fn fleet_usage_error(msg: &str) -> ! {
+    eprintln!("{msg}");
+    eprintln!("{FLEET_USAGE}");
+    std::process::exit(2);
+}
+
+/// Parse an optional numeric fleet flag, exiting with the usage message
+/// (instead of a panic backtrace) on a malformed or missing value.
+fn fleet_flag<T: std::str::FromStr>(
+    flags: &HashMap<String, String>,
+    name: &str,
+    default: T,
+) -> T {
+    match flags.get(name) {
+        None => default,
+        Some(v) => v
+            .parse()
+            .unwrap_or_else(|_| fleet_usage_error(&format!("invalid value `{v}` for --{name}"))),
+    }
+}
+
+fn cmd_fleet(flags: &HashMap<String, String>) {
+    let clusters: usize = fleet_flag(flags, "clusters", 8);
+    if clusters == 0 {
+        fleet_usage_error("--clusters must be at least 1");
+    }
+    let n: usize = fleet_flag(flags, "requests", 400);
+    let seed: u64 = fleet_flag(flags, "seed", 0xF1EE7);
+    let policy = match flags.get("policy").map(String::as_str) {
+        None => DispatchPolicy::PowerOfTwoChoices,
+        Some(name) => DispatchPolicy::parse(name).unwrap_or_else(|| {
+            fleet_usage_error(&format!(
+                "unknown fleet policy `{name}` (expected rr, jsq, p2c, or spray)"
+            ))
+        }),
+    };
+
+    let mix = WorkloadMix::edge_default();
+    // offered load: --gap (per-request spacing, cycles) wins; otherwise
+    // --rho (fraction of aggregate fleet service capacity on the
+    // edge-default mix, default 0.8)
+    let mean_gap: f64 = match flags.get("gap") {
+        Some(_) => {
+            if flags.contains_key("rho") {
+                fleet_usage_error("--gap and --rho are mutually exclusive");
+            }
+            fleet_flag(flags, "gap", 0.0)
+        }
+        None => {
+            let rho: f64 = fleet_flag(flags, "rho", 0.8);
+            if rho <= 0.0 {
+                fleet_usage_error("--rho must be positive");
+            }
+            let mean_service =
+                CostModel::new(ExecConfig::paper_accelerated()).mean_service_cycles(&mix);
+            mean_service / (clusters as f64 * rho)
+        }
+    };
+    if mean_gap <= 0.0 {
+        fleet_usage_error("--gap must be positive");
+    }
+    // bursts keep the same long-run rate: `size` back-to-back arrivals,
+    // then a pause of size * mean_gap
+    let process = match flags.get("burst") {
+        Some(_) => {
+            let size: usize = fleet_flag(flags, "burst", 32);
+            if size == 0 {
+                fleet_usage_error("--burst must be at least 1");
+            }
+            ArrivalProcess::Burst {
+                size,
+                gap: (mean_gap * size as f64) as u64,
+            }
+        }
+        None => ArrivalProcess::Poisson { mean_gap },
+    };
+
+    let admission = match flags.get("slo-ms") {
+        None => {
+            if flags.contains_key("admission") {
+                fleet_usage_error("--admission requires --slo-ms");
+            }
+            Admission::Open
+        }
+        Some(_) => {
+            let ms: f64 = fleet_flag(flags, "slo-ms", 0.0);
+            if ms <= 0.0 {
+                fleet_usage_error("--slo-ms must be positive");
+            }
+            let deadline = (ms / 1e3 * OP_THROUGHPUT.freq_hz) as u64;
+            match flags.get("admission").map(String::as_str) {
+                Some("shed") | None => Admission::Shed { deadline },
+                Some("downgrade") => Admission::Downgrade { deadline },
+                Some(other) => fleet_usage_error(&format!(
+                    "unknown admission mode `{other}` (expected shed or downgrade)"
+                )),
+            }
+        }
+    };
+
+    let requests = RequestGen::new(seed, process, mix).generate(n);
+    let mut cfg = FleetConfig::new(clusters, policy);
+    cfg.seed = seed;
+    cfg.admission = admission;
+    if flags.contains_key("threads") {
+        cfg.threads = fleet_flag(flags, "threads", 1);
+        if cfg.threads == 0 {
+            fleet_usage_error("--threads must be at least 1");
+        }
+    }
+    let rep = Fleet::new(cfg).run(&requests);
     println!("{}", rep.render());
 }
 
@@ -271,11 +402,12 @@ fn main() {
         Some("gelu") => cmd_gelu(&flags),
         Some("mesh") => cmd_mesh(&flags),
         Some("serve") => cmd_serve(&flags),
+        Some("fleet") => cmd_fleet(&flags),
         Some("verify") => cmd_verify(&flags),
         Some("info") | None => cmd_info(),
         Some(other) => {
             eprintln!("unknown command `{other}`");
-            eprintln!("usage: softex [run|softmax|gelu|mesh|serve|verify|info] [flags]");
+            eprintln!("usage: softex [run|softmax|gelu|mesh|serve|fleet|verify|info] [flags]");
             std::process::exit(2);
         }
     }

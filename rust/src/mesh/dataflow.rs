@@ -19,8 +19,8 @@ pub struct TileAssignment {
 pub fn assign_tiles(mesh_n: usize, m: usize, n: usize) -> TileAssignment {
     TileAssignment {
         mesh_n,
-        tile_rows: (m + mesh_n - 1) / mesh_n,
-        tile_cols: (n + mesh_n - 1) / mesh_n,
+        tile_rows: m.div_ceil(mesh_n),
+        tile_cols: n.div_ceil(mesh_n),
     }
 }
 
@@ -28,7 +28,7 @@ pub fn assign_tiles(mesh_n: usize, m: usize, n: usize) -> TileAssignment {
 /// its horizontal neighbours. Returns (rows per cluster, bytes each
 /// cluster receives from its row peers).
 pub fn softmax_rowblocks(mesh_n: usize, rows: usize, len: usize) -> (usize, u64) {
-    let rows_per_cluster = (rows + mesh_n * mesh_n - 1) / (mesh_n * mesh_n);
+    let rows_per_cluster = rows.div_ceil(mesh_n * mesh_n);
     // a cluster holds 1/mesh_n of each of its rows; the other
     // (mesh_n - 1)/mesh_n arrive over the horizontal links (bf16 = 2 B)
     let recv = rows_per_cluster as u64 * len as u64 * 2 * (mesh_n as u64 - 1) / mesh_n as u64;

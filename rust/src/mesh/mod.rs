@@ -15,4 +15,5 @@ pub mod montecarlo;
 pub mod noc;
 pub mod scaling;
 
+pub use montecarlo::{mesh_edge_for, mesh_slowdown};
 pub use scaling::{sweep_mesh, MeshPoint};

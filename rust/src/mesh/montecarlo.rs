@@ -75,6 +75,17 @@ pub fn mesh_slowdown(n: usize, trials: u32, seed: u64) -> f64 {
     expected_path_delay(n, trials, seed) / CHUNK_COMPUTE_CYCLES as f64
 }
 
+/// Edge of the smallest square mesh covering `clusters` tiles — the NoC
+/// geometry a fleet-wide spray dispatch pays conflict delays on
+/// (DESIGN.md §7). Integer arithmetic, exact for any cluster count.
+pub fn mesh_edge_for(clusters: usize) -> usize {
+    let mut n = 1usize;
+    while n * n < clusters {
+        n += 1;
+    }
+    n
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,6 +93,18 @@ mod tests {
     #[test]
     fn single_cluster_no_slowdown() {
         assert_eq!(mesh_slowdown(1, 100, 1), 0.0);
+    }
+
+    #[test]
+    fn mesh_edge_covers_cluster_count() {
+        let anchors = [(1, 1), (2, 2), (4, 2), (5, 3), (9, 3), (10, 4), (16, 4), (17, 5)];
+        for (clusters, edge) in anchors {
+            assert_eq!(mesh_edge_for(clusters), edge, "clusters={clusters}");
+        }
+        for clusters in 1..=64usize {
+            let n = mesh_edge_for(clusters);
+            assert!(n * n >= clusters && (n - 1) * (n - 1) < clusters);
+        }
     }
 
     #[test]

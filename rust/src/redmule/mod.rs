@@ -50,7 +50,7 @@ pub fn matmul_cycles(cfg: &RedMuleConfig, m: usize, k: usize, n: usize) -> u64 {
     let macs = (m as u64) * (k as u64) * (n as u64);
     let ideal = macs as f64 / cfg.macs() as f64;
     // fill/drain: one extra pass of the array pipeline per tile column
-    let tiles = ((m + cfg.rows - 1) / cfg.rows) as f64 * ((n + cfg.cols - 1) / cfg.cols) as f64;
+    let tiles = m.div_ceil(cfg.rows) as f64 * n.div_ceil(cfg.cols) as f64;
     let fill_drain = tiles * (cfg.rows + cfg.cols) as f64;
     ((ideal / MATMUL_UTILIZATION) + fill_drain).ceil() as u64
 }

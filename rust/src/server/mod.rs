@@ -24,5 +24,5 @@ pub mod scheduler;
 pub mod stats;
 
 pub use request::{ArrivalProcess, Request, RequestClass, RequestGen, WorkloadMix};
-pub use scheduler::{BatchScheduler, Policy, ServerConfig};
-pub use stats::{summary_table, ServeReport};
+pub use scheduler::{BatchScheduler, CostModel, Policy, ServerConfig};
+pub use stats::{summary_table, Latencies, ServeReport};

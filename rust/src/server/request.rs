@@ -47,6 +47,26 @@ impl RequestClass {
         }
     }
 
+    /// The cheaper class an SLO-pressed dispatcher may substitute for
+    /// this one (fleet admission control, DESIGN.md §7): ViT-base falls
+    /// back to the tiny variant, long MobileBERT sequences to seq 128,
+    /// and GPT-2 XL keeps its prompt but truncates decoding to 4 steps.
+    /// `None` when the class is already the cheapest of its family.
+    pub fn downgraded(&self) -> Option<RequestClass> {
+        match *self {
+            RequestClass::VitTiny => None,
+            RequestClass::VitBase => Some(RequestClass::VitTiny),
+            RequestClass::MobileBert { seq } if seq > 128 => {
+                Some(RequestClass::MobileBert { seq: 128 })
+            }
+            RequestClass::MobileBert { .. } => None,
+            RequestClass::Gpt2Xl { prompt, decode } if decode > 4 => {
+                Some(RequestClass::Gpt2Xl { prompt, decode: 4 })
+            }
+            RequestClass::Gpt2Xl { .. } => None,
+        }
+    }
+
     /// Kernel-level op sequence of the whole request: the full forward
     /// pass, plus per-token decode slices for GPT-2 XL.
     pub fn trace(&self) -> Vec<Op> {
@@ -276,6 +296,29 @@ mod tests {
         assert!(long > short);
         let per_step = (long - short) / 4;
         assert_eq!(short + 4 * per_step, long);
+    }
+
+    #[test]
+    fn downgrades_are_cheaper_and_terminate() {
+        use crate::coordinator::ExecConfig;
+        use crate::server::scheduler::CostModel;
+        let mut costs = CostModel::new(ExecConfig::paper_accelerated());
+        for class in WorkloadMix::edge_default().classes() {
+            let mut current = class;
+            let mut steps = 0;
+            while let Some(cheaper) = current.downgraded() {
+                assert!(
+                    costs.service_cycles(cheaper) < costs.service_cycles(current),
+                    "{} -> {}",
+                    current.label(),
+                    cheaper.label()
+                );
+                current = cheaper;
+                steps += 1;
+                assert!(steps < 8, "downgrade chain must terminate");
+            }
+        }
+        assert_eq!(RequestClass::VitTiny.downgraded(), None);
     }
 
     #[test]

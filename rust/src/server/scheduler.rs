@@ -5,7 +5,9 @@
 //! configuration it produces bit-identical reports. Service times come
 //! from `coordinator::op_cost` — the exact cycle model the single-trace
 //! `execute_trace` path uses — so serving results stay anchored to the
-//! paper's calibration.
+//! paper's calibration. The per-class cost memo is factored out as
+//! [`CostModel`] so the fleet dispatcher (`crate::fleet`) predicts queue
+//! delays with the same numbers the cluster simulation charges.
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap};
@@ -14,8 +16,8 @@ use crate::coordinator::{op_cost, Engine, ExecConfig, Metrics};
 use crate::energy::{OP_EFFICIENCY, OP_THROUGHPUT};
 use crate::mesh::montecarlo::mesh_slowdown;
 
-use super::request::{Request, RequestClass};
-use super::stats::ServeReport;
+use super::request::{Request, RequestClass, WorkloadMix};
+use super::stats::{queue_depths, Latencies, ServeReport};
 
 /// Scheduling policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -120,19 +122,80 @@ fn class_cost(exec: &ExecConfig, class: RequestClass) -> ClassCost {
     }
 }
 
+/// Memoized per-class request costs under one [`ExecConfig`], resolved
+/// through `coordinator::op_cost` — the same cycle model as
+/// `execute_trace`. Shared by [`BatchScheduler`] and the fleet
+/// dispatcher's admission-control latency predictor.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    exec: ExecConfig,
+    costs: BTreeMap<RequestClass, ClassCost>,
+}
+
+impl CostModel {
+    pub fn new(exec: ExecConfig) -> Self {
+        Self {
+            exec,
+            costs: BTreeMap::new(),
+        }
+    }
+
+    pub fn exec(&self) -> &ExecConfig {
+        &self.exec
+    }
+
+    fn resolve(&mut self, class: RequestClass) -> &ClassCost {
+        self.costs
+            .entry(class)
+            .or_insert_with(|| class_cost(&self.exec, class))
+    }
+
+    /// Resolved cost entry; panics unless previously resolved.
+    fn get(&self, class: RequestClass) -> &ClassCost {
+        self.costs
+            .get(&class)
+            .expect("request class cost not resolved")
+    }
+
+    /// Uncontended single-cluster service time of a class, cycles.
+    pub fn service_cycles(&mut self, class: RequestClass) -> u64 {
+        self.resolve(class).service_cycles
+    }
+
+    /// Countable OPs of one request of a class.
+    pub fn ops(&mut self, class: RequestClass) -> u64 {
+        self.resolve(class).ops
+    }
+
+    /// Energy of one request, joules, at (0.8 V, 0.55 V) operating points.
+    pub fn energy_j(&mut self, class: RequestClass) -> (f64, f64) {
+        let c = self.resolve(class);
+        (c.energy_j_throughput, c.energy_j_efficiency)
+    }
+
+    /// Weighted mean uncontended service time of a mix, cycles — the
+    /// capacity anchor the rho-style load sweeps and the fleet CLI's
+    /// `--rho` flag express offered load against.
+    pub fn mean_service_cycles(&mut self, mix: &WorkloadMix) -> f64 {
+        let total_w: f64 = mix.entries().iter().map(|(_, w)| w).sum();
+        mix.entries()
+            .iter()
+            .map(|(c, w)| self.service_cycles(*c) as f64 * w / total_w)
+            .sum()
+    }
+}
+
 /// The batch scheduler: simulates a request stream under a policy and
 /// produces a [`ServeReport`].
 pub struct BatchScheduler {
     cfg: ServerConfig,
-    costs: BTreeMap<RequestClass, ClassCost>,
+    costs: CostModel,
 }
 
 impl BatchScheduler {
     pub fn new(cfg: ServerConfig) -> Self {
-        Self {
-            cfg,
-            costs: BTreeMap::new(),
-        }
+        let costs = CostModel::new(cfg.exec);
+        Self { cfg, costs }
     }
 
     pub fn config(&self) -> &ServerConfig {
@@ -147,17 +210,14 @@ impl BatchScheduler {
 
     /// Uncontended single-cluster service time of a class, cycles.
     pub fn service_cycles(&mut self, class: RequestClass) -> u64 {
-        if !self.costs.contains_key(&class) {
-            let cost = class_cost(&self.cfg.exec, class);
-            self.costs.insert(class, cost);
-        }
-        self.costs[&class].service_cycles
+        self.costs.service_cycles(class)
     }
 
     /// Simulate a stream (must be sorted by arrival, as [`super::RequestGen`]
-    /// emits it) and report latency/throughput/energy.
+    /// emits it) and report latency/throughput/energy. An empty stream
+    /// yields an empty report (zero requests, zero percentiles) — the
+    /// fleet dispatcher legitimately leaves clusters idle.
     pub fn run(&mut self, requests: &[Request]) -> ServeReport {
-        assert!(!requests.is_empty(), "empty request stream");
         assert!(
             requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
             "requests must be sorted by arrival"
@@ -176,7 +236,7 @@ impl BatchScheduler {
         let mut free = vec![0u64; clusters];
         let mut completions = Vec::with_capacity(requests.len());
         for r in requests {
-            let cost = &self.costs[&r.class];
+            let cost = self.costs.get(r.class);
             let (ci, _) = free
                 .iter()
                 .enumerate()
@@ -202,7 +262,7 @@ impl BatchScheduler {
         let mut load = vec![0u64; clusters];
         let mut members: Vec<Vec<usize>> = vec![Vec::new(); clusters];
         for (idx, r) in requests.iter().enumerate() {
-            let cost = &self.costs[&r.class];
+            let cost = self.costs.get(r.class);
             let ci = (0..clusters)
                 .min_by_key(|&i| (load[i], i))
                 .expect("at least one cluster");
@@ -248,7 +308,7 @@ impl BatchScheduler {
         let mut chains: Vec<Chain> = member
             .iter()
             .map(|&i| Chain {
-                segs: &self.costs[&requests[i].class].segments,
+                segs: &self.costs.get(requests[i].class).segments,
                 next: 0,
                 t: requests[i].arrival,
             })
@@ -306,7 +366,7 @@ impl BatchScheduler {
         let mut free = 0u64;
         let mut completions = Vec::with_capacity(requests.len());
         for r in requests {
-            let cost = &self.costs[&r.class];
+            let cost = self.costs.get(r.class);
             let service = (cost.service_cycles as f64 * (1.0 + slow) / clusters as f64)
                 .ceil()
                 .max(1.0) as u64;
@@ -318,12 +378,11 @@ impl BatchScheduler {
     }
 
     fn build_report(&self, requests: &[Request], completions: &[u64]) -> ServeReport {
-        let mut latencies: Vec<u64> = requests
+        let latencies: Vec<u64> = requests
             .iter()
             .zip(completions)
             .map(|(r, &c)| c - r.arrival)
             .collect();
-        latencies.sort_unstable();
 
         let first_arrival = requests.iter().map(|r| r.arrival).min().unwrap_or(0);
         let last_completion = completions.iter().copied().max().unwrap_or(0);
@@ -331,33 +390,15 @@ impl BatchScheduler {
 
         let (mut total_ops, mut busy, mut e_thr, mut e_eff) = (0u64, 0u64, 0.0f64, 0.0f64);
         for r in requests {
-            let cost = &self.costs[&r.class];
+            let cost = self.costs.get(r.class);
             total_ops += cost.ops;
             busy += cost.service_cycles;
             e_thr += cost.energy_j_throughput;
             e_eff += cost.energy_j_efficiency;
         }
 
-        // in-system depth sampled at arrival instants: depth_i is the
-        // number of earlier requests still incomplete at arrival i.
-        // Arrivals are non-decreasing, so a min-heap of in-flight
-        // completions drains monotonically (O(n log n)).
-        let (mut depth_sum, mut depth_max) = (0usize, 0usize);
-        let mut in_flight: BinaryHeap<Reverse<u64>> = BinaryHeap::new();
-        let mut drained = 0usize;
-        for (i, r) in requests.iter().enumerate() {
-            while let Some(&Reverse(c)) = in_flight.peek() {
-                if c > r.arrival {
-                    break;
-                }
-                in_flight.pop();
-                drained += 1;
-            }
-            let depth = i - drained;
-            depth_sum += depth;
-            depth_max = depth_max.max(depth);
-            in_flight.push(Reverse(completions[i]));
-        }
+        let arrivals: Vec<u64> = requests.iter().map(|r| r.arrival).collect();
+        let (mean_queue_depth, max_queue_depth) = queue_depths(&arrivals, completions);
 
         ServeReport {
             label: format!(
@@ -368,14 +409,14 @@ impl BatchScheduler {
             ),
             clusters: self.cfg.clusters(),
             n_requests: requests.len(),
-            latencies,
+            latencies: Latencies::from_unsorted(latencies),
             makespan,
             total_ops,
             busy_cycles: busy,
             energy_j_throughput: e_thr,
             energy_j_efficiency: e_eff,
-            mean_queue_depth: depth_sum as f64 / requests.len() as f64,
-            max_queue_depth: depth_max,
+            mean_queue_depth,
+            max_queue_depth,
         }
     }
 }
@@ -419,6 +460,32 @@ mod tests {
         let mut s = BatchScheduler::new(ServerConfig::new(1, Policy::Fifo));
         let agg = execute_trace(&exec, &class.trace());
         assert_eq!(s.service_cycles(class), agg.total_cycles());
+    }
+
+    #[test]
+    fn cost_model_agrees_with_scheduler() {
+        let mut model = CostModel::new(ExecConfig::paper_accelerated());
+        let mut s = BatchScheduler::new(ServerConfig::new(1, Policy::Fifo));
+        for class in WorkloadMix::edge_default().classes() {
+            assert_eq!(model.service_cycles(class), s.service_cycles(class));
+            assert!(model.ops(class) > 0);
+            let (thr, eff) = model.energy_j(class);
+            assert!(thr > 0.0 && eff > 0.0);
+        }
+    }
+
+    #[test]
+    fn mean_service_is_between_extremes() {
+        let mut model = CostModel::new(ExecConfig::paper_accelerated());
+        let mix = WorkloadMix::edge_default();
+        let mean = model.mean_service_cycles(&mix);
+        let (mut lo, mut hi) = (u64::MAX, 0u64);
+        for class in mix.classes() {
+            let s = model.service_cycles(class);
+            lo = lo.min(s);
+            hi = hi.max(s);
+        }
+        assert!((lo as f64) < mean && mean < hi as f64, "{lo} {mean} {hi}");
     }
 
     #[test]
@@ -489,6 +556,25 @@ mod tests {
             .unwrap();
         let rep = s.run(&reqs);
         assert!(rep.latencies[0] >= min_service);
+    }
+
+    #[test]
+    fn empty_stream_yields_empty_report() {
+        for policy in [Policy::Fifo, Policy::ContinuousBatching, Policy::MeshSharded] {
+            let mut s = BatchScheduler::new(ServerConfig::new(2, policy));
+            let rep = s.run(&[]);
+            assert_eq!(rep.n_requests, 0, "{}", rep.label);
+            assert!(rep.latencies.is_empty());
+            assert_eq!(rep.p50(), 0);
+            assert_eq!(rep.p99(), 0);
+            assert_eq!(rep.total_ops, 0);
+            assert_eq!(rep.busy_cycles, 0);
+            assert_eq!(rep.makespan, 1); // floor keeps ratios finite
+            assert_eq!(rep.utilization(), 0.0);
+            assert_eq!(rep.mean_queue_depth, 0.0);
+            // the report still renders without panicking
+            assert!(rep.render().contains("0 requests"));
+        }
     }
 
     #[test]

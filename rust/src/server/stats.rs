@@ -7,8 +7,90 @@
 //! transfer energy is negligible at these scales (Sec. VIII: 0.29% of
 //! power at 8x8) and is not added.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
 use crate::report;
 use crate::softex::phys::{OperatingPoint, OP_THROUGHPUT};
+
+/// A sorted per-request latency sample set (cycles).
+///
+/// Percentiles are nearest-rank over the order statistics, total over
+/// every input: `p` is clamped to [0, 100], a single sample answers
+/// every percentile, and the empty set reports 0 (an empty cluster in a
+/// fleet run contributes no latency mass, it must not panic).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Latencies(Vec<u64>);
+
+impl Latencies {
+    /// Take ownership of the samples and sort them.
+    pub fn from_unsorted(mut samples: Vec<u64>) -> Self {
+        samples.sort_unstable();
+        Self(samples)
+    }
+
+    /// Concatenate several sample sets into one (the fleet aggregation
+    /// path: global percentiles over all clusters).
+    pub fn merged<'a, I: IntoIterator<Item = &'a Latencies>>(sets: I) -> Latencies {
+        let mut all = Vec::new();
+        for s in sets {
+            all.extend_from_slice(&s.0);
+        }
+        Latencies::from_unsorted(all)
+    }
+
+    pub fn as_slice(&self) -> &[u64] {
+        &self.0
+    }
+
+    /// Nearest-rank percentile; `p` clamped to [0, 100], 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.0.is_empty() {
+            return 0;
+        }
+        let last = self.0.len() - 1;
+        let p = if p.is_nan() { 0.0 } else { p.clamp(0.0, 100.0) };
+        let idx = ((p / 100.0) * last as f64).round() as usize;
+        self.0[idx.min(last)]
+    }
+}
+
+impl std::ops::Deref for Latencies {
+    type Target = [u64];
+
+    fn deref(&self) -> &[u64] {
+        &self.0
+    }
+}
+
+/// In-system queue depth sampled at arrival instants: depth_i is the
+/// number of earlier requests still incomplete at arrival i. Arrivals
+/// must be non-decreasing (the generator contract), so a min-heap of
+/// in-flight completions drains monotonically (O(n log n)). Returns
+/// (mean, max) — (0, 0) for the empty stream.
+pub fn queue_depths(arrivals: &[u64], completions: &[u64]) -> (f64, usize) {
+    assert_eq!(arrivals.len(), completions.len());
+    if arrivals.is_empty() {
+        return (0.0, 0);
+    }
+    let (mut depth_sum, mut depth_max) = (0usize, 0usize);
+    let mut in_flight: BinaryHeap<Reverse<u64>> = BinaryHeap::new();
+    let mut drained = 0usize;
+    for (i, &arrival) in arrivals.iter().enumerate() {
+        while let Some(&Reverse(c)) = in_flight.peek() {
+            if c > arrival {
+                break;
+            }
+            in_flight.pop();
+            drained += 1;
+        }
+        let depth = i - drained;
+        depth_sum += depth;
+        depth_max = depth_max.max(depth);
+        in_flight.push(Reverse(completions[i]));
+    }
+    (depth_sum as f64 / arrivals.len() as f64, depth_max)
+}
 
 /// Aggregated result of simulating one request stream under one policy.
 #[derive(Clone, Debug)]
@@ -18,8 +100,8 @@ pub struct ServeReport {
     pub clusters: usize,
     pub n_requests: usize,
     /// Per-request latencies (completion - arrival), sorted, cycles.
-    pub latencies: Vec<u64>,
-    /// First arrival to last completion, cycles.
+    pub latencies: Latencies,
+    /// First arrival to last completion, cycles (at least 1).
     pub makespan: u64,
     /// Total countable OPs served.
     pub total_ops: u64,
@@ -38,12 +120,10 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
-    /// Nearest-rank percentile over the sorted latencies, p in [0, 100].
+    /// Nearest-rank percentile over the sorted latencies, p clamped to
+    /// [0, 100]; 0 for a report over zero requests.
     pub fn percentile(&self, p: f64) -> u64 {
-        assert!(!self.latencies.is_empty(), "empty report");
-        let last = self.latencies.len() - 1;
-        let idx = ((p / 100.0) * last as f64).round() as usize;
-        self.latencies[idx.min(last)]
+        self.latencies.percentile(p)
     }
 
     pub fn p50(&self) -> u64 {
@@ -137,7 +217,7 @@ mod tests {
             label: "test@1x1".into(),
             clusters: 1,
             n_requests: n,
-            latencies,
+            latencies: Latencies::from_unsorted(latencies),
             makespan: 1_000_000,
             total_ops: 384_000_000,
             busy_cycles: 900_000,
@@ -163,6 +243,66 @@ mod tests {
     fn percentiles_monotone() {
         let r = report_with(vec![5, 7, 7, 9, 30, 31, 31, 40, 120, 400]);
         assert!(r.p50() <= r.p95() && r.p95() <= r.p99());
+    }
+
+    #[test]
+    fn empty_sample_set_reports_zero() {
+        let l = Latencies::default();
+        assert_eq!(l.percentile(0.0), 0);
+        assert_eq!(l.percentile(50.0), 0);
+        assert_eq!(l.percentile(100.0), 0);
+        assert!(l.is_empty());
+        let r = report_with(Vec::new());
+        assert_eq!(r.p50(), 0);
+        assert_eq!(r.p99(), 0);
+    }
+
+    #[test]
+    fn single_sample_answers_every_percentile() {
+        let l = Latencies::from_unsorted(vec![42]);
+        assert_eq!(l.percentile(0.0), 42);
+        assert_eq!(l.percentile(50.0), 42);
+        assert_eq!(l.percentile(99.9), 42);
+        assert_eq!(l.percentile(100.0), 42);
+    }
+
+    #[test]
+    fn out_of_range_p_is_clamped() {
+        let l = Latencies::from_unsorted(vec![1, 2, 3, 4, 5]);
+        assert_eq!(l.percentile(-10.0), 1);
+        assert_eq!(l.percentile(250.0), 5);
+        assert_eq!(l.percentile(f64::NAN), 1);
+    }
+
+    #[test]
+    fn from_unsorted_sorts() {
+        let l = Latencies::from_unsorted(vec![9, 1, 5]);
+        assert_eq!(l.as_slice(), &[1, 5, 9]);
+        assert_eq!(l.percentile(0.0), 1);
+        assert_eq!(l.percentile(100.0), 9);
+    }
+
+    #[test]
+    fn merged_is_global_order_statistics() {
+        let a = Latencies::from_unsorted(vec![1, 3, 5]);
+        let b = Latencies::from_unsorted(vec![2, 4, 6]);
+        let m = Latencies::merged([&a, &b]);
+        assert_eq!(m.as_slice(), &[1, 2, 3, 4, 5, 6]);
+        assert_eq!(m.percentile(100.0), 6);
+    }
+
+    #[test]
+    fn queue_depths_count_in_flight() {
+        // arrivals 0,1,2 with completions far out: depths 0,1,2
+        let (mean, max) = queue_depths(&[0, 1, 2], &[100, 100, 100]);
+        assert_eq!(max, 2);
+        assert!((mean - 1.0).abs() < 1e-12);
+        // immediate completion: nothing in flight at the next arrival
+        let (mean, max) = queue_depths(&[0, 10, 20], &[5, 15, 25]);
+        assert_eq!(max, 0);
+        assert_eq!(mean, 0.0);
+        // empty stream
+        assert_eq!(queue_depths(&[], &[]), (0.0, 0));
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub const JOB_SETUP: u64 = 64;
 
 #[inline]
 fn ceil_div(a: usize, b: usize) -> u64 {
-    ((a + b - 1) / b) as u64
+    a.div_ceil(b) as u64
 }
 
 /// Cycle breakdown of one softmax job.

@@ -1,0 +1,240 @@
+//! Integration tests for the fleet dispatcher: thread-count
+//! determinism, load-balancing policy behavior, SLO admission control,
+//! and aggregation edge cases.
+
+use softex::coordinator::ExecConfig;
+use softex::energy::OP_THROUGHPUT;
+use softex::fleet::{Admission, DispatchPolicy, Fleet, FleetConfig};
+use softex::server::{ArrivalProcess, CostModel, Request, RequestClass, RequestGen, WorkloadMix};
+
+/// Mean uncontended service time of the edge-default mix, cycles.
+fn mean_service_cycles() -> f64 {
+    CostModel::new(ExecConfig::paper_accelerated())
+        .mean_service_cycles(&WorkloadMix::edge_default())
+}
+
+/// A bursty stream offered at `rho` times the aggregate capacity of
+/// `clusters` clusters: bursts of 32 back-to-back requests, then a gap
+/// sized so the long-run rate matches rho.
+fn bursty_stream(seed: u64, n: usize, clusters: usize, rho: f64) -> Vec<Request> {
+    let burst = 32usize;
+    let gap = (mean_service_cycles() * burst as f64 / (clusters as f64 * rho)) as u64;
+    RequestGen::new(
+        seed,
+        ArrivalProcess::Burst { size: burst, gap },
+        WorkloadMix::edge_default(),
+    )
+    .generate(n)
+}
+
+fn poisson_stream(seed: u64, n: usize, mean_gap: f64) -> Vec<Request> {
+    RequestGen::new(
+        seed,
+        ArrivalProcess::Poisson { mean_gap },
+        WorkloadMix::edge_default(),
+    )
+    .generate(n)
+}
+
+fn run_fleet(cfg: FleetConfig, requests: &[Request]) -> softex::fleet::FleetReport {
+    Fleet::new(cfg).run(requests)
+}
+
+#[test]
+fn p2c_fleet_is_bit_deterministic_across_thread_counts() {
+    // the acceptance contract behind `softex fleet --clusters 8
+    // --policy p2c --threads T`: T must never change a single bit
+    let requests = bursty_stream(0xF1EE7, 300, 8, 1.1);
+    let with_threads = |threads: usize| {
+        let mut cfg = FleetConfig::new(8, DispatchPolicy::PowerOfTwoChoices);
+        cfg.seed = 0xF1EE7;
+        cfg.threads = threads;
+        run_fleet(cfg, &requests)
+    };
+    let (a, b, c) = (with_threads(1), with_threads(2), with_threads(8));
+    for other in [&b, &c] {
+        assert_eq!(a.latencies, other.latencies);
+        assert_eq!(a.makespan, other.makespan);
+        assert_eq!(a.n_admitted, other.n_admitted);
+        assert!(a.energy_j_throughput == other.energy_j_throughput);
+        for (x, y) in a.per_cluster.iter().zip(&other.per_cluster) {
+            assert_eq!(x.latencies, y.latencies);
+            assert_eq!(x.makespan, y.makespan);
+            assert_eq!(x.n_requests, y.n_requests);
+        }
+    }
+}
+
+#[test]
+fn every_policy_is_deterministic_for_a_fixed_seed() {
+    let requests = poisson_stream(17, 200, 3.0e6);
+    for policy in DispatchPolicy::ALL {
+        let run = || {
+            let mut cfg = FleetConfig::new(4, policy);
+            cfg.seed = 99;
+            cfg.threads = 3;
+            run_fleet(cfg, &requests)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.latencies, b.latencies, "{}", a.label);
+        assert_eq!(a.makespan, b.makespan);
+    }
+}
+
+#[test]
+fn p2c_beats_round_robin_tail_latency_under_bursty_load() {
+    // the second acceptance contract: load-aware two-choice sampling
+    // must strictly cut p99 vs load-blind round-robin when a bursty
+    // heterogeneous stream keeps the fleet near saturation
+    let requests = bursty_stream(0xB00, 400, 8, 1.1);
+    let p99_of = |policy| {
+        let mut cfg = FleetConfig::new(8, policy);
+        cfg.seed = 0xB00;
+        run_fleet(cfg, &requests).p99()
+    };
+    let rr = p99_of(DispatchPolicy::RoundRobin);
+    let p2c = p99_of(DispatchPolicy::PowerOfTwoChoices);
+    assert!(p2c < rr, "p2c {p2c} vs rr {rr}");
+}
+
+#[test]
+fn jsq_at_least_matches_round_robin_under_bursty_load() {
+    let requests = bursty_stream(0xB01, 400, 8, 1.1);
+    let p99_of = |policy| {
+        let mut cfg = FleetConfig::new(8, policy);
+        cfg.seed = 0xB01;
+        run_fleet(cfg, &requests).p99()
+    };
+    let rr = p99_of(DispatchPolicy::RoundRobin);
+    let jsq = p99_of(DispatchPolicy::JoinShortestQueue);
+    assert!(jsq <= rr, "jsq {jsq} vs rr {rr}");
+}
+
+#[test]
+fn spray_cuts_latency_on_an_idle_fleet() {
+    // nearly idle: every request runs alone, so sharding it across all
+    // clusters divides service by ~N at a few percent NoC cost
+    let requests = poisson_stream(13, 30, 1.0e12);
+    let report_of = |policy| {
+        let mut cfg = FleetConfig::new(4, policy);
+        cfg.seed = 13;
+        run_fleet(cfg, &requests)
+    };
+    let rr = report_of(DispatchPolicy::RoundRobin);
+    let spray = report_of(DispatchPolicy::Spray);
+    assert!(
+        spray.p99() < rr.p99(),
+        "spray {} vs rr {}",
+        spray.p99(),
+        rr.p99()
+    );
+    // and spray's balance is perfect by construction
+    assert!((spray.utilization_imbalance() - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn shed_admission_bounds_the_tail_and_reports_sheds() {
+    // 2x overload: open admission lets queues (and p99) grow without
+    // bound; a 300 ms SLO sheds the excess and keeps the tail low
+    let requests = poisson_stream(19, 300, mean_service_cycles() / (4.0 * 2.0));
+    let deadline = (0.3 * OP_THROUGHPUT.freq_hz) as u64;
+    let run_with = |admission| {
+        let mut cfg = FleetConfig::new(4, DispatchPolicy::JoinShortestQueue);
+        cfg.seed = 19;
+        cfg.admission = admission;
+        run_fleet(cfg, &requests)
+    };
+    let open = run_with(Admission::Open);
+    let shed = run_with(Admission::Shed { deadline });
+    assert_eq!(open.n_shed, 0);
+    assert!(shed.n_shed > 0, "2x overload must shed");
+    assert!(shed.n_admitted > 0, "an SLO this loose must admit work");
+    assert_eq!(shed.n_admitted + shed.n_shed, shed.n_offered);
+    assert!(
+        shed.p99() < open.p99(),
+        "shed {} vs open {}",
+        shed.p99(),
+        open.p99()
+    );
+    assert!(shed.shed_rate() > 0.0 && shed.shed_rate() < 1.0);
+    // shedding trades served work for latency
+    assert!(shed.served_ops < open.served_ops);
+    assert_eq!(open.served_ops, open.offered_ops);
+}
+
+#[test]
+fn downgrade_admission_keeps_more_requests_than_shedding() {
+    // widely spaced arrivals keep queueing at ~zero, so the SLO bites
+    // purely on service time. With the deadline between GPT-2 XL's
+    // downgraded (decode 4) and full (decode 16) service, shed-mode
+    // refuses every GPT-2 XL request while downgrade-mode rescues it
+    // in truncated form.
+    let mut costs = CostModel::new(ExecConfig::paper_accelerated());
+    let full = costs.service_cycles(RequestClass::Gpt2Xl {
+        prompt: 128,
+        decode: 16,
+    });
+    let lite = costs.service_cycles(RequestClass::Gpt2Xl {
+        prompt: 128,
+        decode: 4,
+    });
+    let deadline = (full + lite) / 2;
+    let requests = poisson_stream(23, 300, 1.0e10);
+    let run_with = |admission| {
+        let mut cfg = FleetConfig::new(4, DispatchPolicy::JoinShortestQueue);
+        cfg.seed = 23;
+        cfg.admission = admission;
+        run_fleet(cfg, &requests)
+    };
+    let shed = run_with(Admission::Shed { deadline });
+    let down = run_with(Admission::Downgrade { deadline });
+    assert!(shed.n_shed > 0, "GPT-2 XL misses the SLO and is shed");
+    assert!(down.n_downgraded > 0, "downgrade mode must trigger");
+    assert_eq!(down.n_shed, 0, "everything fits once downgraded");
+    assert_eq!(down.n_downgraded, shed.n_shed);
+    assert!(
+        down.n_admitted > shed.n_admitted,
+        "downgrade admits {} vs shed {}",
+        down.n_admitted,
+        shed.n_admitted
+    );
+    // downgraded requests serve fewer OPs than they asked for
+    assert!(down.served_ops < down.offered_ops);
+}
+
+#[test]
+fn fewer_requests_than_clusters_leaves_clusters_empty() {
+    let requests = poisson_stream(29, 3, 1.0e9);
+    let mut cfg = FleetConfig::new(8, DispatchPolicy::RoundRobin);
+    cfg.seed = 29;
+    cfg.threads = 8;
+    let rep = run_fleet(cfg, &requests);
+    assert_eq!(rep.n_admitted, 3);
+    assert_eq!(rep.latencies.len(), 3);
+    assert_eq!(rep.per_cluster.len(), 8);
+    let busy: usize = rep
+        .per_cluster
+        .iter()
+        .filter(|r| r.n_requests > 0)
+        .count();
+    assert_eq!(busy, 3, "round-robin strides the singletons");
+    assert!(rep.p99() > 0);
+    // rendering tolerates the empty clusters
+    assert!(rep.render().contains("rr@8"));
+}
+
+#[test]
+fn imbalance_metric_separates_rr_from_jsq() {
+    // under the bursty heterogeneous stream, load-aware dispatch must
+    // not be *more* imbalanced than blind round-robin
+    let requests = bursty_stream(0xB02, 400, 8, 1.1);
+    let imbalance_of = |policy| {
+        let mut cfg = FleetConfig::new(8, policy);
+        cfg.seed = 0xB02;
+        run_fleet(cfg, &requests).utilization_imbalance()
+    };
+    let rr = imbalance_of(DispatchPolicy::RoundRobin);
+    let jsq = imbalance_of(DispatchPolicy::JoinShortestQueue);
+    assert!(jsq <= rr * 1.02, "jsq {jsq} vs rr {rr}");
+    assert!(rr >= 1.0 && jsq >= 1.0);
+}
