@@ -90,11 +90,18 @@ fn main() {
     let (a, b, c) = (run_with(1), run_with(2), run_with(8));
     assert_eq!(a.latencies, b.latencies, "1 vs 2 threads");
     assert_eq!(a.latencies, c.latencies, "1 vs 8 threads");
+    assert_eq!(a.ttft, c.ttft, "token metrics too");
+    assert_eq!(a.tbt, c.tbt);
     assert_eq!(a.p99(), c.p99());
     assert_eq!(a.makespan, c.makespan);
     println!(
         "determinism: p2c@{clusters} identical across 1/2/8 worker threads, p99 = {} ms",
         report::f(ServeReport::ms(a.p99(), &OP_THROUGHPUT), 2)
+    );
+    println!(
+        "token metrics: ttft p95 = {} ms | tbt p95 = {} ms",
+        report::f(ServeReport::ms(a.ttft_p95(), &OP_THROUGHPUT), 2),
+        report::f(ServeReport::ms(a.tbt_p95(), &OP_THROUGHPUT), 2),
     );
     println!("fleet OK");
 }

@@ -50,9 +50,21 @@ fn main() {
     let (a, b) = (rerun(), rerun());
     assert_eq!(a.p99(), b.p99(), "p99 must be bit-identical across reruns");
     assert_eq!(a.latencies, b.latencies);
+    assert_eq!(a.ttft, b.ttft, "token metrics are part of the contract");
+    assert_eq!(a.tbt, b.tbt);
     println!(
         "determinism: two reruns of cont-batch@2x2 agree, p99 = {} ms",
         report::f(ServeReport::ms(a.p99(), &OP_THROUGHPUT), 2)
+    );
+    // token-level view of the same run: first-token latency and decode
+    // cadence for the GPT-2 XL share of the mix
+    println!(
+        "token metrics: ttft p50/p95 = {}/{} ms | tbt p50/p95 = {}/{} ms ({} decode gaps)",
+        report::f(ServeReport::ms(a.ttft_p50(), &OP_THROUGHPUT), 2),
+        report::f(ServeReport::ms(a.ttft_p95(), &OP_THROUGHPUT), 2),
+        report::f(ServeReport::ms(a.tbt_p50(), &OP_THROUGHPUT), 2),
+        report::f(ServeReport::ms(a.tbt_p95(), &OP_THROUGHPUT), 2),
+        a.tbt.len(),
     );
     println!("serving OK");
 }

@@ -12,10 +12,13 @@ use std::time::Instant;
 
 use softex::coordinator::ExecConfig;
 use softex::energy::OP_THROUGHPUT;
+use softex::report;
 use softex::server::{
-    summary_table, ArrivalProcess, BatchScheduler, CostModel, Policy, RequestGen, ServerConfig,
-    WorkloadMix,
+    summary_table, ArrivalProcess, BatchScheduler, CostModel, Policy, Request, RequestClass,
+    RequestGen, ServeReport, ServerConfig, WorkloadMix,
 };
+use softex::sim::{kv, KvConfig};
+use softex::workload::ModelConfig;
 
 fn main() {
     let t0 = Instant::now();
@@ -56,8 +59,51 @@ fn main() {
         );
     }
 
+    // --- KV-cache context sweep: time-between-tokens vs prompt length,
+    // resident (ideal scratchpad) vs TCDM spill. Context beyond the
+    // ~40-token per-layer capacity pays the modeled DMA streaming cost,
+    // so the spill column must grow strictly faster. ----------------
+    let cap = kv::capacity_tokens(
+        &ModelConfig::gpt2_xl(),
+        KvConfig::tcdm_spill().capacity_bytes,
+    );
+    println!("KV sweep — GPT-2 XL decode, TCDM capacity = {cap} tokens/layer:");
+    println!("  prompt | tbt resident ms | tbt spill ms | spill MiB/req");
+    let mut last_spill_tbt = 0u64;
+    for prompt in [32usize, 64, 128, 256, 512] {
+        let reqs = vec![Request {
+            id: 0,
+            class: RequestClass::Gpt2Xl { prompt, decode: 8 },
+            arrival: 0,
+        }];
+        let run_kv = |kv_cfg: KvConfig| {
+            let mut cfg = ServerConfig::new(1, Policy::Fifo);
+            cfg.kv = kv_cfg;
+            BatchScheduler::new(cfg).run(&reqs)
+        };
+        let resident = run_kv(KvConfig::resident());
+        let spill = run_kv(KvConfig::tcdm_spill());
+        println!(
+            "  {:>6} | {:>15} | {:>12} | {:>13}",
+            prompt,
+            report::f(ServeReport::ms(resident.tbt_p50(), &OP_THROUGHPUT), 3),
+            report::f(ServeReport::ms(spill.tbt_p50(), &OP_THROUGHPUT), 3),
+            report::f(spill.kv_spill_bytes as f64 / (1024.0 * 1024.0), 1),
+        );
+        assert!(
+            spill.tbt_p50() >= resident.tbt_p50(),
+            "spill can never be faster than resident"
+        );
+        assert!(
+            spill.tbt_p50() > last_spill_tbt,
+            "TBT must grow monotonically with context"
+        );
+        last_spill_tbt = spill.tbt_p50();
+    }
+    println!();
+
     println!(
-        "sweep wall time: {:.2} s (9 configurations x 3 loads, deterministic seed {seed:#x})",
+        "sweep wall time: {:.2} s (9 configurations x 3 loads + KV sweep, deterministic seed {seed:#x})",
         t0.elapsed().as_secs_f64()
     );
 }

@@ -16,3 +16,6 @@ pub const NUM_CORES: usize = 8;
 pub const TCDM_BYTES: usize = 256 * 1024;
 /// Number of TCDM banks.
 pub const TCDM_BANKS: usize = 32;
+/// Sustained cluster-DMA bandwidth between L2 and the TCDM, bytes per
+/// cycle (one 64-bit AXI beat per cycle).
+pub const DMA_BYTES_PER_CYCLE: u64 = 8;

@@ -110,6 +110,20 @@ pub fn op_cost(cfg: &ExecConfig, op: &Op) -> OpCost {
                 }
             }
         },
+        Op::KvSpill { bytes } => {
+            // Double-buffered DMA hides latency but not bandwidth: the
+            // cluster stalls for the beats themselves. The cores idle
+            // while the streamer runs, so the energy mode is Idle and
+            // no accelerator is occupied.
+            let cycles = (bytes as u64).div_ceil(crate::cluster::DMA_BYTES_PER_CYCLE);
+            OpCost {
+                class: KernelClass::Other,
+                engine: Engine::Cores,
+                cycles,
+                ops: 0,
+                parts: vec![(ActivityMode::Idle, cycles)],
+            }
+        }
         Op::LayerNorm { n } => elementwise_cost(cores::elementwise_cycles(n, 4.0), op.ops()),
         Op::Bias { n } => {
             // RedMulE computes Z = X*W + Y, so the bias is fused into
@@ -320,10 +334,24 @@ mod tests {
             Op::LayerNorm { n: 4096 },
             Op::Bias { n: 4096 },
             Op::Residual { n: 4096 },
+            Op::KvSpill { bytes: 123_456 },
         ] {
             let c = op_cost(&cfg, &op);
             let parts: u64 = c.parts.iter().map(|(_, cy)| cy).sum();
             assert_eq!(parts, c.cycles, "{op:?}");
         }
+    }
+
+    #[test]
+    fn kv_spill_cost_is_dma_bandwidth() {
+        use crate::cluster::DMA_BYTES_PER_CYCLE;
+        let cfg = ExecConfig::paper_accelerated();
+        let c = op_cost(&cfg, &Op::KvSpill { bytes: 4096 });
+        assert_eq!(c.cycles, 4096 / DMA_BYTES_PER_CYCLE);
+        assert_eq!(c.ops, 0);
+        assert_eq!(c.engine, Engine::Cores);
+        // partial beats round up
+        assert_eq!(op_cost(&cfg, &Op::KvSpill { bytes: 9 }).cycles, 2);
+        assert_eq!(op_cost(&cfg, &Op::KvSpill { bytes: 0 }).cycles, 0);
     }
 }

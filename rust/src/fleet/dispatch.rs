@@ -2,24 +2,27 @@
 //! clusters under a pluggable load-balancing policy, with SLO-aware
 //! admission control.
 //!
-//! The dispatcher runs strictly serially over the arrival-ordered
-//! stream (it is the front door, not the fleet), so its decisions —
-//! including the power-of-two-choices RNG draws — are a pure function
-//! of (stream, config, seed). Thread count never enters here, which is
-//! what makes the whole fleet simulation bit-deterministic.
+//! The dispatcher walks the arrival-ordered stream as events of one
+//! `sim::Engine` (it is the front door, not the fleet), so its
+//! decisions — including the power-of-two-choices draws from the
+//! engine's seeded RNG — are a pure function of (stream, config,
+//! seed). Thread count never enters here, which is what makes the
+//! whole fleet simulation bit-deterministic.
 //!
-//! Queue-delay prediction uses a per-cluster FIFO work horizon: the
-//! cycle at which everything already dispatched to a cluster would
-//! drain if served back-to-back, with service times from
-//! `coordinator::op_cost` (via [`CostModel`]). This is an
-//! approximation of the cluster's actual schedule: continuous
-//! batching usually finishes earlier by overlapping engines, but
-//! per-request engine contention can also push an individual admitted
-//! request past its predicted completion — the SLO is enforced on the
-//! prediction, not re-checked after simulation.
+//! Queue-delay prediction uses a per-cluster FIFO work horizon: a
+//! `sim::Resource` per cluster whose `free_at` is the cycle at which
+//! everything already dispatched there would drain if served
+//! back-to-back, with service times from `coordinator::op_cost` (via
+//! [`CostModel`]). This is an approximation of the cluster's actual
+//! schedule: continuous batching usually finishes earlier by
+//! overlapping engines, but per-request engine contention can also
+//! push an individual admitted request past its predicted completion —
+//! the SLO is enforced on the prediction, not re-checked after
+//! simulation.
 
 use crate::rng::Xoshiro256;
 use crate::server::{CostModel, Request, RequestClass};
+use crate::sim::{Engine as SimEngine, ResourcePool};
 
 /// Load-balancing policy of the fleet dispatcher.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -122,15 +125,17 @@ pub struct DispatchPlan {
     pub shards: Vec<Shard>,
 }
 
-/// Serial front-end state: per-cluster backlog horizons, the
-/// round-robin cursor, and the p2c candidate RNG.
+/// Serial front-end state: per-cluster backlog horizons (a
+/// `sim::Resource` each), the round-robin cursor, and the seed of the
+/// engine whose RNG drives p2c candidate sampling.
 pub struct Dispatcher {
     policy: DispatchPolicy,
     admission: Admission,
     clusters: usize,
-    /// Cycle at which each cluster's dispatched work would drain FIFO.
-    backlog: Vec<u64>,
-    rng: Xoshiro256,
+    /// Per-cluster FIFO drain horizons: `free_at` is the cycle at which
+    /// dispatched work would drain back-to-back.
+    backlog: ResourcePool,
+    seed: u64,
     rr_next: usize,
     /// Spray shard inflation: (1 + NoC slowdown) / clusters.
     spray_scale: f64,
@@ -149,8 +154,8 @@ impl Dispatcher {
             policy,
             admission,
             clusters,
-            backlog: vec![0; clusters],
-            rng: Xoshiro256::new(seed),
+            backlog: ResourcePool::new("backlog", clusters),
+            seed,
             rr_next: 0,
             spray_scale: (1.0 + spray_slowdown) / clusters as f64,
         }
@@ -162,34 +167,26 @@ impl Dispatcher {
 
     /// Outstanding dispatched work on a cluster at an arrival instant.
     fn outstanding(&self, cluster: usize, arrival: u64) -> u64 {
-        self.backlog[cluster].saturating_sub(arrival)
+        self.backlog.get(cluster).outstanding(arrival)
     }
 
     /// Candidate cluster for a whole-request policy. Chosen before
     /// admission so the RNG stream and round-robin cursor advance
     /// identically whether or not the request is admitted.
-    fn choose(&mut self, arrival: u64) -> usize {
+    fn choose(&mut self, arrival: u64, rng: &mut Xoshiro256) -> usize {
         match self.policy {
             DispatchPolicy::RoundRobin => {
                 let c = self.rr_next;
                 self.rr_next = (self.rr_next + 1) % self.clusters;
                 c
             }
-            DispatchPolicy::JoinShortestQueue => {
-                let mut best = 0;
-                for c in 1..self.clusters {
-                    if self.outstanding(c, arrival) < self.outstanding(best, arrival) {
-                        best = c;
-                    }
-                }
-                best
-            }
+            DispatchPolicy::JoinShortestQueue => self.backlog.least_outstanding(arrival),
             DispatchPolicy::PowerOfTwoChoices => {
                 if self.clusters == 1 {
                     return 0;
                 }
-                let a = self.rng.below(self.clusters as u64) as usize;
-                let mut b = self.rng.below(self.clusters as u64 - 1) as usize;
+                let a = rng.below(self.clusters as u64) as usize;
+                let mut b = rng.below(self.clusters as u64 - 1) as usize;
                 if b >= a {
                     b += 1;
                 }
@@ -218,12 +215,12 @@ impl Dispatcher {
             DispatchPolicy::Spray => {
                 let shard = self.shard_cycles(service);
                 (0..self.clusters)
-                    .map(|c| arrival.max(self.backlog[c]) + shard)
+                    .map(|c| arrival.max(self.backlog.get(c).free_at()) + shard)
                     .max()
                     .expect("at least one cluster")
                     - arrival
             }
-            _ => arrival.max(self.backlog[cluster]) + service - arrival,
+            _ => arrival.max(self.backlog.get(cluster).free_at()) + service - arrival,
         }
     }
 
@@ -257,19 +254,30 @@ impl Dispatcher {
         Outcome::Shed
     }
 
-    /// Walk the arrival-ordered stream once, producing the plan.
+    /// Drive the arrival-ordered stream through the event engine once,
+    /// producing the plan. The stream must be sorted by arrival (the
+    /// generator contract), so event order equals stream order and the
+    /// plan's `outcomes` stay parallel to the input.
     pub fn dispatch(&mut self, requests: &[Request], costs: &mut CostModel) -> DispatchPlan {
+        assert!(
+            requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "requests must be sorted by arrival"
+        );
         let mut outcomes = Vec::with_capacity(requests.len());
         let mut streams: Vec<Vec<Request>> = vec![Vec::new(); self.clusters];
         let mut shards = Vec::new();
-        for r in requests {
-            let cluster = self.choose(r.arrival);
+        let mut engine: SimEngine<usize> = SimEngine::new(self.seed);
+        for (i, r) in requests.iter().enumerate() {
+            engine.schedule(r.arrival, i);
+        }
+        engine.run(|eng, i| {
+            let r = &requests[i];
+            let cluster = self.choose(r.arrival, eng.rng());
             let outcome = self.admit(r, cluster, costs);
             match outcome {
                 Outcome::Assigned { cluster, class, .. } => {
                     let service = costs.service_cycles(class);
-                    let start = r.arrival.max(self.backlog[cluster]);
-                    self.backlog[cluster] = start + service;
+                    self.backlog.get_mut(cluster).acquire(r.arrival, service);
                     streams[cluster].push(Request {
                         id: r.id,
                         class,
@@ -278,8 +286,8 @@ impl Dispatcher {
                 }
                 Outcome::Sprayed { class, .. } => {
                     let shard = self.shard_cycles(costs.service_cycles(class));
-                    for backlog in self.backlog.iter_mut() {
-                        *backlog = r.arrival.max(*backlog) + shard;
+                    for c in 0..self.clusters {
+                        self.backlog.get_mut(c).acquire(r.arrival, shard);
                     }
                     shards.push(Shard {
                         arrival: r.arrival,
@@ -290,7 +298,7 @@ impl Dispatcher {
                 Outcome::Shed => {}
             }
             outcomes.push(outcome);
-        }
+        });
         DispatchPlan {
             outcomes,
             streams,
@@ -452,6 +460,55 @@ mod tests {
                 _ => panic!("downgrade should admit, not shed: {o:?}"),
             }
         }
+    }
+
+    #[test]
+    fn downgrade_admission_truncates_gpt2_decode() {
+        // the admission path that consumes RequestClass::downgraded for
+        // GPT-2 XL: with the deadline between the truncated (decode 4)
+        // and full (decode 16) service times, every request is admitted
+        // as the decode-4 variant, keeping its prompt
+        let mut cm = costs();
+        let full = cm.service_cycles(RequestClass::Gpt2Xl { prompt: 128, decode: 16 });
+        let lite = cm.service_cycles(RequestClass::Gpt2Xl { prompt: 128, decode: 4 });
+        assert!(lite < full);
+        let deadline = (full + lite) / 2;
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| Request {
+                id: i,
+                class: RequestClass::Gpt2Xl { prompt: 128, decode: 16 },
+                arrival: i as u64 * 100 * full,
+            })
+            .collect();
+        let mut d = Dispatcher::new(
+            DispatchPolicy::JoinShortestQueue,
+            Admission::Downgrade { deadline },
+            2,
+            1,
+            0.0,
+        );
+        let plan = d.dispatch(&reqs, &mut cm);
+        for o in &plan.outcomes {
+            match *o {
+                Outcome::Assigned {
+                    class, downgraded, ..
+                } => {
+                    assert_eq!(class, RequestClass::Gpt2Xl { prompt: 128, decode: 4 });
+                    assert!(downgraded);
+                }
+                _ => panic!("downgrade should admit, not shed: {o:?}"),
+            }
+        }
+        // shed mode refuses the same requests outright
+        let mut d = Dispatcher::new(
+            DispatchPolicy::JoinShortestQueue,
+            Admission::Shed { deadline },
+            2,
+            1,
+            0.0,
+        );
+        let plan = d.dispatch(&reqs, &mut cm);
+        assert!(plan.outcomes.iter().all(|o| *o == Outcome::Shed));
     }
 
     #[test]

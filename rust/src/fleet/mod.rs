@@ -17,20 +17,26 @@
 //!   cluster, goodput vs offered load, shed rate, and per-cluster
 //!   utilization imbalance.
 //!
-//! Per-cluster simulations run on `std::thread` scoped threads.
+//! Per-cluster simulations run on `std::thread` scoped threads; both
+//! the dispatcher and every per-cluster scheduler are actors over the
+//! shared `sim::Engine`, so neither keeps a private event loop.
 //! Dispatch is strictly serial and each cluster simulation is an
 //! independent deterministic function of its stream and derived seed,
 //! so the result is bit-identical for any worker-thread count —
-//! `rust/tests/fleet.rs` pins this contract.
+//! `rust/tests/fleet.rs` pins this contract. Reports aggregate token
+//! metrics (TTFT / time-between-tokens) alongside the request
+//! percentiles.
 
 pub mod dispatch;
 pub mod report;
 
 use crate::mesh::montecarlo::{mesh_edge_for, mesh_slowdown};
+use crate::server::scheduler::place_tokens;
 use crate::server::stats::queue_depths;
 use crate::server::{
     BatchScheduler, CostModel, Latencies, Policy, Request, ServeReport, ServerConfig,
 };
+use crate::sim::{Engine as SimEngine, Resource};
 
 pub use dispatch::{Admission, DispatchPlan, DispatchPolicy, Dispatcher, Outcome, Shard};
 pub use report::{fleet_table, FleetReport};
@@ -90,6 +96,10 @@ struct SimOutput {
     reports: Vec<ServeReport>,
     /// Global admitted-request latencies (each request once).
     latencies: Latencies,
+    /// Global time-to-first-token samples (each request once).
+    ttft: Latencies,
+    /// Global time-between-tokens samples (one per decode token).
+    tbt: Latencies,
     /// Absolute cycle of the last completion, 0 if nothing ran.
     last_completion: u64,
 }
@@ -102,7 +112,7 @@ pub struct Fleet {
 
 impl Fleet {
     pub fn new(cfg: FleetConfig) -> Self {
-        let costs = CostModel::new(cfg.cluster.exec);
+        let costs = CostModel::with_kv(cfg.cluster.exec, cfg.cluster.kv);
         Self { cfg, costs }
     }
 
@@ -169,6 +179,8 @@ impl Fleet {
             .map(|r| r.expect("every cluster simulated"))
             .collect();
         let latencies = Latencies::merged(reports.iter().map(|r| &r.latencies));
+        let ttft = Latencies::merged(reports.iter().map(|r| &r.ttft));
+        let tbt = Latencies::merged(reports.iter().map(|r| &r.tbt));
         let last_completion = streams
             .iter()
             .zip(&reports)
@@ -179,24 +191,56 @@ impl Fleet {
         SimOutput {
             reports,
             latencies,
+            ttft,
+            tbt,
             last_completion,
         }
     }
 
     /// Spray: every admitted request becomes one NoC-inflated shard on
     /// *each* cluster, so all clusters execute the identical FIFO shard
-    /// timeline — computed once and replicated (a request completes
-    /// when its slowest shard does; with identical timelines that is
-    /// the shared completion time).
+    /// timeline — simulated once on the shared engine (one serial
+    /// [`Resource`] standing for the lock-stepped mesh) and replicated.
+    /// A request completes when its slowest shard does; with identical
+    /// timelines that is the shared completion time. Token timestamps
+    /// are placed proportionally inside each shard's block.
     fn run_spray(&mut self, plan: &DispatchPlan) -> SimOutput {
         let shards = &plan.shards;
-        let mut free = 0u64;
-        let mut completions = Vec::with_capacity(shards.len());
-        for s in shards {
-            let start = s.arrival.max(free);
-            free = start + s.cycles;
-            completions.push(free);
+        // per-request token geometry from the shared cost model
+        let token_cums: Vec<Vec<u64>> = shards
+            .iter()
+            .map(|s| self.costs.token_cums(s.class))
+            .collect();
+        let totals: Vec<u64> = shards
+            .iter()
+            .map(|s| self.costs.service_cycles(s.class))
+            .collect();
+
+        let mut engine: SimEngine<usize> = SimEngine::new(self.cfg.seed);
+        for (i, s) in shards.iter().enumerate() {
+            engine.schedule(s.arrival, i);
         }
+        let mut mesh = Resource::new("spray-mesh");
+        let mut completions = vec![0u64; shards.len()];
+        let mut ttft_samples = vec![0u64; shards.len()];
+        let mut tbt_samples: Vec<u64> = Vec::new();
+        engine.run(|eng, i| {
+            let s = &shards[i];
+            let start = mesh.acquire(eng.now(), s.cycles);
+            completions[i] = start + s.cycles;
+            // same proportional placement the scheduler uses for its
+            // exclusive blocks (single source of truth)
+            let tokens = place_tokens(&token_cums[i], totals[i], start, s.cycles);
+            let mut prev: Option<u64> = None;
+            for &t in &tokens {
+                match prev {
+                    None => ttft_samples[i] = t - s.arrival,
+                    Some(p) => tbt_samples.push(t - p),
+                }
+                prev = Some(t);
+            }
+        });
+
         let arrivals: Vec<u64> = shards.iter().map(|s| s.arrival).collect();
         let latency_samples: Vec<u64> = arrivals
             .iter()
@@ -209,19 +253,25 @@ impl Fleet {
 
         let clusters = self.cfg.clusters as u64;
         let (mut ops, mut busy, mut e_thr, mut e_eff) = (0u64, 0u64, 0.0f64, 0.0f64);
+        let mut spill = 0u64;
         for s in shards {
             ops += self.costs.ops(s.class) / clusters;
             busy += s.cycles;
             let (thr, eff) = self.costs.energy_j(s.class);
             e_thr += thr / clusters as f64;
             e_eff += eff / clusters as f64;
+            spill += self.costs.kv_spill_bytes(s.class) / clusters;
         }
         let latencies = Latencies::from_unsorted(latency_samples);
+        let ttft = Latencies::from_unsorted(ttft_samples);
+        let tbt = Latencies::from_unsorted(tbt_samples);
         let proto = ServeReport {
             label: String::new(),
             clusters: 1,
             n_requests: shards.len(),
             latencies: latencies.clone(),
+            ttft: ttft.clone(),
+            tbt: tbt.clone(),
             makespan: (last_completion.saturating_sub(first_arrival)).max(1),
             total_ops: ops,
             busy_cycles: busy,
@@ -229,6 +279,7 @@ impl Fleet {
             energy_j_efficiency: e_eff,
             mean_queue_depth: mean_depth,
             max_queue_depth: max_depth,
+            kv_spill_bytes: spill,
         };
         let reports = (0..self.cfg.clusters)
             .map(|c| {
@@ -240,6 +291,8 @@ impl Fleet {
         SimOutput {
             reports,
             latencies,
+            ttft,
+            tbt,
             last_completion,
         }
     }
@@ -282,6 +335,8 @@ impl Fleet {
             n_downgraded,
             n_shed,
             latencies: sim.latencies,
+            ttft: sim.ttft,
+            tbt: sim.tbt,
             makespan: (sim.last_completion.saturating_sub(first_arrival)).max(1),
             offered_span: (last_arrival - first_arrival).max(1),
             offered_ops,
@@ -370,6 +425,27 @@ mod tests {
         assert!(lost <= 4 * 80, "{lost}");
         let e: f64 = spray.per_cluster.iter().map(|r| r.energy_j_throughput).sum();
         assert!((e - open.energy_j_throughput).abs() / open.energy_j_throughput < 1e-9);
+    }
+
+    #[test]
+    fn token_metrics_aggregate_across_clusters() {
+        use crate::server::RequestClass;
+        let mix = WorkloadMix::new(vec![
+            (RequestClass::Gpt2Xl { prompt: 32, decode: 8 }, 0.7),
+            (RequestClass::VitTiny, 0.3),
+        ]);
+        let reqs = RequestGen::new(13, ArrivalProcess::Poisson { mean_gap: 5.0e5 }, mix)
+            .generate(80);
+        for policy in DispatchPolicy::ALL {
+            let rep = Fleet::new(FleetConfig::new(4, policy)).run(&reqs);
+            // one first-token sample per admitted request, decode gaps
+            // from the gpt2 traffic
+            assert_eq!(rep.ttft.len(), rep.n_admitted, "{}", rep.label);
+            assert!(!rep.tbt.is_empty(), "{}", rep.label);
+            assert!(rep.tbt_p50() > 0, "{}", rep.label);
+            // a request's first token never lands after its completion
+            assert!(rep.ttft_p99() <= rep.p99(), "{}", rep.label);
+        }
     }
 
     #[test]

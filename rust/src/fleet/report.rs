@@ -28,6 +28,11 @@ pub struct FleetReport {
     /// Global admitted-request latencies; under spray each request
     /// counts once (not once per shard).
     pub latencies: Latencies,
+    /// Global time-to-first-token samples, one per admitted request.
+    pub ttft: Latencies,
+    /// Global time-between-tokens samples, one per decode token of the
+    /// admitted generative requests.
+    pub tbt: Latencies,
     /// First offered arrival to last fleet completion, cycles (>= 1).
     pub makespan: u64,
     /// Arrival span of the offered stream, cycles (>= 1).
@@ -55,6 +60,30 @@ impl FleetReport {
 
     pub fn p99(&self) -> u64 {
         self.latencies.percentile(99.0)
+    }
+
+    pub fn ttft_p50(&self) -> u64 {
+        self.ttft.percentile(50.0)
+    }
+
+    pub fn ttft_p95(&self) -> u64 {
+        self.ttft.percentile(95.0)
+    }
+
+    pub fn ttft_p99(&self) -> u64 {
+        self.ttft.percentile(99.0)
+    }
+
+    pub fn tbt_p50(&self) -> u64 {
+        self.tbt.percentile(50.0)
+    }
+
+    pub fn tbt_p95(&self) -> u64 {
+        self.tbt.percentile(95.0)
+    }
+
+    pub fn tbt_p99(&self) -> u64 {
+        self.tbt.percentile(99.0)
     }
 
     /// Fraction of offered requests shed at the door.
@@ -104,11 +133,48 @@ impl FleetReport {
             report::f(ServeReport::ms(self.p50(), &OP_THROUGHPUT), 2),
             report::f(ServeReport::ms(self.p95(), &OP_THROUGHPUT), 2),
             report::f(ServeReport::ms(self.p99(), &OP_THROUGHPUT), 2),
+            report::f(ServeReport::ms(self.ttft_p95(), &OP_THROUGHPUT), 2),
+            report::f(ServeReport::ms(self.tbt_p95(), &OP_THROUGHPUT), 2),
             report::f(self.goodput_gops(&OP_THROUGHPUT), 0),
             report::f(self.offered_gops(&OP_THROUGHPUT), 0),
             report::pct(self.shed_rate()),
             report::f(self.utilization_imbalance(), 2),
         ]
+    }
+
+    /// Hand-rolled machine-readable JSON (no external deps): the global
+    /// summary plus one object per cluster.
+    pub fn to_json(&self) -> String {
+        let per_cluster = report::json::array(self.per_cluster.iter().map(|r| r.to_json()));
+        report::json::Obj::new()
+            .str("label", &self.label)
+            .u64("clusters", self.clusters as u64)
+            .str("policy", self.policy.label())
+            .u64("n_offered", self.n_offered as u64)
+            .u64("n_admitted", self.n_admitted as u64)
+            .u64("n_downgraded", self.n_downgraded as u64)
+            .u64("n_shed", self.n_shed as u64)
+            .f64("shed_rate", self.shed_rate())
+            .u64("p50_cycles", self.p50())
+            .u64("p95_cycles", self.p95())
+            .u64("p99_cycles", self.p99())
+            .f64("p99_ms", ServeReport::ms(self.p99(), &OP_THROUGHPUT))
+            .u64("ttft_p50_cycles", self.ttft_p50())
+            .u64("ttft_p95_cycles", self.ttft_p95())
+            .u64("ttft_p99_cycles", self.ttft_p99())
+            .u64("tbt_p50_cycles", self.tbt_p50())
+            .u64("tbt_p95_cycles", self.tbt_p95())
+            .u64("tbt_p99_cycles", self.tbt_p99())
+            .u64("makespan_cycles", self.makespan)
+            .u64("offered_ops", self.offered_ops)
+            .u64("served_ops", self.served_ops)
+            .f64("goodput_gops_08v", self.goodput_gops(&OP_THROUGHPUT))
+            .f64("offered_gops_08v", self.offered_gops(&OP_THROUGHPUT))
+            .f64("utilization_imbalance", self.utilization_imbalance())
+            .f64("energy_j_throughput", self.energy_j_throughput)
+            .f64("energy_j_efficiency", self.energy_j_efficiency)
+            .raw("per_cluster", &per_cluster)
+            .finish()
     }
 
     /// Standalone report: global summary plus a per-cluster table.
@@ -150,16 +216,27 @@ impl FleetReport {
             self.energy_j_efficiency,
             self.utilization_imbalance()
         ));
+        out.push_str(&format!(
+            "ttft p50/p95/p99 {:.2}/{:.2}/{:.2} ms | tbt p50/p95/p99 {:.2}/{:.2}/{:.2} ms\n",
+            ServeReport::ms(self.ttft_p50(), &OP_THROUGHPUT),
+            ServeReport::ms(self.ttft_p95(), &OP_THROUGHPUT),
+            ServeReport::ms(self.ttft_p99(), &OP_THROUGHPUT),
+            ServeReport::ms(self.tbt_p50(), &OP_THROUGHPUT),
+            ServeReport::ms(self.tbt_p95(), &OP_THROUGHPUT),
+            ServeReport::ms(self.tbt_p99(), &OP_THROUGHPUT),
+        ));
         out
     }
 }
 
 /// Column headers shared by [`FleetReport::row`].
-pub const FLEET_HEADERS: [&str; 8] = [
+pub const FLEET_HEADERS: [&str; 10] = [
     "policy@N",
     "p50 ms",
     "p95 ms",
     "p99 ms",
+    "ttft95",
+    "tbt95",
     "goodput",
     "offered",
     "shed",

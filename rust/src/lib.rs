@@ -16,12 +16,16 @@
 //! * [`workload`] — transformer workloads (ViT, MobileBERT, GPT-2 XL);
 //! * [`coordinator`] — the L3 scheduler mapping workloads onto engines;
 //! * [`mesh`] — the FlooNoC compute-mesh scalability model (Sec. VIII);
+//! * [`sim`] — the token-granular simulation core: a deterministic
+//!   discrete-event engine, named serial resources with occupancy, and
+//!   the KV-cache/TCDM residency model (`DESIGN.md` §8);
 //! * [`server`] — the multi-request serving simulator layered on the
-//!   coordinator and mesh models (`DESIGN.md` §6);
+//!   coordinator, mesh, and `sim` models, with token-level TTFT /
+//!   time-between-tokens reporting (`DESIGN.md` §6, §8);
 //! * [`fleet`] — the fleet-scale dispatcher: N clusters behind
 //!   pluggable load balancing (round-robin, join-shortest-queue,
-//!   power-of-two-choices, spray) with SLO-aware admission control
-//!   (`DESIGN.md` §7);
+//!   power-of-two-choices, spray) with SLO-aware admission control,
+//!   re-layered on the same `sim` engine (`DESIGN.md` §7, §8);
 //! * [`energy`] — area/power/energy models calibrated to Sec. VII;
 //! * [`runtime`] — PJRT loading/execution of the AOT JAX artifacts
 //!   (gated off in offline builds, `DESIGN.md` §4);
@@ -43,5 +47,6 @@ pub mod report;
 pub mod rng;
 pub mod runtime;
 pub mod server;
+pub mod sim;
 pub mod softex;
 pub mod workload;

@@ -5,8 +5,8 @@
 //!   softmax --rows R --len L [--lanes N]                one softmax job
 //!   gelu --n N [--terms T] [--bits B]                   one GELU job
 //!   mesh [--max 8] [--trials 16384]                     Fig. 15 sweep
-//!   serve [--requests N] [--mesh n] [--policy P]        serving sim
-//!   fleet [--clusters N] [--policy P] [--threads T]     fleet dispatcher
+//!   serve [--requests N] [--mesh n] [--policy P] [--kv K] [--json]   serving sim
+//!   fleet [--clusters N] [--policy P] [--threads T] [--json]         fleet dispatcher
 //!   verify [--artifacts DIR]                            golden checks
 //!   info                                                cluster summary
 
@@ -22,6 +22,7 @@ use softex::runtime::Engine;
 use softex::server::{
     ArrivalProcess, BatchScheduler, CostModel, Policy, RequestGen, ServerConfig, WorkloadMix,
 };
+use softex::sim::{KvConfig, KvPolicy};
 use softex::softex::phys;
 use softex::softex::SoftExConfig;
 use softex::workload::{gen, trace_model, ModelConfig};
@@ -186,7 +187,23 @@ fn cmd_mesh(flags: &HashMap<String, String>) {
 
 const SERVE_USAGE: &str =
     "usage: softex serve [--requests N] [--mesh N] [--gap CYCLES] [--seed S] \
-     [--policy fifo|cb|mesh]";
+     [--policy fifo|cb|mesh] [--kv resident|spill] [--json]";
+
+/// Parse the shared `--kv` flag, exiting with `usage` on unknown names.
+fn parse_kv(flags: &HashMap<String, String>, usage: &str) -> KvConfig {
+    match flags.get("kv").map(String::as_str) {
+        None => KvConfig::resident(),
+        Some(name) => match KvPolicy::parse(name) {
+            Some(KvPolicy::Resident) => KvConfig::resident(),
+            Some(KvPolicy::TcdmSpill) => KvConfig::tcdm_spill(),
+            None => {
+                eprintln!("unknown kv policy `{name}` (expected resident or spill)");
+                eprintln!("{usage}");
+                std::process::exit(2);
+            }
+        },
+    }
+}
 
 fn cmd_serve(flags: &HashMap<String, String>) {
     let n: usize = flags.get("requests").map_or(1000, |v| v.parse().unwrap());
@@ -203,6 +220,7 @@ fn cmd_serve(flags: &HashMap<String, String>) {
             std::process::exit(2);
         }
     };
+    let kv = parse_kv(flags, SERVE_USAGE);
     let mut generator = RequestGen::new(
         seed,
         ArrivalProcess::Poisson { mean_gap },
@@ -211,15 +229,20 @@ fn cmd_serve(flags: &HashMap<String, String>) {
     let requests = generator.generate(n);
     let mut server_cfg = ServerConfig::new(mesh, policy);
     server_cfg.seed = seed;
+    server_cfg.kv = kv;
     let mut sched = BatchScheduler::new(server_cfg);
     let rep = sched.run(&requests);
-    println!("{}", rep.render());
+    if flags.contains_key("json") {
+        println!("{}", rep.to_json());
+    } else {
+        println!("{}", rep.render());
+    }
 }
 
 const FLEET_USAGE: &str =
     "usage: softex fleet [--clusters N] [--policy rr|jsq|p2c|spray] [--requests N] \
      [--rho LOAD | --gap CYCLES] [--burst SIZE] [--seed S] [--threads T] \
-     [--slo-ms MS [--admission shed|downgrade]]";
+     [--slo-ms MS [--admission shed|downgrade]] [--kv resident|spill] [--json]";
 
 fn fleet_usage_error(msg: &str) -> ! {
     eprintln!("{msg}");
@@ -258,10 +281,11 @@ fn cmd_fleet(flags: &HashMap<String, String>) {
         }),
     };
 
+    let kv = parse_kv(flags, FLEET_USAGE);
     let mix = WorkloadMix::edge_default();
     // offered load: --gap (per-request spacing, cycles) wins; otherwise
     // --rho (fraction of aggregate fleet service capacity on the
-    // edge-default mix, default 0.8)
+    // edge-default mix under the chosen KV model, default 0.8)
     let mean_gap: f64 = match flags.get("gap") {
         Some(_) => {
             if flags.contains_key("rho") {
@@ -274,8 +298,8 @@ fn cmd_fleet(flags: &HashMap<String, String>) {
             if rho <= 0.0 {
                 fleet_usage_error("--rho must be positive");
             }
-            let mean_service =
-                CostModel::new(ExecConfig::paper_accelerated()).mean_service_cycles(&mix);
+            let mean_service = CostModel::with_kv(ExecConfig::paper_accelerated(), kv)
+                .mean_service_cycles(&mix);
             mean_service / (clusters as f64 * rho)
         }
     };
@@ -325,6 +349,7 @@ fn cmd_fleet(flags: &HashMap<String, String>) {
     let mut cfg = FleetConfig::new(clusters, policy);
     cfg.seed = seed;
     cfg.admission = admission;
+    cfg.cluster.kv = kv;
     if flags.contains_key("threads") {
         cfg.threads = fleet_flag(flags, "threads", 1);
         if cfg.threads == 0 {
@@ -332,7 +357,11 @@ fn cmd_fleet(flags: &HashMap<String, String>) {
         }
     }
     let rep = Fleet::new(cfg).run(&requests);
-    println!("{}", rep.render());
+    if flags.contains_key("json") {
+        println!("{}", rep.to_json());
+    } else {
+        println!("{}", rep.render());
+    }
 }
 
 fn cmd_verify(flags: &HashMap<String, String>) {

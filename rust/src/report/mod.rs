@@ -1,4 +1,85 @@
-//! Paper-style plain-text table rendering for the bench harnesses.
+//! Paper-style plain-text table rendering for the bench harnesses, plus
+//! the minimal hand-rolled JSON emitter behind the `--json` CLI flags.
+
+/// Minimal JSON emission without external dependencies: an insertion-
+/// ordered object builder plus an array joiner. Strings are escaped,
+/// non-finite floats become `null`.
+pub mod json {
+    /// Escape a string for embedding in a JSON string literal.
+    pub fn escape(s: &str) -> String {
+        let mut out = String::with_capacity(s.len());
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+
+    /// An append-only JSON object builder.
+    pub struct Obj {
+        buf: String,
+    }
+
+    impl Obj {
+        pub fn new() -> Self {
+            Self { buf: String::from("{") }
+        }
+
+        /// Append a key with a pre-serialized JSON value.
+        pub fn raw(mut self, key: &str, value: &str) -> Self {
+            if self.buf.len() > 1 {
+                self.buf.push(',');
+            }
+            self.buf.push('"');
+            self.buf.push_str(&escape(key));
+            self.buf.push_str("\":");
+            self.buf.push_str(value);
+            self
+        }
+
+        pub fn str(self, key: &str, value: &str) -> Self {
+            let quoted = format!("\"{}\"", escape(value));
+            self.raw(key, &quoted)
+        }
+
+        pub fn u64(self, key: &str, value: u64) -> Self {
+            self.raw(key, &value.to_string())
+        }
+
+        pub fn f64(self, key: &str, value: f64) -> Self {
+            if value.is_finite() {
+                // Rust's shortest-roundtrip Display is valid JSON
+                self.raw(key, &format!("{value}"))
+            } else {
+                self.raw(key, "null")
+            }
+        }
+
+        pub fn finish(mut self) -> String {
+            self.buf.push('}');
+            self.buf
+        }
+    }
+
+    impl Default for Obj {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    /// Join pre-serialized JSON values into an array.
+    pub fn array<I: IntoIterator<Item = String>>(items: I) -> String {
+        let items: Vec<String> = items.into_iter().collect();
+        format!("[{}]", items.join(","))
+    }
+}
 
 /// Render a table with a title, column headers and string rows.
 pub fn render_table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
@@ -80,5 +161,30 @@ mod tests {
         assert_eq!(cycles(14_200), "14.2 kcyc");
         assert_eq!(cycles(15_000_000), "15.0 Mcyc");
         assert_eq!(cycles(512), "512 cyc");
+    }
+
+    #[test]
+    fn json_objects_serialize_in_order() {
+        let j = json::Obj::new()
+            .str("name", "fifo@2x2")
+            .u64("count", 42)
+            .f64("ratio", 0.5)
+            .f64("bad", f64::NAN)
+            .raw("nested", &json::array(vec!["1".to_string(), "2".to_string()]))
+            .finish();
+        assert_eq!(
+            j,
+            r#"{"name":"fifo@2x2","count":42,"ratio":0.5,"bad":null,"nested":[1,2]}"#
+        );
+        assert_eq!(json::Obj::new().finish(), "{}");
+        assert_eq!(json::array(Vec::<String>::new()), "[]");
+    }
+
+    #[test]
+    fn json_strings_are_escaped() {
+        assert_eq!(json::escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json::escape("\u{1}"), "\\u0001");
+        let j = json::Obj::new().str("k", "a\"b").finish();
+        assert_eq!(j, r#"{"k":"a\"b"}"#);
     }
 }

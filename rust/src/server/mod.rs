@@ -9,12 +9,15 @@
 //!   prompt+decode), weighted workload mixes, and seeded Poisson/burst
 //!   arrival streams;
 //! * [`scheduler`] — pluggable batch-scheduling policies (FIFO,
-//!   continuous batching with per-engine queues for RedMulE vs SoftEx,
-//!   mesh-sharded execution over n x n clusters) mapping concurrent
-//!   requests onto cluster-cycle timelines via `coordinator::op_cost`;
+//!   token-granular continuous batching with per-engine queues for
+//!   RedMulE vs SoftEx, mesh-sharded execution over n x n clusters)
+//!   driving the shared `crate::sim` discrete-event engine, with
+//!   service times via `coordinator::op_cost` and KV-cache residency
+//!   via `crate::sim::kv`;
 //! * [`stats`] — [`ServeReport`]: latency percentiles (p50/p95/p99),
-//!   sustained GOPS, queue depths, and energy at both paper operating
-//!   points.
+//!   time-to-first-token and time-between-tokens percentiles,
+//!   sustained GOPS, queue depths, KV spill volume, and energy at both
+//!   paper operating points, renderable as a table or JSON.
 //!
 //! Everything is deterministic under a fixed seed; see
 //! `examples/serving.rs` and `benches/serve_load_sweep.rs`.

@@ -67,6 +67,32 @@ impl RequestClass {
         }
     }
 
+    /// Kernel-level op sequence of the prompt/ingest phase only: the
+    /// full forward pass that produces the request's *first* output
+    /// (the first token, for generative classes). Decode steps are
+    /// costed separately per token by `server::CostModel`.
+    pub fn prompt_trace(&self) -> Vec<Op> {
+        trace_model(&self.model())
+    }
+
+    /// Tokens generated after the prompt phase (decode steps). Zero for
+    /// the single-pass vision/encoder classes.
+    pub fn decode_tokens(&self) -> usize {
+        match *self {
+            RequestClass::Gpt2Xl { decode, .. } => decode,
+            _ => 0,
+        }
+    }
+
+    /// Context length (cached tokens) at decode step `step`, counted
+    /// from 0. Only meaningful for classes with decode steps.
+    pub fn context_at(&self, step: usize) -> usize {
+        match *self {
+            RequestClass::Gpt2Xl { prompt, .. } => prompt + step,
+            _ => 0,
+        }
+    }
+
     /// Kernel-level op sequence of the whole request: the full forward
     /// pass, plus per-token decode slices for GPT-2 XL.
     pub fn trace(&self) -> Vec<Op> {
@@ -319,6 +345,55 @@ mod tests {
             }
         }
         assert_eq!(RequestClass::VitTiny.downgraded(), None);
+    }
+
+    #[test]
+    fn gpt2_downgrade_truncates_decode_to_four() {
+        // any decode budget above 4 is cut to exactly 4, keeping the prompt
+        for decode in [5usize, 8, 16, 100] {
+            assert_eq!(
+                RequestClass::Gpt2Xl { prompt: 128, decode }.downgraded(),
+                Some(RequestClass::Gpt2Xl { prompt: 128, decode: 4 }),
+                "decode {decode}"
+            );
+        }
+        assert_eq!(
+            RequestClass::Gpt2Xl { prompt: 64, decode: 16 }.downgraded(),
+            Some(RequestClass::Gpt2Xl { prompt: 64, decode: 4 })
+        );
+    }
+
+    #[test]
+    fn non_downgradable_classes_return_none() {
+        // already at (or below) the cheapest variant of each family
+        for class in [
+            RequestClass::VitTiny,
+            RequestClass::MobileBert { seq: 128 },
+            RequestClass::MobileBert { seq: 64 },
+            RequestClass::Gpt2Xl { prompt: 128, decode: 4 },
+            RequestClass::Gpt2Xl { prompt: 128, decode: 1 },
+            RequestClass::Gpt2Xl { prompt: 128, decode: 0 },
+        ] {
+            assert_eq!(class.downgraded(), None, "{}", class.label());
+        }
+    }
+
+    #[test]
+    fn prompt_trace_and_decode_tokens_partition_the_request() {
+        let class = RequestClass::Gpt2Xl { prompt: 64, decode: 4 };
+        assert_eq!(class.decode_tokens(), 4);
+        assert_eq!(class.context_at(0), 64);
+        assert_eq!(class.context_at(3), 67);
+        // prompt trace plus the per-step slices reassemble the full trace
+        let mut assembled = class.prompt_trace();
+        let model = class.model();
+        for step in 0..class.decode_tokens() {
+            assembled.extend(trace_decode_step(&model, class.context_at(step)));
+        }
+        assert_eq!(assembled, class.trace());
+        // single-pass classes have no decode phase
+        assert_eq!(RequestClass::VitBase.decode_tokens(), 0);
+        assert_eq!(RequestClass::VitBase.prompt_trace(), RequestClass::VitBase.trace());
     }
 
     #[test]

@@ -1,13 +1,22 @@
-//! Batch scheduling policies mapping request streams onto cluster-cycle
-//! timelines.
+//! Batch scheduling policies over the shared `sim` discrete-event
+//! engine.
 //!
 //! The simulator is deterministic: given the same request stream and
 //! configuration it produces bit-identical reports. Service times come
 //! from `coordinator::op_cost` — the exact cycle model the single-trace
 //! `execute_trace` path uses — so serving results stay anchored to the
-//! paper's calibration. The per-class cost memo is factored out as
-//! [`CostModel`] so the fleet dispatcher (`crate::fleet`) predicts queue
-//! delays with the same numbers the cluster simulation charges.
+//! paper's calibration. Requests are costed at *token* granularity: the
+//! prompt/ingest pass and every autoregressive decode step are separate
+//! phases, which is what lets continuous batching interleave at token
+//! boundaries and lets reports carry time-to-first-token / time-
+//! between-tokens percentiles. Decode-step costs are memoized by
+//! context length (the geometry is fixed, so a step's cost depends only
+//! on how many tokens it attends over), and the `sim::kv` model charges
+//! a DMA streaming cost for KV working sets that outgrow the TCDM.
+//!
+//! The per-class cost memo is factored out as [`CostModel`] so the
+//! fleet dispatcher (`crate::fleet`) predicts queue delays with the
+//! same numbers the cluster simulation charges.
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap};
@@ -15,6 +24,8 @@ use std::collections::{BTreeMap, BinaryHeap};
 use crate::coordinator::{op_cost, Engine, ExecConfig, Metrics};
 use crate::energy::{OP_EFFICIENCY, OP_THROUGHPUT};
 use crate::mesh::montecarlo::mesh_slowdown;
+use crate::sim::{Engine as SimEngine, KvConfig, Resource, ResourcePool};
+use crate::workload::{trace_decode_step, Op};
 
 use super::request::{Request, RequestClass, WorkloadMix};
 use super::stats::{queue_depths, Latencies, ServeReport};
@@ -25,11 +36,13 @@ pub enum Policy {
     /// One global FIFO queue; each request occupies a whole cluster for
     /// its full service time.
     Fifo,
-    /// Continuous batching: per-cluster per-engine ready queues for the
-    /// two accelerators (RedMulE vs SoftEx), scheduled event-driven so
-    /// one request's matmuls backfill the tensor unit while another is
-    /// in its softmax phase. Core elementwise glue is latency-only (the
-    /// 8 cores absorb it without cross-request contention).
+    /// Continuous batching: per-cluster serial resources for the two
+    /// accelerators (RedMulE vs SoftEx), scheduled event-driven at
+    /// token granularity, so one request's decode tokens backfill the
+    /// tensor unit while another is in its softmax phase and new
+    /// requests slot in between a long generation's tokens. Core
+    /// elementwise glue is latency-only (the 8 cores absorb it without
+    /// cross-request contention).
     ContinuousBatching,
     /// Each request is sharded round-robin across all n x n clusters
     /// (the Fig. 15 dataflow) and pays the Monte Carlo NoC conflict
@@ -38,6 +51,12 @@ pub enum Policy {
 }
 
 impl Policy {
+    pub const ALL: [Policy; 3] = [
+        Policy::Fifo,
+        Policy::ContinuousBatching,
+        Policy::MeshSharded,
+    ];
+
     pub fn label(&self) -> &'static str {
         match self {
             Policy::Fifo => "fifo",
@@ -47,15 +66,19 @@ impl Policy {
     }
 }
 
-/// Server configuration: mesh size, policy, per-cluster execution config.
+/// Server configuration: mesh size, policy, per-cluster execution
+/// config, and the KV-cache residency model.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub mesh_n: usize,
     pub policy: Policy,
     pub exec: ExecConfig,
+    /// KV-cache residency model for decode phases; defaults to the
+    /// idealized resident cache (no spill cost).
+    pub kv: KvConfig,
     /// Monte Carlo trials for the NoC slowdown (MeshSharded only).
     pub noc_trials: u32,
-    /// Seed for the NoC Monte Carlo.
+    /// Seed for the NoC Monte Carlo and the simulation engine.
     pub seed: u64,
 }
 
@@ -66,6 +89,7 @@ impl ServerConfig {
             mesh_n,
             policy,
             exec: ExecConfig::paper_accelerated(),
+            kv: KvConfig::default(),
             noc_trials: 4096,
             seed: 0x5EED,
         }
@@ -76,31 +100,38 @@ impl ServerConfig {
     }
 }
 
-/// One engine-occupancy segment of a request.
+/// One engine-occupancy segment of a request phase.
 #[derive(Clone, Copy, Debug)]
 struct Segment {
     engine: Engine,
     cycles: u64,
 }
 
-/// Pre-resolved cost of one request class under an `ExecConfig`.
+/// Pre-resolved cost of one token-producing phase: the prompt/ingest
+/// pass or a single decode step (including any KV spill DMA).
 #[derive(Clone, Debug)]
-struct ClassCost {
+struct PhaseCost {
     /// Adjacent same-engine ops merged into engine segments.
     segments: Vec<Segment>,
     /// Total engine-occupancy cycles (sum over segments).
-    service_cycles: u64,
+    cycles: u64,
     ops: u64,
     energy_j_throughput: f64,
     energy_j_efficiency: f64,
+    /// KV bytes DMA-streamed by this phase (0 unless spilling).
+    kv_spill_bytes: u64,
 }
 
-fn class_cost(exec: &ExecConfig, class: RequestClass) -> ClassCost {
+fn phase_cost(exec: &ExecConfig, trace: &[Op]) -> PhaseCost {
     let mut segments: Vec<Segment> = Vec::new();
     let mut metrics = Metrics::default();
     let mut ops = 0u64;
-    for op in class.trace() {
-        let cost = op_cost(exec, &op);
+    let mut kv_spill_bytes = 0u64;
+    for op in trace {
+        if let Op::KvSpill { bytes } = *op {
+            kv_spill_bytes += bytes as u64;
+        }
+        let cost = op_cost(exec, op);
         ops += cost.ops;
         if cost.cycles > 0 {
             match segments.last_mut() {
@@ -113,30 +144,73 @@ fn class_cost(exec: &ExecConfig, class: RequestClass) -> ClassCost {
         }
         metrics.add_cost(&cost);
     }
-    ClassCost {
-        service_cycles: segments.iter().map(|s| s.cycles).sum(),
+    PhaseCost {
+        cycles: segments.iter().map(|s| s.cycles).sum(),
         segments,
         ops,
         energy_j_throughput: metrics.energy_j(&OP_THROUGHPUT),
         energy_j_efficiency: metrics.energy_j(&OP_EFFICIENCY),
+        kv_spill_bytes,
     }
 }
 
-/// Memoized per-class request costs under one [`ExecConfig`], resolved
-/// through `coordinator::op_cost` — the same cycle model as
-/// `execute_trace`. Shared by [`BatchScheduler`] and the fleet
-/// dispatcher's admission-control latency predictor.
+/// Pre-resolved cost of one request class under an `ExecConfig`: the
+/// token phases plus their aggregates.
+#[derive(Clone, Debug)]
+struct ClassCost {
+    /// Phase 0 is the prompt pass; phases 1.. are decode steps.
+    phases: Vec<PhaseCost>,
+    /// Total engine-occupancy cycles (sum over phases).
+    service_cycles: u64,
+    ops: u64,
+    energy_j_throughput: f64,
+    energy_j_efficiency: f64,
+    kv_spill_bytes: u64,
+}
+
+impl ClassCost {
+    fn from_phases(phases: Vec<PhaseCost>) -> Self {
+        Self {
+            service_cycles: phases.iter().map(|p| p.cycles).sum(),
+            ops: phases.iter().map(|p| p.ops).sum(),
+            energy_j_throughput: phases.iter().map(|p| p.energy_j_throughput).sum(),
+            energy_j_efficiency: phases.iter().map(|p| p.energy_j_efficiency).sum(),
+            kv_spill_bytes: phases.iter().map(|p| p.kv_spill_bytes).sum(),
+            phases,
+        }
+    }
+}
+
+/// Memoized per-class request costs under one [`ExecConfig`] and
+/// [`KvConfig`], resolved through `coordinator::op_cost` — the same
+/// cycle model as `execute_trace`. Decode-step phases are additionally
+/// memoized by context length (`decode_steps`), so costing a
+/// `decode`-token request builds at most `decode` *new* step traces and
+/// later requests whose contexts overlap reuse them outright. Shared by
+/// [`BatchScheduler`] and the fleet dispatcher's admission-control
+/// latency predictor.
 #[derive(Clone, Debug)]
 pub struct CostModel {
     exec: ExecConfig,
+    kv: KvConfig,
     costs: BTreeMap<RequestClass, ClassCost>,
+    /// Decode-step phase memo keyed by context length. Sound because
+    /// only GPT-2 XL classes decode and `trace_decode_step` depends
+    /// only on the (fixed) geometry and the context, never the prompt.
+    decode_steps: BTreeMap<usize, PhaseCost>,
 }
 
 impl CostModel {
     pub fn new(exec: ExecConfig) -> Self {
+        Self::with_kv(exec, KvConfig::default())
+    }
+
+    pub fn with_kv(exec: ExecConfig, kv: KvConfig) -> Self {
         Self {
             exec,
+            kv,
             costs: BTreeMap::new(),
+            decode_steps: BTreeMap::new(),
         }
     }
 
@@ -144,10 +218,33 @@ impl CostModel {
         &self.exec
     }
 
+    pub fn kv(&self) -> &KvConfig {
+        &self.kv
+    }
+
+    /// Distinct decode-step contexts resolved so far (memo size).
+    pub fn decode_steps_resolved(&self) -> usize {
+        self.decode_steps.len()
+    }
+
     fn resolve(&mut self, class: RequestClass) -> &ClassCost {
-        self.costs
-            .entry(class)
-            .or_insert_with(|| class_cost(&self.exec, class))
+        if !self.costs.contains_key(&class) {
+            let mut phases = vec![phase_cost(&self.exec, &class.prompt_trace())];
+            let model = class.model();
+            for step in 0..class.decode_tokens() {
+                let ctx = class.context_at(step);
+                if !self.decode_steps.contains_key(&ctx) {
+                    let mut trace = vec![Op::KvSpill {
+                        bytes: self.kv.spill_bytes(&model, ctx) as usize,
+                    }];
+                    trace.extend(trace_decode_step(&model, ctx));
+                    self.decode_steps.insert(ctx, phase_cost(&self.exec, &trace));
+                }
+                phases.push(self.decode_steps.get(&ctx).expect("just inserted").clone());
+            }
+            self.costs.insert(class, ClassCost::from_phases(phases));
+        }
+        self.costs.get(&class).expect("just inserted")
     }
 
     /// Resolved cost entry; panics unless previously resolved.
@@ -157,7 +254,8 @@ impl CostModel {
             .expect("request class cost not resolved")
     }
 
-    /// Uncontended single-cluster service time of a class, cycles.
+    /// Uncontended single-cluster service time of a class, cycles
+    /// (including any KV spill DMA under a spilling [`KvConfig`]).
     pub fn service_cycles(&mut self, class: RequestClass) -> u64 {
         self.resolve(class).service_cycles
     }
@@ -173,6 +271,27 @@ impl CostModel {
         (c.energy_j_throughput, c.energy_j_efficiency)
     }
 
+    /// KV bytes one request DMA-streams over all its decode steps.
+    pub fn kv_spill_bytes(&mut self, class: RequestClass) -> u64 {
+        self.resolve(class).kv_spill_bytes
+    }
+
+    /// Cumulative engine-occupancy cycles at each token boundary of a
+    /// class: prompt completion first, then each decode step. Used to
+    /// place token timestamps inside exclusively-served blocks (FIFO /
+    /// mesh-sharded / spray).
+    pub fn token_cums(&mut self, class: RequestClass) -> Vec<u64> {
+        let cost = self.resolve(class);
+        let mut cum = 0u64;
+        cost.phases
+            .iter()
+            .map(|p| {
+                cum += p.cycles;
+                cum
+            })
+            .collect()
+    }
+
     /// Weighted mean uncontended service time of a mix, cycles — the
     /// capacity anchor the rho-style load sweeps and the fleet CLI's
     /// `--rho` flag express offered load against.
@@ -185,8 +304,53 @@ impl CostModel {
     }
 }
 
-/// The batch scheduler: simulates a request stream under a policy and
-/// produces a [`ServeReport`].
+/// Per-request outcome of one simulation: the completion cycle plus the
+/// completion cycle of every generated token (the prompt's first token
+/// first, then each decode step's token).
+#[derive(Clone, Debug, Default)]
+struct Served {
+    completion: u64,
+    tokens: Vec<u64>,
+}
+
+/// Proportional token placement for a request served as one exclusive
+/// block: cumulative phase cycles `cums` (out of `total` uncontended
+/// cycles) are scaled into a block of `service` cycles starting at
+/// `start`, with the final token clamped to the block end so a derated
+/// block (mesh-sharded / spray scaling) completes exactly where the
+/// whole-block model puts it. Shared by FIFO / mesh-sharded here and
+/// the fleet's spray path.
+pub(crate) fn place_tokens(cums: &[u64], total: u64, start: u64, service: u64) -> Vec<u64> {
+    let total = total.max(1);
+    let mut tokens: Vec<u64> = cums
+        .iter()
+        .map(|&cum| start + (cum as u128 * service as u128 / total as u128) as u64)
+        .collect();
+    if let Some(last) = tokens.last_mut() {
+        *last = start + service;
+    }
+    tokens
+}
+
+/// [`Served`] record for a request occupying one exclusive block.
+fn tokenize_block(cost: &ClassCost, start: u64, service: u64) -> Served {
+    let mut cum = 0u64;
+    let cums: Vec<u64> = cost
+        .phases
+        .iter()
+        .map(|p| {
+            cum += p.cycles;
+            cum
+        })
+        .collect();
+    Served {
+        completion: start + service,
+        tokens: place_tokens(&cums, cost.service_cycles, start, service),
+    }
+}
+
+/// The batch scheduler: simulates a request stream under a policy on
+/// the shared `sim` engine and produces a [`ServeReport`].
 pub struct BatchScheduler {
     cfg: ServerConfig,
     costs: CostModel,
@@ -194,7 +358,7 @@ pub struct BatchScheduler {
 
 impl BatchScheduler {
     pub fn new(cfg: ServerConfig) -> Self {
-        let costs = CostModel::new(cfg.exec);
+        let costs = CostModel::with_kv(cfg.exec, cfg.kv);
         Self { cfg, costs }
     }
 
@@ -223,182 +387,252 @@ impl BatchScheduler {
             "requests must be sorted by arrival"
         );
         self.resolve_costs(requests);
-        let completions = match self.cfg.policy {
+        let served = match self.cfg.policy {
             Policy::Fifo => self.run_fifo(requests),
             Policy::ContinuousBatching => self.run_continuous(requests),
             Policy::MeshSharded => self.run_mesh_sharded(requests),
         };
-        self.build_report(requests, &completions)
+        self.build_report(requests, &served)
     }
 
-    fn run_fifo(&self, requests: &[Request]) -> Vec<u64> {
-        let clusters = self.cfg.clusters();
-        let mut free = vec![0u64; clusters];
-        let mut completions = Vec::with_capacity(requests.len());
-        for r in requests {
-            let cost = self.costs.get(r.class);
-            let (ci, _) = free
-                .iter()
-                .enumerate()
-                .min_by_key(|&(i, f)| (*f, i))
-                .expect("at least one cluster");
-            let start = r.arrival.max(free[ci]);
-            let end = start + cost.service_cycles.max(1);
-            free[ci] = end;
-            completions.push(end);
+    /// FIFO over the engine: arrivals are events; each request occupies
+    /// the earliest-free cluster resource for its whole service time.
+    fn run_fifo(&self, requests: &[Request]) -> Vec<Served> {
+        let mut engine: SimEngine<usize> = SimEngine::new(self.cfg.seed);
+        for (i, r) in requests.iter().enumerate() {
+            engine.schedule(r.arrival, i);
         }
-        completions
+        let mut clusters = ResourcePool::new("cluster", self.cfg.clusters());
+        let mut served = vec![Served::default(); requests.len()];
+        engine.run(|eng, i| {
+            let cost = self.costs.get(requests[i].class);
+            let service = cost.service_cycles.max(1);
+            let ci = clusters.earliest_free();
+            let start = clusters.get_mut(ci).acquire(eng.now(), service);
+            served[i] = tokenize_block(cost, start, service);
+        });
+        served
     }
 
-    /// Event-driven list scheduling per cluster: each request is a chain
-    /// of segments; RedMulE and SoftEx are serial resources with a ready
-    /// queue each (FIFO by ready time), core glue advances the chain
-    /// without cross-request contention. Events are executed in global
-    /// start-time order, so an accelerator backfills with whichever
-    /// request is ready the moment it frees up.
-    fn run_continuous(&self, requests: &[Request]) -> Vec<u64> {
+    /// Token-granular continuous batching: every request is a chain of
+    /// phases (prompt, then one per decode token), each phase a chain
+    /// of engine segments. RedMulE and SoftEx are serial resources fed
+    /// by FIFO ready queues; core glue and KV spill DMA advance a chain
+    /// without cross-request contention. Because chains re-enter the
+    /// ready queues after every segment, other requests' phases are
+    /// admitted between one request's tokens — admission and preemption
+    /// happen at token boundaries for free.
+    fn run_continuous(&self, requests: &[Request]) -> Vec<Served> {
+        struct Chain<'a> {
+            phases: &'a [PhaseCost],
+            cluster: usize,
+            phase: usize,
+            seg: usize,
+            t: u64,
+            tokens: Vec<u64>,
+        }
+
+        impl Chain<'_> {
+            /// Advance through uncontended core segments and token
+            /// boundaries; return the ready accelerator (0 = tensor
+            /// unit, 1 = SoftEx) or `None` when the chain is finished.
+            fn advance(&mut self) -> Option<usize> {
+                // copy the shared slice ref out so phase/segment borrows
+                // are independent of `self` while we mutate its fields
+                let phases = self.phases;
+                loop {
+                    let phase = phases.get(self.phase)?;
+                    let Some(seg) = phase.segments.get(self.seg) else {
+                        // token boundary: this phase's token is done
+                        self.tokens.push(self.t);
+                        self.phase += 1;
+                        self.seg = 0;
+                        continue;
+                    };
+                    match seg.engine {
+                        Engine::Cores => {
+                            self.t += seg.cycles;
+                            self.seg += 1;
+                        }
+                        Engine::TensorUnit => return Some(0),
+                        Engine::SoftEx => return Some(1),
+                    }
+                }
+            }
+        }
+
+        #[derive(Clone, Copy)]
+        enum Ev {
+            /// A chain's next accelerator segment became ready.
+            Enqueue { chain: usize, unit: usize },
+            /// An accelerator finished a chain's segment.
+            Done { chain: usize, unit: usize },
+        }
+
+        /// FIFO ready queue of one accelerator: (ready cycle, chain).
+        type ReadyQueue = BinaryHeap<Reverse<(u64, usize)>>;
+
+        /// Advance a chain and either queue its next accelerator
+        /// segment or record its completion.
+        fn settle(
+            eng: &mut SimEngine<Ev>,
+            chains: &mut [Chain<'_>],
+            served: &mut [Served],
+            arrivals: &[u64],
+            chain: usize,
+        ) {
+            match chains[chain].advance() {
+                Some(unit) => {
+                    let at = chains[chain].t;
+                    eng.schedule(at, Ev::Enqueue { chain, unit });
+                }
+                None => {
+                    let c = &mut chains[chain];
+                    let completion = c.t.max(arrivals[chain] + 1);
+                    let mut tokens = std::mem::take(&mut c.tokens);
+                    if let Some(last) = tokens.last_mut() {
+                        *last = completion;
+                    }
+                    served[chain] = Served { completion, tokens };
+                }
+            }
+        }
+
+        /// Start the lowest-(ready, chain) queued segment if the unit
+        /// is free.
+        fn try_dispatch(
+            eng: &mut SimEngine<Ev>,
+            units: &mut ResourcePool,
+            queues: &mut [ReadyQueue],
+            chains: &[Chain<'_>],
+            slot: usize,
+            unit: usize,
+        ) {
+            if units.get(slot).free_at() > eng.now() {
+                return; // busy; its Done event re-dispatches
+            }
+            let Some(Reverse((_, chain))) = queues[slot].pop() else {
+                return;
+            };
+            let c = &chains[chain];
+            let cycles = c.phases[c.phase].segments[c.seg].cycles;
+            units.get_mut(slot).acquire(eng.now(), cycles);
+            eng.schedule_in(cycles, Ev::Done { chain, unit });
+        }
+
         let clusters = self.cfg.clusters();
-        // deterministic least-accumulated-service admission
+        // deterministic least-accumulated-service admission (unchanged
+        // from the pre-`sim` scheduler)
         let mut load = vec![0u64; clusters];
-        let mut members: Vec<Vec<usize>> = vec![Vec::new(); clusters];
-        for (idx, r) in requests.iter().enumerate() {
+        let mut chains: Vec<Chain> = Vec::with_capacity(requests.len());
+        for r in requests {
             let cost = self.costs.get(r.class);
             let ci = (0..clusters)
                 .min_by_key(|&i| (load[i], i))
                 .expect("at least one cluster");
             load[ci] += cost.service_cycles;
-            members[ci].push(idx);
+            chains.push(Chain {
+                phases: &cost.phases,
+                cluster: ci,
+                phase: 0,
+                seg: 0,
+                t: r.arrival,
+                tokens: Vec::with_capacity(cost.phases.len()),
+            });
         }
-        let mut completions = vec![0u64; requests.len()];
-        for member in &members {
-            self.simulate_cluster(requests, member, &mut completions);
+
+        let arrivals: Vec<u64> = requests.iter().map(|r| r.arrival).collect();
+        let mut served = vec![Served::default(); requests.len()];
+        // two serial accelerator resources per cluster: slot = 2c + unit
+        let mut units = ResourcePool::new("accel", clusters * 2);
+        let mut queues: Vec<ReadyQueue> = (0..clusters * 2).map(|_| BinaryHeap::new()).collect();
+        let mut engine: SimEngine<Ev> = SimEngine::new(self.cfg.seed);
+        for chain in 0..chains.len() {
+            settle(&mut engine, &mut chains, &mut served, &arrivals, chain);
         }
-        completions
+        engine.run(|eng, ev| match ev {
+            Ev::Enqueue { chain, unit } => {
+                let slot = chains[chain].cluster * 2 + unit;
+                queues[slot].push(Reverse((eng.now(), chain)));
+                try_dispatch(eng, &mut units, &mut queues, &chains, slot, unit);
+            }
+            Ev::Done { chain, unit } => {
+                let slot = chains[chain].cluster * 2 + unit;
+                {
+                    let c = &mut chains[chain];
+                    c.t = eng.now();
+                    c.seg += 1;
+                }
+                settle(eng, &mut chains, &mut served, &arrivals, chain);
+                try_dispatch(eng, &mut units, &mut queues, &chains, slot, unit);
+            }
+        });
+        served
     }
 
-    fn simulate_cluster(
-        &self,
-        requests: &[Request],
-        member: &[usize],
-        completions: &mut [u64],
-    ) {
-        struct Chain<'a> {
-            segs: &'a [Segment],
-            next: usize,
-            t: u64,
-        }
-        // Advance through uncontended core segments; return the ready
-        // accelerator index (0 = tensor unit, 1 = SoftEx) or None when
-        // the chain is finished.
-        fn advance(chain: &mut Chain) -> Option<usize> {
-            while chain.next < chain.segs.len() {
-                let seg = chain.segs[chain.next];
-                match seg.engine {
-                    Engine::Cores => {
-                        chain.t += seg.cycles;
-                        chain.next += 1;
-                    }
-                    Engine::TensorUnit => return Some(0),
-                    Engine::SoftEx => return Some(1),
-                }
-            }
-            None
-        }
-
-        let mut chains: Vec<Chain> = member
-            .iter()
-            .map(|&i| Chain {
-                segs: &self.costs.get(requests[i].class).segments,
-                next: 0,
-                t: requests[i].arrival,
-            })
-            .collect();
-        // ready queues per accelerator, keyed (ready time, chain index)
-        let mut queues: [BinaryHeap<Reverse<(u64, usize)>>; 2] =
-            [BinaryHeap::new(), BinaryHeap::new()];
-        let mut free = [0u64; 2];
-        let mut remaining = chains.len();
-
-        for ci in 0..chains.len() {
-            match advance(&mut chains[ci]) {
-                Some(e) => queues[e].push(Reverse((chains[ci].t, ci))),
-                None => {
-                    completions[member[ci]] = chains[ci].t.max(requests[member[ci]].arrival + 1);
-                    remaining -= 1;
-                }
-            }
-        }
-        while remaining > 0 {
-            // the globally earliest next start across both accelerators
-            let mut best: Option<(u64, usize)> = None;
-            for (e, queue) in queues.iter().enumerate() {
-                if let Some(&Reverse((ready, _))) = queue.peek() {
-                    let start = ready.max(free[e]);
-                    if best.map_or(true, |b| (start, e) < b) {
-                        best = Some((start, e));
-                    }
-                }
-            }
-            let (start, e) = best.expect("ready queue cannot be empty mid-run");
-            let Reverse((_, ci)) = queues[e].pop().expect("peeked above");
-            let chain = &mut chains[ci];
-            let end = start + chain.segs[chain.next].cycles;
-            free[e] = end;
-            chain.t = end;
-            chain.next += 1;
-            match advance(chain) {
-                Some(ne) => queues[ne].push(Reverse((chain.t, ci))),
-                None => {
-                    completions[member[ci]] = chain.t.max(requests[member[ci]].arrival + 1);
-                    remaining -= 1;
-                }
-            }
-        }
-    }
-
-    fn run_mesh_sharded(&self, requests: &[Request]) -> Vec<u64> {
+    /// Mesh-sharded over the engine: the whole mesh is one serial
+    /// resource; each request's block is derated by the cluster count
+    /// and inflated by the NoC conflict slowdown.
+    fn run_mesh_sharded(&self, requests: &[Request]) -> Vec<Served> {
         let clusters = self.cfg.clusters();
         let slow = if clusters > 1 {
             mesh_slowdown(self.cfg.mesh_n, self.cfg.noc_trials, self.cfg.seed)
         } else {
             0.0
         };
-        let mut free = 0u64;
-        let mut completions = Vec::with_capacity(requests.len());
-        for r in requests {
-            let cost = self.costs.get(r.class);
+        let mut engine: SimEngine<usize> = SimEngine::new(self.cfg.seed);
+        for (i, r) in requests.iter().enumerate() {
+            engine.schedule(r.arrival, i);
+        }
+        let mut mesh = Resource::new("mesh");
+        let mut served = vec![Served::default(); requests.len()];
+        engine.run(|eng, i| {
+            let cost = self.costs.get(requests[i].class);
             let service = (cost.service_cycles as f64 * (1.0 + slow) / clusters as f64)
                 .ceil()
                 .max(1.0) as u64;
-            let start = r.arrival.max(free);
-            free = start + service;
-            completions.push(free);
-        }
-        completions
+            let start = mesh.acquire(eng.now(), service);
+            served[i] = tokenize_block(cost, start, service);
+        });
+        served
     }
 
-    fn build_report(&self, requests: &[Request], completions: &[u64]) -> ServeReport {
+    fn build_report(&self, requests: &[Request], served: &[Served]) -> ServeReport {
         let latencies: Vec<u64> = requests
             .iter()
-            .zip(completions)
-            .map(|(r, &c)| c - r.arrival)
+            .zip(served)
+            .map(|(r, s)| s.completion - r.arrival)
             .collect();
+        let ttft: Vec<u64> = requests
+            .iter()
+            .zip(served)
+            .map(|(r, s)| s.tokens.first().copied().unwrap_or(s.completion) - r.arrival)
+            .collect();
+        let mut tbt: Vec<u64> = Vec::new();
+        for s in served {
+            for w in s.tokens.windows(2) {
+                tbt.push(w[1] - w[0]);
+            }
+        }
+        let completions: Vec<u64> = served.iter().map(|s| s.completion).collect();
 
         let first_arrival = requests.iter().map(|r| r.arrival).min().unwrap_or(0);
         let last_completion = completions.iter().copied().max().unwrap_or(0);
         let makespan = (last_completion - first_arrival).max(1);
 
         let (mut total_ops, mut busy, mut e_thr, mut e_eff) = (0u64, 0u64, 0.0f64, 0.0f64);
+        let mut kv_spill_bytes = 0u64;
         for r in requests {
             let cost = self.costs.get(r.class);
             total_ops += cost.ops;
             busy += cost.service_cycles;
             e_thr += cost.energy_j_throughput;
             e_eff += cost.energy_j_efficiency;
+            kv_spill_bytes += cost.kv_spill_bytes;
         }
 
         let arrivals: Vec<u64> = requests.iter().map(|r| r.arrival).collect();
-        let (mean_queue_depth, max_queue_depth) = queue_depths(&arrivals, completions);
+        let (mean_queue_depth, max_queue_depth) = queue_depths(&arrivals, &completions);
 
         ServeReport {
             label: format!(
@@ -410,6 +644,8 @@ impl BatchScheduler {
             clusters: self.cfg.clusters(),
             n_requests: requests.len(),
             latencies: Latencies::from_unsorted(latencies),
+            ttft: Latencies::from_unsorted(ttft),
+            tbt: Latencies::from_unsorted(tbt),
             makespan,
             total_ops,
             busy_cycles: busy,
@@ -417,6 +653,7 @@ impl BatchScheduler {
             energy_j_efficiency: e_eff,
             mean_queue_depth,
             max_queue_depth,
+            kv_spill_bytes,
         }
     }
 }
@@ -437,9 +674,9 @@ mod tests {
 
     #[test]
     fn segments_merge_adjacent_engines() {
-        let cost = class_cost(
+        let cost = phase_cost(
             &ExecConfig::paper_accelerated(),
-            RequestClass::VitTiny,
+            &RequestClass::VitTiny.prompt_trace(),
         );
         assert!(!cost.segments.is_empty());
         assert!(cost
@@ -447,7 +684,7 @@ mod tests {
             .windows(2)
             .all(|w| w[0].engine != w[1].engine));
         assert_eq!(
-            cost.service_cycles,
+            cost.cycles,
             cost.segments.iter().map(|s| s.cycles).sum::<u64>()
         );
     }
@@ -460,6 +697,34 @@ mod tests {
         let mut s = BatchScheduler::new(ServerConfig::new(1, Policy::Fifo));
         let agg = execute_trace(&exec, &class.trace());
         assert_eq!(s.service_cycles(class), agg.total_cycles());
+    }
+
+    #[test]
+    fn gpt2_service_is_prompt_plus_decode_steps() {
+        // the token-phase decomposition must not change the total: the
+        // resident-KV service time equals the monolithic trace cost
+        use crate::coordinator::execute_trace;
+        let exec = ExecConfig::paper_accelerated();
+        let class = RequestClass::Gpt2Xl { prompt: 32, decode: 3 };
+        let mut model = CostModel::new(exec);
+        let agg = execute_trace(&exec, &class.trace());
+        assert_eq!(model.service_cycles(class), agg.total_cycles());
+        // one phase per token plus the prompt
+        assert_eq!(model.token_cums(class).len(), 4);
+    }
+
+    #[test]
+    fn decode_step_memo_is_shared_across_classes() {
+        let mut model = CostModel::new(ExecConfig::paper_accelerated());
+        model.service_cycles(RequestClass::Gpt2Xl { prompt: 16, decode: 8 });
+        let resolved = model.decode_steps_resolved();
+        assert_eq!(resolved, 8);
+        // contexts 18..24 are a subset of the already-resolved 16..24:
+        // no new step traces are built
+        model.service_cycles(RequestClass::Gpt2Xl { prompt: 18, decode: 6 });
+        assert_eq!(model.decode_steps_resolved(), resolved);
+        model.service_cycles(RequestClass::Gpt2Xl { prompt: 16, decode: 10 });
+        assert_eq!(model.decode_steps_resolved(), resolved + 2);
     }
 
     #[test]
@@ -541,6 +806,8 @@ mod tests {
         let a = BatchScheduler::new(ServerConfig::new(2, Policy::ContinuousBatching)).run(&reqs);
         let b = BatchScheduler::new(ServerConfig::new(2, Policy::ContinuousBatching)).run(&reqs);
         assert_eq!(a.latencies, b.latencies);
+        assert_eq!(a.ttft, b.ttft);
+        assert_eq!(a.tbt, b.tbt);
         assert_eq!(a.p99(), b.p99());
         assert_eq!(a.makespan, b.makespan);
     }
@@ -559,16 +826,80 @@ mod tests {
     }
 
     #[test]
+    fn ttft_never_exceeds_latency() {
+        // pairwise ttft <= latency, so the percentiles dominate too
+        let reqs = stream(21, 120, 1.0e6);
+        for policy in Policy::ALL {
+            let rep = BatchScheduler::new(ServerConfig::new(2, policy)).run(&reqs);
+            assert_eq!(rep.ttft.len(), rep.n_requests, "{}", rep.label);
+            for p in [50.0, 95.0, 99.0] {
+                assert!(
+                    rep.ttft.percentile(p) <= rep.latencies.percentile(p),
+                    "{} p{p}",
+                    rep.label
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tbt_samples_come_from_decode_tokens() {
+        // a gpt2-only stream yields exactly `decode` gaps per request;
+        // a vision-only stream yields none
+        let gpt: Vec<Request> = RequestGen::new(
+            23,
+            ArrivalProcess::Poisson { mean_gap: 1.0e8 },
+            WorkloadMix::single(RequestClass::Gpt2Xl { prompt: 16, decode: 6 }),
+        )
+        .generate(10);
+        let vit: Vec<Request> = RequestGen::new(
+            23,
+            ArrivalProcess::Poisson { mean_gap: 1.0e8 },
+            WorkloadMix::single(RequestClass::VitTiny),
+        )
+        .generate(10);
+        for policy in Policy::ALL {
+            let g = BatchScheduler::new(ServerConfig::new(1, policy)).run(&gpt);
+            assert_eq!(g.tbt.len(), 10 * 6, "{}", g.label);
+            assert!(g.tbt.percentile(50.0) > 0, "{}", g.label);
+            let v = BatchScheduler::new(ServerConfig::new(1, policy)).run(&vit);
+            assert!(v.tbt.is_empty(), "{}", v.label);
+        }
+    }
+
+    #[test]
+    fn kv_spill_config_slows_decode_service() {
+        let mut resident = CostModel::new(ExecConfig::paper_accelerated());
+        let mut spill = CostModel::with_kv(
+            ExecConfig::paper_accelerated(),
+            KvConfig::tcdm_spill(),
+        );
+        let class = RequestClass::Gpt2Xl { prompt: 128, decode: 4 };
+        assert!(spill.service_cycles(class) > resident.service_cycles(class));
+        assert!(spill.kv_spill_bytes(class) > 0);
+        assert_eq!(resident.kv_spill_bytes(class), 0);
+        // vision classes have no decode phase, so no spill either way
+        assert_eq!(spill.kv_spill_bytes(RequestClass::VitBase), 0);
+        assert_eq!(
+            spill.service_cycles(RequestClass::VitBase),
+            resident.service_cycles(RequestClass::VitBase)
+        );
+    }
+
+    #[test]
     fn empty_stream_yields_empty_report() {
-        for policy in [Policy::Fifo, Policy::ContinuousBatching, Policy::MeshSharded] {
+        for policy in Policy::ALL {
             let mut s = BatchScheduler::new(ServerConfig::new(2, policy));
             let rep = s.run(&[]);
             assert_eq!(rep.n_requests, 0, "{}", rep.label);
             assert!(rep.latencies.is_empty());
+            assert!(rep.ttft.is_empty());
+            assert!(rep.tbt.is_empty());
             assert_eq!(rep.p50(), 0);
             assert_eq!(rep.p99(), 0);
             assert_eq!(rep.total_ops, 0);
             assert_eq!(rep.busy_cycles, 0);
+            assert_eq!(rep.kv_spill_bytes, 0);
             assert_eq!(rep.makespan, 1); // floor keeps ratios finite
             assert_eq!(rep.utilization(), 0.0);
             assert_eq!(rep.mean_queue_depth, 0.0);

@@ -101,6 +101,13 @@ pub struct ServeReport {
     pub n_requests: usize,
     /// Per-request latencies (completion - arrival), sorted, cycles.
     pub latencies: Latencies,
+    /// Time to first token per request (prompt completion - arrival;
+    /// the whole latency for single-pass classes), sorted, cycles.
+    pub ttft: Latencies,
+    /// Time between consecutive generated tokens, sorted, cycles. One
+    /// sample per decode token; empty when the stream has no
+    /// generative requests.
+    pub tbt: Latencies,
     /// First arrival to last completion, cycles (at least 1).
     pub makespan: u64,
     /// Total countable OPs served.
@@ -117,6 +124,9 @@ pub struct ServeReport {
     pub mean_queue_depth: f64,
     /// Peak number of in-system requests observed at arrival instants.
     pub max_queue_depth: usize,
+    /// KV-cache bytes DMA-streamed because decode working sets outgrew
+    /// the TCDM (0 under the resident policy, `sim::kv`).
+    pub kv_spill_bytes: u64,
 }
 
 impl ServeReport {
@@ -136,6 +146,30 @@ impl ServeReport {
 
     pub fn p99(&self) -> u64 {
         self.percentile(99.0)
+    }
+
+    pub fn ttft_p50(&self) -> u64 {
+        self.ttft.percentile(50.0)
+    }
+
+    pub fn ttft_p95(&self) -> u64 {
+        self.ttft.percentile(95.0)
+    }
+
+    pub fn ttft_p99(&self) -> u64 {
+        self.ttft.percentile(99.0)
+    }
+
+    pub fn tbt_p50(&self) -> u64 {
+        self.tbt.percentile(50.0)
+    }
+
+    pub fn tbt_p95(&self) -> u64 {
+        self.tbt.percentile(95.0)
+    }
+
+    pub fn tbt_p99(&self) -> u64 {
+        self.tbt.percentile(99.0)
     }
 
     /// Cycles to milliseconds at an operating point.
@@ -161,6 +195,8 @@ impl ServeReport {
             report::f(Self::ms(self.p50(), &OP_THROUGHPUT), 2),
             report::f(Self::ms(self.p95(), &OP_THROUGHPUT), 2),
             report::f(Self::ms(self.p99(), &OP_THROUGHPUT), 2),
+            report::f(Self::ms(self.ttft_p95(), &OP_THROUGHPUT), 2),
+            report::f(Self::ms(self.tbt_p95(), &OP_THROUGHPUT), 2),
             report::f(self.sustained_gops(&OP_THROUGHPUT), 0),
             report::pct(self.utilization()),
             report::f(self.mean_queue_depth, 1),
@@ -185,16 +221,60 @@ impl ServeReport {
             self.energy_j_efficiency,
             self.max_queue_depth
         ));
+        out.push_str(&format!(
+            "ttft p50/p95/p99 {:.2}/{:.2}/{:.2} ms | tbt p50/p95/p99 {:.2}/{:.2}/{:.2} ms | kv spill {:.1} MiB\n",
+            Self::ms(self.ttft_p50(), &OP_THROUGHPUT),
+            Self::ms(self.ttft_p95(), &OP_THROUGHPUT),
+            Self::ms(self.ttft_p99(), &OP_THROUGHPUT),
+            Self::ms(self.tbt_p50(), &OP_THROUGHPUT),
+            Self::ms(self.tbt_p95(), &OP_THROUGHPUT),
+            Self::ms(self.tbt_p99(), &OP_THROUGHPUT),
+            self.kv_spill_bytes as f64 / (1024.0 * 1024.0),
+        ));
         out
+    }
+
+    /// Hand-rolled machine-readable JSON (no external deps); cycle
+    /// metrics are emitted raw plus converted to milliseconds at the
+    /// throughput operating point.
+    pub fn to_json(&self) -> String {
+        report::json::Obj::new()
+            .str("label", &self.label)
+            .u64("clusters", self.clusters as u64)
+            .u64("n_requests", self.n_requests as u64)
+            .u64("p50_cycles", self.p50())
+            .u64("p95_cycles", self.p95())
+            .u64("p99_cycles", self.p99())
+            .f64("p99_ms", Self::ms(self.p99(), &OP_THROUGHPUT))
+            .u64("ttft_p50_cycles", self.ttft_p50())
+            .u64("ttft_p95_cycles", self.ttft_p95())
+            .u64("ttft_p99_cycles", self.ttft_p99())
+            .u64("tbt_p50_cycles", self.tbt_p50())
+            .u64("tbt_p95_cycles", self.tbt_p95())
+            .u64("tbt_p99_cycles", self.tbt_p99())
+            .u64("tbt_samples", self.tbt.len() as u64)
+            .u64("makespan_cycles", self.makespan)
+            .u64("total_ops", self.total_ops)
+            .u64("busy_cycles", self.busy_cycles)
+            .u64("kv_spill_bytes", self.kv_spill_bytes)
+            .f64("sustained_gops_08v", self.sustained_gops(&OP_THROUGHPUT))
+            .f64("utilization", self.utilization())
+            .f64("mean_queue_depth", self.mean_queue_depth)
+            .u64("max_queue_depth", self.max_queue_depth as u64)
+            .f64("energy_j_throughput", self.energy_j_throughput)
+            .f64("energy_j_efficiency", self.energy_j_efficiency)
+            .finish()
     }
 }
 
 /// Column headers shared by [`ServeReport::row`].
-pub const SUMMARY_HEADERS: [&str; 8] = [
+pub const SUMMARY_HEADERS: [&str; 10] = [
     "policy@mesh",
     "p50 ms",
     "p95 ms",
     "p99 ms",
+    "ttft95",
+    "tbt95",
     "GOPS",
     "util",
     "depth",
@@ -213,11 +293,14 @@ mod tests {
 
     fn report_with(latencies: Vec<u64>) -> ServeReport {
         let n = latencies.len();
+        let ttft: Vec<u64> = latencies.iter().map(|l| l / 2).collect();
         ServeReport {
             label: "test@1x1".into(),
             clusters: 1,
             n_requests: n,
             latencies: Latencies::from_unsorted(latencies),
+            ttft: Latencies::from_unsorted(ttft),
+            tbt: Latencies::from_unsorted(vec![10; n.min(3)]),
             makespan: 1_000_000,
             total_ops: 384_000_000,
             busy_cycles: 900_000,
@@ -225,6 +308,7 @@ mod tests {
             energy_j_efficiency: 2.0e-4,
             mean_queue_depth: 1.5,
             max_queue_depth: 4,
+            kv_spill_bytes: 0,
         }
     }
 
@@ -324,7 +408,36 @@ mod tests {
         let r = report_with((1..=10).collect());
         let t = r.render();
         assert!(t.contains("test@1x1"), "{t}");
+        assert!(t.contains("ttft p50/p95/p99"), "{t}");
         let s = summary_table("sweep", &[r.clone(), r]);
         assert_eq!(s.lines().count(), 5);
+    }
+
+    #[test]
+    fn token_percentiles_use_their_own_samples() {
+        let r = report_with((1..=100).collect());
+        // ttft samples are latency/2, so its p50 is floor(51/2) = 25
+        assert_eq!(r.ttft_p50(), 25);
+        assert!(r.ttft_p50() <= r.ttft_p95() && r.ttft_p95() <= r.ttft_p99());
+        assert_eq!(r.tbt_p50(), 10);
+        // empty tbt reports zero, never panics
+        let empty = report_with(Vec::new());
+        assert_eq!(empty.tbt_p99(), 0);
+        assert_eq!(empty.ttft_p99(), 0);
+    }
+
+    #[test]
+    fn json_report_is_well_formed() {
+        let r = report_with((1..=10).collect());
+        let j = r.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
+        assert!(j.contains("\"label\":\"test@1x1\""), "{j}");
+        assert!(j.contains("\"p99_cycles\":10"), "{j}");
+        assert!(j.contains("\"ttft_p95_cycles\":"), "{j}");
+        assert!(j.contains("\"tbt_p50_cycles\":10"), "{j}");
+        assert!(j.contains("\"kv_spill_bytes\":0"), "{j}");
+        // exactly one top-level object, no trailing comma artifacts
+        assert!(!j.contains(",}"), "{j}");
+        assert!(!j.contains("{,"), "{j}");
     }
 }

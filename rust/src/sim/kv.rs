@@ -1,0 +1,170 @@
+//! KV-cache residency against the cluster's 256 KiB TCDM.
+//!
+//! A GPT-2 XL decode step streams, layer by layer, the cached K and V
+//! matrices of every previous token through the attention matmuls. Per
+//! layer and token that is `2 * d_model` bf16 values (K plus V); the
+//! layer's KV working set must sit in the TCDM scratchpad while the
+//! step's `q K^T` / `p V` matmuls run. Once the context outgrows the
+//! scratchpad the overflow lives in L2/DRAM and must be DMA-streamed in
+//! for every decode step — double buffering hides latency but not
+//! bandwidth, so the spilled bytes cost `bytes / DMA_BYTES_PER_CYCLE`
+//! cycles of extra occupancy, charged through the
+//! `coordinator::op_cost` path as a `workload::Op::KvSpill` pseudo-op.
+//!
+//! [`KvPolicy::Resident`] is the idealized baseline (infinite
+//! scratchpad, zero spill cost) and the default everywhere, so the
+//! pre-existing serving semantics — and the FIFO golden values pinned
+//! by `rust/tests/determinism.rs` — are unchanged unless a caller opts
+//! into [`KvPolicy::TcdmSpill`].
+
+use crate::cluster::TCDM_BYTES;
+use crate::workload::ModelConfig;
+
+pub use crate::cluster::DMA_BYTES_PER_CYCLE;
+
+/// Bytes per bf16 value.
+const BF16_BYTES: u64 = 2;
+
+/// How KV-cache residency is modeled during decode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvPolicy {
+    /// Idealized: the whole cache is always resident, spill is free.
+    Resident,
+    /// TCDM-capped: the per-layer KV working set beyond
+    /// [`KvConfig::capacity_bytes`] is DMA-streamed every decode step.
+    TcdmSpill,
+}
+
+impl KvPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            KvPolicy::Resident => "resident",
+            KvPolicy::TcdmSpill => "spill",
+        }
+    }
+
+    /// Parse a CLI policy name; `None` for unknown names.
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "resident" => Some(KvPolicy::Resident),
+            "spill" | "tcdm-spill" => Some(KvPolicy::TcdmSpill),
+            _ => None,
+        }
+    }
+}
+
+/// KV-cache model configuration for one cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvConfig {
+    pub policy: KvPolicy,
+    /// Scratchpad bytes available to one layer's KV working set.
+    pub capacity_bytes: u64,
+}
+
+impl KvConfig {
+    /// The idealized resident-cache baseline (the default).
+    pub fn resident() -> Self {
+        Self {
+            policy: KvPolicy::Resident,
+            capacity_bytes: TCDM_BYTES as u64,
+        }
+    }
+
+    /// The TCDM-capped spill model at the paper's 256 KiB scratchpad.
+    pub fn tcdm_spill() -> Self {
+        Self {
+            policy: KvPolicy::TcdmSpill,
+            capacity_bytes: TCDM_BYTES as u64,
+        }
+    }
+
+    /// Bytes DMA-streamed for one decode step of `model` at context
+    /// length `ctx` (0 under [`KvPolicy::Resident`] or while the
+    /// working set still fits).
+    pub fn spill_bytes(&self, model: &ModelConfig, ctx: usize) -> u64 {
+        match self.policy {
+            KvPolicy::Resident => 0,
+            KvPolicy::TcdmSpill => decode_spill_bytes(model, ctx, self.capacity_bytes),
+        }
+    }
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        Self::resident()
+    }
+}
+
+/// KV bytes one cached token occupies in one layer: K plus V rows of
+/// `d_model` bf16 values each.
+pub fn kv_bytes_per_token(model: &ModelConfig) -> u64 {
+    2 * model.d_model as u64 * BF16_BYTES
+}
+
+/// Largest context whose per-layer KV working set fits in
+/// `capacity_bytes` without spilling.
+pub fn capacity_tokens(model: &ModelConfig, capacity_bytes: u64) -> usize {
+    (capacity_bytes / kv_bytes_per_token(model)) as usize
+}
+
+/// Bytes that must be DMA-streamed for one decode step at context
+/// `ctx`: per layer, the working-set overflow beyond the scratchpad,
+/// summed over all layers (each layer's attention streams its own
+/// cache through the same TCDM).
+pub fn decode_spill_bytes(model: &ModelConfig, ctx: usize, capacity_bytes: u64) -> u64 {
+    let working_set = ctx as u64 * kv_bytes_per_token(model);
+    model.layers as u64 * working_set.saturating_sub(capacity_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpt2_capacity_is_about_forty_tokens() {
+        // 256 KiB / (2 * 1600 * 2 B) = 40.96 tokens per layer
+        let g = ModelConfig::gpt2_xl();
+        let cap = capacity_tokens(&g, TCDM_BYTES as u64);
+        assert_eq!(cap, 40, "{cap}");
+        assert_eq!(kv_bytes_per_token(&g), 6400);
+    }
+
+    #[test]
+    fn no_spill_within_capacity() {
+        let g = ModelConfig::gpt2_xl();
+        let cfg = KvConfig::tcdm_spill();
+        let cap = capacity_tokens(&g, cfg.capacity_bytes);
+        assert_eq!(cfg.spill_bytes(&g, cap), 0);
+        assert_eq!(cfg.spill_bytes(&g, 1), 0);
+    }
+
+    #[test]
+    fn spill_grows_linearly_beyond_capacity() {
+        let g = ModelConfig::gpt2_xl();
+        let cfg = KvConfig::tcdm_spill();
+        let s128 = cfg.spill_bytes(&g, 128);
+        let s256 = cfg.spill_bytes(&g, 256);
+        let s512 = cfg.spill_bytes(&g, 512);
+        assert!(s128 > 0);
+        assert!(s256 > s128 && s512 > s256);
+        // linear beyond capacity: doubling the context increment
+        // doubles the extra spill
+        assert_eq!(s512 - s256, 2 * (s256 - s128));
+        assert_eq!(s256 - s128, 128 * kv_bytes_per_token(&g) * g.layers as u64);
+    }
+
+    #[test]
+    fn resident_policy_never_spills() {
+        let g = ModelConfig::gpt2_xl();
+        let cfg = KvConfig::resident();
+        assert_eq!(cfg.spill_bytes(&g, 100_000), 0);
+    }
+
+    #[test]
+    fn labels_roundtrip_through_parse() {
+        for p in [KvPolicy::Resident, KvPolicy::TcdmSpill] {
+            assert_eq!(KvPolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(KvPolicy::parse("nope"), None);
+    }
+}

@@ -1,0 +1,36 @@
+//! Token-granular simulation core (DESIGN.md §8): the deterministic
+//! discrete-event engine every serving layer drives.
+//!
+//! PR 1's `server` scheduler and PR 2's `fleet` dispatcher each
+//! hand-rolled an incompatible event loop; this subsystem extracts the
+//! one they share so scheduling policies are written *over* the engine
+//! instead of *as* engines:
+//!
+//! * [`engine`] — [`Engine`]: a clock plus a `(time, sequence)`-ordered
+//!   event heap with a seeded [`crate::rng::Xoshiro256`] stream. Ties
+//!   break by insertion order, so every simulation is a pure function
+//!   of (inputs, seed) — the property behind the fleet's
+//!   any-`--threads` bit-determinism contract;
+//! * [`resource`] — [`Resource`] / [`ResourcePool`]: named serial
+//!   resources with occupancy accounting (`start = max(now, free_at)`),
+//!   the single queueing primitive clusters, accelerators, the spray
+//!   mesh, and dispatcher backlog horizons all reduce to;
+//! * [`kv`] — [`KvConfig`]: KV-cache residency against the 256 KiB
+//!   TCDM. Decode steps whose per-layer working set outgrows the
+//!   scratchpad pay a modeled DMA streaming cost through
+//!   `coordinator::op_cost` (`Op::KvSpill`), which is what makes
+//!   time-between-tokens grow with context instead of staying flat.
+//!
+//! `server::scheduler` runs its FIFO / continuous-batching /
+//! mesh-sharded policies on one [`Engine`] (continuous batching at
+//! token granularity: prompt ingestion and each decode step are
+//! separate schedulable phases), and `fleet::dispatch` walks the
+//! arrival stream as engine events, so neither keeps a private loop.
+
+pub mod engine;
+pub mod kv;
+pub mod resource;
+
+pub use engine::Engine;
+pub use kv::{KvConfig, KvPolicy};
+pub use resource::{Resource, ResourcePool};

@@ -1,0 +1,166 @@
+//! Named serial resources with occupancy accounting.
+//!
+//! A [`Resource`] is anything that serves one unit of work at a time —
+//! a whole cluster under FIFO scheduling, one accelerator (RedMulE or
+//! SoftEx) under continuous batching, the fleet-wide mesh under spray,
+//! or a dispatcher's per-cluster backlog horizon. It tracks the cycle
+//! at which it next becomes free plus its cumulative busy cycles; the
+//! acquire rule `start = max(now, free_at)` is the single queueing
+//! primitive every scheduler in this crate builds on.
+
+/// A serial resource: one occupant at a time, FIFO hand-off.
+#[derive(Clone, Debug)]
+pub struct Resource {
+    name: &'static str,
+    free_at: u64,
+    busy_cycles: u64,
+}
+
+impl Resource {
+    pub fn new(name: &'static str) -> Self {
+        Self {
+            name,
+            free_at: 0,
+            busy_cycles: 0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Cycle at which the resource next becomes free.
+    pub fn free_at(&self) -> u64 {
+        self.free_at
+    }
+
+    /// Cumulative occupancy, cycles.
+    pub fn busy_cycles(&self) -> u64 {
+        self.busy_cycles
+    }
+
+    /// Outstanding work at instant `at`: how long a new arrival would
+    /// wait before the resource frees up (0 if already free).
+    pub fn outstanding(&self, at: u64) -> u64 {
+        self.free_at.saturating_sub(at)
+    }
+
+    /// Occupy the resource for `cycles`, starting no earlier than `now`
+    /// and no earlier than the current occupant finishes. Returns the
+    /// start cycle.
+    pub fn acquire(&mut self, now: u64, cycles: u64) -> u64 {
+        let start = now.max(self.free_at);
+        self.free_at = start + cycles;
+        self.busy_cycles += cycles;
+        start
+    }
+}
+
+/// An indexed pool of identical serial resources (e.g. the clusters of
+/// a mesh, or the per-cluster backlog horizons of the fleet dispatcher).
+#[derive(Clone, Debug)]
+pub struct ResourcePool {
+    resources: Vec<Resource>,
+}
+
+impl ResourcePool {
+    pub fn new(name: &'static str, n: usize) -> Self {
+        assert!(n >= 1, "a resource pool needs at least one resource");
+        Self {
+            resources: vec![Resource::new(name); n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.resources.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.resources.is_empty()
+    }
+
+    pub fn get(&self, i: usize) -> &Resource {
+        &self.resources[i]
+    }
+
+    pub fn get_mut(&mut self, i: usize) -> &mut Resource {
+        &mut self.resources[i]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Resource> {
+        self.resources.iter()
+    }
+
+    /// Index of the resource that frees up first; ties go to the lowest
+    /// index (the deterministic tie-break the FIFO policy relies on).
+    pub fn earliest_free(&self) -> usize {
+        self.resources
+            .iter()
+            .enumerate()
+            .min_by_key(|&(i, r)| (r.free_at(), i))
+            .map(|(i, _)| i)
+            .expect("pool is never empty")
+    }
+
+    /// Index of the resource with the least outstanding work at `at`;
+    /// ties go to the lowest index (the JSQ decision rule).
+    pub fn least_outstanding(&self, at: u64) -> usize {
+        self.resources
+            .iter()
+            .enumerate()
+            .min_by_key(|&(i, r)| (r.outstanding(at), i))
+            .map(|(i, _)| i)
+            .expect("pool is never empty")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_serializes_back_to_back() {
+        let mut r = Resource::new("cluster");
+        assert_eq!(r.acquire(100, 50), 100);
+        assert_eq!(r.acquire(100, 50), 150); // queued behind the first
+        assert_eq!(r.free_at(), 200);
+        assert_eq!(r.busy_cycles(), 100);
+    }
+
+    #[test]
+    fn acquire_idles_until_arrival() {
+        let mut r = Resource::new("cluster");
+        r.acquire(0, 10);
+        assert_eq!(r.acquire(1000, 5), 1000); // idle gap is not busy time
+        assert_eq!(r.busy_cycles(), 15);
+    }
+
+    #[test]
+    fn outstanding_saturates_at_zero() {
+        let mut r = Resource::new("cluster");
+        r.acquire(0, 100);
+        assert_eq!(r.outstanding(40), 60);
+        assert_eq!(r.outstanding(100), 0);
+        assert_eq!(r.outstanding(500), 0);
+    }
+
+    #[test]
+    fn earliest_free_breaks_ties_low() {
+        let mut p = ResourcePool::new("cluster", 3);
+        assert_eq!(p.earliest_free(), 0);
+        p.get_mut(0).acquire(0, 10);
+        assert_eq!(p.earliest_free(), 1);
+        p.get_mut(1).acquire(0, 10);
+        p.get_mut(2).acquire(0, 10);
+        assert_eq!(p.earliest_free(), 0);
+    }
+
+    #[test]
+    fn least_outstanding_matches_jsq_rule() {
+        let mut p = ResourcePool::new("cluster", 2);
+        p.get_mut(0).acquire(0, 100);
+        assert_eq!(p.least_outstanding(0), 1);
+        // both drained by cycle 200: tie goes to index 0
+        assert_eq!(p.least_outstanding(200), 0);
+    }
+}

@@ -17,6 +17,12 @@ pub enum Op {
     Residual { n: usize },
     /// Bias add over n elements.
     Bias { n: usize },
+    /// DMA-stream `bytes` of spilled KV cache between L2 and the TCDM
+    /// (`sim::kv`). A bandwidth cost, not compute: contributes zero OPs
+    /// and occupies no accelerator. Never emitted by the model tracers;
+    /// the serving cost model injects it into decode phases whose KV
+    /// working set outgrows the scratchpad.
+    KvSpill { bytes: usize },
 }
 
 impl Op {
@@ -35,6 +41,7 @@ impl Op {
             Op::MatMul { .. } => 2 * self.macs(),
             Op::Softmax { rows, len } => (rows * len) as u64,
             Op::Gelu { n } | Op::LayerNorm { n } | Op::Residual { n } | Op::Bias { n } => n as u64,
+            Op::KvSpill { .. } => 0,
         }
     }
 }
@@ -239,5 +246,22 @@ mod tests {
         assert_eq!(Op::MatMul { m: 2, k: 3, n: 4 }.ops(), 48);
         assert_eq!(Op::Softmax { rows: 4, len: 8 }.ops(), 32);
         assert_eq!(Op::Gelu { n: 100 }.ops(), 100);
+    }
+
+    #[test]
+    fn kv_spill_is_bandwidth_not_compute() {
+        let op = Op::KvSpill { bytes: 4096 };
+        assert_eq!(op.ops(), 0);
+        assert_eq!(op.macs(), 0);
+    }
+
+    #[test]
+    fn tracers_never_emit_kv_spill() {
+        let g = ModelConfig::gpt2_xl();
+        let all: Vec<Op> = trace_model(&g)
+            .into_iter()
+            .chain(trace_decode_step(&g, 300))
+            .collect();
+        assert!(!all.iter().any(|o| matches!(o, Op::KvSpill { .. })));
     }
 }

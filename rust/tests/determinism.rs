@@ -1,0 +1,138 @@
+//! Cross-policy determinism property tests for the `sim` refactor.
+//!
+//! Two contracts are pinned here:
+//!
+//! 1. **Semantics preservation** where it was intentional: the FIFO
+//!    policy's schedule is bit-identical to the pre-`sim` event loop.
+//!    The reference implementation below *is* that loop (earliest-free
+//!    cluster with lowest-index tie-break, `start = max(arrival,
+//!    free)`, whole-request service blocks), kept as an executable
+//!    golden oracle rather than a table of magic numbers.
+//! 2. **Bit-determinism** everywhere: same seed => bit-identical
+//!    reports for every scheduler policy and every fleet policy,
+//!    including the new token metrics and regardless of thread count.
+
+use softex::coordinator::ExecConfig;
+use softex::fleet::{DispatchPolicy, Fleet, FleetConfig};
+use softex::server::{
+    ArrivalProcess, BatchScheduler, CostModel, Policy, Request, RequestClass, RequestGen,
+    ServerConfig, WorkloadMix,
+};
+use softex::sim::KvConfig;
+
+fn poisson_stream(seed: u64, n: usize, mean_gap: f64) -> Vec<Request> {
+    RequestGen::new(
+        seed,
+        ArrivalProcess::Poisson { mean_gap },
+        WorkloadMix::edge_default(),
+    )
+    .generate(n)
+}
+
+/// The pre-refactor FIFO scheduler, verbatim semantics: process the
+/// stream in arrival order, place each request on the cluster that
+/// frees up first (ties to the lowest index), occupy it for the whole
+/// uncontended service time (floored at one cycle).
+fn reference_fifo_completions(requests: &[Request], clusters: usize) -> Vec<u64> {
+    let mut costs = CostModel::new(ExecConfig::paper_accelerated());
+    let mut free = vec![0u64; clusters];
+    let mut completions = Vec::with_capacity(requests.len());
+    for r in requests {
+        let service = costs.service_cycles(r.class).max(1);
+        let ci = (0..clusters)
+            .min_by_key(|&i| (free[i], i))
+            .expect("at least one cluster");
+        let start = r.arrival.max(free[ci]);
+        free[ci] = start + service;
+        completions.push(free[ci]);
+    }
+    completions
+}
+
+#[test]
+fn fifo_matches_the_prerefactor_reference_schedule() {
+    for (seed, n, mesh) in [(0x90u64, 150usize, 1usize), (0x91, 150, 2), (0x92, 60, 4)] {
+        let reqs = poisson_stream(seed, n, 8.0e5);
+        let clusters = mesh * mesh;
+        let golden = reference_fifo_completions(&reqs, clusters);
+        let mut golden_latencies: Vec<u64> = reqs
+            .iter()
+            .zip(&golden)
+            .map(|(r, &c)| c - r.arrival)
+            .collect();
+        golden_latencies.sort_unstable();
+        let golden_makespan = (golden.iter().copied().max().unwrap()
+            - reqs.iter().map(|r| r.arrival).min().unwrap())
+        .max(1);
+
+        let rep = BatchScheduler::new(ServerConfig::new(mesh, Policy::Fifo)).run(&reqs);
+        assert_eq!(
+            rep.latencies.as_slice(),
+            golden_latencies.as_slice(),
+            "mesh {mesh}"
+        );
+        assert_eq!(rep.makespan, golden_makespan, "mesh {mesh}");
+    }
+}
+
+#[test]
+fn every_server_policy_is_bit_deterministic() {
+    let reqs = poisson_stream(0xDE7, 200, 6.0e5);
+    for policy in Policy::ALL {
+        let run = || BatchScheduler::new(ServerConfig::new(2, policy)).run(&reqs);
+        let (a, b) = (run(), run());
+        assert_eq!(a.latencies, b.latencies, "{}", a.label);
+        assert_eq!(a.ttft, b.ttft, "{}", a.label);
+        assert_eq!(a.tbt, b.tbt, "{}", a.label);
+        assert_eq!(a.makespan, b.makespan, "{}", a.label);
+        assert_eq!(a.kv_spill_bytes, b.kv_spill_bytes);
+        assert!(a.energy_j_throughput == b.energy_j_throughput, "{}", a.label);
+    }
+}
+
+#[test]
+fn spilling_kv_policies_are_bit_deterministic_too() {
+    let reqs: Vec<Request> = (0..12)
+        .map(|i| Request {
+            id: i,
+            class: RequestClass::Gpt2Xl { prompt: 96, decode: 6 },
+            arrival: i as u64 * 100_000,
+        })
+        .collect();
+    for policy in Policy::ALL {
+        let run = || {
+            let mut cfg = ServerConfig::new(1, policy);
+            cfg.kv = KvConfig::tcdm_spill();
+            BatchScheduler::new(cfg).run(&reqs)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.latencies, b.latencies, "{}", a.label);
+        assert_eq!(a.tbt, b.tbt, "{}", a.label);
+        assert!(a.kv_spill_bytes > 0, "{}", a.label);
+        assert_eq!(a.kv_spill_bytes, b.kv_spill_bytes);
+    }
+}
+
+#[test]
+fn every_fleet_policy_is_bit_deterministic_across_threads() {
+    let reqs = poisson_stream(0xF00D, 240, 2.5e5);
+    for policy in DispatchPolicy::ALL {
+        let run_with = |threads: usize| {
+            let mut cfg = FleetConfig::new(6, policy);
+            cfg.seed = 0xF00D;
+            cfg.threads = threads;
+            Fleet::new(cfg).run(&reqs)
+        };
+        let (a, b) = (run_with(1), run_with(3));
+        assert_eq!(a.latencies, b.latencies, "{}", a.label);
+        assert_eq!(a.ttft, b.ttft, "{}", a.label);
+        assert_eq!(a.tbt, b.tbt, "{}", a.label);
+        assert_eq!(a.makespan, b.makespan, "{}", a.label);
+        assert_eq!(a.n_admitted, b.n_admitted, "{}", a.label);
+        for (x, y) in a.per_cluster.iter().zip(&b.per_cluster) {
+            assert_eq!(x.latencies, y.latencies, "{}", a.label);
+            assert_eq!(x.ttft, y.ttft, "{}", a.label);
+            assert_eq!(x.tbt, y.tbt, "{}", a.label);
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! KV-cache residency tests: the `sim::kv` TCDM spill model must make
+//! time-between-tokens grow with context, pay nothing within capacity,
+//! and leave non-generative traffic untouched.
+
+use softex::server::{
+    ArrivalProcess, BatchScheduler, Policy, Request, RequestClass, RequestGen, ServerConfig,
+    WorkloadMix,
+};
+use softex::sim::{kv, KvConfig};
+use softex::workload::ModelConfig;
+
+fn gpt2_request(prompt: usize, decode: usize) -> Vec<Request> {
+    vec![Request {
+        id: 0,
+        class: RequestClass::Gpt2Xl { prompt, decode },
+        arrival: 0,
+    }]
+}
+
+fn run_one(policy: Policy, kv_cfg: KvConfig, requests: &[Request]) -> softex::server::ServeReport {
+    let mut cfg = ServerConfig::new(1, policy);
+    cfg.kv = kv_cfg;
+    BatchScheduler::new(cfg).run(requests)
+}
+
+/// Mean time-between-tokens of a report, cycles.
+fn mean_tbt(rep: &softex::server::ServeReport) -> f64 {
+    assert!(!rep.tbt.is_empty());
+    rep.tbt.iter().sum::<u64>() as f64 / rep.tbt.len() as f64
+}
+
+#[test]
+fn tbt_grows_monotonically_with_context_under_spill() {
+    // the acceptance sweep: contexts beyond the ~40-token TCDM capacity
+    // must show strictly increasing TBT, and strictly more of the
+    // increase must come from the modeled spill DMA as context grows
+    let cap = kv::capacity_tokens(
+        &ModelConfig::gpt2_xl(),
+        KvConfig::tcdm_spill().capacity_bytes,
+    );
+    assert_eq!(cap, 40);
+    let prompts = [64usize, 128, 256, 384];
+    let mut spill_tbt = Vec::new();
+    let mut resident_tbt = Vec::new();
+    for &prompt in &prompts {
+        assert!(prompt > cap, "sweep must exceed TCDM capacity");
+        let reqs = gpt2_request(prompt, 8);
+        spill_tbt.push(mean_tbt(&run_one(Policy::Fifo, KvConfig::tcdm_spill(), &reqs)));
+        resident_tbt.push(mean_tbt(&run_one(Policy::Fifo, KvConfig::resident(), &reqs)));
+    }
+    for w in spill_tbt.windows(2) {
+        assert!(w[1] > w[0], "spill TBT not monotone: {spill_tbt:?}");
+    }
+    // the spill surcharge is positive beyond capacity and itself grows
+    // with context (more spilled bytes per step)
+    let gaps: Vec<f64> = spill_tbt
+        .iter()
+        .zip(&resident_tbt)
+        .map(|(s, r)| s - r)
+        .collect();
+    for g in &gaps {
+        assert!(*g > 0.0, "spill must cost cycles beyond capacity: {gaps:?}");
+    }
+    for w in gaps.windows(2) {
+        assert!(w[1] > w[0], "spill surcharge not monotone: {gaps:?}");
+    }
+}
+
+#[test]
+fn no_spill_surcharge_within_capacity() {
+    // a context that fits entirely in the TCDM decodes at the resident
+    // speed even under the spill policy
+    let reqs = gpt2_request(16, 4); // contexts 16..20, well under 40
+    let spill = run_one(Policy::Fifo, KvConfig::tcdm_spill(), &reqs);
+    let resident = run_one(Policy::Fifo, KvConfig::resident(), &reqs);
+    assert_eq!(spill.kv_spill_bytes, 0);
+    assert_eq!(spill.latencies, resident.latencies);
+    assert_eq!(spill.tbt, resident.tbt);
+}
+
+#[test]
+fn spill_slows_continuous_batching_and_reports_bytes() {
+    let reqs: Vec<Request> = RequestGen::new(
+        7,
+        ArrivalProcess::Burst { size: 6, gap: 0 },
+        WorkloadMix::single(RequestClass::Gpt2Xl { prompt: 128, decode: 8 }),
+    )
+    .generate(6);
+    let spill = run_one(Policy::ContinuousBatching, KvConfig::tcdm_spill(), &reqs);
+    let resident = run_one(Policy::ContinuousBatching, KvConfig::resident(), &reqs);
+    assert!(spill.kv_spill_bytes > 0);
+    assert_eq!(resident.kv_spill_bytes, 0);
+    assert!(
+        spill.makespan > resident.makespan,
+        "spill {} vs resident {}",
+        spill.makespan,
+        resident.makespan
+    );
+    assert!(spill.tbt_p50() > resident.tbt_p50());
+    // spill DMA is latency, not OPs: served work is unchanged
+    assert_eq!(spill.total_ops, resident.total_ops);
+}
+
+#[test]
+fn spill_never_changes_vision_only_streams() {
+    // no decode phases => no KV working set => the spill policy is a
+    // no-op for single-pass classes under every scheduler policy
+    let reqs: Vec<Request> = RequestGen::new(
+        11,
+        ArrivalProcess::Poisson { mean_gap: 5.0e5 },
+        WorkloadMix::single(RequestClass::VitBase),
+    )
+    .generate(40);
+    for policy in Policy::ALL {
+        let spill = run_one(policy, KvConfig::tcdm_spill(), &reqs);
+        let resident = run_one(policy, KvConfig::resident(), &reqs);
+        assert_eq!(spill.latencies, resident.latencies, "{}", spill.label);
+        assert_eq!(spill.makespan, resident.makespan, "{}", spill.label);
+        assert_eq!(spill.kv_spill_bytes, 0, "{}", spill.label);
+    }
+}

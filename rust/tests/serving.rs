@@ -3,7 +3,8 @@
 
 use softex::energy::OP_THROUGHPUT;
 use softex::server::{
-    summary_table, ArrivalProcess, BatchScheduler, Policy, RequestGen, ServerConfig, WorkloadMix,
+    summary_table, ArrivalProcess, BatchScheduler, Policy, RequestClass, RequestGen,
+    ServerConfig, WorkloadMix,
 };
 
 fn poisson_stream(seed: u64, n: usize, mean_gap: f64) -> Vec<softex::server::Request> {
@@ -114,6 +115,38 @@ fn summary_table_lists_every_run() {
     assert!(table.contains("fifo@1x1"), "{table}");
     assert!(table.contains("cont-batch@1x1"), "{table}");
     assert!(table.contains("p99 ms"), "{table}");
+}
+
+#[test]
+fn gpt2_heavy_mix_reports_token_percentiles() {
+    // the serve acceptance contract: a GPT-2 XL-heavy mix must yield
+    // populated TTFT and TBT percentiles in every policy's report
+    let mix = WorkloadMix::new(vec![
+        (RequestClass::Gpt2Xl { prompt: 64, decode: 12 }, 0.6),
+        (RequestClass::VitTiny, 0.25),
+        (RequestClass::MobileBert { seq: 128 }, 0.15),
+    ]);
+    let reqs: Vec<softex::server::Request> = RequestGen::new(
+        0x6B7,
+        ArrivalProcess::Poisson { mean_gap: 2.0e6 },
+        mix,
+    )
+    .generate(120);
+    for policy in Policy::ALL {
+        let rep = BatchScheduler::new(ServerConfig::new(2, policy)).run(&reqs);
+        // one first-token sample per request; decode gaps from gpt2
+        assert_eq!(rep.ttft.len(), 120, "{}", rep.label);
+        assert!(!rep.tbt.is_empty(), "{}", rep.label);
+        assert!(rep.ttft_p50() > 0 && rep.tbt_p50() > 0, "{}", rep.label);
+        assert!(rep.ttft_p50() <= rep.ttft_p95(), "{}", rep.label);
+        assert!(rep.ttft_p95() <= rep.ttft_p99(), "{}", rep.label);
+        assert!(rep.tbt_p50() <= rep.tbt_p95(), "{}", rep.label);
+        // first tokens land no later than request completions
+        assert!(rep.ttft_p99() <= rep.p99(), "{}", rep.label);
+        // the render and JSON paths carry the token metrics
+        assert!(rep.render().contains("ttft p50/p95/p99"), "{}", rep.label);
+        assert!(rep.to_json().contains("\"tbt_p95_cycles\":"), "{}", rep.label);
+    }
 }
 
 #[test]
