@@ -102,8 +102,37 @@ fn main() {
     }
     println!();
 
+    // --- per-model sweep (the CLI's `--model` selection): every IR
+    // preset as a single-model stream at rho = 0.8 on a 2x2 mesh,
+    // FIFO vs continuous batching. Llama-edge and Whisper-tiny-enc run
+    // through the exact same path as the legacy presets. ------------
+    println!("--model sweep — single-model streams, rho = 0.8, 2x2 mesh:");
+    let mut model_reports = Vec::new();
+    for name in ModelConfig::PRESET_NAMES {
+        let mix = WorkloadMix::for_model(name).expect(name);
+        let mean_service =
+            CostModel::new(ExecConfig::paper_accelerated()).mean_service_cycles(&mix);
+        let mean_gap = mean_service / (4.0 * 0.8);
+        for policy in [Policy::Fifo, Policy::ContinuousBatching] {
+            let reqs = RequestGen::new(
+                seed,
+                ArrivalProcess::Poisson { mean_gap },
+                mix.clone(),
+            )
+            .generate(150);
+            let mut rep = BatchScheduler::new(ServerConfig::new(2, policy)).run(&reqs);
+            rep.label = format!("{name}/{}", policy.label());
+            model_reports.push(rep);
+        }
+    }
     println!(
-        "sweep wall time: {:.2} s (9 configurations x 3 loads + KV sweep, deterministic seed {seed:#x})",
-        t0.elapsed().as_secs_f64()
+        "{}",
+        summary_table("per-model serve sweep (150 requests each)", &model_reports)
+    );
+
+    println!(
+        "sweep wall time: {:.2} s (9 configurations x 3 loads + KV sweep + {} models, deterministic seed {seed:#x})",
+        t0.elapsed().as_secs_f64(),
+        ModelConfig::PRESET_NAMES.len()
     );
 }

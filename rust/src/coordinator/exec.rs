@@ -84,7 +84,12 @@ pub fn op_cost(cfg: &ExecConfig, op: &Op) -> OpCost {
                 }
             }
         },
-        Op::Gelu { n } => match cfg.gelu_engine {
+        // SiLU = x * sigmoid(x) shares the sum-of-exponentials datapath
+        // GELU uses (the SoftEx-reuse co-design line: "Reusing Softmax
+        // Hardware Unit for GELU"), so it is costed identically: same
+        // engine choice, timing, and power modes, with the core assist
+        // covering GELU's algorithm-1 steps or SwiGLU's gate*up product.
+        Op::Gelu { n } | Op::Silu { n } => match cfg.gelu_engine {
             EngineChoice::SoftEx => {
                 let hw = timing::gelu_cycles(&cfg.softex, n);
                 let sw = cores::gelu_assisted_core_cycles(n);
@@ -108,6 +113,26 @@ pub fn op_cost(cfg: &ExecConfig, op: &Op) -> OpCost {
                     ops: op.ops(),
                     parts: vec![(ActivityMode::GeluSw, cycles)],
                 }
+            }
+        },
+        Op::RmsNorm { rows, len } => match cfg.softmax_engine {
+            // RMSNorm reuses SoftEx's accumulate / Newton-invert /
+            // scale pipeline (the SOLE softmax+norm co-design line), so
+            // it follows the softmax engine choice; the power mode is
+            // the softmax one (same units toggling).
+            EngineChoice::SoftEx => {
+                let cycles = timing::rmsnorm_cycles(&cfg.softex, rows, len);
+                OpCost {
+                    class: KernelClass::Other,
+                    engine: Engine::SoftEx,
+                    cycles,
+                    ops: op.ops(),
+                    parts: vec![(ActivityMode::SoftmaxHw, cycles)],
+                }
+            }
+            // no mean subtraction: one pass fewer than LayerNorm's 4
+            EngineChoice::Cores => {
+                elementwise_cost(cores::elementwise_cycles(rows * len, 3.0), op.ops())
             }
         },
         Op::KvSpill { bytes } => {
@@ -331,7 +356,9 @@ mod tests {
             Op::MatMul { m: 31, k: 65, n: 129 },
             Op::Softmax { rows: 16, len: 200 },
             Op::Gelu { n: 5000 },
+            Op::Silu { n: 5000 },
             Op::LayerNorm { n: 4096 },
+            Op::RmsNorm { rows: 16, len: 256 },
             Op::Bias { n: 4096 },
             Op::Residual { n: 4096 },
             Op::KvSpill { bytes: 123_456 },
@@ -340,6 +367,57 @@ mod tests {
             let parts: u64 = c.parts.iter().map(|(_, cy)| cy).sum();
             assert_eq!(parts, c.cycles, "{op:?}");
         }
+    }
+
+    #[test]
+    fn silu_follows_the_gelu_engine_choice() {
+        let hw = op_cost(&ExecConfig::paper_accelerated(), &Op::Silu { n: 8192 });
+        assert_eq!(hw.engine, Engine::SoftEx);
+        assert_eq!(hw.class, KernelClass::Gelu);
+        let sw = op_cost(
+            &ExecConfig::sw_nonlinearities(ExpAlgo::Exps),
+            &Op::Silu { n: 8192 },
+        );
+        assert_eq!(sw.engine, Engine::Cores);
+        // the SoftEx path (with its core assist) beats the software gate
+        assert!(hw.cycles < sw.cycles, "{} vs {}", hw.cycles, sw.cycles);
+        // SiLU reuses the sum-of-exp datapath: same cost as GELU
+        let gelu = op_cost(&ExecConfig::paper_accelerated(), &Op::Gelu { n: 8192 });
+        assert_eq!(hw.cycles, gelu.cycles);
+    }
+
+    #[test]
+    fn rmsnorm_follows_the_softmax_engine_choice() {
+        // a prompt-phase norm: 128 token rows of d_model=2048
+        let norm = Op::RmsNorm { rows: 128, len: 2048 };
+        let hw = op_cost(&ExecConfig::paper_accelerated(), &norm);
+        assert_eq!(hw.engine, Engine::SoftEx);
+        let sw = op_cost(&ExecConfig::sw_nonlinearities(ExpAlgo::Exps), &norm);
+        assert_eq!(sw.engine, Engine::Cores);
+        // SoftEx streams every row (3 passes each) and pays the per-row
+        // amortized inversion — the cost scales with rows, it is not a
+        // single-vector job
+        let streaming = 128 * 3 * (2048 / 16) as u64;
+        assert!(hw.cycles > streaming, "{} vs {streaming}", hw.cycles);
+        assert!(hw.cycles < sw.cycles, "{} vs {}", hw.cycles, sw.cycles);
+        // RMSNorm is cheaper than LayerNorm on the cores (3 vs 4 passes)
+        let ln = op_cost(
+            &ExecConfig::sw_nonlinearities(ExpAlgo::Exps),
+            &Op::LayerNorm { n: 128 * 2048 },
+        );
+        assert!(sw.cycles < ln.cycles);
+    }
+
+    #[test]
+    fn llama_edge_e2e_prefers_the_accelerators() {
+        // the new IR preset runs end-to-end through the same cost model,
+        // and SoftEx still pays off with SwiGLU/RMSNorm nonlinearities
+        let trace = trace_model(&ModelConfig::llama_edge());
+        let hw = execute_trace(&ExecConfig::paper_accelerated(), &trace);
+        let sw = execute_trace(&ExecConfig::sw_nonlinearities(ExpAlgo::Exps), &trace);
+        assert!(hw.total_cycles() > 0);
+        assert!(hw.total_cycles() < sw.total_cycles());
+        assert_eq!(hw.total_ops, sw.total_ops);
     }
 
     #[test]

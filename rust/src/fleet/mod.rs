@@ -34,7 +34,7 @@ use crate::mesh::montecarlo::{mesh_edge_for, mesh_slowdown};
 use crate::server::scheduler::place_tokens;
 use crate::server::stats::queue_depths;
 use crate::server::{
-    BatchScheduler, CostModel, Latencies, Policy, Request, ServeReport, ServerConfig,
+    mix_label, BatchScheduler, CostModel, Latencies, Policy, Request, ServeReport, ServerConfig,
 };
 use crate::sim::{Engine as SimEngine, Resource};
 
@@ -267,6 +267,7 @@ impl Fleet {
         let tbt = Latencies::from_unsorted(tbt_samples);
         let proto = ServeReport {
             label: String::new(),
+            mix: mix_label(shards.iter().map(|s| s.class)),
             clusters: 1,
             n_requests: shards.len(),
             latencies: latencies.clone(),
@@ -328,6 +329,7 @@ impl Fleet {
         });
         FleetReport {
             label: format!("{}@{}", self.cfg.policy.label(), self.cfg.clusters),
+            mix: mix_label(requests.iter().map(|r| r.class)),
             clusters: self.cfg.clusters,
             policy: self.cfg.policy,
             n_offered: requests.len(),

@@ -15,6 +15,9 @@ use super::dispatch::DispatchPolicy;
 pub struct FleetReport {
     /// `policy@N` label for tables.
     pub label: String,
+    /// Class population of the offered stream (distinct class labels,
+    /// comma-joined; `server::mix_label`).
+    pub mix: String,
     pub clusters: usize,
     pub policy: DispatchPolicy,
     /// Requests offered to the dispatcher.
@@ -148,6 +151,7 @@ impl FleetReport {
         let per_cluster = report::json::array(self.per_cluster.iter().map(|r| r.to_json()));
         report::json::Obj::new()
             .str("label", &self.label)
+            .str("mix", &self.mix)
             .u64("clusters", self.clusters as u64)
             .str("policy", self.policy.label())
             .u64("n_offered", self.n_offered as u64)
@@ -181,8 +185,9 @@ impl FleetReport {
     pub fn render(&self) -> String {
         let mut out = report::render_table(
             &format!(
-                "Fleet run — {} ({} offered, {} admitted, {} downgraded, {} shed)",
-                self.label, self.n_offered, self.n_admitted, self.n_downgraded, self.n_shed
+                "Fleet run — {} ({} offered, {} admitted, {} downgraded, {} shed, mix {})",
+                self.label, self.n_offered, self.n_admitted, self.n_downgraded, self.n_shed,
+                self.mix
             ),
             &FLEET_HEADERS,
             &[self.row()],

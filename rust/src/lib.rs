@@ -13,7 +13,11 @@
 //! * [`softex`] — the SoftEx softmax/GELU accelerator (Sec. V-B);
 //! * [`redmule`] — the 24x8 RedMulE tensor-unit model;
 //! * [`cluster`] — the 8-core PULP cluster, TCDM, software baselines;
-//! * [`workload`] — transformer workloads (ViT, MobileBERT, GPT-2 XL);
+//! * [`workload`] — the declarative model IR (block kind, MHA/GQA
+//!   attention shape, LayerNorm/RMSNorm, GELU/ReLU/SwiGLU FFNs) and
+//!   the operator-graph layer lowering it to kernel op traces; presets:
+//!   ViT-tiny/base, MobileBERT, GPT-2 XL, Llama-edge, Whisper-tiny-enc
+//!   (`DESIGN.md` §9);
 //! * [`coordinator`] — the L3 scheduler mapping workloads onto engines;
 //! * [`mesh`] — the FlooNoC compute-mesh scalability model (Sec. VIII);
 //! * [`sim`] — the token-granular simulation core: a deterministic

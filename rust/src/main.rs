@@ -5,8 +5,8 @@
 //!   softmax --rows R --len L [--lanes N]                one softmax job
 //!   gelu --n N [--terms T] [--bits B]                   one GELU job
 //!   mesh [--max 8] [--trials 16384]                     Fig. 15 sweep
-//!   serve [--requests N] [--mesh n] [--policy P] [--kv K] [--json]   serving sim
-//!   fleet [--clusters N] [--policy P] [--threads T] [--json]         fleet dispatcher
+//!   serve [--requests N] [--mesh n] [--policy P] [--model M] [--kv K] [--json]   serving sim
+//!   fleet [--clusters N] [--policy P] [--model M] [--threads T] [--json]         fleet dispatcher
 //!   verify [--artifacts DIR]                            golden checks
 //!   info                                                cluster summary
 
@@ -53,20 +53,13 @@ fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     (pos, flags)
 }
 
-fn model_by_name(name: &str) -> Option<ModelConfig> {
-    match name {
-        "vit" | "vit-base" => Some(ModelConfig::vit_base()),
-        "mobilebert" => Some(ModelConfig::mobilebert(512)),
-        "gpt2-xl" => Some(ModelConfig::gpt2_xl()),
-        "vit-tiny" => Some(ModelConfig::vit_tiny()),
-        _ => None,
-    }
-}
-
 fn cmd_run(pos: &[String], flags: &HashMap<String, String>) {
     let name = pos.first().map(String::as_str).unwrap_or("vit");
-    let Some(model) = model_by_name(name) else {
-        eprintln!("unknown model `{name}` (vit, mobilebert, gpt2-xl, vit-tiny)");
+    let Some(model) = ModelConfig::by_name(name) else {
+        eprintln!(
+            "unknown model `{name}` (expected one of: {})",
+            ModelConfig::PRESET_NAMES.join(", ")
+        );
         std::process::exit(1);
     };
     let algo = match flags.get("exp").map(String::as_str) {
@@ -187,7 +180,26 @@ fn cmd_mesh(flags: &HashMap<String, String>) {
 
 const SERVE_USAGE: &str =
     "usage: softex serve [--requests N] [--mesh N] [--gap CYCLES] [--seed S] \
-     [--policy fifo|cb|mesh] [--kv resident|spill] [--json]";
+     [--policy fifo|cb|mesh] [--model NAME|edge|genai] [--kv resident|spill] [--json]";
+
+/// Parse the shared `--model` flag into a workload mix: a preset name
+/// (`ModelConfig::by_name` spellings) gives a single-model stream, the
+/// `edge` / `genai` aliases select the built-in mixes, and the flag's
+/// absence keeps the edge default.
+fn parse_mix(flags: &HashMap<String, String>, usage: &str) -> WorkloadMix {
+    match flags.get("model").map(String::as_str) {
+        None | Some("edge") => WorkloadMix::edge_default(),
+        Some("genai") => WorkloadMix::genai_default(),
+        Some(name) => WorkloadMix::for_model(name).unwrap_or_else(|| {
+            eprintln!(
+                "unknown model `{name}` (expected edge, genai, or one of: {})",
+                ModelConfig::PRESET_NAMES.join(", ")
+            );
+            eprintln!("{usage}");
+            std::process::exit(2);
+        }),
+    }
+}
 
 /// Parse the shared `--kv` flag, exiting with `usage` on unknown names.
 fn parse_kv(flags: &HashMap<String, String>, usage: &str) -> KvConfig {
@@ -221,11 +233,8 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         }
     };
     let kv = parse_kv(flags, SERVE_USAGE);
-    let mut generator = RequestGen::new(
-        seed,
-        ArrivalProcess::Poisson { mean_gap },
-        WorkloadMix::edge_default(),
-    );
+    let mix = parse_mix(flags, SERVE_USAGE);
+    let mut generator = RequestGen::new(seed, ArrivalProcess::Poisson { mean_gap }, mix);
     let requests = generator.generate(n);
     let mut server_cfg = ServerConfig::new(mesh, policy);
     server_cfg.seed = seed;
@@ -242,7 +251,8 @@ fn cmd_serve(flags: &HashMap<String, String>) {
 const FLEET_USAGE: &str =
     "usage: softex fleet [--clusters N] [--policy rr|jsq|p2c|spray] [--requests N] \
      [--rho LOAD | --gap CYCLES] [--burst SIZE] [--seed S] [--threads T] \
-     [--slo-ms MS [--admission shed|downgrade]] [--kv resident|spill] [--json]";
+     [--slo-ms MS [--admission shed|downgrade]] [--model NAME|edge|genai] \
+     [--kv resident|spill] [--json]";
 
 fn fleet_usage_error(msg: &str) -> ! {
     eprintln!("{msg}");
@@ -282,10 +292,10 @@ fn cmd_fleet(flags: &HashMap<String, String>) {
     };
 
     let kv = parse_kv(flags, FLEET_USAGE);
-    let mix = WorkloadMix::edge_default();
+    let mix = parse_mix(flags, FLEET_USAGE);
     // offered load: --gap (per-request spacing, cycles) wins; otherwise
     // --rho (fraction of aggregate fleet service capacity on the
-    // edge-default mix under the chosen KV model, default 0.8)
+    // selected mix under the chosen KV model, default 0.8)
     let mean_gap: f64 = match flags.get("gap") {
         Some(_) => {
             if flags.contains_key("rho") {

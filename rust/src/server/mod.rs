@@ -5,9 +5,10 @@
 //! request-level model on top of the per-trace executor — the system-level
 //! step SOLE and VEXP take beyond kernel benchmarks:
 //!
-//! * [`request`] — request classes (ViT-tiny/base, MobileBERT, GPT-2 XL
-//!   prompt+decode), weighted workload mixes, and seeded Poisson/burst
-//!   arrival streams;
+//! * [`request`] — request classes over the workload IR (ViT-tiny/base,
+//!   MobileBERT, GPT-2 XL and Llama-edge prompt+decode, the
+//!   Whisper-tiny encoder), weighted workload mixes, and seeded
+//!   Poisson/burst arrival streams;
 //! * [`scheduler`] — pluggable batch-scheduling policies (FIFO,
 //!   token-granular continuous batching with per-engine queues for
 //!   RedMulE vs SoftEx, mesh-sharded execution over n x n clusters)
@@ -26,6 +27,6 @@ pub mod request;
 pub mod scheduler;
 pub mod stats;
 
-pub use request::{ArrivalProcess, Request, RequestClass, RequestGen, WorkloadMix};
+pub use request::{mix_label, ArrivalProcess, Request, RequestClass, RequestGen, WorkloadMix};
 pub use scheduler::{BatchScheduler, CostModel, Policy, ServerConfig};
 pub use stats::{summary_table, Latencies, ServeReport};

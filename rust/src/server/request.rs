@@ -21,6 +21,13 @@ pub enum RequestClass {
     /// GPT-2 XL: `prompt` tokens ingested in one pass, then `decode`
     /// autoregressive steps over the growing KV cache (Sec. VIII).
     Gpt2Xl { prompt: usize, decode: usize },
+    /// Llama-edge (GQA 32q/8kv, RMSNorm, SwiGLU): prompt ingestion plus
+    /// `decode` autoregressive steps, like GPT-2 XL but over the 4x
+    /// smaller GQA KV working set.
+    LlamaEdge { prompt: usize, decode: usize },
+    /// The Whisper-tiny audio encoder over its fixed 1500-frame mel
+    /// sequence (single pass, no decode).
+    WhisperTinyEnc,
 }
 
 impl RequestClass {
@@ -30,10 +37,12 @@ impl RequestClass {
             RequestClass::VitBase => "ViT-base".to_string(),
             RequestClass::MobileBert { seq } => format!("MobileBERT/{seq}"),
             RequestClass::Gpt2Xl { prompt, decode } => format!("GPT-2 XL/{prompt}+{decode}"),
+            RequestClass::LlamaEdge { prompt, decode } => format!("Llama-edge/{prompt}+{decode}"),
+            RequestClass::WhisperTinyEnc => "Whisper-tiny-enc".to_string(),
         }
     }
 
-    /// The model geometry behind the request (GPT-2 XL at its prompt
+    /// The model IR behind the request (causal decoders at their prompt
     /// length; decode steps are sliced separately).
     pub fn model(&self) -> ModelConfig {
         match *self {
@@ -44,14 +53,37 @@ impl RequestClass {
                 seq: prompt,
                 ..ModelConfig::gpt2_xl()
             },
+            RequestClass::LlamaEdge { prompt, .. } => ModelConfig {
+                seq: prompt,
+                ..ModelConfig::llama_edge()
+            },
+            RequestClass::WhisperTinyEnc => ModelConfig::whisper_tiny_enc(),
         }
+    }
+
+    /// The serving class for a CLI model name (the same spellings
+    /// [`ModelConfig::by_name`] accepts — `for_model_covers_every_preset`
+    /// pins the two tables in sync), with the default 128-token prompt /
+    /// 16-token decode budget for the causal decoders. `None` for
+    /// unknown names.
+    pub fn for_model(name: &str) -> Option<RequestClass> {
+        Some(match name {
+            "vit-tiny" => RequestClass::VitTiny,
+            "vit" | "vit-base" => RequestClass::VitBase,
+            "mobilebert" => RequestClass::MobileBert { seq: 512 },
+            "gpt2-xl" => RequestClass::Gpt2Xl { prompt: 128, decode: 16 },
+            "llama-edge" => RequestClass::LlamaEdge { prompt: 128, decode: 16 },
+            "whisper" | "whisper-tiny-enc" => RequestClass::WhisperTinyEnc,
+            _ => return None,
+        })
     }
 
     /// The cheaper class an SLO-pressed dispatcher may substitute for
     /// this one (fleet admission control, DESIGN.md §7): ViT-base falls
     /// back to the tiny variant, long MobileBERT sequences to seq 128,
-    /// and GPT-2 XL keeps its prompt but truncates decoding to 4 steps.
-    /// `None` when the class is already the cheapest of its family.
+    /// and the causal decoders (GPT-2 XL, Llama-edge) keep their prompt
+    /// but truncate decoding to 4 steps. `None` when the class is
+    /// already the cheapest of its family.
     pub fn downgraded(&self) -> Option<RequestClass> {
         match *self {
             RequestClass::VitTiny => None,
@@ -64,6 +96,11 @@ impl RequestClass {
                 Some(RequestClass::Gpt2Xl { prompt, decode: 4 })
             }
             RequestClass::Gpt2Xl { .. } => None,
+            RequestClass::LlamaEdge { prompt, decode } if decode > 4 => {
+                Some(RequestClass::LlamaEdge { prompt, decode: 4 })
+            }
+            RequestClass::LlamaEdge { .. } => None,
+            RequestClass::WhisperTinyEnc => None,
         }
     }
 
@@ -79,7 +116,7 @@ impl RequestClass {
     /// the single-pass vision/encoder classes.
     pub fn decode_tokens(&self) -> usize {
         match *self {
-            RequestClass::Gpt2Xl { decode, .. } => decode,
+            RequestClass::Gpt2Xl { decode, .. } | RequestClass::LlamaEdge { decode, .. } => decode,
             _ => 0,
         }
     }
@@ -88,23 +125,38 @@ impl RequestClass {
     /// from 0. Only meaningful for classes with decode steps.
     pub fn context_at(&self, step: usize) -> usize {
         match *self {
-            RequestClass::Gpt2Xl { prompt, .. } => prompt + step,
+            RequestClass::Gpt2Xl { prompt, .. } | RequestClass::LlamaEdge { prompt, .. } => {
+                prompt + step
+            }
             _ => 0,
         }
     }
 
     /// Kernel-level op sequence of the whole request: the full forward
-    /// pass, plus per-token decode slices for GPT-2 XL.
+    /// pass, plus per-token decode slices for the causal decoders.
     pub fn trace(&self) -> Vec<Op> {
         let model = self.model();
         let mut ops = trace_model(&model);
-        if let RequestClass::Gpt2Xl { prompt, decode } = *self {
-            for step in 0..decode {
-                ops.extend(trace_decode_step(&model, prompt + step));
-            }
+        for step in 0..self.decode_tokens() {
+            ops.extend(trace_decode_step(&model, self.context_at(step)));
         }
         ops
     }
+}
+
+/// Human-readable label of the class population of a stream: distinct
+/// class labels in class-declaration order, comma-joined (the `mix`
+/// field of [`super::ServeReport`] / `fleet::FleetReport`). The
+/// separator is `, ` because class labels themselves contain `+`
+/// (`"GPT-2 XL/128+16"`), which must stay splittable for JSON
+/// consumers.
+pub fn mix_label(classes: impl Iterator<Item = RequestClass>) -> String {
+    let distinct: std::collections::BTreeSet<RequestClass> = classes.collect();
+    if distinct.is_empty() {
+        return "empty".to_string();
+    }
+    let labels: Vec<String> = distinct.iter().map(|c| c.label()).collect();
+    labels.join(", ")
 }
 
 /// A weighted mix of request classes.
@@ -138,6 +190,25 @@ impl WorkloadMix {
             (RequestClass::MobileBert { seq: 512 }, 0.10),
             (RequestClass::Gpt2Xl { prompt: 128, decode: 16 }, 0.10),
         ])
+    }
+
+    /// The GenAI-heavy mix exercising the IR-only presets end-to-end:
+    /// Llama-edge decode traffic and long Whisper encoder passes next
+    /// to the legacy vision/encoder/GPT-2 classes.
+    pub fn genai_default() -> Self {
+        Self::new(vec![
+            (RequestClass::LlamaEdge { prompt: 128, decode: 16 }, 0.35),
+            (RequestClass::VitTiny, 0.20),
+            (RequestClass::WhisperTinyEnc, 0.15),
+            (RequestClass::MobileBert { seq: 128 }, 0.15),
+            (RequestClass::Gpt2Xl { prompt: 128, decode: 16 }, 0.15),
+        ])
+    }
+
+    /// A single-class mix for a CLI model name
+    /// ([`RequestClass::for_model`]); `None` for unknown names.
+    pub fn for_model(name: &str) -> Option<Self> {
+        RequestClass::for_model(name).map(Self::single)
     }
 
     pub fn entries(&self) -> &[(RequestClass, f64)] {
@@ -398,11 +469,78 @@ mod tests {
 
     #[test]
     fn class_traces_are_nonempty_and_mixed_engine() {
-        for class in WorkloadMix::edge_default().classes() {
-            let t = class.trace();
-            assert!(!t.is_empty(), "{}", class.label());
-            assert!(t.iter().any(|o| matches!(o, Op::MatMul { .. })));
-            assert!(t.iter().any(|o| matches!(o, Op::Softmax { .. })));
+        for mix in [WorkloadMix::edge_default(), WorkloadMix::genai_default()] {
+            for class in mix.classes() {
+                let t = class.trace();
+                assert!(!t.is_empty(), "{}", class.label());
+                assert!(t.iter().any(|o| matches!(o, Op::MatMul { .. })));
+                assert!(t.iter().any(|o| matches!(o, Op::Softmax { .. })));
+            }
         }
+    }
+
+    #[test]
+    fn llama_requests_decode_like_gpt2() {
+        let class = RequestClass::LlamaEdge { prompt: 64, decode: 4 };
+        assert_eq!(class.decode_tokens(), 4);
+        assert_eq!(class.context_at(0), 64);
+        assert_eq!(class.context_at(3), 67);
+        let mut assembled = class.prompt_trace();
+        let model = class.model();
+        assert_eq!(model.seq, 64, "prompt length overrides the IR default");
+        for step in 0..class.decode_tokens() {
+            assembled.extend(trace_decode_step(&model, class.context_at(step)));
+        }
+        assert_eq!(assembled, class.trace());
+        // decode>4 downgrades to decode 4, keeping the prompt
+        assert_eq!(
+            RequestClass::LlamaEdge { prompt: 64, decode: 16 }.downgraded(),
+            Some(RequestClass::LlamaEdge { prompt: 64, decode: 4 })
+        );
+        assert_eq!(RequestClass::LlamaEdge { prompt: 64, decode: 4 }.downgraded(), None);
+    }
+
+    #[test]
+    fn whisper_requests_are_single_pass() {
+        let class = RequestClass::WhisperTinyEnc;
+        assert_eq!(class.decode_tokens(), 0);
+        assert_eq!(class.prompt_trace(), class.trace());
+        assert_eq!(class.downgraded(), None);
+        assert_eq!(class.model().seq, 1500);
+    }
+
+    #[test]
+    fn for_model_covers_every_preset() {
+        use crate::workload::ModelConfig;
+        for name in ModelConfig::PRESET_NAMES {
+            let class = RequestClass::for_model(name).expect(name);
+            assert!(!class.trace().is_empty(), "{name}");
+        }
+        assert_eq!(
+            RequestClass::for_model("llama-edge"),
+            Some(RequestClass::LlamaEdge { prompt: 128, decode: 16 })
+        );
+        assert_eq!(
+            RequestClass::for_model("whisper-tiny-enc"),
+            Some(RequestClass::WhisperTinyEnc)
+        );
+        assert!(RequestClass::for_model("nope").is_none());
+        assert!(WorkloadMix::for_model("nope").is_none());
+        assert_eq!(WorkloadMix::for_model("vit-tiny").unwrap().entries().len(), 1);
+    }
+
+    #[test]
+    fn mix_labels_are_distinct_and_stable() {
+        use super::mix_label;
+        assert_eq!(mix_label(std::iter::empty()), "empty");
+        assert_eq!(
+            mix_label([RequestClass::VitTiny, RequestClass::VitTiny].into_iter()),
+            "ViT-tiny"
+        );
+        let l = mix_label(WorkloadMix::genai_default().classes());
+        assert!(l.contains("Llama-edge/128+16"), "{l}");
+        assert!(l.contains("Whisper-tiny-enc"), "{l}");
+        // deterministic order (class order, duplicates collapsed)
+        assert_eq!(l, mix_label(WorkloadMix::genai_default().classes()));
     }
 }

@@ -10,9 +10,10 @@
 //! phases, which is what lets continuous batching interleave at token
 //! boundaries and lets reports carry time-to-first-token / time-
 //! between-tokens percentiles. Decode-step costs are memoized by
-//! context length (the geometry is fixed, so a step's cost depends only
-//! on how many tokens it attends over), and the `sim::kv` model charges
-//! a DMA streaming cost for KV working sets that outgrow the TCDM.
+//! (model, context length) — any causal-decoder IR preset gets the
+//! same O(decode) trace-building the GPT-2 XL special case used to get
+//! — and the `sim::kv` model charges a DMA streaming cost for KV
+//! working sets that outgrow the TCDM (GQA models spill less).
 //!
 //! The per-class cost memo is factored out as [`CostModel`] so the
 //! fleet dispatcher (`crate::fleet`) predicts queue delays with the
@@ -194,10 +195,12 @@ pub struct CostModel {
     exec: ExecConfig,
     kv: KvConfig,
     costs: BTreeMap<RequestClass, ClassCost>,
-    /// Decode-step phase memo keyed by context length. Sound because
-    /// only GPT-2 XL classes decode and `trace_decode_step` depends
-    /// only on the (fixed) geometry and the context, never the prompt.
-    decode_steps: BTreeMap<usize, PhaseCost>,
+    /// Decode-step phase memo keyed by (model name, context length):
+    /// `trace_decode_step` depends only on the model IR and the
+    /// context, never the prompt, so any causal-decoder class (GPT-2
+    /// XL, Llama-edge, future IR presets) shares step costs with every
+    /// other class of the same model.
+    decode_steps: BTreeMap<(String, usize), PhaseCost>,
 }
 
 impl CostModel {
@@ -231,16 +234,21 @@ impl CostModel {
         if !self.costs.contains_key(&class) {
             let mut phases = vec![phase_cost(&self.exec, &class.prompt_trace())];
             let model = class.model();
+            let exec = &self.exec;
+            let kv = &self.kv;
             for step in 0..class.decode_tokens() {
                 let ctx = class.context_at(step);
-                if !self.decode_steps.contains_key(&ctx) {
-                    let mut trace = vec![Op::KvSpill {
-                        bytes: self.kv.spill_bytes(&model, ctx) as usize,
-                    }];
-                    trace.extend(trace_decode_step(&model, ctx));
-                    self.decode_steps.insert(ctx, phase_cost(&self.exec, &trace));
-                }
-                phases.push(self.decode_steps.get(&ctx).expect("just inserted").clone());
+                let step_cost = self
+                    .decode_steps
+                    .entry((model.name.clone(), ctx))
+                    .or_insert_with(|| {
+                        let mut trace = vec![Op::KvSpill {
+                            bytes: kv.spill_bytes(&model, ctx) as usize,
+                        }];
+                        trace.extend(trace_decode_step(&model, ctx));
+                        phase_cost(exec, &trace)
+                    });
+                phases.push(step_cost.clone());
             }
             self.costs.insert(class, ClassCost::from_phases(phases));
         }
@@ -641,6 +649,7 @@ impl BatchScheduler {
                 self.cfg.mesh_n,
                 self.cfg.mesh_n
             ),
+            mix: super::request::mix_label(requests.iter().map(|r| r.class)),
             clusters: self.cfg.clusters(),
             n_requests: requests.len(),
             latencies: Latencies::from_unsorted(latencies),
@@ -725,6 +734,54 @@ mod tests {
         assert_eq!(model.decode_steps_resolved(), resolved);
         model.service_cycles(RequestClass::Gpt2Xl { prompt: 16, decode: 10 });
         assert_eq!(model.decode_steps_resolved(), resolved + 2);
+    }
+
+    #[test]
+    fn decode_step_memo_never_collides_across_models() {
+        // identical contexts, different model IRs: the (model, ctx)
+        // key must keep their step costs apart
+        let mut model = CostModel::new(ExecConfig::paper_accelerated());
+        model.service_cycles(RequestClass::Gpt2Xl { prompt: 16, decode: 8 });
+        assert_eq!(model.decode_steps_resolved(), 8);
+        model.service_cycles(RequestClass::LlamaEdge { prompt: 16, decode: 8 });
+        assert_eq!(model.decode_steps_resolved(), 16);
+        // and the llama steps must cost llama cycles, not gpt2 cycles
+        let gpt2 = model.service_cycles(RequestClass::Gpt2Xl { prompt: 16, decode: 8 });
+        let llama = model.service_cycles(RequestClass::LlamaEdge { prompt: 16, decode: 8 });
+        assert_ne!(gpt2, llama);
+    }
+
+    #[test]
+    fn llama_service_matches_execute_trace() {
+        // the phase decomposition of the IR-only preset must not change
+        // the total either
+        use crate::coordinator::execute_trace;
+        let exec = ExecConfig::paper_accelerated();
+        let class = RequestClass::LlamaEdge { prompt: 32, decode: 3 };
+        let mut model = CostModel::new(exec);
+        let agg = execute_trace(&exec, &class.trace());
+        assert_eq!(model.service_cycles(class), agg.total_cycles());
+        assert_eq!(model.token_cums(class).len(), 4);
+    }
+
+    #[test]
+    fn gqa_spills_less_than_mha_at_the_same_context() {
+        // Llama-edge's 8-of-32 KV heads cache 4x less per token than
+        // GPT-2 XL-style MHA would at the same d_model; with the spill
+        // policy its decode pays for fewer DMA bytes per step than a
+        // comparable MHA decoder of equal context
+        let mut spill = CostModel::with_kv(
+            ExecConfig::paper_accelerated(),
+            KvConfig::tcdm_spill(),
+        );
+        let llama = RequestClass::LlamaEdge { prompt: 512, decode: 4 };
+        let gpt2 = RequestClass::Gpt2Xl { prompt: 512, decode: 4 };
+        let llama_bytes = spill.kv_spill_bytes(llama);
+        let gpt2_bytes = spill.kv_spill_bytes(gpt2);
+        assert!(llama_bytes > 0, "512-token context must spill");
+        // per layer*token: llama 2*512*2 B vs gpt2 2*1600*2 B, and
+        // llama has a third of the layers
+        assert!(llama_bytes < gpt2_bytes, "{llama_bytes} vs {gpt2_bytes}");
     }
 
     #[test]

@@ -97,6 +97,10 @@ pub fn queue_depths(arrivals: &[u64], completions: &[u64]) -> (f64, usize) {
 pub struct ServeReport {
     /// `policy@NxN` label for tables.
     pub label: String,
+    /// Class population of the simulated stream (distinct class labels,
+    /// comma-joined; `"empty"` for an empty stream) — the `--model`
+    /// selection surfaces here and in the JSON.
+    pub mix: String,
     pub clusters: usize,
     pub n_requests: usize,
     /// Per-request latencies (completion - arrival), sorted, cycles.
@@ -208,8 +212,8 @@ impl ServeReport {
     pub fn render(&self) -> String {
         let mut out = report::render_table(
             &format!(
-                "Serving run — {} ({} requests on {} clusters)",
-                self.label, self.n_requests, self.clusters
+                "Serving run — {} ({} requests on {} clusters, mix {})",
+                self.label, self.n_requests, self.clusters, self.mix
             ),
             &SUMMARY_HEADERS,
             &[self.row()],
@@ -240,6 +244,7 @@ impl ServeReport {
     pub fn to_json(&self) -> String {
         report::json::Obj::new()
             .str("label", &self.label)
+            .str("mix", &self.mix)
             .u64("clusters", self.clusters as u64)
             .u64("n_requests", self.n_requests as u64)
             .u64("p50_cycles", self.p50())
@@ -296,6 +301,7 @@ mod tests {
         let ttft: Vec<u64> = latencies.iter().map(|l| l / 2).collect();
         ServeReport {
             label: "test@1x1".into(),
+            mix: "ViT-tiny".into(),
             clusters: 1,
             n_requests: n,
             latencies: Latencies::from_unsorted(latencies),
@@ -432,6 +438,7 @@ mod tests {
         let j = r.to_json();
         assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
         assert!(j.contains("\"label\":\"test@1x1\""), "{j}");
+        assert!(j.contains("\"mix\":\"ViT-tiny\""), "{j}");
         assert!(j.contains("\"p99_cycles\":10"), "{j}");
         assert!(j.contains("\"ttft_p95_cycles\":"), "{j}");
         assert!(j.contains("\"tbt_p50_cycles\":10"), "{j}");

@@ -96,9 +96,12 @@ impl Default for KvConfig {
 }
 
 /// KV bytes one cached token occupies in one layer: K plus V rows of
-/// `d_model` bf16 values each.
+/// `kv_heads * d_head` bf16 values each. For MHA presets this is the
+/// classic `2 * d_model`; GQA models (fewer KV heads than query heads)
+/// cache proportionally less, which directly shrinks decode spill
+/// volume.
 pub fn kv_bytes_per_token(model: &ModelConfig) -> u64 {
-    2 * model.d_model as u64 * BF16_BYTES
+    2 * model.kv_dim() as u64 * BF16_BYTES
 }
 
 /// Largest context whose per-layer KV working set fits in
@@ -151,6 +154,19 @@ mod tests {
         // doubles the extra spill
         assert_eq!(s512 - s256, 2 * (s256 - s128));
         assert_eq!(s256 - s128, 128 * kv_bytes_per_token(&g) * g.layers as u64);
+    }
+
+    #[test]
+    fn gqa_shrinks_the_kv_working_set() {
+        // Llama-edge caches 8 KV heads for 32 query heads: a quarter of
+        // the MHA working set, so 4x the TCDM-resident context
+        let gqa = ModelConfig::llama_edge();
+        let mha = ModelConfig { kv_heads: gqa.heads, ..gqa.clone() };
+        assert_eq!(kv_bytes_per_token(&gqa) * 4, kv_bytes_per_token(&mha));
+        assert_eq!(
+            capacity_tokens(&gqa, TCDM_BYTES as u64),
+            4 * capacity_tokens(&mha, TCDM_BYTES as u64)
+        );
     }
 
     #[test]

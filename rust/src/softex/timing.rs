@@ -73,6 +73,20 @@ pub fn gelu_cycles(cfg: &SoftExConfig, n: usize) -> u64 {
     JOB_SETUP + ceil_div(n, cfg.lanes) * cfg.terms as u64
 }
 
+/// Cycle cost of RMSNorm over `rows` token rows of `len` elements each
+/// on the SoftEx datapath (DESIGN.md §9, the SOLE-style reuse): per
+/// row, the lane accumulators stream the sum of squares in one pass
+/// (`ceil(len/N)`), the Newton unit turns it into `1/sqrt`, and the
+/// scale pass alternates loads and stores on the single memory port
+/// (`2*ceil(len/N)`) exactly like softmax normalization. Inversions
+/// amortize across rows the same way multi-row softmax inversions do
+/// (overlapped with the next row's accumulation).
+pub fn rmsnorm_cycles(cfg: &SoftExConfig, rows: usize, len: usize) -> u64 {
+    let per_row = ceil_div(len, cfg.lanes);
+    let inv = if rows > 1 { INV_AMORTIZED * rows as u64 } else { INV_STANDALONE };
+    JOB_SETUP + 3 * per_row * rows as u64 + inv
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +152,22 @@ mod tests {
         let r = (gelu_cycles(&cfg32, 2048 * 8) - JOB_SETUP) as f64
             / (gelu_cycles(&cfg64, 2048 * 8) - JOB_SETUP) as f64;
         assert!((r - 2.0).abs() < 0.05, "{r}");
+    }
+
+    #[test]
+    fn rmsnorm_streams_three_passes_per_row() {
+        let cfg = SoftExConfig::default();
+        let single = rmsnorm_cycles(&cfg, 1, 4096) - JOB_SETUP - INV_STANDALONE;
+        assert_eq!(single, 3 * (4096 / 16));
+        // multi-row jobs pay the amortized per-row inversion, like softmax
+        let multi = rmsnorm_cycles(&cfg, 128, 2048);
+        assert_eq!(
+            multi,
+            JOB_SETUP + 3 * (2048 / 16) * 128 + INV_AMORTIZED * 128
+        );
+        // and scale with the lane count like the softmax streamer
+        let wide = rmsnorm_cycles(&SoftExConfig::with_lanes(32), 128, 2048);
+        assert!(wide < multi);
     }
 
     #[test]

@@ -1,0 +1,436 @@
+//! The declarative model IR: a transformer described as data.
+//!
+//! A [`ModelConfig`] is no longer just a bag of matrix sizes — it fully
+//! determines the operator graph `workload::graph` lowers to the
+//! kernel-level [`super::trace::Op`] sequence the coordinator schedules:
+//!
+//! * [`BlockKind`] — encoder (one full-sequence pass) vs causal decoder
+//!   (a prompt pass followed by per-token decode steps over a growing
+//!   KV cache), i.e. the *phase semantics* of the model;
+//! * attention shape — `heads` query heads over `kv_heads` shared K/V
+//!   heads of width `d_head` (MHA when equal, GQA when fewer; the KV
+//!   working set in `sim::kv` scales with `kv_heads * d_head`);
+//! * [`NormKind`] — LayerNorm vs RMSNorm;
+//! * [`FfnKind`] — GELU / ReLU two-projection FFNs vs the SwiGLU
+//!   gate+up+down three-projection FFN with a SiLU gate.
+//!
+//! The four legacy presets (ViT-base, MobileBERT, GPT-2 XL, ViT-tiny)
+//! are pinned bit-identical to the pre-IR hand-rolled tracers by the
+//! executable oracle in `rust/tests/graph_oracle.rs`; `llama_edge` and
+//! `whisper_tiny_enc` are the first presets only the IR can express.
+
+/// Phase semantics of the block stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum BlockKind {
+    /// One full-sequence forward pass (vision / encoder models).
+    Encoder,
+    /// Prompt ingestion plus autoregressive decode over a KV cache.
+    CausalDecoder,
+}
+
+/// Which normalization the blocks use (pre-LN in both cases).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum NormKind {
+    /// Mean/variance LayerNorm (~4 passes/element on the cores).
+    LayerNorm,
+    /// RMSNorm: no mean subtraction (~3 passes/element on the cores),
+    /// or the SoftEx accumulate/rsqrt/scale path (DESIGN.md §9).
+    RmsNorm,
+}
+
+/// FFN family: projection count and gate activation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum FfnKind {
+    /// up -> GELU -> down (two projections).
+    Gelu,
+    /// up -> ReLU -> down; ReLU folds into the matmul epilogue for
+    /// free, matching the pre-IR tracers which emitted no activation op.
+    Relu,
+    /// gate -> SiLU, up, elementwise product, down (three projections).
+    SwiGlu,
+}
+
+impl FfnKind {
+    /// Dense projections per FFN (the `d_model x d_ff` matmuls).
+    pub fn projections(&self) -> usize {
+        match self {
+            FfnKind::Gelu | FfnKind::Relu => 2,
+            FfnKind::SwiGlu => 3,
+        }
+    }
+}
+
+/// A transformer stack geometry plus the IR fields that make it a
+/// complete model description (block kind, attention shape, norm and
+/// FFN kinds, bias convention).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    /// Owned so CLI-selected and user-defined models carry real names
+    /// through reports (was `&'static str` pre-IR).
+    pub name: String,
+    pub layers: usize,
+    /// Embedding size d.
+    pub d_model: usize,
+    /// Query heads.
+    pub heads: usize,
+    /// K/V heads; equal to `heads` for MHA, fewer for GQA (must divide
+    /// `heads`).
+    pub kv_heads: usize,
+    /// Per-head dimension d_h.
+    pub d_head: usize,
+    /// FFN hidden size.
+    pub d_ff: usize,
+    /// Sequence length: the experiment sequence for encoders, the
+    /// default prompt length for causal decoders.
+    pub seq: usize,
+    pub block: BlockKind,
+    pub norm: NormKind,
+    pub ffn: FfnKind,
+    /// Whether projections carry bias vectors (Llama-family models
+    /// drop them).
+    pub biases: bool,
+}
+
+impl ModelConfig {
+    /// ViT-base (Sec. VII-D): 12 layers, d=768, 12 heads, FFN 3072,
+    /// fixed sequence length 197 (196 patches + CLS).
+    pub fn vit_base() -> Self {
+        Self {
+            name: "ViT-base".to_string(),
+            layers: 12,
+            d_model: 768,
+            heads: 12,
+            kv_heads: 12,
+            d_head: 64,
+            d_ff: 3072,
+            seq: 197,
+            block: BlockKind::Encoder,
+            norm: NormKind::LayerNorm,
+            ffn: FfnKind::Gelu,
+            biases: true,
+        }
+    }
+
+    /// MobileBERT (Sec. VII-C): 24 encoder layers, 4 heads of d_h=128
+    /// over the 512-wide intra-block representation; the stacked
+    /// bottleneck FFNs are folded into one d_ff=128 equivalent so the
+    /// per-layer op count matches the paper's end-to-end numbers
+    /// (DESIGN.md §5: 45 GOP total at seq 512).
+    pub fn mobilebert(seq: usize) -> Self {
+        Self {
+            name: "MobileBERT".to_string(),
+            layers: 24,
+            d_model: 512,
+            heads: 4,
+            kv_heads: 4,
+            d_head: 128,
+            d_ff: 128,
+            seq,
+            block: BlockKind::Encoder,
+            norm: NormKind::LayerNorm,
+            ffn: FfnKind::Relu,
+            biases: true,
+        }
+    }
+
+    /// GPT-2 XL (Sec. VIII): 48 layers, d=1600, 25 heads, FFN 6400,
+    /// prompt mode with a 1024-token context.
+    pub fn gpt2_xl() -> Self {
+        Self {
+            name: "GPT-2 XL".to_string(),
+            layers: 48,
+            d_model: 1600,
+            heads: 25,
+            kv_heads: 25,
+            d_head: 64,
+            d_ff: 6400,
+            seq: 1024,
+            block: BlockKind::CausalDecoder,
+            norm: NormKind::LayerNorm,
+            ffn: FfnKind::Gelu,
+            biases: true,
+        }
+    }
+
+    /// The tiny ViT used for end-to-end numeric validation (matches
+    /// `python/compile/model.py::VIT_TINY`).
+    pub fn vit_tiny() -> Self {
+        Self {
+            name: "ViT-tiny".to_string(),
+            layers: 4,
+            d_model: 128,
+            heads: 4,
+            kv_heads: 4,
+            d_head: 32,
+            d_ff: 512,
+            seq: 65,
+            block: BlockKind::Encoder,
+            norm: NormKind::LayerNorm,
+            ffn: FfnKind::Gelu,
+            biases: true,
+        }
+    }
+
+    /// An edge-class Llama decoder (Llama-3.2-1B geometry): 16 layers,
+    /// d=2048, GQA 32 query / 8 KV heads of d_h=64, RMSNorm, SwiGLU
+    /// FFN of 8192, no biases. `seq` is the default prompt length.
+    pub fn llama_edge() -> Self {
+        Self {
+            name: "Llama-edge".to_string(),
+            layers: 16,
+            d_model: 2048,
+            heads: 32,
+            kv_heads: 8,
+            d_head: 64,
+            d_ff: 8192,
+            seq: 128,
+            block: BlockKind::CausalDecoder,
+            norm: NormKind::RmsNorm,
+            ffn: FfnKind::SwiGlu,
+            biases: false,
+        }
+    }
+
+    /// The Whisper-tiny audio encoder: 4 layers, d=384, 6 heads, GELU
+    /// FFN of 1536, over the fixed 1500-frame mel sequence (30 s of
+    /// audio at 50 Hz after the conv frontend, which is not modeled).
+    pub fn whisper_tiny_enc() -> Self {
+        Self {
+            name: "Whisper-tiny-enc".to_string(),
+            layers: 4,
+            d_model: 384,
+            heads: 6,
+            kv_heads: 6,
+            d_head: 64,
+            d_ff: 1536,
+            seq: 1500,
+            block: BlockKind::Encoder,
+            norm: NormKind::LayerNorm,
+            ffn: FfnKind::Gelu,
+            biases: true,
+        }
+    }
+
+    /// Look up a preset by its CLI name; `None` for unknown names.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "vit" | "vit-base" => Some(Self::vit_base()),
+            "mobilebert" => Some(Self::mobilebert(512)),
+            "gpt2-xl" => Some(Self::gpt2_xl()),
+            "vit-tiny" => Some(Self::vit_tiny()),
+            "llama-edge" => Some(Self::llama_edge()),
+            "whisper" | "whisper-tiny-enc" => Some(Self::whisper_tiny_enc()),
+            _ => None,
+        }
+    }
+
+    /// The CLI names [`Self::by_name`] accepts (canonical spellings).
+    pub const PRESET_NAMES: [&'static str; 6] = [
+        "vit-base",
+        "mobilebert",
+        "gpt2-xl",
+        "vit-tiny",
+        "llama-edge",
+        "whisper-tiny-enc",
+    ];
+
+    // ---- derived attention dimensions ----
+
+    /// Query projection width (`heads * d_head`).
+    pub fn q_dim(&self) -> usize {
+        self.heads * self.d_head
+    }
+
+    /// K (or V) projection width (`kv_heads * d_head`).
+    pub fn kv_dim(&self) -> usize {
+        self.kv_heads * self.d_head
+    }
+
+    /// Fused QKV projection output width: Q plus the (possibly
+    /// narrower, under GQA) K and V.
+    pub fn qkv_dim(&self) -> usize {
+        self.q_dim() + 2 * self.kv_dim()
+    }
+
+    /// Grouped-query attention (fewer KV heads than query heads)?
+    pub fn is_gqa(&self) -> bool {
+        self.kv_heads < self.heads
+    }
+
+    // ---- op counts (1 MAC = 2 OPs, Sec. VII-A) ----
+
+    /// MACs in the QKV and output projections of one layer. For MHA
+    /// this is the classic `4 * s * d * h*d_h`; GQA shrinks the K/V
+    /// share.
+    pub fn projection_macs(&self) -> u64 {
+        let s = self.seq as u64;
+        let d = self.d_model as u64;
+        s * d * self.qkv_dim() as u64 + s * self.q_dim() as u64 * d
+    }
+
+    /// MACs in the score (QK^T) and context (PV) matmuls of one layer.
+    pub fn attention_macs(&self) -> u64 {
+        2 * self.heads as u64 * self.seq as u64 * self.seq as u64 * self.d_head as u64
+    }
+
+    /// MACs in the FFN of one layer (three projections under SwiGLU).
+    pub fn ffn_macs(&self) -> u64 {
+        self.ffn.projections() as u64 * self.seq as u64 * self.d_model as u64 * self.d_ff as u64
+    }
+
+    /// Total MACs of one layer.
+    pub fn layer_macs(&self) -> u64 {
+        self.projection_macs() + self.attention_macs() + self.ffn_macs()
+    }
+
+    /// Total OPs of the full model (2 OPs per MAC).
+    pub fn total_ops(&self) -> u64 {
+        2 * self.layer_macs() * self.layers as u64
+    }
+
+    /// Softmax elements per layer (heads x seq x seq).
+    pub fn softmax_elems(&self) -> u64 {
+        self.heads as u64 * self.seq as u64 * self.seq as u64
+    }
+
+    /// Softmax rows per layer and their length.
+    pub fn softmax_shape(&self) -> (usize, usize) {
+        (self.heads * self.seq, self.seq)
+    }
+
+    /// FFN gate-activation elements per layer (seq x d_ff): GELU or
+    /// SiLU; zero for ReLU FFNs (folded into the matmul epilogue).
+    pub fn activation_elems(&self) -> u64 {
+        match self.ffn {
+            FfnKind::Gelu | FfnKind::SwiGlu => self.seq as u64 * self.d_ff as u64,
+            FfnKind::Relu => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vit_base_total_ops_match_paper() {
+        // Paper: 113 ms at 310 GOPS => ~35 GOP end to end
+        let v = ModelConfig::vit_base();
+        let gop = v.total_ops() as f64 / 1e9;
+        assert!((33.0..37.0).contains(&gop), "{gop}");
+    }
+
+    #[test]
+    fn vit_base_geometry() {
+        let v = ModelConfig::vit_base();
+        assert_eq!(v.q_dim(), v.d_model);
+        assert_eq!(v.softmax_shape(), (12 * 197, 197));
+        assert_eq!(v.activation_elems(), 197 * 3072);
+        assert!(!v.is_gqa());
+    }
+
+    #[test]
+    fn mobilebert_total_ops_match_paper() {
+        // Paper Sec. VII-C: 297 GOPS x 152 ms => ~45 GOP at seq 512
+        let m = ModelConfig::mobilebert(512);
+        let gop = m.total_ops() as f64 / 1e9;
+        assert!((41.0..49.0).contains(&gop), "{gop}");
+    }
+
+    #[test]
+    fn mobilebert_attention_layer_ops() {
+        // attention-only part at seq 512: ~0.54 GOP of QK^T+PV
+        let m = ModelConfig::mobilebert(512);
+        let gop = 2.0 * m.attention_macs() as f64 / 1e9;
+        assert!((0.5..0.6).contains(&gop), "{gop}");
+    }
+
+    #[test]
+    fn gpt2_xl_is_large() {
+        let g = ModelConfig::gpt2_xl();
+        // prompt-mode forward: O(10^12) OPs
+        assert!(g.total_ops() > 3_000_000_000_000);
+        assert_eq!(g.q_dim(), g.d_model);
+    }
+
+    #[test]
+    fn vit_tiny_matches_python_model() {
+        let t = ModelConfig::vit_tiny();
+        assert_eq!((t.layers, t.d_model, t.heads, t.d_ff, t.seq), (4, 128, 4, 512, 65));
+    }
+
+    #[test]
+    fn softmax_elems_consistent_with_shape() {
+        for m in [
+            ModelConfig::vit_base(),
+            ModelConfig::mobilebert(256),
+            ModelConfig::gpt2_xl(),
+            ModelConfig::llama_edge(),
+            ModelConfig::whisper_tiny_enc(),
+        ] {
+            let (rows, len) = m.softmax_shape();
+            assert_eq!(m.softmax_elems(), (rows * len) as u64);
+        }
+    }
+
+    #[test]
+    fn mha_projection_macs_recover_the_classic_formula() {
+        // kv_heads == heads: qkv+out = 4 * s * d * inner
+        for m in [
+            ModelConfig::vit_base(),
+            ModelConfig::mobilebert(512),
+            ModelConfig::gpt2_xl(),
+        ] {
+            let classic = 4 * m.seq as u64 * m.d_model as u64 * m.q_dim() as u64;
+            assert_eq!(m.projection_macs(), classic, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn gqa_shrinks_projection_macs_only() {
+        let gqa = ModelConfig::llama_edge();
+        let mha = ModelConfig {
+            kv_heads: gqa.heads,
+            ..gqa.clone()
+        };
+        assert!(gqa.is_gqa() && !mha.is_gqa());
+        assert!(gqa.projection_macs() < mha.projection_macs());
+        assert_eq!(gqa.attention_macs(), mha.attention_macs());
+        assert_eq!(gqa.ffn_macs(), mha.ffn_macs());
+        assert_eq!(gqa.qkv_dim(), (32 + 2 * 8) * 64);
+    }
+
+    #[test]
+    fn swiglu_has_three_projections() {
+        let l = ModelConfig::llama_edge();
+        assert_eq!(l.ffn.projections(), 3);
+        assert_eq!(
+            l.ffn_macs(),
+            3 * l.seq as u64 * l.d_model as u64 * l.d_ff as u64
+        );
+        // the SiLU gate counts as activation elements
+        assert_eq!(l.activation_elems(), l.seq as u64 * l.d_ff as u64);
+        assert_eq!(ModelConfig::mobilebert(512).activation_elems(), 0);
+    }
+
+    #[test]
+    fn whisper_encoder_is_long_sequence() {
+        let w = ModelConfig::whisper_tiny_enc();
+        assert_eq!(w.block, BlockKind::Encoder);
+        assert_eq!(w.seq, 1500);
+        assert_eq!(w.q_dim(), w.d_model);
+    }
+
+    #[test]
+    fn presets_resolve_by_name() {
+        for name in ModelConfig::PRESET_NAMES {
+            let m = ModelConfig::by_name(name).expect(name);
+            assert!(m.layers > 0 && m.seq > 0);
+        }
+        assert_eq!(
+            ModelConfig::by_name("vit").map(|m| m.name),
+            Some("ViT-base".to_string())
+        );
+        assert!(ModelConfig::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,295 @@
+//! The operator-graph layer: lowering the model IR to kernel op traces.
+//!
+//! A transformer block is the same dataflow graph in every phase — norm,
+//! fused QKV projection, per-head score matmuls, row-wise softmax,
+//! per-head context matmuls, output projection, residual, then the FFN
+//! chain — so one parameterized walker serves both the full-sequence
+//! prompt pass and the single-token decode step. The [`Phase`] supplies
+//! the two free dimensions (query tokens and attended length); the
+//! [`ModelConfig`] IR supplies everything else (attention shape, norm
+//! kind, FFN kind, bias convention).
+//!
+//! The pre-IR hand-rolled tracers (`trace_layer`, `trace_model`,
+//! `trace_decode_step`) are thin wrappers over this walker; the legacy
+//! presets lower to bit-identical op sequences, pinned by the
+//! executable oracle in `rust/tests/graph_oracle.rs`.
+
+use super::arch::{BlockKind, FfnKind, ModelConfig, NormKind};
+use super::trace::Op;
+
+/// One token-producing phase of a model's execution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Full-sequence forward pass: `seq` query tokens attend over
+    /// themselves (the only phase an encoder has; prompt ingestion for
+    /// a causal decoder).
+    Prompt { seq: usize },
+    /// One autoregressive token attending over a `ctx`-token KV cache
+    /// (causal decoders only).
+    Decode { ctx: usize },
+}
+
+impl Phase {
+    /// Query tokens flowing through the block in this phase.
+    pub fn tokens(&self) -> usize {
+        match *self {
+            Phase::Prompt { seq } => seq,
+            Phase::Decode { .. } => 1,
+        }
+    }
+
+    /// Keys/values each query row attends over.
+    pub fn attended(&self) -> usize {
+        match *self {
+            Phase::Prompt { seq } => seq,
+            Phase::Decode { ctx } => ctx,
+        }
+    }
+}
+
+/// A node of the per-layer operator graph, in dataflow order. The node
+/// list is the same for every transformer block; what each node lowers
+/// to is decided by the IR (e.g. [`Node::FfnAct`] lowers to GELU, SiLU,
+/// or nothing for the matmul-fused ReLU).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Node {
+    /// Pre-attention normalization.
+    AttnNorm,
+    /// Fused Q/K/V projection (GQA narrows the K/V share).
+    QkvProj,
+    /// Per-query-head score matmuls (QK^T).
+    Scores,
+    /// Row-wise softmax over all heads.
+    AttnSoftmax,
+    /// Per-query-head context matmuls (PV).
+    Context,
+    /// Output projection.
+    OutProj,
+    /// Attention residual add.
+    AttnResidual,
+    /// Pre-FFN normalization.
+    FfnNorm,
+    /// FFN input projection(s): one for GELU/ReLU, gate+up for SwiGLU.
+    FfnUp,
+    /// FFN gate activation (GELU / SiLU / fused-away ReLU).
+    FfnAct,
+    /// FFN output projection.
+    FfnDown,
+    /// FFN residual add.
+    FfnResidual,
+}
+
+/// The block's node order (identical for every arch; kept as data so
+/// callers can walk subsets, e.g. the attention core).
+pub const LAYER_NODES: [Node; 12] = [
+    Node::AttnNorm,
+    Node::QkvProj,
+    Node::Scores,
+    Node::AttnSoftmax,
+    Node::Context,
+    Node::OutProj,
+    Node::AttnResidual,
+    Node::FfnNorm,
+    Node::FfnUp,
+    Node::FfnAct,
+    Node::FfnDown,
+    Node::FfnResidual,
+];
+
+/// The attention-core slice of the graph (QK^T -> softmax -> PV), the
+/// workload of the paper's Fig. 10/11 "attention layer" experiment.
+pub const ATTENTION_CORE_NODES: [Node; 3] = [Node::Scores, Node::AttnSoftmax, Node::Context];
+
+/// The block's normalization over `tokens` rows of `d_model` each.
+/// RMSNorm keeps the row structure (SoftEx amortizes inversions per
+/// row); LayerNorm stays an elementwise core kernel.
+fn norm_op(cfg: &ModelConfig, tokens: usize) -> Op {
+    match cfg.norm {
+        NormKind::LayerNorm => Op::LayerNorm { n: tokens * cfg.d_model },
+        NormKind::RmsNorm => Op::RmsNorm { rows: tokens, len: cfg.d_model },
+    }
+}
+
+/// Lower one graph node of `cfg` at `phase`, appending its ops.
+pub fn lower_node(cfg: &ModelConfig, phase: Phase, node: Node, ops: &mut Vec<Op>) {
+    let t = phase.tokens();
+    let a = phase.attended();
+    let d = cfg.d_model;
+    let dh = cfg.d_head;
+    let h = cfg.heads;
+    match node {
+        Node::AttnNorm | Node::FfnNorm => ops.push(norm_op(cfg, t)),
+        Node::QkvProj => {
+            ops.push(Op::MatMul { m: t, k: d, n: cfg.qkv_dim() });
+            if cfg.biases {
+                ops.push(Op::Bias { n: t * cfg.qkv_dim() });
+            }
+        }
+        Node::Scores => {
+            for _ in 0..h {
+                ops.push(Op::MatMul { m: t, k: dh, n: a }); // Q K^T
+            }
+        }
+        Node::AttnSoftmax => ops.push(Op::Softmax { rows: h * t, len: a }),
+        Node::Context => {
+            for _ in 0..h {
+                ops.push(Op::MatMul { m: t, k: a, n: dh }); // P V
+            }
+        }
+        Node::OutProj => {
+            ops.push(Op::MatMul { m: t, k: cfg.q_dim(), n: d });
+            if cfg.biases {
+                ops.push(Op::Bias { n: t * d });
+            }
+        }
+        Node::AttnResidual | Node::FfnResidual => ops.push(Op::Residual { n: t * d }),
+        Node::FfnUp => {
+            let projections = match cfg.ffn {
+                FfnKind::Gelu | FfnKind::Relu => 1,
+                FfnKind::SwiGlu => 2, // gate + up
+            };
+            for _ in 0..projections {
+                ops.push(Op::MatMul { m: t, k: d, n: cfg.d_ff });
+                if cfg.biases {
+                    ops.push(Op::Bias { n: t * cfg.d_ff });
+                }
+            }
+        }
+        Node::FfnAct => match cfg.ffn {
+            FfnKind::Gelu => ops.push(Op::Gelu { n: t * cfg.d_ff }),
+            // ReLU folds into the matmul epilogue: no op (matches the
+            // pre-IR tracers bit-for-bit)
+            FfnKind::Relu => {}
+            // SiLU gate; the gate*up elementwise product is the
+            // core-assist share of the op's cost (coordinator::op_cost)
+            FfnKind::SwiGlu => ops.push(Op::Silu { n: t * cfg.d_ff }),
+        },
+        Node::FfnDown => {
+            ops.push(Op::MatMul { m: t, k: cfg.d_ff, n: d });
+            if cfg.biases {
+                ops.push(Op::Bias { n: t * d });
+            }
+        }
+    }
+}
+
+/// The op sequence of one block layer at a phase.
+pub fn lower_layer(cfg: &ModelConfig, phase: Phase) -> Vec<Op> {
+    let mut ops = Vec::new();
+    for node in LAYER_NODES {
+        lower_node(cfg, phase, node, &mut ops);
+    }
+    ops
+}
+
+/// The full-stack op trace of one phase (the layer repeated).
+pub fn trace_phase(cfg: &ModelConfig, phase: Phase) -> Vec<Op> {
+    if let Phase::Decode { ctx } = phase {
+        assert!(ctx > 0, "decode step needs a non-empty context");
+        assert_eq!(
+            cfg.block,
+            BlockKind::CausalDecoder,
+            "{}: only causal decoders have decode phases",
+            cfg.name
+        );
+    }
+    let layer = lower_layer(cfg, phase);
+    let mut ops = Vec::with_capacity(layer.len() * cfg.layers);
+    for _ in 0..cfg.layers {
+        ops.extend_from_slice(&layer);
+    }
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_dimensions() {
+        let p = Phase::Prompt { seq: 197 };
+        assert_eq!((p.tokens(), p.attended()), (197, 197));
+        let d = Phase::Decode { ctx: 300 };
+        assert_eq!((d.tokens(), d.attended()), (1, 300));
+    }
+
+    #[test]
+    fn layer_graph_covers_all_nodes_once() {
+        // every node appears exactly once, in dataflow order
+        for (i, n) in LAYER_NODES.iter().enumerate() {
+            assert_eq!(LAYER_NODES.iter().position(|m| m == n), Some(i));
+        }
+        assert!(LAYER_NODES.starts_with(&[Node::AttnNorm]));
+        assert!(LAYER_NODES.ends_with(&[Node::FfnResidual]));
+    }
+
+    #[test]
+    fn swiglu_lowers_gate_up_silu_down() {
+        let l = ModelConfig::llama_edge();
+        let ops = lower_layer(&l, Phase::Prompt { seq: 8 });
+        let matmuls = ops.iter().filter(|o| matches!(o, Op::MatMul { .. })).count();
+        // qkv + h scores + h contexts + out + gate + up + down
+        assert_eq!(matmuls, 1 + l.heads + l.heads + 1 + 3);
+        assert!(ops.iter().any(|o| matches!(o, Op::Silu { .. })));
+        assert!(ops.iter().any(|o| matches!(o, Op::RmsNorm { .. })));
+        // Llama drops biases entirely
+        assert!(!ops.iter().any(|o| matches!(o, Op::Bias { .. })));
+        assert!(!ops.iter().any(|o| matches!(o, Op::LayerNorm { .. })));
+        assert!(!ops.iter().any(|o| matches!(o, Op::Gelu { .. })));
+    }
+
+    #[test]
+    fn gqa_narrows_only_the_qkv_projection() {
+        let gqa = ModelConfig::llama_edge();
+        let mha = ModelConfig { kv_heads: gqa.heads, ..gqa.clone() };
+        let p = Phase::Prompt { seq: 16 };
+        let qkv = |cfg: &ModelConfig| {
+            let mut ops = Vec::new();
+            lower_node(cfg, p, Node::QkvProj, &mut ops);
+            ops
+        };
+        assert_eq!(qkv(&gqa), vec![Op::MatMul { m: 16, k: 2048, n: (32 + 16) * 64 }]);
+        assert_eq!(qkv(&mha), vec![Op::MatMul { m: 16, k: 2048, n: 3 * 2048 }]);
+        // scores/softmax/context are per *query* head: identical
+        for node in ATTENTION_CORE_NODES {
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            lower_node(&gqa, p, node, &mut a);
+            lower_node(&mha, p, node, &mut b);
+            assert_eq!(a, b, "{node:?}");
+        }
+    }
+
+    #[test]
+    fn trace_phase_repeats_layers() {
+        let w = ModelConfig::whisper_tiny_enc();
+        let phase = Phase::Prompt { seq: w.seq };
+        assert_eq!(
+            trace_phase(&w, phase).len(),
+            lower_layer(&w, phase).len() * w.layers
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "only causal decoders")]
+    fn encoders_reject_decode_phases() {
+        trace_phase(&ModelConfig::vit_base(), Phase::Decode { ctx: 10 });
+    }
+
+    #[test]
+    fn layer_macs_match_the_ir_closed_form() {
+        for cfg in [
+            ModelConfig::vit_base(),
+            ModelConfig::mobilebert(512),
+            ModelConfig::gpt2_xl(),
+            ModelConfig::llama_edge(),
+            ModelConfig::whisper_tiny_enc(),
+        ] {
+            let macs: u64 = lower_layer(&cfg, Phase::Prompt { seq: cfg.seq })
+                .iter()
+                .map(|o| o.macs())
+                .sum();
+            assert_eq!(macs, cfg.layer_macs(), "{}", cfg.name);
+        }
+    }
+}

@@ -1,15 +1,23 @@
 //! Transformer workloads (paper Sec. III-A, VII-C/D, VIII).
 //!
-//! * [`config`] — model geometries: ViT-base, MobileBERT, GPT-2 XL and
-//!   the tiny ViT used for end-to-end numeric validation;
-//! * [`trace`]  — lowering a model into the kernel-level op sequence the
-//!   coordinator schedules (MatMul / Softmax / GELU / LayerNorm / ...);
-//! * [`gen`]    — synthetic activation generators with the distributions
+//! * [`arch`]  — the declarative model IR: block kind (encoder / causal
+//!   decoder), attention shape (MHA / GQA), norm kind (LayerNorm /
+//!   RMSNorm), FFN kind (GELU / ReLU / SwiGLU), plus the presets:
+//!   ViT-base, MobileBERT, GPT-2 XL, ViT-tiny, Llama-edge,
+//!   Whisper-tiny-enc;
+//! * [`graph`] — the operator-graph layer lowering the IR to kernel op
+//!   sequences, one parameterized walker for prompt and decode phases;
+//! * [`trace`] — the kernel-level [`Op`] vocabulary the coordinator
+//!   schedules (MatMul / Softmax / GELU / SiLU / norms / ...), with the
+//!   pre-IR tracer entry points kept as thin graph wrappers;
+//! * [`gen`]   — synthetic activation generators with the distributions
 //!   used for accuracy benchmarking (DESIGN.md §1).
 
-pub mod config;
+pub mod arch;
 pub mod gen;
+pub mod graph;
 pub mod trace;
 
-pub use config::ModelConfig;
+pub use arch::{BlockKind, FfnKind, ModelConfig, NormKind};
+pub use graph::Phase;
 pub use trace::{trace_decode_step, trace_layer, trace_model, Op};

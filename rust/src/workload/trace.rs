@@ -1,6 +1,14 @@
 //! Kernel-level op traces: the unit of work the coordinator schedules.
+//!
+//! Since the IR refactor the tracers here are thin wrappers over the
+//! operator-graph walker in [`super::graph`]: a model lowers to ops
+//! through its [`ModelConfig`] IR (attention shape, norm kind, FFN
+//! kind), not through per-model hand-rolled builders. The legacy
+//! presets are pinned bit-identical to the pre-IR builders by
+//! `rust/tests/graph_oracle.rs`.
 
-use super::config::ModelConfig;
+use super::arch::ModelConfig;
+use super::graph::{self, Phase, ATTENTION_CORE_NODES};
 
 /// One schedulable kernel.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -11,8 +19,17 @@ pub enum Op {
     Softmax { rows: usize, len: usize },
     /// Elementwise GELU over n activations.
     Gelu { n: usize },
-    /// LayerNorm over n elements (mean/var/scale ~ 5 passes).
+    /// SiLU gate over n activations (SwiGLU FFNs): x * sigmoid(x) on
+    /// the SoftEx exponential datapath, with the gate*up elementwise
+    /// product as the core-assist share (`coordinator::op_cost`).
+    Silu { n: usize },
+    /// LayerNorm over n elements (mean/var/scale ~ 4 passes).
     LayerNorm { n: usize },
+    /// RMSNorm over `rows` token rows of `len` elements each: no mean
+    /// subtraction (~3 passes on the cores, or the SoftEx
+    /// accumulate/rsqrt/scale path with softmax-style per-row
+    /// inversion amortization).
+    RmsNorm { rows: usize, len: usize },
     /// Residual add over n elements.
     Residual { n: usize },
     /// Bias add over n elements.
@@ -39,118 +56,43 @@ impl Op {
     pub fn ops(&self) -> u64 {
         match *self {
             Op::MatMul { .. } => 2 * self.macs(),
-            Op::Softmax { rows, len } => (rows * len) as u64,
-            Op::Gelu { n } | Op::LayerNorm { n } | Op::Residual { n } | Op::Bias { n } => n as u64,
+            Op::Softmax { rows, len } | Op::RmsNorm { rows, len } => (rows * len) as u64,
+            Op::Gelu { n }
+            | Op::Silu { n }
+            | Op::LayerNorm { n }
+            | Op::Residual { n }
+            | Op::Bias { n } => n as u64,
             Op::KvSpill { .. } => 0,
         }
     }
 }
 
-/// The op sequence of one encoder layer (pre-LN transformer block).
+/// The op sequence of one layer (pre-norm transformer block) at the
+/// model's own sequence length.
 pub fn trace_layer(cfg: &ModelConfig) -> Vec<Op> {
-    let s = cfg.seq;
-    let d = cfg.d_model;
-    let dh = cfg.d_head;
-    let h = cfg.heads;
-    let inner = h * dh;
-    let mut ops = vec![
-        Op::LayerNorm { n: s * d },
-        // fused QKV projection
-        Op::MatMul { m: s, k: d, n: 3 * inner },
-        Op::Bias { n: 3 * s * inner },
-    ];
-    // per-head score and context matmuls + the row-wise softmax
-    for _ in 0..h {
-        ops.push(Op::MatMul { m: s, k: dh, n: s }); // Q K^T
-    }
-    ops.push(Op::Softmax { rows: h * s, len: s });
-    for _ in 0..h {
-        ops.push(Op::MatMul { m: s, k: s, n: dh }); // P V
-    }
-    ops.push(Op::MatMul { m: s, k: inner, n: d }); // output projection
-    ops.push(Op::Bias { n: s * d });
-    ops.push(Op::Residual { n: s * d });
-    // FFN
-    ops.push(Op::LayerNorm { n: s * d });
-    ops.push(Op::MatMul { m: s, k: d, n: cfg.d_ff });
-    ops.push(Op::Bias { n: s * cfg.d_ff });
-    if cfg.gelu_ffn {
-        ops.push(Op::Gelu { n: s * cfg.d_ff });
-    }
-    ops.push(Op::MatMul { m: s, k: cfg.d_ff, n: d });
-    ops.push(Op::Bias { n: s * d });
-    ops.push(Op::Residual { n: s * d });
-    ops
+    graph::lower_layer(cfg, Phase::Prompt { seq: cfg.seq })
 }
 
-/// The full model trace (layers repeated).
+/// The full model trace (layers repeated) at the model's own sequence
+/// length: the encoder forward pass, or a decoder's prompt ingestion.
 pub fn trace_model(cfg: &ModelConfig) -> Vec<Op> {
-    let layer = trace_layer(cfg);
-    let mut ops = Vec::with_capacity(layer.len() * cfg.layers);
-    for _ in 0..cfg.layers {
-        ops.extend_from_slice(&layer);
-    }
-    ops
+    graph::trace_phase(cfg, Phase::Prompt { seq: cfg.seq })
 }
 
 /// One autoregressive decode step: a single query token attends over a
 /// `ctx`-token KV cache, through all layers. This is the per-token unit
-/// the serving simulator schedules for GPT-2 XL decode after the prompt
-/// has been ingested with [`trace_model`] at `seq = prompt_len`.
+/// the serving simulator schedules for causal-decoder models after the
+/// prompt has been ingested with [`trace_model`] at `seq = prompt_len`.
 pub fn trace_decode_step(cfg: &ModelConfig, ctx: usize) -> Vec<Op> {
-    assert!(ctx > 0, "decode step needs a non-empty context");
-    let d = cfg.d_model;
-    let dh = cfg.d_head;
-    let h = cfg.heads;
-    let inner = h * dh;
-    let mut layer = vec![
-        Op::LayerNorm { n: d },
-        // fused QKV projection of the one new token
-        Op::MatMul { m: 1, k: d, n: 3 * inner },
-        Op::Bias { n: 3 * inner },
-    ];
-    // per-head score row against the cached keys + row-wise softmax
-    for _ in 0..h {
-        layer.push(Op::MatMul { m: 1, k: dh, n: ctx }); // q K^T
-    }
-    layer.push(Op::Softmax { rows: h, len: ctx });
-    for _ in 0..h {
-        layer.push(Op::MatMul { m: 1, k: ctx, n: dh }); // p V
-    }
-    layer.push(Op::MatMul { m: 1, k: inner, n: d }); // output projection
-    layer.push(Op::Bias { n: d });
-    layer.push(Op::Residual { n: d });
-    // FFN on the one token
-    layer.push(Op::LayerNorm { n: d });
-    layer.push(Op::MatMul { m: 1, k: d, n: cfg.d_ff });
-    layer.push(Op::Bias { n: cfg.d_ff });
-    if cfg.gelu_ffn {
-        layer.push(Op::Gelu { n: cfg.d_ff });
-    }
-    layer.push(Op::MatMul { m: 1, k: cfg.d_ff, n: d });
-    layer.push(Op::Bias { n: d });
-    layer.push(Op::Residual { n: d });
-
-    let mut ops = Vec::with_capacity(layer.len() * cfg.layers);
-    for _ in 0..cfg.layers {
-        ops.extend_from_slice(&layer);
-    }
-    ops
+    graph::trace_phase(cfg, Phase::Decode { ctx })
 }
 
 /// Only the attention core (QK^T -> softmax -> PV), the workload of the
 /// paper's Fig. 10/11 "attention layer" experiment.
 pub fn trace_attention_core(cfg: &ModelConfig) -> Vec<Op> {
-    let s = cfg.seq;
-    let dh = cfg.d_head;
-    let h = cfg.heads;
     let mut ops = Vec::new();
-    for _ in 0..h {
-        ops.push(Op::MatMul { m: s, k: dh, n: s });
-    }
-    ops.push(Op::Softmax { rows: h * s, len: s });
-    for _ in 0..h {
-        ops.push(Op::MatMul { m: s, k: s, n: dh });
+    for node in ATTENTION_CORE_NODES {
+        graph::lower_node(cfg, Phase::Prompt { seq: cfg.seq }, node, &mut ops);
     }
     ops
 }
@@ -165,6 +107,8 @@ mod tests {
             ModelConfig::vit_base(),
             ModelConfig::mobilebert(512),
             ModelConfig::gpt2_xl(),
+            ModelConfig::llama_edge(),
+            ModelConfig::whisper_tiny_enc(),
         ] {
             let macs: u64 = trace_layer(&cfg).iter().map(|o| o.macs()).sum();
             assert_eq!(macs, cfg.layer_macs(), "{}", cfg.name);
@@ -217,10 +161,27 @@ mod tests {
         let g = ModelConfig::gpt2_xl();
         let ctx = 256;
         let macs: u64 = trace_decode_step(&g, ctx).iter().map(|o| o.macs()).sum();
-        let seq1 = ModelConfig { seq: 1, ..g };
-        let expected_layer =
-            seq1.projection_macs() + seq1.ffn_macs() + 2 * g.heads as u64 * ctx as u64 * g.d_head as u64;
+        let seq1 = ModelConfig { seq: 1, ..g.clone() };
+        let expected_layer = seq1.projection_macs()
+            + seq1.ffn_macs()
+            + 2 * g.heads as u64 * ctx as u64 * g.d_head as u64;
         assert_eq!(macs, expected_layer * g.layers as u64);
+    }
+
+    #[test]
+    fn llama_decode_step_mirrors_the_gqa_geometry() {
+        let l = ModelConfig::llama_edge();
+        let step = trace_decode_step(&l, 200);
+        // softmax over the cache, one row per query head
+        assert!(step
+            .iter()
+            .any(|o| matches!(o, Op::Softmax { rows, len } if *rows == l.heads && *len == 200)));
+        // the narrowed fused QKV projection of the one new token
+        assert!(step
+            .iter()
+            .any(|o| matches!(o, Op::MatMul { m: 1, k, n } if *k == l.d_model && *n == l.qkv_dim())));
+        assert!(step.iter().any(|o| matches!(o, Op::Silu { .. })));
+        assert!(step.iter().any(|o| matches!(o, Op::RmsNorm { .. })));
     }
 
     #[test]
@@ -246,6 +207,9 @@ mod tests {
         assert_eq!(Op::MatMul { m: 2, k: 3, n: 4 }.ops(), 48);
         assert_eq!(Op::Softmax { rows: 4, len: 8 }.ops(), 32);
         assert_eq!(Op::Gelu { n: 100 }.ops(), 100);
+        assert_eq!(Op::Silu { n: 100 }.ops(), 100);
+        assert_eq!(Op::RmsNorm { rows: 2, len: 32 }.ops(), 64);
+        assert_eq!(Op::LayerNorm { n: 64 }.ops(), 64);
     }
 
     #[test]

@@ -203,6 +203,67 @@ fn downgrade_admission_keeps_more_requests_than_shedding() {
 }
 
 #[test]
+fn genai_mix_runs_every_fleet_policy_end_to_end() {
+    // the IR presets through the whole scale-out path: Llama-edge
+    // decode traffic and Whisper encoder passes dispatched, simulated,
+    // and aggregated under every policy, bit-deterministic across
+    // thread counts
+    let reqs = RequestGen::new(
+        0x6E4A1,
+        ArrivalProcess::Poisson { mean_gap: 8.0e5 },
+        WorkloadMix::genai_default(),
+    )
+    .generate(150);
+    for policy in DispatchPolicy::ALL {
+        let run_with = |threads: usize| {
+            let mut cfg = FleetConfig::new(4, policy);
+            cfg.seed = 0x6E4A1;
+            cfg.threads = threads;
+            Fleet::new(cfg).run(&reqs)
+        };
+        let (a, b) = (run_with(1), run_with(4));
+        assert_eq!(a.latencies, b.latencies, "{}", a.label);
+        assert_eq!(a.tbt, b.tbt, "{}", a.label);
+        assert_eq!(a.n_admitted, 150, "{}", a.label);
+        // llama + gpt2 decode gaps populate the token metrics
+        assert!(!a.tbt.is_empty(), "{}", a.label);
+        assert!(a.tbt_p50() > 0, "{}", a.label);
+        assert!(a.mix.contains("Llama-edge/128+16"), "{}", a.mix);
+        assert!(a.mix.contains("Whisper-tiny-enc"), "{}", a.mix);
+        assert!(a.to_json().contains("\"mix\":\""), "{}", a.label);
+    }
+}
+
+#[test]
+fn llama_downgrade_admission_truncates_decode_fleetwide() {
+    // deadline between Llama-edge's decode-4 and decode-16 service
+    // times: downgrade admission must rescue what shed refuses
+    let mut costs = CostModel::new(ExecConfig::paper_accelerated());
+    let full = costs.service_cycles(RequestClass::LlamaEdge { prompt: 128, decode: 16 });
+    let lite = costs.service_cycles(RequestClass::LlamaEdge { prompt: 128, decode: 4 });
+    assert!(lite < full);
+    let deadline = (full + lite) / 2;
+    let reqs: Vec<Request> = (0..8)
+        .map(|i| Request {
+            id: i,
+            class: RequestClass::LlamaEdge { prompt: 128, decode: 16 },
+            arrival: i as u64 * 100 * full,
+        })
+        .collect();
+    let run_with = |admission| {
+        let mut cfg = FleetConfig::new(2, DispatchPolicy::JoinShortestQueue);
+        cfg.admission = admission;
+        Fleet::new(cfg).run(&reqs)
+    };
+    let shed = run_with(Admission::Shed { deadline });
+    assert_eq!(shed.n_shed, 8);
+    let down = run_with(Admission::Downgrade { deadline });
+    assert_eq!(down.n_shed, 0);
+    assert_eq!(down.n_downgraded, 8);
+    assert_eq!(down.mix, "Llama-edge/128+16");
+}
+
+#[test]
 fn fewer_requests_than_clusters_leaves_clusters_empty() {
     let requests = poisson_stream(29, 3, 1.0e9);
     let mut cfg = FleetConfig::new(8, DispatchPolicy::RoundRobin);

@@ -1,0 +1,266 @@
+//! Executable golden oracle for the model-IR refactor (same pattern as
+//! `tests/determinism.rs`): the four legacy presets must lower to op
+//! sequences **bit-identical** to the pre-IR hand-rolled trace
+//! builders, for the prompt pass and for every decode context — and
+//! therefore to identical service times and serve reports.
+//!
+//! The reference implementations below *are* the pre-refactor
+//! `trace_layer` / `trace_model` / `trace_decode_step`, kept verbatim
+//! (modulo the old struct's field spelling) as executable goldens
+//! rather than tables of magic numbers.
+
+use softex::coordinator::{execute_trace, ExecConfig};
+use softex::server::{
+    ArrivalProcess, BatchScheduler, CostModel, Policy, Request, RequestClass, RequestGen,
+    ServerConfig, WorkloadMix,
+};
+use softex::workload::{trace_decode_step, trace_layer, trace_model, ModelConfig, Op};
+
+/// The pre-IR model description: a plain bag of matrix sizes.
+struct Legacy {
+    layers: usize,
+    d_model: usize,
+    heads: usize,
+    d_head: usize,
+    d_ff: usize,
+    seq: usize,
+    gelu_ffn: bool,
+}
+
+/// The four pre-IR presets, geometry copied from the pre-refactor
+/// `ModelConfig` constructors.
+fn legacy_presets() -> Vec<(Legacy, ModelConfig)> {
+    vec![
+        (
+            Legacy { layers: 12, d_model: 768, heads: 12, d_head: 64, d_ff: 3072, seq: 197, gelu_ffn: true },
+            ModelConfig::vit_base(),
+        ),
+        (
+            Legacy { layers: 24, d_model: 512, heads: 4, d_head: 128, d_ff: 128, seq: 512, gelu_ffn: false },
+            ModelConfig::mobilebert(512),
+        ),
+        (
+            Legacy { layers: 24, d_model: 512, heads: 4, d_head: 128, d_ff: 128, seq: 128, gelu_ffn: false },
+            ModelConfig::mobilebert(128),
+        ),
+        (
+            Legacy { layers: 48, d_model: 1600, heads: 25, d_head: 64, d_ff: 6400, seq: 1024, gelu_ffn: true },
+            ModelConfig::gpt2_xl(),
+        ),
+        (
+            Legacy { layers: 4, d_model: 128, heads: 4, d_head: 32, d_ff: 512, seq: 65, gelu_ffn: true },
+            ModelConfig::vit_tiny(),
+        ),
+    ]
+}
+
+/// The pre-refactor `trace_layer`, verbatim.
+fn legacy_trace_layer(cfg: &Legacy) -> Vec<Op> {
+    let s = cfg.seq;
+    let d = cfg.d_model;
+    let dh = cfg.d_head;
+    let h = cfg.heads;
+    let inner = h * dh;
+    let mut ops = vec![
+        Op::LayerNorm { n: s * d },
+        Op::MatMul { m: s, k: d, n: 3 * inner },
+        Op::Bias { n: 3 * s * inner },
+    ];
+    for _ in 0..h {
+        ops.push(Op::MatMul { m: s, k: dh, n: s });
+    }
+    ops.push(Op::Softmax { rows: h * s, len: s });
+    for _ in 0..h {
+        ops.push(Op::MatMul { m: s, k: s, n: dh });
+    }
+    ops.push(Op::MatMul { m: s, k: inner, n: d });
+    ops.push(Op::Bias { n: s * d });
+    ops.push(Op::Residual { n: s * d });
+    ops.push(Op::LayerNorm { n: s * d });
+    ops.push(Op::MatMul { m: s, k: d, n: cfg.d_ff });
+    ops.push(Op::Bias { n: s * cfg.d_ff });
+    if cfg.gelu_ffn {
+        ops.push(Op::Gelu { n: s * cfg.d_ff });
+    }
+    ops.push(Op::MatMul { m: s, k: cfg.d_ff, n: d });
+    ops.push(Op::Bias { n: s * d });
+    ops.push(Op::Residual { n: s * d });
+    ops
+}
+
+/// The pre-refactor `trace_model`, verbatim.
+fn legacy_trace_model(cfg: &Legacy) -> Vec<Op> {
+    let layer = legacy_trace_layer(cfg);
+    let mut ops = Vec::with_capacity(layer.len() * cfg.layers);
+    for _ in 0..cfg.layers {
+        ops.extend_from_slice(&layer);
+    }
+    ops
+}
+
+/// The pre-refactor `trace_decode_step`, verbatim.
+fn legacy_trace_decode_step(cfg: &Legacy, ctx: usize) -> Vec<Op> {
+    assert!(ctx > 0, "decode step needs a non-empty context");
+    let d = cfg.d_model;
+    let dh = cfg.d_head;
+    let h = cfg.heads;
+    let inner = h * dh;
+    let mut layer = vec![
+        Op::LayerNorm { n: d },
+        Op::MatMul { m: 1, k: d, n: 3 * inner },
+        Op::Bias { n: 3 * inner },
+    ];
+    for _ in 0..h {
+        layer.push(Op::MatMul { m: 1, k: dh, n: ctx });
+    }
+    layer.push(Op::Softmax { rows: h, len: ctx });
+    for _ in 0..h {
+        layer.push(Op::MatMul { m: 1, k: ctx, n: dh });
+    }
+    layer.push(Op::MatMul { m: 1, k: inner, n: d });
+    layer.push(Op::Bias { n: d });
+    layer.push(Op::Residual { n: d });
+    layer.push(Op::LayerNorm { n: d });
+    layer.push(Op::MatMul { m: 1, k: d, n: cfg.d_ff });
+    layer.push(Op::Bias { n: cfg.d_ff });
+    if cfg.gelu_ffn {
+        layer.push(Op::Gelu { n: cfg.d_ff });
+    }
+    layer.push(Op::MatMul { m: 1, k: cfg.d_ff, n: d });
+    layer.push(Op::Bias { n: d });
+    layer.push(Op::Residual { n: d });
+
+    let mut ops = Vec::with_capacity(layer.len() * cfg.layers);
+    for _ in 0..cfg.layers {
+        ops.extend_from_slice(&layer);
+    }
+    ops
+}
+
+#[test]
+fn legacy_prompt_traces_are_bit_identical() {
+    for (legacy, ir) in legacy_presets() {
+        assert_eq!(
+            trace_layer(&ir),
+            legacy_trace_layer(&legacy),
+            "{} layer",
+            ir.name
+        );
+        assert_eq!(
+            trace_model(&ir),
+            legacy_trace_model(&legacy),
+            "{} model",
+            ir.name
+        );
+    }
+}
+
+#[test]
+fn legacy_decode_traces_are_bit_identical_per_context() {
+    // the decoder preset, across the contexts the serving simulator
+    // actually schedules (short, TCDM-capacity boundary, long)
+    let (legacy, ir) = (
+        Legacy { layers: 48, d_model: 1600, heads: 25, d_head: 64, d_ff: 6400, seq: 1024, gelu_ffn: true },
+        ModelConfig::gpt2_xl(),
+    );
+    for ctx in [1usize, 2, 39, 40, 41, 128, 129, 512, 1024, 1040] {
+        assert_eq!(
+            trace_decode_step(&ir, ctx),
+            legacy_trace_decode_step(&legacy, ctx),
+            "ctx {ctx}"
+        );
+    }
+}
+
+#[test]
+fn legacy_service_cycles_are_unchanged() {
+    // the CostModel's phase decomposition over the IR must charge the
+    // same cycles the monolithic legacy traces cost
+    let exec = ExecConfig::paper_accelerated();
+    let mut costs = CostModel::new(exec);
+    for (class, legacy) in [
+        (
+            RequestClass::VitTiny,
+            Legacy { layers: 4, d_model: 128, heads: 4, d_head: 32, d_ff: 512, seq: 65, gelu_ffn: true },
+        ),
+        (
+            RequestClass::VitBase,
+            Legacy { layers: 12, d_model: 768, heads: 12, d_head: 64, d_ff: 3072, seq: 197, gelu_ffn: true },
+        ),
+        (
+            RequestClass::MobileBert { seq: 128 },
+            Legacy { layers: 24, d_model: 512, heads: 4, d_head: 128, d_ff: 128, seq: 128, gelu_ffn: false },
+        ),
+        (
+            RequestClass::MobileBert { seq: 512 },
+            Legacy { layers: 24, d_model: 512, heads: 4, d_head: 128, d_ff: 128, seq: 512, gelu_ffn: false },
+        ),
+    ] {
+        let legacy_cycles =
+            execute_trace(&exec, &legacy_trace_model(&legacy)).total_cycles();
+        assert_eq!(costs.service_cycles(class), legacy_cycles, "{}", class.label());
+    }
+    // the decoder class: prompt plus per-context decode phases
+    let class = RequestClass::Gpt2Xl { prompt: 128, decode: 16 };
+    let legacy = Legacy {
+        layers: 48, d_model: 1600, heads: 25, d_head: 64, d_ff: 6400, seq: 128, gelu_ffn: true,
+    };
+    let mut trace = legacy_trace_model(&legacy);
+    for step in 0..16 {
+        trace.extend(legacy_trace_decode_step(&legacy, 128 + step));
+    }
+    let legacy_cycles = execute_trace(&exec, &trace).total_cycles();
+    assert_eq!(costs.service_cycles(class), legacy_cycles);
+}
+
+#[test]
+fn legacy_fifo_serve_report_is_unchanged() {
+    // end to end: a FIFO run over the edge-default mix must produce the
+    // schedule the pre-IR cost model produced. The reference is the
+    // pre-`sim` FIFO loop (as in tests/determinism.rs) fed with service
+    // times from the *legacy* trace builders.
+    let reqs: Vec<Request> = RequestGen::new(
+        0xA11CE,
+        ArrivalProcess::Poisson { mean_gap: 8.0e5 },
+        WorkloadMix::edge_default(),
+    )
+    .generate(150);
+    let exec = ExecConfig::paper_accelerated();
+
+    // legacy service time per class, via the legacy builders
+    let legacy_service = |class: RequestClass| -> u64 {
+        let m = class.model();
+        let legacy = Legacy {
+            layers: m.layers,
+            d_model: m.d_model,
+            heads: m.heads,
+            d_head: m.d_head,
+            d_ff: m.d_ff,
+            seq: m.seq,
+            gelu_ffn: matches!(class, RequestClass::VitTiny | RequestClass::VitBase)
+                || matches!(class, RequestClass::Gpt2Xl { .. }),
+        };
+        let mut trace = legacy_trace_model(&legacy);
+        for step in 0..class.decode_tokens() {
+            trace.extend(legacy_trace_decode_step(&legacy, class.context_at(step)));
+        }
+        execute_trace(&exec, &trace).total_cycles()
+    };
+
+    let clusters = 4usize; // 2x2 mesh
+    let mut free = vec![0u64; clusters];
+    let mut golden_latencies: Vec<u64> = reqs
+        .iter()
+        .map(|r| {
+            let service = legacy_service(r.class).max(1);
+            let ci = (0..clusters).min_by_key(|&i| (free[i], i)).unwrap();
+            let start = r.arrival.max(free[ci]);
+            free[ci] = start + service;
+            free[ci] - r.arrival
+        })
+        .collect();
+    golden_latencies.sort_unstable();
+
+    let rep = BatchScheduler::new(ServerConfig::new(2, Policy::Fifo)).run(&reqs);
+    assert_eq!(rep.latencies.as_slice(), golden_latencies.as_slice());
+}

@@ -102,6 +102,44 @@ fn spill_slows_continuous_batching_and_reports_bytes() {
 }
 
 #[test]
+fn gqa_kv_heads_shrink_spill_monotonically() {
+    // sweeping Llama-edge's kv_heads 32 -> 16 -> 8 -> 4 at a fixed
+    // context: every halving strictly shrinks the per-step spill, and
+    // the trend is monotone (the GQA acceptance sweep)
+    let ctx = 512;
+    let cap = KvConfig::tcdm_spill().capacity_bytes;
+    let spill_at = |kv_heads: usize| {
+        let m = ModelConfig { kv_heads, ..ModelConfig::llama_edge() };
+        kv::decode_spill_bytes(&m, ctx, cap)
+    };
+    let sweep: Vec<u64> = [32usize, 16, 8, 4].iter().map(|&k| spill_at(k)).collect();
+    assert!(sweep[0] > 0, "MHA at ctx {ctx} must spill: {sweep:?}");
+    for w in sweep.windows(2) {
+        assert!(w[1] < w[0], "spill not shrinking with kv_heads: {sweep:?}");
+    }
+    // the 32 -> 8 headline: a 4x smaller per-token row, and with the
+    // 256 KiB cap subtracted per layer the spill shrinks by *more*
+    // than 4x
+    assert!(sweep[0] > 4 * sweep[2], "{sweep:?}");
+}
+
+#[test]
+fn llama_spill_slows_decode_like_gpt2() {
+    // the IR-only decoder runs the same KV machinery end to end
+    let reqs = vec![Request {
+        id: 0,
+        class: RequestClass::LlamaEdge { prompt: 256, decode: 8 },
+        arrival: 0,
+    }];
+    let spill = run_one(Policy::Fifo, KvConfig::tcdm_spill(), &reqs);
+    let resident = run_one(Policy::Fifo, KvConfig::resident(), &reqs);
+    assert!(spill.kv_spill_bytes > 0);
+    assert_eq!(resident.kv_spill_bytes, 0);
+    assert!(spill.tbt_p50() > resident.tbt_p50());
+    assert_eq!(spill.total_ops, resident.total_ops);
+}
+
+#[test]
 fn spill_never_changes_vision_only_streams() {
     // no decode phases => no KV working set => the spill policy is a
     // no-op for single-pass classes under every scheduler policy

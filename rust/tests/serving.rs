@@ -150,6 +150,67 @@ fn gpt2_heavy_mix_reports_token_percentiles() {
 }
 
 #[test]
+fn llama_edge_serves_end_to_end_under_every_policy() {
+    // the IR-only decoder preset: populated token metrics, sane
+    // percentiles, and the mix label in report and JSON
+    let reqs: Vec<softex::server::Request> = RequestGen::new(
+        0x11A,
+        ArrivalProcess::Poisson { mean_gap: 2.0e6 },
+        WorkloadMix::for_model("llama-edge").unwrap(),
+    )
+    .generate(60);
+    for policy in Policy::ALL {
+        let rep = BatchScheduler::new(ServerConfig::new(2, policy)).run(&reqs);
+        assert_eq!(rep.n_requests, 60, "{}", rep.label);
+        assert!(rep.p50() > 0 && rep.p50() <= rep.p99(), "{}", rep.label);
+        // 16 decode gaps per request
+        assert_eq!(rep.tbt.len(), 60 * 16, "{}", rep.label);
+        assert!(rep.ttft_p50() > 0 && rep.tbt_p50() > 0, "{}", rep.label);
+        assert_eq!(rep.mix, "Llama-edge/128+16", "{}", rep.label);
+        assert!(rep.to_json().contains("\"mix\":\"Llama-edge/128+16\""));
+    }
+}
+
+#[test]
+fn whisper_encoder_serves_as_a_single_pass_class() {
+    // long-sequence encoder: no token gaps, ttft == latency
+    let reqs: Vec<softex::server::Request> = RequestGen::new(
+        0x5151,
+        ArrivalProcess::Poisson { mean_gap: 5.0e6 },
+        WorkloadMix::for_model("whisper-tiny-enc").unwrap(),
+    )
+    .generate(40);
+    for policy in Policy::ALL {
+        let rep = BatchScheduler::new(ServerConfig::new(2, policy)).run(&reqs);
+        assert_eq!(rep.n_requests, 40, "{}", rep.label);
+        assert!(rep.tbt.is_empty(), "{}", rep.label);
+        assert_eq!(rep.ttft.percentile(99.0), rep.p99(), "{}", rep.label);
+        assert_eq!(rep.mix, "Whisper-tiny-enc", "{}", rep.label);
+        assert_eq!(rep.kv_spill_bytes, 0, "{}", rep.label);
+    }
+}
+
+#[test]
+fn genai_mix_is_deterministic_and_reports_all_classes() {
+    let run = || {
+        let reqs = RequestGen::new(
+            0x6E4A1,
+            ArrivalProcess::Poisson { mean_gap: 2.0e6 },
+            WorkloadMix::genai_default(),
+        )
+        .generate(200);
+        BatchScheduler::new(ServerConfig::new(2, Policy::ContinuousBatching)).run(&reqs)
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.latencies, b.latencies);
+    assert_eq!(a.ttft, b.ttft);
+    assert_eq!(a.tbt, b.tbt);
+    assert!(a.mix.contains("Llama-edge/128+16"), "{}", a.mix);
+    assert!(a.mix.contains("Whisper-tiny-enc"), "{}", a.mix);
+    assert!(a.mix.contains("GPT-2 XL/128+16"), "{}", a.mix);
+}
+
+#[test]
 fn energy_accounting_is_load_independent_but_policy_stable() {
     // energy is per-request work; the same stream must cost the same
     // joules under every policy
