@@ -75,7 +75,7 @@ fn main() {
             rep.n_downgraded,
             rep.n_shed,
             report::f(ServeReport::ms(rep.p99(), &OP_THROUGHPUT), 1),
-            report::f(rep.goodput_gops(&OP_THROUGHPUT), 0),
+            report::f(rep.goodput_gops(), 0),
         );
     }
     println!();

@@ -95,7 +95,7 @@ fn main() {
             "  {:<32} p99 {:>8} ms | goodput {:>5} GOPS | shed {:>5} | downgraded {}",
             format!("{admission:?}"),
             report::f(ServeReport::ms(rep.p99(), &OP_THROUGHPUT), 1),
-            report::f(rep.goodput_gops(&OP_THROUGHPUT), 0),
+            report::f(rep.goodput_gops(), 0),
             report::pct(rep.shed_rate()),
             rep.n_downgraded,
         );

@@ -1,0 +1,102 @@
+//! Latency/energy Pareto frontier: offered load x DVFS governor
+//! (DESIGN.md §10).
+//!
+//! Sweeps rho (offered load as a fraction of fleet capacity) against
+//! every governor — pinned-throughput, pinned-efficiency,
+//! race-to-idle, and a power cap — and reports the p99 latency,
+//! energy, joules/token, average watts, and 0.8 V residency of each
+//! point, then marks the points on the (p99, J/token) Pareto frontier.
+//! This is the co-design trade co-designed softmax/normalization
+//! accelerators are evaluated on: how much tail latency a joule buys.
+//!
+//! Run: cargo bench --bench pareto_sweep
+
+use std::time::Instant;
+
+use softex::coordinator::ExecConfig;
+use softex::energy::governor::{GovernorPolicy, OpId};
+use softex::energy::OP_THROUGHPUT;
+use softex::fleet::{DispatchPolicy, Fleet, FleetConfig, FleetReport};
+use softex::report;
+use softex::server::{ArrivalProcess, CostModel, RequestGen, ServeReport, WorkloadMix};
+
+fn main() {
+    let t0 = Instant::now();
+    let clusters = 4usize;
+    let n_requests = 300;
+    let seed: u64 = 0x9A1E70;
+    let mix = WorkloadMix::edge_default();
+    let mean_service =
+        CostModel::new(ExecConfig::paper_accelerated()).mean_service_cycles(&mix);
+
+    let governors = [
+        GovernorPolicy::PinnedThroughput,
+        GovernorPolicy::PinnedEfficiency,
+        GovernorPolicy::RaceToIdle,
+        GovernorPolicy::PowerCap { watts: 1.5 },
+    ];
+
+    let mut points: Vec<(f64, GovernorPolicy, FleetReport)> = Vec::new();
+    for rho in [0.3f64, 0.6, 0.9, 1.2] {
+        let mean_gap = mean_service / (clusters as f64 * rho);
+        let requests = RequestGen::new(seed, ArrivalProcess::Poisson { mean_gap }, mix.clone())
+            .generate(n_requests);
+        for gov in governors {
+            let mut cfg = FleetConfig::new(clusters, DispatchPolicy::PowerOfTwoChoices);
+            cfg.seed = seed;
+            cfg.governor = gov;
+            points.push((rho, gov, Fleet::new(cfg).run(&requests)));
+        }
+    }
+
+    // Pareto dominance on (p99 ms, joules/token): a point survives if
+    // no other point is at least as good on both axes and strictly
+    // better on one.
+    let frontier: Vec<bool> = points
+        .iter()
+        .map(|(_, _, a)| {
+            !points.iter().any(|(_, _, b)| {
+                let better_lat = b.p99() < a.p99();
+                let better_energy = b.joules_per_token() < a.joules_per_token();
+                (better_lat && b.joules_per_token() <= a.joules_per_token())
+                    || (better_energy && b.p99() <= a.p99())
+            })
+        })
+        .collect();
+
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .zip(&frontier)
+        .map(|((rho, gov, rep), &on_frontier)| {
+            vec![
+                gov.label().to_string(),
+                report::f(*rho, 1),
+                report::f(ServeReport::ms(rep.p99(), &OP_THROUGHPUT), 1),
+                report::f(ServeReport::ms(rep.ttft_p95(), &OP_THROUGHPUT), 1),
+                report::f(rep.energy_j, 3),
+                report::f(rep.joules_per_token() * 1e6, 1),
+                report::f(rep.avg_power_w(), 2),
+                report::pct(rep.op_residency()[OpId::Throughput.idx()]),
+                if on_frontier { "*".to_string() } else { String::new() },
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::render_table(
+            &format!(
+                "governor x load Pareto sweep — p2c@{clusters}, {n_requests} requests/point, \
+                 edge-default mix (* = on the latency/energy frontier)"
+            ),
+            &["governor", "rho", "p99 ms", "ttft95", "J", "uJ/tok", "avgW", "res 0.8V", "pareto"],
+            &rows
+        )
+    );
+
+    let survivors = frontier.iter().filter(|&&f| f).count();
+    println!(
+        "{survivors}/{} points on the frontier | wall time {:.2} s (seed {seed:#x})",
+        points.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

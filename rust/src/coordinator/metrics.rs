@@ -70,7 +70,11 @@ impl Metrics {
         self.total_ops as f64 / self.seconds(op) / 1e9
     }
 
-    /// Total energy in joules at an operating point.
+    /// Total energy in joules *if the whole trace ran at* `op` — a
+    /// single-OP what-if for the paper-figure benches. Serving reports
+    /// instead charge each executed phase at the OP its cluster's DVFS
+    /// governor actually picked (`crate::energy::governor`), so one
+    /// simulated timeline never produces two energy numbers.
     pub fn energy_j(&self, op: &OperatingPoint) -> f64 {
         self.mode_cycles
             .iter()

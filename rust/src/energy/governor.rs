@@ -1,0 +1,445 @@
+//! Per-cluster DVFS governor (DESIGN.md §10): the operating point as
+//! first-class runtime state.
+//!
+//! The paper reports two operating points — 0.8 V / 1.12 GHz for
+//! throughput and 0.55 V / 460 MHz for efficiency — and early report
+//! code charged energy at *both* OPs from the *same* simulated
+//! timeline. That double-accounting was physically inconsistent: at
+//! 0.55 V the same cycles take 1120/460 ≈ 2.43× longer wall-clock, so
+//! latency SLOs, queue depths, and shed decisions all differ. This
+//! module makes the OP a scheduling decision instead of a report-time
+//! constant:
+//!
+//! * the simulation timeline is measured in **ticks**, where one tick
+//!   is one 0.8 V clock period (1/1.12 GHz). A phase of `c` clock
+//!   cycles occupies `c` ticks at the throughput OP and
+//!   `ceil(c·1120/460)` ticks at the efficiency OP ([`OpId::ticks`],
+//!   exact integer arithmetic so schedules stay bit-deterministic);
+//! * a [`GovernorPolicy`] selected on the CLI resolves to one
+//!   [`ClusterGovernor`] per cluster ([`plan`]), consulted at every
+//!   dispatch instant with the observed queue depth;
+//! * the `power-cap` policy turns a fleet-level watt budget into a
+//!   static worst-case-safe allocation: as many clusters as the cap
+//!   affords may race to 0.8 V, the next tranche is pinned at 0.55 V,
+//!   and the rest are powered off (work routed to them is shed through
+//!   the existing admission path).
+
+use super::{cluster_power_w, ActivityMode};
+use crate::softex::phys::{OperatingPoint, OP_EFFICIENCY, OP_THROUGHPUT};
+
+/// Identifier of one of the paper's two operating points, usable as an
+/// index into per-OP accounting arrays (`[T; 2]` indexed by [`OpId::idx`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OpId {
+    /// 0.80 V / 1.12 GHz — maximum throughput.
+    Throughput,
+    /// 0.55 V / 460 MHz — maximum efficiency.
+    Efficiency,
+}
+
+impl OpId {
+    pub const ALL: [OpId; 2] = [OpId::Throughput, OpId::Efficiency];
+
+    /// The physical operating point this id names.
+    pub fn point(&self) -> &'static OperatingPoint {
+        match self {
+            OpId::Throughput => &OP_THROUGHPUT,
+            OpId::Efficiency => &OP_EFFICIENCY,
+        }
+    }
+
+    /// Index into `[T; 2]` per-OP accounting arrays.
+    pub fn idx(&self) -> usize {
+        match self {
+            OpId::Throughput => 0,
+            OpId::Efficiency => 1,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            OpId::Throughput => "0.8V",
+            OpId::Efficiency => "0.55V",
+        }
+    }
+
+    /// Wall-clock stretch factor of this OP relative to the tick
+    /// clock: 1.0 at throughput, 1120/460 ≈ 2.43 at efficiency. The
+    /// float companion of [`OpId::ticks`] for capacity arithmetic.
+    pub fn stretch(&self) -> f64 {
+        OP_THROUGHPUT.freq_hz / self.point().freq_hz
+    }
+
+    /// Timeline ticks (0.8 V clock periods) that `cycles` clock cycles
+    /// occupy at this OP: `ceil(cycles · f_throughput / f_this)`, exact
+    /// in integer arithmetic. At the throughput OP ticks == cycles, so
+    /// a pinned-throughput schedule is bit-identical to the historical
+    /// cycle timeline.
+    pub fn ticks(&self, cycles: u64) -> u64 {
+        match self {
+            OpId::Throughput => cycles,
+            OpId::Efficiency => {
+                let hi = OP_THROUGHPUT.freq_hz as u128; // 1_120_000_000, exact
+                let lo = OP_EFFICIENCY.freq_hz as u128; // 460_000_000, exact
+                ((cycles as u128 * hi).div_ceil(lo)) as u64
+            }
+        }
+    }
+}
+
+/// DVFS policy selected per run (`--governor` / `--power-cap-w`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GovernorPolicy {
+    /// Every cluster pinned at 0.8 V / 1.12 GHz — the historical
+    /// timeline, now with its energy charged at the OP it actually ran.
+    PinnedThroughput,
+    /// Every cluster pinned at 0.55 V / 460 MHz: best joules/token,
+    /// 2.43× the service time.
+    PinnedEfficiency,
+    /// Race-to-idle: a cluster runs 0.8 V while work is queued behind
+    /// the current dispatch and drops to 0.55 V when the queue is
+    /// shallow.
+    RaceToIdle,
+    /// Fleet-level watt budget. Resolved by [`plan`] into a worst-case
+    /// safe static allocation; infeasible clusters are powered off and
+    /// traffic routed to them is shed.
+    PowerCap { watts: f64 },
+}
+
+impl GovernorPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            GovernorPolicy::PinnedThroughput => "pinned-throughput",
+            GovernorPolicy::PinnedEfficiency => "pinned-efficiency",
+            GovernorPolicy::RaceToIdle => "race-to-idle",
+            GovernorPolicy::PowerCap { .. } => "power-cap",
+        }
+    }
+
+    /// Parse a CLI governor name; `None` for unknown names. `power-cap`
+    /// is not constructible here — it needs a watt budget, which the
+    /// CLI supplies via `--power-cap-w`.
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "pinned-throughput" | "throughput" => Some(GovernorPolicy::PinnedThroughput),
+            "pinned-efficiency" | "efficiency" => Some(GovernorPolicy::PinnedEfficiency),
+            "race-to-idle" | "race" => Some(GovernorPolicy::RaceToIdle),
+            _ => None,
+        }
+    }
+
+    /// The watt budget, if this is a power-cap policy.
+    pub fn power_cap_w(&self) -> Option<f64> {
+        match *self {
+            GovernorPolicy::PowerCap { watts } => Some(watts),
+            _ => None,
+        }
+    }
+}
+
+/// Per-cluster runtime governor, resolved from a [`GovernorPolicy`] by
+/// [`plan`] and consulted at every dispatch instant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterGovernor {
+    /// Every phase runs at one pinned OP.
+    Pinned(OpId),
+    /// 0.8 V while at least `deep` other units of work are waiting at
+    /// the dispatch instant, 0.55 V otherwise.
+    RaceToIdle { deep: usize },
+    /// Power-capped out of the plan: no work may be placed here.
+    Off,
+}
+
+impl ClusterGovernor {
+    /// The OP to run the next phase at, given the number of other
+    /// queued units of work observed at the dispatch instant.
+    pub fn op_for_depth(&self, depth: usize) -> OpId {
+        match *self {
+            ClusterGovernor::Pinned(op) => op,
+            ClusterGovernor::RaceToIdle { deep } => {
+                if depth >= deep {
+                    OpId::Throughput
+                } else {
+                    OpId::Efficiency
+                }
+            }
+            // an Off cluster never dispatches; the answer is moot but
+            // must not panic (report builders iterate the full plan)
+            ClusterGovernor::Off => OpId::Efficiency,
+        }
+    }
+
+    /// Whether the cluster may serve work at all.
+    pub fn enabled(&self) -> bool {
+        !matches!(self, ClusterGovernor::Off)
+    }
+
+    /// The OP a backlogged cluster would run at — what the fleet
+    /// dispatcher's FIFO-horizon latency predictor assumes, since
+    /// admission only matters when there is a backlog (and race-to-idle
+    /// races exactly then).
+    pub fn nominal_op(&self) -> OpId {
+        match *self {
+            ClusterGovernor::Pinned(op) => op,
+            ClusterGovernor::RaceToIdle { .. } => OpId::Throughput,
+            ClusterGovernor::Off => OpId::Efficiency,
+        }
+    }
+
+    /// The single-cluster policy equivalent of this governor (how the
+    /// fleet configures each cluster's scheduler).
+    pub fn as_policy(&self) -> GovernorPolicy {
+        match *self {
+            ClusterGovernor::Pinned(OpId::Throughput) => GovernorPolicy::PinnedThroughput,
+            ClusterGovernor::Pinned(OpId::Efficiency) => GovernorPolicy::PinnedEfficiency,
+            ClusterGovernor::RaceToIdle { .. } => GovernorPolicy::RaceToIdle,
+            // an Off cluster receives no work; pinned-efficiency is the
+            // benign stand-in for its (empty) scheduler
+            ClusterGovernor::Off => GovernorPolicy::PinnedEfficiency,
+        }
+    }
+}
+
+/// Rated worst-case single-cluster active power at an OP.
+///
+/// Continuous batching can keep the tensor unit, the SoftEx
+/// accelerator, *and* a core-glue segment busy simultaneously inside
+/// one cluster, so the rating is the sum over the three concurrently
+/// occupiable engines of the hungriest mode each can toggle — not the
+/// max over single modes. Core glue is rated at one concurrent slot:
+/// glue segments are contention-free in the scheduler, but their
+/// total time is bounded by the glue share of the accelerator work
+/// (a few percent), so the rating dominates every serving mix's
+/// *average* power — the quantity the cap binds — with wide margin
+/// even where instantaneous glue overlap briefly exceeds one slot.
+/// The accelerated engine set is a precondition (asserted at
+/// scheduler/fleet construction): software nonlinearities would move
+/// unbounded-concurrency work onto the cores.
+pub fn worst_case_power_w(op: OpId) -> f64 {
+    let p = |m| cluster_power_w(m, op.point());
+    // tensor unit streaming a matmul
+    let tensor = p(ActivityMode::MatMul);
+    // a SoftEx segment: softmax, or the GELU datapath whose core
+    // assist is serialized inside the segment (so max, not sum)
+    let softex = p(ActivityMode::SoftmaxHw)
+        .max(p(ActivityMode::GeluHw))
+        .max(p(ActivityMode::CoresElementwise));
+    // the cores running elementwise glue / spill DMA (the serving
+    // stack always uses the paper-accelerated config, so the software
+    // nonlinearity modes never reach a governor-managed cluster)
+    let cores = p(ActivityMode::CoresElementwise).max(p(ActivityMode::Idle));
+    tensor + softex + cores
+}
+
+/// Resolve a policy into one [`ClusterGovernor`] per cluster.
+///
+/// For `power-cap` the allocation is static and worst-case safe:
+/// `active = min(n, floor(W / P_lo))` clusters may run at all, of
+/// which `hi = floor((W - active·P_lo) / (P_hi - P_lo))` may race to
+/// 0.8 V (so `hi·P_hi + (active-hi)·P_lo ≤ W` even with every cluster
+/// busy in its most power-hungry mode). Clusters past `active` are
+/// [`ClusterGovernor::Off`].
+pub fn plan(policy: GovernorPolicy, clusters: usize) -> Vec<ClusterGovernor> {
+    match policy {
+        GovernorPolicy::PinnedThroughput => {
+            vec![ClusterGovernor::Pinned(OpId::Throughput); clusters]
+        }
+        GovernorPolicy::PinnedEfficiency => {
+            vec![ClusterGovernor::Pinned(OpId::Efficiency); clusters]
+        }
+        GovernorPolicy::RaceToIdle => vec![ClusterGovernor::RaceToIdle { deep: 1 }; clusters],
+        GovernorPolicy::PowerCap { watts } => {
+            let p_hi = worst_case_power_w(OpId::Throughput);
+            let p_lo = worst_case_power_w(OpId::Efficiency);
+            let active = (((watts / p_lo).floor()).max(0.0) as usize).min(clusters);
+            let hi = if active == 0 {
+                0
+            } else {
+                ((((watts - active as f64 * p_lo) / (p_hi - p_lo)).floor()).max(0.0) as usize)
+                    .min(active)
+            };
+            (0..clusters)
+                .map(|c| {
+                    if c < hi {
+                        ClusterGovernor::RaceToIdle { deep: 1 }
+                    } else if c < active {
+                        ClusterGovernor::Pinned(OpId::Efficiency)
+                    } else {
+                        ClusterGovernor::Off
+                    }
+                })
+                .collect()
+        }
+    }
+}
+
+/// The lock-step governor for a gang of clusters executing in unison
+/// (the mesh-sharded policy and the fleet's spray policy): every
+/// enabled cluster is busy simultaneously, so the gang may only race
+/// to 0.8 V if *every* enabled cluster is allowed to.
+pub fn lockstep(plan: &[ClusterGovernor]) -> ClusterGovernor {
+    let enabled: Vec<&ClusterGovernor> = plan.iter().filter(|g| g.enabled()).collect();
+    if enabled.is_empty() {
+        return ClusterGovernor::Off;
+    }
+    // an efficiency-pinned member throttles the whole lock-stepped
+    // gang (the power-safe resolution when pins conflict)
+    if enabled
+        .iter()
+        .any(|g| matches!(g, ClusterGovernor::Pinned(OpId::Efficiency)))
+    {
+        return ClusterGovernor::Pinned(OpId::Efficiency);
+    }
+    // a throughput-pinned member may never drop to 0.55 V, so the gang
+    // races unconditionally
+    if enabled
+        .iter()
+        .any(|g| matches!(g, ClusterGovernor::Pinned(OpId::Throughput)))
+    {
+        return ClusterGovernor::Pinned(OpId::Throughput);
+    }
+    // all remaining members race to idle together
+    *enabled[0]
+}
+
+/// Energy of a set of `(mode, cycles)` power parts at both OPs,
+/// indexable by [`OpId::idx`]. Phase costs precompute this pair once;
+/// the scheduler then charges whichever entry matches the OP the phase
+/// actually ran at — one timeline, one energy number.
+pub fn part_energies(parts: &[(ActivityMode, u64)]) -> [f64; 2] {
+    let mut e = [0.0f64; 2];
+    for id in OpId::ALL {
+        e[id.idx()] = parts
+            .iter()
+            .map(|&(m, c)| super::energy_j(m, c, id.point()))
+            .sum();
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ticks_are_exact_rational_stretches() {
+        // 1120/460 = 56/23: ticks(c) must equal ceil(56c/23) exactly
+        for c in [0u64, 1, 22, 23, 24, 460, 461, 1_000_000, u32::MAX as u64] {
+            let want = (c * 56).div_ceil(23);
+            assert_eq!(OpId::Efficiency.ticks(c), want, "c={c}");
+            assert_eq!(OpId::Throughput.ticks(c), c);
+        }
+        // the stretch factor is ~2.43x
+        let t = OpId::Efficiency.ticks(1_000_000) as f64 / 1e6;
+        assert!((t - 1120.0 / 460.0).abs() < 1e-5, "{t}");
+    }
+
+    #[test]
+    fn ticks_never_overflow_in_u128() {
+        // a full day at 1.12 GHz stretched to 0.55 V stays in range
+        let day = 1_120_000_000u64 * 86_400;
+        let t = OpId::Efficiency.ticks(day);
+        assert!(t > day && t < day.saturating_mul(3));
+    }
+
+    #[test]
+    fn governor_labels_roundtrip_through_parse() {
+        for g in [
+            GovernorPolicy::PinnedThroughput,
+            GovernorPolicy::PinnedEfficiency,
+            GovernorPolicy::RaceToIdle,
+        ] {
+            assert_eq!(GovernorPolicy::parse(g.label()), Some(g));
+        }
+        assert_eq!(GovernorPolicy::parse("power-cap"), None); // needs watts
+        assert_eq!(GovernorPolicy::parse("nope"), None);
+        assert_eq!(
+            GovernorPolicy::PowerCap { watts: 2.5 }.power_cap_w(),
+            Some(2.5)
+        );
+        assert_eq!(GovernorPolicy::RaceToIdle.power_cap_w(), None);
+    }
+
+    #[test]
+    fn race_to_idle_switches_on_depth() {
+        let g = ClusterGovernor::RaceToIdle { deep: 1 };
+        assert_eq!(g.op_for_depth(0), OpId::Efficiency);
+        assert_eq!(g.op_for_depth(1), OpId::Throughput);
+        assert_eq!(g.op_for_depth(100), OpId::Throughput);
+        assert_eq!(g.nominal_op(), OpId::Throughput);
+        let p = ClusterGovernor::Pinned(OpId::Efficiency);
+        assert_eq!(p.op_for_depth(100), OpId::Efficiency);
+    }
+
+    #[test]
+    fn power_cap_plan_is_worst_case_safe() {
+        let p_hi = worst_case_power_w(OpId::Throughput);
+        let p_lo = worst_case_power_w(OpId::Efficiency);
+        assert!(p_hi > p_lo && p_lo > 0.0);
+        for watts in [0.05, 0.5, 1.0, 2.5, 5.0, 50.0] {
+            let plan = plan(GovernorPolicy::PowerCap { watts }, 8);
+            assert_eq!(plan.len(), 8);
+            let worst: f64 = plan
+                .iter()
+                .map(|g| match g {
+                    ClusterGovernor::Off => 0.0,
+                    g => worst_case_power_w(g.nominal_op()),
+                })
+                .sum();
+            assert!(worst <= watts + 1e-12, "cap {watts} worst {worst}");
+        }
+    }
+
+    #[test]
+    fn generous_cap_lets_every_cluster_race() {
+        let plan = plan(GovernorPolicy::PowerCap { watts: 1000.0 }, 4);
+        assert!(plan
+            .iter()
+            .all(|g| matches!(g, ClusterGovernor::RaceToIdle { .. })));
+    }
+
+    #[test]
+    fn tiny_cap_powers_everything_off() {
+        let plan = plan(GovernorPolicy::PowerCap { watts: 0.01 }, 4);
+        assert!(plan.iter().all(|g| !g.enabled()));
+    }
+
+    #[test]
+    fn lockstep_is_the_most_restrictive_member() {
+        use ClusterGovernor::*;
+        let race = RaceToIdle { deep: 1 };
+        assert_eq!(lockstep(&[race, race]), race);
+        assert_eq!(
+            lockstep(&[Pinned(OpId::Throughput); 3]),
+            Pinned(OpId::Throughput)
+        );
+        // a mixed power-cap plan throttles the whole gang
+        assert_eq!(
+            lockstep(&[race, Pinned(OpId::Efficiency), Off]),
+            Pinned(OpId::Efficiency)
+        );
+        // a throughput pin can never drop, so it dominates racing peers
+        assert_eq!(
+            lockstep(&[race, Pinned(OpId::Throughput)]),
+            Pinned(OpId::Throughput)
+        );
+        assert_eq!(lockstep(&[Off, Off]), Off);
+        assert_eq!(lockstep(&[]), Off);
+    }
+
+    #[test]
+    fn part_energies_match_the_energy_model() {
+        use crate::energy::energy_j;
+        let parts = [
+            (ActivityMode::MatMul, 1000u64),
+            (ActivityMode::SoftmaxHw, 200),
+        ];
+        let e = part_energies(&parts);
+        for id in OpId::ALL {
+            let want: f64 = parts.iter().map(|&(m, c)| energy_j(m, c, id.point())).sum();
+            assert!((e[id.idx()] - want).abs() < 1e-18);
+        }
+        // efficiency OP is strictly cheaper per cycle set
+        assert!(e[OpId::Efficiency.idx()] < e[OpId::Throughput.idx()]);
+    }
+}

@@ -15,9 +15,17 @@
 //! Modes without a direct 0.55 V anchor are scaled by the measured
 //! softmax pair's factor 56.1/278 = 0.2018 (f*V^2 scaling predicts 0.194;
 //! the delta is the leakage floor).
+//!
+//! Which OP a phase is charged at is a *scheduling* decision, not a
+//! report-time constant: see [`governor`] for the per-cluster DVFS
+//! governor and the tick timeline that keeps one simulated run
+//! consistent with exactly one energy number (DESIGN.md §10).
+
+pub mod governor;
 
 use crate::softex::phys::OperatingPoint;
 pub use crate::softex::phys::{OP_EFFICIENCY, OP_THROUGHPUT};
+pub use governor::{ClusterGovernor, GovernorPolicy, OpId};
 
 /// What the cluster is doing during a phase.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

@@ -10,16 +10,25 @@
 //! whole fleet simulation bit-deterministic.
 //!
 //! Queue-delay prediction uses a per-cluster FIFO work horizon: a
-//! `sim::Resource` per cluster whose `free_at` is the cycle at which
+//! `sim::Resource` per cluster whose `free_at` is the tick at which
 //! everything already dispatched there would drain if served
 //! back-to-back, with service times from `coordinator::op_cost` (via
-//! [`CostModel`]). This is an approximation of the cluster's actual
-//! schedule: continuous batching usually finishes earlier by
-//! overlapping engines, but per-request engine contention can also
-//! push an individual admitted request past its predicted completion —
-//! the SLO is enforced on the prediction, not re-checked after
-//! simulation.
+//! [`CostModel`]) stretched to each cluster's *nominal* operating
+//! point (a backlogged race-to-idle cluster races at 0.8 V, a
+//! pinned-efficiency cluster drains 2.43× slower — the predictor must
+//! know, or every SLO decision under a low-voltage governor would be
+//! wrong). This is an approximation of the cluster's actual schedule:
+//! continuous batching usually finishes earlier by overlapping
+//! engines, but per-request engine contention can also push an
+//! individual admitted request past its predicted completion — the SLO
+//! is enforced on the prediction, not re-checked after simulation.
+//!
+//! Under a `power-cap` governor plan, clusters the budget cannot power
+//! are excluded from every policy's choice set; when the plan powers
+//! none, every request is shed at the door — the cap reuses the
+//! existing admission path instead of growing a second one.
 
+use crate::energy::governor::{ClusterGovernor, OpId};
 use crate::rng::Xoshiro256;
 use crate::server::{CostModel, Request, RequestClass};
 use crate::sim::{Engine as SimEngine, ResourcePool};
@@ -132,12 +141,19 @@ pub struct Dispatcher {
     policy: DispatchPolicy,
     admission: Admission,
     clusters: usize,
-    /// Per-cluster FIFO drain horizons: `free_at` is the cycle at which
+    /// Clusters the governor plan leaves powered (a prefix of the
+    /// cluster ids; every choice is restricted to `0..active`).
+    active: usize,
+    /// Nominal (backlogged) OP per cluster, for horizon stretching.
+    nominal: Vec<OpId>,
+    /// The lock-step nominal OP of the spray gang.
+    spray_op: OpId,
+    /// Per-cluster FIFO drain horizons: `free_at` is the tick at which
     /// dispatched work would drain back-to-back.
     backlog: ResourcePool,
     seed: u64,
     rr_next: usize,
-    /// Spray shard inflation: (1 + NoC slowdown) / clusters.
+    /// Spray shard inflation: (1 + NoC slowdown) / active clusters.
     spray_scale: f64,
 }
 
@@ -148,16 +164,24 @@ impl Dispatcher {
         clusters: usize,
         seed: u64,
         spray_slowdown: f64,
+        plan: &[ClusterGovernor],
     ) -> Self {
         assert!(clusters >= 1, "fleet needs at least one cluster");
+        assert_eq!(plan.len(), clusters, "one governor per cluster");
+        let active = plan.iter().filter(|g| g.enabled()).count();
+        let nominal: Vec<OpId> = plan.iter().map(ClusterGovernor::nominal_op).collect();
+        let spray_op = crate::energy::governor::lockstep(plan).nominal_op();
         Self {
             policy,
             admission,
             clusters,
+            active,
+            nominal,
+            spray_op,
             backlog: ResourcePool::new("backlog", clusters),
             seed,
             rr_next: 0,
-            spray_scale: (1.0 + spray_slowdown) / clusters as f64,
+            spray_scale: (1.0 + spray_slowdown) / active.max(1) as f64,
         }
     }
 
@@ -170,23 +194,27 @@ impl Dispatcher {
         self.backlog.get(cluster).outstanding(arrival)
     }
 
-    /// Candidate cluster for a whole-request policy. Chosen before
-    /// admission so the RNG stream and round-robin cursor advance
-    /// identically whether or not the request is admitted.
+    /// Candidate cluster for a whole-request policy, restricted to the
+    /// powered prefix `0..active`. Chosen before admission so the RNG
+    /// stream and round-robin cursor advance identically whether or not
+    /// the request is admitted. Must not be called with `active == 0`
+    /// (the dispatch loop sheds outright in that case).
     fn choose(&mut self, arrival: u64, rng: &mut Xoshiro256) -> usize {
         match self.policy {
             DispatchPolicy::RoundRobin => {
                 let c = self.rr_next;
-                self.rr_next = (self.rr_next + 1) % self.clusters;
+                self.rr_next = (self.rr_next + 1) % self.active;
                 c
             }
-            DispatchPolicy::JoinShortestQueue => self.backlog.least_outstanding(arrival),
+            DispatchPolicy::JoinShortestQueue => {
+                self.backlog.least_outstanding_in(arrival, self.active)
+            }
             DispatchPolicy::PowerOfTwoChoices => {
-                if self.clusters == 1 {
+                if self.active == 1 {
                     return 0;
                 }
-                let a = rng.below(self.clusters as u64) as usize;
-                let mut b = rng.below(self.clusters as u64 - 1) as usize;
+                let a = rng.below(self.active as u64) as usize;
+                let mut b = rng.below(self.active as u64 - 1) as usize;
                 if b >= a {
                     b += 1;
                 }
@@ -197,12 +225,13 @@ impl Dispatcher {
                     a
                 }
             }
-            // spray spans every cluster; the choice is unused
+            // spray spans every powered cluster; the choice is unused
             DispatchPolicy::Spray => 0,
         }
     }
 
-    /// FIFO-backlog latency prediction for admitting `class` now.
+    /// FIFO-backlog latency prediction (ticks) for admitting `class`
+    /// now, at the target cluster's nominal OP.
     fn predicted_latency(
         &self,
         arrival: u64,
@@ -213,14 +242,17 @@ impl Dispatcher {
         let service = costs.service_cycles(class);
         match self.policy {
             DispatchPolicy::Spray => {
-                let shard = self.shard_cycles(service);
-                (0..self.clusters)
+                let shard = self.spray_op.ticks(self.shard_cycles(service));
+                (0..self.active)
                     .map(|c| arrival.max(self.backlog.get(c).free_at()) + shard)
                     .max()
-                    .expect("at least one cluster")
+                    .expect("at least one powered cluster")
                     - arrival
             }
-            _ => arrival.max(self.backlog.get(cluster).free_at()) + service - arrival,
+            _ => {
+                let ticks = self.nominal[cluster].ticks(service);
+                arrival.max(self.backlog.get(cluster).free_at()) + ticks - arrival
+            }
         }
     }
 
@@ -272,12 +304,18 @@ impl Dispatcher {
         }
         engine.run(|eng, i| {
             let r = &requests[i];
+            // a power cap that cannot feed a single cluster sheds at
+            // the door — the admission path is the enforcement point
+            if self.active == 0 {
+                outcomes.push(Outcome::Shed);
+                return;
+            }
             let cluster = self.choose(r.arrival, eng.rng());
             let outcome = self.admit(r, cluster, costs);
             match outcome {
                 Outcome::Assigned { cluster, class, .. } => {
-                    let service = costs.service_cycles(class);
-                    self.backlog.get_mut(cluster).acquire(r.arrival, service);
+                    let ticks = self.nominal[cluster].ticks(costs.service_cycles(class));
+                    self.backlog.get_mut(cluster).acquire(r.arrival, ticks);
                     streams[cluster].push(Request {
                         id: r.id,
                         class,
@@ -286,8 +324,9 @@ impl Dispatcher {
                 }
                 Outcome::Sprayed { class, .. } => {
                     let shard = self.shard_cycles(costs.service_cycles(class));
-                    for c in 0..self.clusters {
-                        self.backlog.get_mut(c).acquire(r.arrival, shard);
+                    let ticks = self.spray_op.ticks(shard);
+                    for c in 0..self.active {
+                        self.backlog.get_mut(c).acquire(r.arrival, ticks);
                     }
                     shards.push(Shard {
                         arrival: r.arrival,
@@ -311,10 +350,30 @@ impl Dispatcher {
 mod tests {
     use super::*;
     use crate::coordinator::ExecConfig;
+    use crate::energy::governor::{plan, GovernorPolicy};
     use crate::server::{ArrivalProcess, RequestGen, WorkloadMix};
 
     fn costs() -> CostModel {
         CostModel::new(ExecConfig::paper_accelerated())
+    }
+
+    /// A dispatcher whose every cluster is pinned at the throughput OP
+    /// (the historical behavior every pre-governor test assumed).
+    fn dispatcher(
+        policy: DispatchPolicy,
+        admission: Admission,
+        clusters: usize,
+        seed: u64,
+        spray_slowdown: f64,
+    ) -> Dispatcher {
+        Dispatcher::new(
+            policy,
+            admission,
+            clusters,
+            seed,
+            spray_slowdown,
+            &plan(GovernorPolicy::PinnedThroughput, clusters),
+        )
     }
 
     fn stream(seed: u64, n: usize, mean_gap: f64) -> Vec<Request> {
@@ -337,7 +396,7 @@ mod tests {
 
     #[test]
     fn round_robin_cycles_clusters() {
-        let mut d = Dispatcher::new(DispatchPolicy::RoundRobin, Admission::Open, 3, 1, 0.0);
+        let mut d = dispatcher(DispatchPolicy::RoundRobin, Admission::Open, 3, 1, 0.0);
         let reqs = stream(2, 9, 1.0e6);
         let plan = d.dispatch(&reqs, &mut costs());
         for (i, o) in plan.outcomes.iter().enumerate() {
@@ -353,7 +412,7 @@ mod tests {
     fn jsq_prefers_idle_clusters() {
         // two clusters, simultaneous arrivals: JSQ must alternate, never
         // stack both on one cluster
-        let mut d = Dispatcher::new(
+        let mut d = dispatcher(
             DispatchPolicy::JoinShortestQueue,
             Admission::Open,
             2,
@@ -375,7 +434,7 @@ mod tests {
     fn p2c_is_deterministic_and_in_range() {
         let reqs = stream(5, 200, 1.0e5);
         let run = || {
-            let mut d = Dispatcher::new(
+            let mut d = dispatcher(
                 DispatchPolicy::PowerOfTwoChoices,
                 Admission::Open,
                 8,
@@ -397,7 +456,7 @@ mod tests {
     #[test]
     fn spray_emits_one_shard_per_request() {
         let reqs = stream(7, 20, 1.0e6);
-        let mut d = Dispatcher::new(DispatchPolicy::Spray, Admission::Open, 4, 1, 0.10);
+        let mut d = dispatcher(DispatchPolicy::Spray, Admission::Open, 4, 1, 0.10);
         let mut cm = costs();
         let plan = d.dispatch(&reqs, &mut cm);
         assert_eq!(plan.shards.len(), 20);
@@ -413,7 +472,7 @@ mod tests {
     fn shed_admission_rejects_predicted_misses() {
         // deadline far below any service time: everything is shed
         let reqs = stream(9, 10, 1.0e6);
-        let mut d = Dispatcher::new(
+        let mut d = dispatcher(
             DispatchPolicy::JoinShortestQueue,
             Admission::Shed { deadline: 10 },
             2,
@@ -441,7 +500,7 @@ mod tests {
                 arrival: i as u64 * 100 * base,
             })
             .collect();
-        let mut d = Dispatcher::new(
+        let mut d = dispatcher(
             DispatchPolicy::RoundRobin,
             Admission::Downgrade { deadline },
             2,
@@ -480,7 +539,7 @@ mod tests {
                 arrival: i as u64 * 100 * full,
             })
             .collect();
-        let mut d = Dispatcher::new(
+        let mut d = dispatcher(
             DispatchPolicy::JoinShortestQueue,
             Admission::Downgrade { deadline },
             2,
@@ -500,7 +559,7 @@ mod tests {
             }
         }
         // shed mode refuses the same requests outright
-        let mut d = Dispatcher::new(
+        let mut d = dispatcher(
             DispatchPolicy::JoinShortestQueue,
             Admission::Shed { deadline },
             2,
@@ -519,7 +578,7 @@ mod tests {
             DispatchPolicy::JoinShortestQueue,
             DispatchPolicy::PowerOfTwoChoices,
         ] {
-            let mut d = Dispatcher::new(policy, Admission::Open, 4, 9, 0.0);
+            let mut d = dispatcher(policy, Admission::Open, 4, 9, 0.0);
             let plan = d.dispatch(&reqs, &mut costs());
             for s in &plan.streams {
                 assert!(s.windows(2).all(|w| w[0].arrival <= w[1].arrival));

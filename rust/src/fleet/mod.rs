@@ -26,10 +26,21 @@
 //! `rust/tests/fleet.rs` pins this contract. Reports aggregate token
 //! metrics (TTFT / time-between-tokens) alongside the request
 //! percentiles.
+//!
+//! Every cluster carries a DVFS governor resolved from
+//! [`FleetConfig::governor`] (`energy::governor`, DESIGN.md §10):
+//! pinned OPs, race-to-idle, or a fleet-level `power-cap` watt budget
+//! that throttles part of the fleet to 0.55 V, powers off what the
+//! budget cannot feed, and sheds the traffic routed there through the
+//! existing admission path. [`FleetReport`] carries the resulting
+//! one-timeline `energy_j`, average watts, joules/token, and per-OP
+//! residency.
 
 pub mod dispatch;
 pub mod report;
 
+use crate::coordinator::EngineChoice;
+use crate::energy::governor::{self, ClusterGovernor, GovernorPolicy, OpId};
 use crate::mesh::montecarlo::{mesh_edge_for, mesh_slowdown};
 use crate::server::scheduler::place_tokens;
 use crate::server::stats::queue_depths;
@@ -63,6 +74,10 @@ pub struct FleetConfig {
     /// cluster via [`derive_seed`]. Defaults to a single 1x1 cluster
     /// running continuous batching.
     pub cluster: ServerConfig,
+    /// Fleet-wide DVFS governor ([`crate::energy::governor`]): pinned
+    /// OPs, race-to-idle, or a `power-cap` watt budget that throttles
+    /// clusters down to 0.55 V and sheds what the budget cannot power.
+    pub governor: GovernorPolicy,
     /// Fleet seed: drives the p2c candidate RNG, the spray NoC Monte
     /// Carlo, and every derived per-cluster seed.
     pub seed: u64,
@@ -82,6 +97,7 @@ impl FleetConfig {
             policy,
             admission: Admission::Open,
             cluster: ServerConfig::new(1, Policy::ContinuousBatching),
+            governor: GovernorPolicy::PinnedThroughput,
             seed: 0xF1EE7,
             threads: std::thread::available_parallelism()
                 .map(|n| n.get())
@@ -108,12 +124,43 @@ struct SimOutput {
 pub struct Fleet {
     cfg: FleetConfig,
     costs: CostModel,
+    /// Per-cluster governor plan resolved from `cfg.governor`.
+    plan: Vec<ClusterGovernor>,
+    /// Clusters the plan leaves powered (a prefix of the cluster ids).
+    active: usize,
 }
 
 impl Fleet {
     pub fn new(cfg: FleetConfig) -> Self {
         let costs = CostModel::with_kv(cfg.cluster.exec, cfg.cluster.kv);
-        Self { cfg, costs }
+        // per-slot policies are pinned/race (never power-cap), so the
+        // scheduler-level engine-set guard would not fire — enforce the
+        // cap's rating precondition here too
+        assert!(
+            !matches!(cfg.governor, GovernorPolicy::PowerCap { .. })
+                || (cfg.cluster.exec.softmax_engine == EngineChoice::SoftEx
+                    && cfg.cluster.exec.gelu_engine == EngineChoice::SoftEx),
+            "power-cap governors require the paper-accelerated engine set"
+        );
+        // a fleet slot simulates `cluster.clusters()` concurrent mesh
+        // clusters, so a watt budget must be divided by that count
+        // before the per-slot allocation — otherwise a multi-cluster
+        // template would draw slot-count times the cap
+        let per_slot = cfg.cluster.clusters() as f64;
+        let policy = match cfg.governor {
+            GovernorPolicy::PowerCap { watts } => GovernorPolicy::PowerCap {
+                watts: watts / per_slot,
+            },
+            g => g,
+        };
+        let plan = governor::plan(policy, cfg.clusters);
+        let active = plan.iter().filter(|g| g.enabled()).count();
+        Self {
+            cfg,
+            costs,
+            plan,
+            active,
+        }
     }
 
     pub fn config(&self) -> &FleetConfig {
@@ -126,8 +173,8 @@ impl Fleet {
             requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
             "requests must be sorted by arrival"
         );
-        let spray_slowdown = if self.cfg.policy == DispatchPolicy::Spray && self.cfg.clusters > 1 {
-            let edge = mesh_edge_for(self.cfg.clusters);
+        let spray_slowdown = if self.cfg.policy == DispatchPolicy::Spray && self.active > 1 {
+            let edge = mesh_edge_for(self.active);
             mesh_slowdown(edge, self.cfg.noc_trials, self.cfg.seed)
         } else {
             0.0
@@ -138,6 +185,7 @@ impl Fleet {
             self.cfg.clusters,
             self.cfg.seed,
             spray_slowdown,
+            &self.plan,
         );
         let plan = dispatcher.dispatch(requests, &mut self.costs);
         let sim = match self.cfg.policy {
@@ -158,6 +206,7 @@ impl Fleet {
         let chunk = clusters.div_ceil(threads);
         let mut reports: Vec<Option<ServeReport>> = (0..clusters).map(|_| None).collect();
         let cfg = &self.cfg;
+        let govs = &self.plan;
         let streams = &plan.streams;
         std::thread::scope(|scope| {
             for (t, out) in reports.chunks_mut(chunk).enumerate() {
@@ -166,6 +215,7 @@ impl Fleet {
                         let c = t * chunk + i;
                         let mut server_cfg = cfg.cluster.clone();
                         server_cfg.seed = derive_seed(cfg.seed, c);
+                        server_cfg.governor = govs[c].as_policy();
                         let mut sched = BatchScheduler::new(server_cfg);
                         let mut rep = sched.run(&streams[c]);
                         rep.label = format!("c{c}:{}", rep.label);
@@ -198,14 +248,17 @@ impl Fleet {
     }
 
     /// Spray: every admitted request becomes one NoC-inflated shard on
-    /// *each* cluster, so all clusters execute the identical FIFO shard
-    /// timeline — simulated once on the shared engine (one serial
-    /// [`Resource`] standing for the lock-stepped mesh) and replicated.
-    /// A request completes when its slowest shard does; with identical
-    /// timelines that is the shared completion time. Token timestamps
-    /// are placed proportionally inside each shard's block.
+    /// *each* powered cluster, so all of them execute the identical
+    /// FIFO shard timeline — simulated once on the shared engine (one
+    /// serial [`Resource`] standing for the lock-stepped mesh) and
+    /// replicated. The gang runs at the [`governor::lockstep`] OP
+    /// choice of each shard's start instant (every powered cluster is
+    /// busy simultaneously, so only a plan where all of them may race
+    /// runs 0.8 V). A request completes when its slowest shard does;
+    /// with identical timelines that is the shared completion time.
     fn run_spray(&mut self, plan: &DispatchPlan) -> SimOutput {
         let shards = &plan.shards;
+        let gov = governor::lockstep(&self.plan);
         // per-request token geometry from the shared cost model
         let token_cums: Vec<Vec<u64>> = shards
             .iter()
@@ -224,13 +277,18 @@ impl Fleet {
         let mut completions = vec![0u64; shards.len()];
         let mut ttft_samples = vec![0u64; shards.len()];
         let mut tbt_samples: Vec<u64> = Vec::new();
+        let mut shard_ops: Vec<OpId> = vec![OpId::Throughput; shards.len()];
         engine.run(|eng, i| {
             let s = &shards[i];
-            let start = mesh.acquire(eng.now(), s.cycles);
-            completions[i] = start + s.cycles;
+            let depth = usize::from(mesh.free_at() > eng.now());
+            let op = gov.op_for_depth(depth);
+            let ticks = op.ticks(s.cycles).max(1);
+            shard_ops[i] = op;
+            let start = mesh.acquire(eng.now(), ticks);
+            completions[i] = start + ticks;
             // same proportional placement the scheduler uses for its
             // exclusive blocks (single source of truth)
-            let tokens = place_tokens(&token_cums[i], totals[i], start, s.cycles);
+            let tokens = place_tokens(&token_cums[i], totals[i], start, ticks);
             let mut prev: Option<u64> = None;
             for &t in &tokens {
                 match prev {
@@ -251,16 +309,17 @@ impl Fleet {
         let last_completion = completions.last().copied().unwrap_or(0);
         let (mean_depth, max_depth) = queue_depths(&arrivals, &completions);
 
-        let clusters = self.cfg.clusters as u64;
-        let (mut ops, mut busy, mut e_thr, mut e_eff) = (0u64, 0u64, 0.0f64, 0.0f64);
+        // each powered cluster executes 1/active of every request
+        let active = self.active.max(1) as u64;
+        let (mut ops, mut busy, mut energy_j) = (0u64, 0u64, 0.0f64);
+        let mut op_cycles = [0u64; 2];
         let mut spill = 0u64;
-        for s in shards {
-            ops += self.costs.ops(s.class) / clusters;
-            busy += s.cycles;
-            let (thr, eff) = self.costs.energy_j(s.class);
-            e_thr += thr / clusters as f64;
-            e_eff += eff / clusters as f64;
-            spill += self.costs.kv_spill_bytes(s.class) / clusters;
+        for (s, &op) in shards.iter().zip(&shard_ops) {
+            ops += self.costs.ops(s.class) / active;
+            busy += op.ticks(s.cycles);
+            energy_j += self.costs.energy_j(s.class, op) / active as f64;
+            op_cycles[op.idx()] += self.costs.service_cycles(s.class) / active;
+            spill += self.costs.kv_spill_bytes(s.class) / active;
         }
         let latencies = Latencies::from_unsorted(latency_samples);
         let ttft = Latencies::from_unsorted(ttft_samples);
@@ -268,6 +327,8 @@ impl Fleet {
         let proto = ServeReport {
             label: String::new(),
             mix: mix_label(shards.iter().map(|s| s.class)),
+            governor: gov.as_policy().label().to_string(),
+            power_cap_w: None,
             clusters: 1,
             n_requests: shards.len(),
             latencies: latencies.clone(),
@@ -276,17 +337,25 @@ impl Fleet {
             makespan: (last_completion.saturating_sub(first_arrival)).max(1),
             total_ops: ops,
             busy_cycles: busy,
-            energy_j_throughput: e_thr,
-            energy_j_efficiency: e_eff,
+            energy_j,
+            op_cycles,
             mean_queue_depth: mean_depth,
             max_queue_depth: max_depth,
             kv_spill_bytes: spill,
         };
         let reports = (0..self.cfg.clusters)
             .map(|c| {
-                let mut r = proto.clone();
-                r.label = format!("c{c}:spray");
-                r
+                if self.plan[c].enabled() {
+                    let mut r = proto.clone();
+                    r.label = format!("c{c}:spray");
+                    r
+                } else {
+                    // a powered-off cluster contributes an empty report
+                    ServeReport::empty(
+                        format!("c{c}:spray"),
+                        self.plan[c].as_policy().label().to_string(),
+                    )
+                }
             })
             .collect();
         SimOutput {
@@ -324,9 +393,12 @@ impl Fleet {
         }
         let first_arrival = requests.first().map(|r| r.arrival).unwrap_or(0);
         let last_arrival = requests.last().map(|r| r.arrival).unwrap_or(0);
-        let (e_thr, e_eff) = sim.reports.iter().fold((0.0f64, 0.0f64), |(t, e), r| {
-            (t + r.energy_j_throughput, e + r.energy_j_efficiency)
-        });
+        let energy_j: f64 = sim.reports.iter().map(|r| r.energy_j).sum();
+        let mut op_cycles = [0u64; 2];
+        for r in &sim.reports {
+            op_cycles[0] += r.op_cycles[0];
+            op_cycles[1] += r.op_cycles[1];
+        }
         FleetReport {
             label: format!("{}@{}", self.cfg.policy.label(), self.cfg.clusters),
             mix: mix_label(requests.iter().map(|r| r.class)),
@@ -343,8 +415,10 @@ impl Fleet {
             offered_span: (last_arrival - first_arrival).max(1),
             offered_ops,
             served_ops,
-            energy_j_throughput: e_thr,
-            energy_j_efficiency: e_eff,
+            governor: self.cfg.governor.label().to_string(),
+            power_cap_w: self.cfg.governor.power_cap_w(),
+            energy_j,
+            op_cycles,
             per_cluster: sim.reports,
         }
     }
@@ -425,8 +499,8 @@ mod tests {
         // per-shard integer division loses at most `clusters` OPs/request
         let lost = open.served_ops - spray.per_cluster.iter().map(|r| r.total_ops).sum::<u64>();
         assert!(lost <= 4 * 80, "{lost}");
-        let e: f64 = spray.per_cluster.iter().map(|r| r.energy_j_throughput).sum();
-        assert!((e - open.energy_j_throughput).abs() / open.energy_j_throughput < 1e-9);
+        let e: f64 = spray.per_cluster.iter().map(|r| r.energy_j).sum();
+        assert!((e - open.energy_j).abs() / open.energy_j < 1e-9);
     }
 
     #[test]

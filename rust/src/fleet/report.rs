@@ -1,10 +1,13 @@
 //! Fleet-wide accounting: global tail latencies over every cluster,
-//! goodput vs offered load, shed/downgrade rates, and per-cluster
-//! utilization imbalance.
+//! goodput vs offered load, shed/downgrade rates, per-cluster
+//! utilization imbalance, and the one-timeline energy/power view
+//! (energy charged at the OP each phase ran at, never at both).
 
+use crate::energy::governor::OpId;
 use crate::report;
+use crate::server::stats;
 use crate::server::{Latencies, ServeReport};
-use crate::softex::phys::{OperatingPoint, OP_THROUGHPUT};
+use crate::softex::phys::OP_THROUGHPUT;
 
 use super::dispatch::DispatchPolicy;
 
@@ -44,10 +47,16 @@ pub struct FleetReport {
     pub offered_ops: u64,
     /// Countable OPs actually served (downgrades shrink this).
     pub served_ops: u64,
-    /// Energy summed over clusters at 0.8 V / 1.12 GHz, joules.
-    pub energy_j_throughput: f64,
-    /// Energy summed over clusters at 0.55 V / 460 MHz, joules.
-    pub energy_j_efficiency: f64,
+    /// DVFS governor label the fleet ran under.
+    pub governor: String,
+    /// The watt budget when the governor is `power-cap`.
+    pub power_cap_w: Option<f64>,
+    /// Energy summed over clusters, joules — each cluster's one
+    /// timeline charged at the OPs its governor actually picked.
+    pub energy_j: f64,
+    /// Clock cycles executed at each OP across the fleet, indexed by
+    /// [`OpId::idx`].
+    pub op_cycles: [u64; 2],
     /// One report per cluster, indexed by cluster id.
     pub per_cluster: Vec<ServeReport>,
 }
@@ -98,15 +107,44 @@ impl FleetReport {
         }
     }
 
+    /// Wall-clock seconds spanned by the fleet run (ticks at the 0.8 V
+    /// clock).
+    pub fn wall_seconds(&self) -> f64 {
+        stats::wall_seconds_of(self.makespan)
+    }
+
     /// Goodput: OPs actually served per second over the fleet makespan.
-    pub fn goodput_gops(&self, op: &OperatingPoint) -> f64 {
-        self.served_ops as f64 / (self.makespan as f64 / op.freq_hz) / 1e9
+    pub fn goodput_gops(&self) -> f64 {
+        self.served_ops as f64 / self.wall_seconds() / 1e9
     }
 
     /// Offered load: OPs per second the stream asked for over its
     /// arrival span.
-    pub fn offered_gops(&self, op: &OperatingPoint) -> f64 {
-        self.offered_ops as f64 / (self.offered_span as f64 / op.freq_hz) / 1e9
+    pub fn offered_gops(&self) -> f64 {
+        self.offered_ops as f64 / stats::wall_seconds_of(self.offered_span) / 1e9
+    }
+
+    /// Average fleet power over the run's wall clock; never exceeds the
+    /// budget under a `power-cap` governor.
+    pub fn avg_power_w(&self) -> f64 {
+        self.energy_j / self.wall_seconds()
+    }
+
+    /// Fraction of executed clock cycles at each OP across the fleet,
+    /// indexed by [`OpId::idx`]; sums to 1.0 whenever any work ran.
+    pub fn op_residency(&self) -> [f64; 2] {
+        stats::residency_of(&self.op_cycles)
+    }
+
+    /// Tokens served fleet-wide: one first token per admitted request
+    /// plus one per decode gap.
+    pub fn tokens_served(&self) -> u64 {
+        (self.ttft.len() + self.tbt.len()) as u64
+    }
+
+    /// Joules per produced token (0 when the fleet produced none).
+    pub fn joules_per_token(&self) -> f64 {
+        stats::joules_per_token_of(self.energy_j, self.tokens_served())
     }
 
     /// Per-cluster engine-busy share of the fleet makespan.
@@ -138,10 +176,12 @@ impl FleetReport {
             report::f(ServeReport::ms(self.p99(), &OP_THROUGHPUT), 2),
             report::f(ServeReport::ms(self.ttft_p95(), &OP_THROUGHPUT), 2),
             report::f(ServeReport::ms(self.tbt_p95(), &OP_THROUGHPUT), 2),
-            report::f(self.goodput_gops(&OP_THROUGHPUT), 0),
-            report::f(self.offered_gops(&OP_THROUGHPUT), 0),
+            report::f(self.goodput_gops(), 0),
+            report::f(self.offered_gops(), 0),
             report::pct(self.shed_rate()),
             report::f(self.utilization_imbalance(), 2),
+            report::f(self.energy_j, 3),
+            report::f(self.avg_power_w(), 2),
         ]
     }
 
@@ -149,11 +189,17 @@ impl FleetReport {
     /// summary plus one object per cluster.
     pub fn to_json(&self) -> String {
         let per_cluster = report::json::array(self.per_cluster.iter().map(|r| r.to_json()));
-        report::json::Obj::new()
+        let res = self.op_residency();
+        let mut obj = report::json::Obj::new()
             .str("label", &self.label)
             .str("mix", &self.mix)
+            .str("governor", &self.governor)
             .u64("clusters", self.clusters as u64)
-            .str("policy", self.policy.label())
+            .str("policy", self.policy.label());
+        if let Some(cap) = self.power_cap_w {
+            obj = obj.f64("power_cap_w", cap);
+        }
+        obj
             .u64("n_offered", self.n_offered as u64)
             .u64("n_admitted", self.n_admitted as u64)
             .u64("n_downgraded", self.n_downgraded as u64)
@@ -172,22 +218,30 @@ impl FleetReport {
             .u64("makespan_cycles", self.makespan)
             .u64("offered_ops", self.offered_ops)
             .u64("served_ops", self.served_ops)
-            .f64("goodput_gops_08v", self.goodput_gops(&OP_THROUGHPUT))
-            .f64("offered_gops_08v", self.offered_gops(&OP_THROUGHPUT))
+            .f64("goodput_gops", self.goodput_gops())
+            .f64("offered_gops", self.offered_gops())
             .f64("utilization_imbalance", self.utilization_imbalance())
-            .f64("energy_j_throughput", self.energy_j_throughput)
-            .f64("energy_j_efficiency", self.energy_j_efficiency)
+            .f64("energy_j", self.energy_j)
+            .f64("avg_power_w", self.avg_power_w())
+            .f64("joules_per_token", self.joules_per_token())
+            .f64("op_residency_throughput", res[OpId::Throughput.idx()])
+            .f64("op_residency_efficiency", res[OpId::Efficiency.idx()])
             .raw("per_cluster", &per_cluster)
             .finish()
     }
 
     /// Standalone report: global summary plus a per-cluster table.
     pub fn render(&self) -> String {
+        let cap = match self.power_cap_w {
+            Some(w) => format!(", cap {w} W"),
+            None => String::new(),
+        };
         let mut out = report::render_table(
             &format!(
-                "Fleet run — {} ({} offered, {} admitted, {} downgraded, {} shed, mix {})",
+                "Fleet run — {} ({} offered, {} admitted, {} downgraded, {} shed, mix {}, \
+                 governor {}{})",
                 self.label, self.n_offered, self.n_admitted, self.n_downgraded, self.n_shed,
-                self.mix
+                self.mix, self.governor, cap
             ),
             &FLEET_HEADERS,
             &[self.row()],
@@ -199,26 +253,33 @@ impl FleetReport {
             .zip(&utils)
             .enumerate()
             .map(|(c, (r, &u))| {
+                let res = r.op_residency();
                 vec![
                     format!("c{c}"),
                     r.n_requests.to_string(),
                     report::f(ServeReport::ms(r.p50(), &OP_THROUGHPUT), 2),
                     report::f(ServeReport::ms(r.p99(), &OP_THROUGHPUT), 2),
                     report::pct(u),
-                    report::f(r.energy_j_throughput * 1e3, 1),
+                    report::f(r.energy_j * 1e3, 1),
+                    report::pct(res[OpId::Throughput.idx()]),
                 ]
             })
             .collect();
         out.push_str(&report::render_table(
             "per-cluster",
-            &["cluster", "reqs", "p50 ms", "p99 ms", "util", "mJ @0.8V"],
+            &["cluster", "reqs", "p50 ms", "p99 ms", "util", "mJ", "res 0.8V"],
             &rows,
         ));
+        let res = self.op_residency();
         out.push_str(&format!(
-            "makespan {:.1} ms @0.8V | {:.2} J @0.8V / {:.2} J @0.55V | imbalance {:.2}\n",
+            "makespan {:.1} ms | {:.3} J | {:.2} W avg | {:.2} uJ/token | \
+             residency 0.8V {} / 0.55V {} | imbalance {:.2}\n",
             ServeReport::ms(self.makespan, &OP_THROUGHPUT),
-            self.energy_j_throughput,
-            self.energy_j_efficiency,
+            self.energy_j,
+            self.avg_power_w(),
+            self.joules_per_token() * 1e6,
+            report::pct(res[OpId::Throughput.idx()]),
+            report::pct(res[OpId::Efficiency.idx()]),
             self.utilization_imbalance()
         ));
         out.push_str(&format!(
@@ -235,7 +296,7 @@ impl FleetReport {
 }
 
 /// Column headers shared by [`FleetReport::row`].
-pub const FLEET_HEADERS: [&str; 10] = [
+pub const FLEET_HEADERS: [&str; 12] = [
     "policy@N",
     "p50 ms",
     "p95 ms",
@@ -246,6 +307,8 @@ pub const FLEET_HEADERS: [&str; 10] = [
     "offered",
     "shed",
     "imbal",
+    "J",
+    "avgW",
 ];
 
 /// Render several fleet runs as one comparison table.

@@ -30,7 +30,12 @@
 //!   pluggable load balancing (round-robin, join-shortest-queue,
 //!   power-of-two-choices, spray) with SLO-aware admission control,
 //!   re-layered on the same `sim` engine (`DESIGN.md` §7, §8);
-//! * [`energy`] — area/power/energy models calibrated to Sec. VII;
+//! * [`energy`] — area/power/energy models calibrated to Sec. VII,
+//!   plus [`energy::governor`]: the paper's two operating points as
+//!   per-cluster DVFS runtime state (pinned / race-to-idle /
+//!   power-cap), so one simulated timeline yields one energy number,
+//!   an average power, joules/token, and per-OP residency
+//!   (`DESIGN.md` §10);
 //! * [`runtime`] — PJRT loading/execution of the AOT JAX artifacts
 //!   (gated off in offline builds, `DESIGN.md` §4);
 //! * [`report`] — paper-style table rendering for the benches.

@@ -5,8 +5,10 @@
 //!   softmax --rows R --len L [--lanes N]                one softmax job
 //!   gelu --n N [--terms T] [--bits B]                   one GELU job
 //!   mesh [--max 8] [--trials 16384]                     Fig. 15 sweep
-//!   serve [--requests N] [--mesh n] [--policy P] [--model M] [--kv K] [--json]   serving sim
-//!   fleet [--clusters N] [--policy P] [--model M] [--threads T] [--json]         fleet dispatcher
+//!   serve [--requests N] [--mesh n] [--policy P] [--model M] [--kv K]
+//!         [--governor G] [--power-cap-w W] [--json]                   serving sim
+//!   fleet [--clusters N] [--policy P] [--model M] [--threads T]
+//!         [--governor G] [--power-cap-w W] [--json]                   fleet dispatcher
 //!   verify [--artifacts DIR]                            golden checks
 //!   info                                                cluster summary
 
@@ -14,6 +16,7 @@ use std::collections::HashMap;
 
 use softex::cluster::cores::ExpAlgo;
 use softex::coordinator::{execute_trace, ExecConfig, KernelClass};
+use softex::energy::governor::{self, GovernorPolicy};
 use softex::energy::{OP_EFFICIENCY, OP_THROUGHPUT};
 use softex::fleet::{Admission, DispatchPolicy, Fleet, FleetConfig};
 use softex::mesh::sweep_mesh;
@@ -27,8 +30,14 @@ use softex::softex::phys;
 use softex::softex::SoftExConfig;
 use softex::workload::{gen, trace_model, ModelConfig};
 
-/// Split `--flag value`, `--flag=value`, and bare `--flag` (-> "true")
-/// arguments from positionals.
+/// Flags that are valid without a value; every other `--flag` must be
+/// followed by one (so `--model --json` reports the missing value
+/// instead of silently turning `model` into a boolean).
+const BOOL_FLAGS: &[&str] = &["json", "sw-nonlin"];
+
+/// Split `--flag value`, `--flag=value`, and bare boolean `--flag`
+/// arguments from positionals. A value-carrying flag followed by
+/// another `--flag` (or by nothing) is a usage error.
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut pos = Vec::new();
     let mut flags = HashMap::new();
@@ -38,12 +47,16 @@ fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
             if let Some((key, value)) = name.split_once('=') {
                 flags.insert(key.to_string(), value.to_string());
                 i += 1;
+            } else if BOOL_FLAGS.contains(&name) {
+                // boolean flags never consume the next token
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
             } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
                 flags.insert(name.to_string(), args[i + 1].clone());
                 i += 2;
             } else {
-                flags.insert(name.to_string(), "true".to_string());
-                i += 1;
+                eprintln!("flag --{name} requires a value");
+                std::process::exit(2);
             }
         } else {
             pos.push(args[i].clone());
@@ -51,6 +64,29 @@ fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
         }
     }
     (pos, flags)
+}
+
+/// Print a message plus the subcommand usage line and exit nonzero.
+fn usage_error(msg: &str, usage: &str) -> ! {
+    eprintln!("{msg}");
+    eprintln!("{usage}");
+    std::process::exit(2);
+}
+
+/// Parse an optional numeric flag, exiting with the usage message
+/// (instead of a panic backtrace) on a malformed value.
+fn num_flag<T: std::str::FromStr>(
+    flags: &HashMap<String, String>,
+    name: &str,
+    default: T,
+    usage: &str,
+) -> T {
+    match flags.get(name) {
+        None => default,
+        Some(v) => v
+            .parse()
+            .unwrap_or_else(|_| usage_error(&format!("invalid value `{v}` for --{name}"), usage)),
+    }
 }
 
 fn cmd_run(pos: &[String], flags: &HashMap<String, String>) {
@@ -105,10 +141,15 @@ fn cmd_run(pos: &[String], flags: &HashMap<String, String>) {
     );
 }
 
+const SOFTMAX_USAGE: &str = "usage: softex softmax [--rows R] [--len L] [--lanes N]";
+
 fn cmd_softmax(flags: &HashMap<String, String>) {
-    let rows: usize = flags.get("rows").map_or(512, |v| v.parse().unwrap());
-    let len: usize = flags.get("len").map_or(128, |v| v.parse().unwrap());
-    let lanes: usize = flags.get("lanes").map_or(16, |v| v.parse().unwrap());
+    let rows: usize = num_flag(flags, "rows", 512, SOFTMAX_USAGE);
+    let len: usize = num_flag(flags, "len", 128, SOFTMAX_USAGE);
+    let lanes: usize = num_flag(flags, "lanes", 16, SOFTMAX_USAGE);
+    if rows == 0 || len == 0 || lanes == 0 {
+        usage_error("--rows, --len, and --lanes must be at least 1", SOFTMAX_USAGE);
+    }
     let cfg = SoftExConfig::with_lanes(lanes);
     let scores = gen::attention_scores(rows, len, 0x5EED);
     let r = softex::softex::run_softmax(&cfg, &scores, rows, len);
@@ -128,10 +169,21 @@ fn cmd_softmax(flags: &HashMap<String, String>) {
     println!("worst |rowsum - 1| = {worst:.4}");
 }
 
+const GELU_USAGE: &str = "usage: softex gelu [--n N] [--terms 2..=6] [--bits B]";
+
 fn cmd_gelu(flags: &HashMap<String, String>) {
-    let n: usize = flags.get("n").map_or(16384, |v| v.parse().unwrap());
-    let terms: usize = flags.get("terms").map_or(4, |v| v.parse().unwrap());
-    let bits: u32 = flags.get("bits").map_or(14, |v| v.parse().unwrap());
+    let n: usize = num_flag(flags, "n", 16384, GELU_USAGE);
+    let terms: usize = num_flag(flags, "terms", 4, GELU_USAGE);
+    let bits: u32 = num_flag(flags, "bits", 14, GELU_USAGE);
+    // validate at the CLI boundary: the sum-of-exponentials tables only
+    // exist for 2..=6 terms and reaching the library panic from a flag
+    // would be a crash, not an error message
+    if softex::softex::coeffs::soe_coeffs_checked(terms).is_none() {
+        usage_error(
+            &format!("--terms must be between 2 and 6 (sum-of-exponentials fits), got {terms}"),
+            GELU_USAGE,
+        );
+    }
     let cfg = SoftExConfig { terms, acc_frac_bits: bits, ..Default::default() };
     let xs = gen::gelu_inputs(n, 0x6E1);
     let r = softex::softex::run_gelu(&cfg, &xs);
@@ -150,9 +202,14 @@ fn cmd_gelu(flags: &HashMap<String, String>) {
     );
 }
 
+const MESH_USAGE: &str = "usage: softex mesh [--max N] [--trials T]";
+
 fn cmd_mesh(flags: &HashMap<String, String>) {
-    let max: usize = flags.get("max").map_or(8, |v| v.parse().unwrap());
-    let trials: u32 = flags.get("trials").map_or(1 << 14, |v| v.parse().unwrap());
+    let max: usize = num_flag(flags, "max", 8, MESH_USAGE);
+    let trials: u32 = num_flag(flags, "trials", 1 << 14, MESH_USAGE);
+    if max == 0 || trials == 0 {
+        usage_error("--max and --trials must be at least 1", MESH_USAGE);
+    }
     let sizes: Vec<usize> = (1..=max).collect();
     let pts = sweep_mesh(&sizes, trials, 0xFEED);
     let rows: Vec<Vec<String>> = pts
@@ -180,7 +237,44 @@ fn cmd_mesh(flags: &HashMap<String, String>) {
 
 const SERVE_USAGE: &str =
     "usage: softex serve [--requests N] [--mesh N] [--gap CYCLES] [--seed S] \
-     [--policy fifo|cb|mesh] [--model NAME|edge|genai] [--kv resident|spill] [--json]";
+     [--policy fifo|cb|mesh] [--model NAME|edge|genai] [--kv resident|spill] \
+     [--governor pinned-throughput|pinned-efficiency|race-to-idle] [--power-cap-w W] [--json]";
+
+/// Parse the shared `--governor` / `--power-cap-w` pair into a DVFS
+/// policy. `--power-cap-w W` selects the power-cap governor (and is
+/// required by `--governor power-cap`); any other governor name
+/// conflicts with a cap.
+fn parse_governor(flags: &HashMap<String, String>, usage: &str) -> GovernorPolicy {
+    let cap: Option<f64> = flags
+        .contains_key("power-cap-w")
+        .then(|| num_flag(flags, "power-cap-w", 0.0, usage));
+    if let Some(watts) = cap {
+        if watts <= 0.0 {
+            usage_error("--power-cap-w must be positive", usage);
+        }
+        match flags.get("governor").map(String::as_str) {
+            None | Some("power-cap") => {}
+            Some(other) => usage_error(
+                &format!("--power-cap-w conflicts with --governor {other}"),
+                usage,
+            ),
+        }
+        return GovernorPolicy::PowerCap { watts };
+    }
+    match flags.get("governor").map(String::as_str) {
+        None => GovernorPolicy::PinnedThroughput,
+        Some("power-cap") => usage_error("--governor power-cap requires --power-cap-w W", usage),
+        Some(name) => GovernorPolicy::parse(name).unwrap_or_else(|| {
+            usage_error(
+                &format!(
+                    "unknown governor `{name}` (expected pinned-throughput, pinned-efficiency, \
+                     race-to-idle, or power-cap)"
+                ),
+                usage,
+            )
+        }),
+    }
+}
 
 /// Parse the shared `--model` flag into a workload mix: a preset name
 /// (`ModelConfig::by_name` spellings) gives a single-model stream, the
@@ -218,27 +312,42 @@ fn parse_kv(flags: &HashMap<String, String>, usage: &str) -> KvConfig {
 }
 
 fn cmd_serve(flags: &HashMap<String, String>) {
-    let n: usize = flags.get("requests").map_or(1000, |v| v.parse().unwrap());
-    let mesh: usize = flags.get("mesh").map_or(2, |v| v.parse().unwrap());
-    let seed: u64 = flags.get("seed").map_or(0x5EED, |v| v.parse().unwrap());
-    let mean_gap: f64 = flags.get("gap").map_or(2.0e6, |v| v.parse().unwrap());
+    let n: usize = num_flag(flags, "requests", 1000, SERVE_USAGE);
+    let mesh: usize = num_flag(flags, "mesh", 2, SERVE_USAGE);
+    let seed: u64 = num_flag(flags, "seed", 0x5EED, SERVE_USAGE);
+    let mean_gap: f64 = num_flag(flags, "gap", 2.0e6, SERVE_USAGE);
+    if mesh == 0 {
+        usage_error("--mesh must be at least 1", SERVE_USAGE);
+    }
+    if mean_gap <= 0.0 {
+        usage_error("--gap must be positive", SERVE_USAGE);
+    }
     let policy = match flags.get("policy").map(String::as_str) {
         Some("fifo") => Policy::Fifo,
         Some("mesh") | Some("mesh-shard") => Policy::MeshSharded,
         Some("cb") | Some("cont-batch") | None => Policy::ContinuousBatching,
-        Some(other) => {
-            eprintln!("unknown serve policy `{other}` (expected fifo, cb, or mesh)");
-            eprintln!("{SERVE_USAGE}");
-            std::process::exit(2);
-        }
+        Some(other) => usage_error(
+            &format!("unknown serve policy `{other}` (expected fifo, cb, or mesh)"),
+            SERVE_USAGE,
+        ),
     };
     let kv = parse_kv(flags, SERVE_USAGE);
     let mix = parse_mix(flags, SERVE_USAGE);
+    let gov = parse_governor(flags, SERVE_USAGE);
+    // a serve run has no admission path to shed through: the cap must
+    // power at least one of the mesh's clusters
+    if !governor::plan(gov, mesh * mesh).iter().any(|g| g.enabled()) {
+        usage_error(
+            "--power-cap-w cannot power a single cluster at 0.55 V; raise the budget",
+            SERVE_USAGE,
+        );
+    }
     let mut generator = RequestGen::new(seed, ArrivalProcess::Poisson { mean_gap }, mix);
     let requests = generator.generate(n);
     let mut server_cfg = ServerConfig::new(mesh, policy);
     server_cfg.seed = seed;
     server_cfg.kv = kv;
+    server_cfg.governor = gov;
     let mut sched = BatchScheduler::new(server_cfg);
     let rep = sched.run(&requests);
     if flags.contains_key("json") {
@@ -252,36 +361,20 @@ const FLEET_USAGE: &str =
     "usage: softex fleet [--clusters N] [--policy rr|jsq|p2c|spray] [--requests N] \
      [--rho LOAD | --gap CYCLES] [--burst SIZE] [--seed S] [--threads T] \
      [--slo-ms MS [--admission shed|downgrade]] [--model NAME|edge|genai] \
-     [--kv resident|spill] [--json]";
+     [--kv resident|spill] \
+     [--governor pinned-throughput|pinned-efficiency|race-to-idle] [--power-cap-w W] [--json]";
 
 fn fleet_usage_error(msg: &str) -> ! {
-    eprintln!("{msg}");
-    eprintln!("{FLEET_USAGE}");
-    std::process::exit(2);
-}
-
-/// Parse an optional numeric fleet flag, exiting with the usage message
-/// (instead of a panic backtrace) on a malformed or missing value.
-fn fleet_flag<T: std::str::FromStr>(
-    flags: &HashMap<String, String>,
-    name: &str,
-    default: T,
-) -> T {
-    match flags.get(name) {
-        None => default,
-        Some(v) => v
-            .parse()
-            .unwrap_or_else(|_| fleet_usage_error(&format!("invalid value `{v}` for --{name}"))),
-    }
+    usage_error(msg, FLEET_USAGE)
 }
 
 fn cmd_fleet(flags: &HashMap<String, String>) {
-    let clusters: usize = fleet_flag(flags, "clusters", 8);
+    let clusters: usize = num_flag(flags, "clusters", 8, FLEET_USAGE);
     if clusters == 0 {
         fleet_usage_error("--clusters must be at least 1");
     }
-    let n: usize = fleet_flag(flags, "requests", 400);
-    let seed: u64 = fleet_flag(flags, "seed", 0xF1EE7);
+    let n: usize = num_flag(flags, "requests", 400, FLEET_USAGE);
+    let seed: u64 = num_flag(flags, "seed", 0xF1EE7, FLEET_USAGE);
     let policy = match flags.get("policy").map(String::as_str) {
         None => DispatchPolicy::PowerOfTwoChoices,
         Some(name) => DispatchPolicy::parse(name).unwrap_or_else(|| {
@@ -293,24 +386,40 @@ fn cmd_fleet(flags: &HashMap<String, String>) {
 
     let kv = parse_kv(flags, FLEET_USAGE);
     let mix = parse_mix(flags, FLEET_USAGE);
-    // offered load: --gap (per-request spacing, cycles) wins; otherwise
+    let gov = parse_governor(flags, FLEET_USAGE);
+    // offered load: --gap (per-request spacing, ticks) wins; otherwise
     // --rho (fraction of aggregate fleet service capacity on the
-    // selected mix under the chosen KV model, default 0.8)
+    // selected mix under the chosen KV model AND the governor plan:
+    // powered-off clusters contribute nothing and a 0.55 V-nominal
+    // cluster drains 2.43x slower, so rho stays honest under
+    // pinned-efficiency and power caps; default 0.8)
     let mean_gap: f64 = match flags.get("gap") {
         Some(_) => {
             if flags.contains_key("rho") {
                 fleet_usage_error("--gap and --rho are mutually exclusive");
             }
-            fleet_flag(flags, "gap", 0.0)
+            num_flag(flags, "gap", 0.0, FLEET_USAGE)
         }
         None => {
-            let rho: f64 = fleet_flag(flags, "rho", 0.8);
+            let rho: f64 = num_flag(flags, "rho", 0.8, FLEET_USAGE);
             if rho <= 0.0 {
                 fleet_usage_error("--rho must be positive");
             }
             let mean_service = CostModel::with_kv(ExecConfig::paper_accelerated(), kv)
                 .mean_service_cycles(&mix);
-            mean_service / (clusters as f64 * rho)
+            // requests per tick the powered fleet can drain
+            let service_rate: f64 = governor::plan(gov, clusters)
+                .iter()
+                .filter(|g| g.enabled())
+                .map(|g| 1.0 / (mean_service * g.nominal_op().stretch()))
+                .sum();
+            if service_rate <= 0.0 {
+                fleet_usage_error(
+                    "--rho needs a power cap that powers at least one cluster; \
+                     use --gap to offer load to a fully shedding fleet",
+                );
+            }
+            1.0 / (service_rate * rho)
         }
     };
     if mean_gap <= 0.0 {
@@ -320,7 +429,7 @@ fn cmd_fleet(flags: &HashMap<String, String>) {
     // then a pause of size * mean_gap
     let process = match flags.get("burst") {
         Some(_) => {
-            let size: usize = fleet_flag(flags, "burst", 32);
+            let size: usize = num_flag(flags, "burst", 32, FLEET_USAGE);
             if size == 0 {
                 fleet_usage_error("--burst must be at least 1");
             }
@@ -340,7 +449,7 @@ fn cmd_fleet(flags: &HashMap<String, String>) {
             Admission::Open
         }
         Some(_) => {
-            let ms: f64 = fleet_flag(flags, "slo-ms", 0.0);
+            let ms: f64 = num_flag(flags, "slo-ms", 0.0, FLEET_USAGE);
             if ms <= 0.0 {
                 fleet_usage_error("--slo-ms must be positive");
             }
@@ -360,8 +469,9 @@ fn cmd_fleet(flags: &HashMap<String, String>) {
     cfg.seed = seed;
     cfg.admission = admission;
     cfg.cluster.kv = kv;
+    cfg.governor = gov;
     if flags.contains_key("threads") {
-        cfg.threads = fleet_flag(flags, "threads", 1);
+        cfg.threads = num_flag(flags, "threads", 1, FLEET_USAGE);
         if cfg.threads == 0 {
             fleet_usage_error("--threads must be at least 1");
         }

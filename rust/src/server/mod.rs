@@ -17,8 +17,10 @@
 //!   via `crate::sim::kv`;
 //! * [`stats`] — [`ServeReport`]: latency percentiles (p50/p95/p99),
 //!   time-to-first-token and time-between-tokens percentiles,
-//!   sustained GOPS, queue depths, KV spill volume, and energy at both
-//!   paper operating points, renderable as a table or JSON.
+//!   sustained GOPS, queue depths, KV spill volume, and the
+//!   one-timeline energy view (`energy_j`, average watts,
+//!   joules/token, per-OP residency) under the run's DVFS governor
+//!   (`crate::energy::governor`), renderable as a table or JSON.
 //!
 //! Everything is deterministic under a fixed seed; see
 //! `examples/serving.rs` and `benches/serve_load_sweep.rs`.

@@ -18,12 +18,19 @@
 //! The per-class cost memo is factored out as [`CostModel`] so the
 //! fleet dispatcher (`crate::fleet`) predicts queue delays with the
 //! same numbers the cluster simulation charges.
+//!
+//! Time is measured in *ticks* (0.8 V clock periods): the per-cluster
+//! DVFS governor (`energy::governor`, DESIGN.md §10) picks an
+//! operating point at every dispatch instant, phase durations stretch
+//! through [`OpId::ticks`] when the voltage drops, and energy is
+//! charged at the OP each phase actually ran at — one timeline, one
+//! energy number.
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap};
 
-use crate::coordinator::{op_cost, Engine, ExecConfig, Metrics};
-use crate::energy::{OP_EFFICIENCY, OP_THROUGHPUT};
+use crate::coordinator::{op_cost, Engine, EngineChoice, ExecConfig};
+use crate::energy::governor::{self, part_energies, ClusterGovernor, GovernorPolicy, OpId};
 use crate::mesh::montecarlo::mesh_slowdown;
 use crate::sim::{Engine as SimEngine, KvConfig, Resource, ResourcePool};
 use crate::workload::{trace_decode_step, Op};
@@ -77,6 +84,9 @@ pub struct ServerConfig {
     /// KV-cache residency model for decode phases; defaults to the
     /// idealized resident cache (no spill cost).
     pub kv: KvConfig,
+    /// Per-cluster DVFS governor; defaults to the historical
+    /// pinned-throughput timeline.
+    pub governor: GovernorPolicy,
     /// Monte Carlo trials for the NoC slowdown (MeshSharded only).
     pub noc_trials: u32,
     /// Seed for the NoC Monte Carlo and the simulation engine.
@@ -91,6 +101,7 @@ impl ServerConfig {
             policy,
             exec: ExecConfig::paper_accelerated(),
             kv: KvConfig::default(),
+            governor: GovernorPolicy::PinnedThroughput,
             noc_trials: 4096,
             seed: 0x5EED,
         }
@@ -101,11 +112,16 @@ impl ServerConfig {
     }
 }
 
-/// One engine-occupancy segment of a request phase.
+/// One engine-occupancy segment of a request phase, with its energy
+/// pre-resolved at both OPs (indexed by [`OpId::idx`]) so the governor
+/// can charge whichever point the segment actually runs at.
 #[derive(Clone, Copy, Debug)]
 struct Segment {
     engine: Engine,
+    /// Clock cycles (OP-independent work); the timeline duration is
+    /// `op.ticks(cycles)`.
     cycles: u64,
+    energy: [f64; 2],
 }
 
 /// Pre-resolved cost of one token-producing phase: the prompt/ingest
@@ -117,15 +133,14 @@ struct PhaseCost {
     /// Total engine-occupancy cycles (sum over segments).
     cycles: u64,
     ops: u64,
-    energy_j_throughput: f64,
-    energy_j_efficiency: f64,
+    /// Phase energy at each OP, indexed by [`OpId::idx`].
+    energy: [f64; 2],
     /// KV bytes DMA-streamed by this phase (0 unless spilling).
     kv_spill_bytes: u64,
 }
 
 fn phase_cost(exec: &ExecConfig, trace: &[Op]) -> PhaseCost {
     let mut segments: Vec<Segment> = Vec::new();
-    let mut metrics = Metrics::default();
     let mut ops = 0u64;
     let mut kv_spill_bytes = 0u64;
     for op in trace {
@@ -134,23 +149,33 @@ fn phase_cost(exec: &ExecConfig, trace: &[Op]) -> PhaseCost {
         }
         let cost = op_cost(exec, op);
         ops += cost.ops;
+        // zero-cycle ops (e.g. the fused bias) carry zero energy too
         if cost.cycles > 0 {
+            let energy = part_energies(&cost.parts);
             match segments.last_mut() {
-                Some(s) if s.engine == cost.engine => s.cycles += cost.cycles,
+                Some(s) if s.engine == cost.engine => {
+                    s.cycles += cost.cycles;
+                    s.energy[0] += energy[0];
+                    s.energy[1] += energy[1];
+                }
                 _ => segments.push(Segment {
                     engine: cost.engine,
                     cycles: cost.cycles,
+                    energy,
                 }),
             }
         }
-        metrics.add_cost(&cost);
+    }
+    let mut energy = [0.0f64; 2];
+    for s in &segments {
+        energy[0] += s.energy[0];
+        energy[1] += s.energy[1];
     }
     PhaseCost {
         cycles: segments.iter().map(|s| s.cycles).sum(),
         segments,
         ops,
-        energy_j_throughput: metrics.energy_j(&OP_THROUGHPUT),
-        energy_j_efficiency: metrics.energy_j(&OP_EFFICIENCY),
+        energy,
         kv_spill_bytes,
     }
 }
@@ -164,21 +189,47 @@ struct ClassCost {
     /// Total engine-occupancy cycles (sum over phases).
     service_cycles: u64,
     ops: u64,
-    energy_j_throughput: f64,
-    energy_j_efficiency: f64,
+    /// Whole-request energy at each OP, indexed by [`OpId::idx`].
+    energy: [f64; 2],
     kv_spill_bytes: u64,
 }
 
 impl ClassCost {
     fn from_phases(phases: Vec<PhaseCost>) -> Self {
+        let mut energy = [0.0f64; 2];
+        for p in &phases {
+            energy[0] += p.energy[0];
+            energy[1] += p.energy[1];
+        }
         Self {
             service_cycles: phases.iter().map(|p| p.cycles).sum(),
             ops: phases.iter().map(|p| p.ops).sum(),
-            energy_j_throughput: phases.iter().map(|p| p.energy_j_throughput).sum(),
-            energy_j_efficiency: phases.iter().map(|p| p.energy_j_efficiency).sum(),
+            energy,
             kv_spill_bytes: phases.iter().map(|p| p.kv_spill_bytes).sum(),
             phases,
         }
+    }
+}
+
+/// Running totals of one simulation's actually-executed work: energy at
+/// the OPs phases ran at, clock cycles per OP (the residency numerator),
+/// and engine-occupancy ticks.
+#[derive(Clone, Copy, Debug, Default)]
+struct EnergyLedger {
+    energy_j: f64,
+    op_cycles: [u64; 2],
+    busy_ticks: u64,
+}
+
+impl EnergyLedger {
+    fn charge(&mut self, cycles: u64, energy: [f64; 2], op: OpId) {
+        self.energy_j += energy[op.idx()];
+        self.op_cycles[op.idx()] += cycles;
+        self.busy_ticks += op.ticks(cycles);
+    }
+
+    fn charge_class(&mut self, cost: &ClassCost, op: OpId) {
+        self.charge(cost.service_cycles, cost.energy, op);
     }
 }
 
@@ -273,10 +324,9 @@ impl CostModel {
         self.resolve(class).ops
     }
 
-    /// Energy of one request, joules, at (0.8 V, 0.55 V) operating points.
-    pub fn energy_j(&mut self, class: RequestClass) -> (f64, f64) {
-        let c = self.resolve(class);
-        (c.energy_j_throughput, c.energy_j_efficiency)
+    /// Energy of one request run entirely at one operating point, joules.
+    pub fn energy_j(&mut self, class: RequestClass, op: OpId) -> f64 {
+        self.resolve(class).energy[op.idx()]
     }
 
     /// KV bytes one request DMA-streams over all its decode steps.
@@ -362,16 +412,49 @@ fn tokenize_block(cost: &ClassCost, start: u64, service: u64) -> Served {
 pub struct BatchScheduler {
     cfg: ServerConfig,
     costs: CostModel,
+    /// Enabled per-cluster governors (the power-cap plan's `Off`
+    /// clusters are dropped here; scheduling spans `govs.len()`
+    /// clusters while reports keep the configured total).
+    govs: Vec<ClusterGovernor>,
 }
 
 impl BatchScheduler {
     pub fn new(cfg: ServerConfig) -> Self {
         let costs = CostModel::with_kv(cfg.exec, cfg.kv);
-        Self { cfg, costs }
+        let govs: Vec<ClusterGovernor> = governor::plan(cfg.governor, cfg.clusters())
+            .into_iter()
+            .filter(ClusterGovernor::enabled)
+            .collect();
+        assert!(
+            !govs.is_empty(),
+            "power cap leaves no cluster powered at 0.55 V; raise the budget"
+        );
+        // the cap's rated cluster power budgets the accelerated engine
+        // set; software nonlinearities run on the cores without
+        // resource contention and can exceed the cores slot's rating,
+        // so the avg-power-under-cap invariant would not be structural
+        assert!(
+            !matches!(cfg.governor, GovernorPolicy::PowerCap { .. })
+                || (cfg.exec.softmax_engine == EngineChoice::SoftEx
+                    && cfg.exec.gelu_engine == EngineChoice::SoftEx),
+            "power-cap governors require the paper-accelerated engine set"
+        );
+        Self { cfg, costs, govs }
     }
 
     pub fn config(&self) -> &ServerConfig {
         &self.cfg
+    }
+
+    /// Clusters the scheduler may actually place work on (≤ the
+    /// configured mesh size under a power cap).
+    fn active_clusters(&self) -> usize {
+        self.govs.len()
+    }
+
+    /// The lock-step governor for mesh-wide gang execution.
+    fn lockstep_governor(&self) -> ClusterGovernor {
+        governor::lockstep(&self.govs)
     }
 
     fn resolve_costs(&mut self, requests: &[Request]) {
@@ -395,28 +478,34 @@ impl BatchScheduler {
             "requests must be sorted by arrival"
         );
         self.resolve_costs(requests);
+        let mut ledger = EnergyLedger::default();
         let served = match self.cfg.policy {
-            Policy::Fifo => self.run_fifo(requests),
-            Policy::ContinuousBatching => self.run_continuous(requests),
-            Policy::MeshSharded => self.run_mesh_sharded(requests),
+            Policy::Fifo => self.run_fifo(requests, &mut ledger),
+            Policy::ContinuousBatching => self.run_continuous(requests, &mut ledger),
+            Policy::MeshSharded => self.run_mesh_sharded(requests, &mut ledger),
         };
-        self.build_report(requests, &served)
+        self.build_report(requests, &served, &ledger)
     }
 
     /// FIFO over the engine: arrivals are events; each request occupies
-    /// the earliest-free cluster resource for its whole service time.
-    fn run_fifo(&self, requests: &[Request]) -> Vec<Served> {
+    /// the earliest-free cluster resource for its whole service time at
+    /// the OP the cluster's governor picks when it starts (queue depth
+    /// at that instant: is work already waiting on the cluster?).
+    fn run_fifo(&self, requests: &[Request], ledger: &mut EnergyLedger) -> Vec<Served> {
         let mut engine: SimEngine<usize> = SimEngine::new(self.cfg.seed);
         for (i, r) in requests.iter().enumerate() {
             engine.schedule(r.arrival, i);
         }
-        let mut clusters = ResourcePool::new("cluster", self.cfg.clusters());
+        let mut clusters = ResourcePool::new("cluster", self.active_clusters());
         let mut served = vec![Served::default(); requests.len()];
         engine.run(|eng, i| {
             let cost = self.costs.get(requests[i].class);
-            let service = cost.service_cycles.max(1);
             let ci = clusters.earliest_free();
+            let depth = usize::from(clusters.get(ci).free_at() > eng.now());
+            let op = self.govs[ci].op_for_depth(depth);
+            let service = op.ticks(cost.service_cycles).max(1);
             let start = clusters.get_mut(ci).acquire(eng.now(), service);
+            ledger.charge_class(cost, op);
             served[i] = tokenize_block(cost, start, service);
         });
         served
@@ -430,10 +519,15 @@ impl BatchScheduler {
     /// ready queues after every segment, other requests' phases are
     /// admitted between one request's tokens — admission and preemption
     /// happen at token boundaries for free.
-    fn run_continuous(&self, requests: &[Request]) -> Vec<Served> {
+    fn run_continuous(&self, requests: &[Request], ledger: &mut EnergyLedger) -> Vec<Served> {
         struct Chain<'a> {
             phases: &'a [PhaseCost],
             cluster: usize,
+            /// The chain's cluster governor (copied out of the plan).
+            gov: ClusterGovernor,
+            /// OP of the most recent dispatch decision; core glue
+            /// segments between accelerator segments inherit it.
+            op: OpId,
             phase: usize,
             seg: usize,
             t: u64,
@@ -444,7 +538,7 @@ impl BatchScheduler {
             /// Advance through uncontended core segments and token
             /// boundaries; return the ready accelerator (0 = tensor
             /// unit, 1 = SoftEx) or `None` when the chain is finished.
-            fn advance(&mut self) -> Option<usize> {
+            fn advance(&mut self, ledger: &mut EnergyLedger) -> Option<usize> {
                 // copy the shared slice ref out so phase/segment borrows
                 // are independent of `self` while we mutate its fields
                 let phases = self.phases;
@@ -459,7 +553,8 @@ impl BatchScheduler {
                     };
                     match seg.engine {
                         Engine::Cores => {
-                            self.t += seg.cycles;
+                            ledger.charge(seg.cycles, seg.energy, self.op);
+                            self.t += self.op.ticks(seg.cycles);
                             self.seg += 1;
                         }
                         Engine::TensorUnit => return Some(0),
@@ -487,9 +582,10 @@ impl BatchScheduler {
             chains: &mut [Chain<'_>],
             served: &mut [Served],
             arrivals: &[u64],
+            ledger: &mut EnergyLedger,
             chain: usize,
         ) {
-            match chains[chain].advance() {
+            match chains[chain].advance(ledger) {
                 Some(unit) => {
                     let at = chains[chain].t;
                     eng.schedule(at, Ev::Enqueue { chain, unit });
@@ -507,12 +603,15 @@ impl BatchScheduler {
         }
 
         /// Start the lowest-(ready, chain) queued segment if the unit
-        /// is free.
+        /// is free. The cluster governor picks the OP from the number
+        /// of ready segments still waiting behind this dispatch — the
+        /// batch-queue depth race-to-idle keys on.
         fn try_dispatch(
             eng: &mut SimEngine<Ev>,
             units: &mut ResourcePool,
             queues: &mut [ReadyQueue],
-            chains: &[Chain<'_>],
+            chains: &mut [Chain<'_>],
+            ledger: &mut EnergyLedger,
             slot: usize,
             unit: usize,
         ) {
@@ -522,15 +621,24 @@ impl BatchScheduler {
             let Some(Reverse((_, chain))) = queues[slot].pop() else {
                 return;
             };
-            let c = &chains[chain];
-            let cycles = c.phases[c.phase].segments[c.seg].cycles;
-            units.get_mut(slot).acquire(eng.now(), cycles);
-            eng.schedule_in(cycles, Ev::Done { chain, unit });
+            let depth = queues[slot].len();
+            let c = &mut chains[chain];
+            c.op = c.gov.op_for_depth(depth);
+            let seg = c.phases[c.phase].segments[c.seg];
+            ledger.charge(seg.cycles, seg.energy, c.op);
+            let ticks = c.op.ticks(seg.cycles);
+            units.get_mut(slot).acquire(eng.now(), ticks);
+            eng.schedule_in(ticks, Ev::Done { chain, unit });
         }
 
-        let clusters = self.cfg.clusters();
-        // deterministic least-accumulated-service admission (unchanged
-        // from the pre-`sim` scheduler)
+        let clusters = self.active_clusters();
+        // deterministic least-accumulated-work admission (the
+        // pre-`sim` rule), balanced by *drain time at each cluster's
+        // nominal OP*: an efficiency-pinned cluster in a mixed
+        // power-cap plan drains 2.43x slower than a racing one, so
+        // raw cycles would systematically over-queue it. At a uniform
+        // plan nominal ticks == cycles and the historical placement is
+        // preserved bit-for-bit.
         let mut load = vec![0u64; clusters];
         let mut chains: Vec<Chain> = Vec::with_capacity(requests.len());
         for r in requests {
@@ -538,10 +646,13 @@ impl BatchScheduler {
             let ci = (0..clusters)
                 .min_by_key(|&i| (load[i], i))
                 .expect("at least one cluster");
-            load[ci] += cost.service_cycles;
+            let gov = self.govs[ci];
+            load[ci] += gov.nominal_op().ticks(cost.service_cycles);
             chains.push(Chain {
                 phases: &cost.phases,
                 cluster: ci,
+                gov,
+                op: gov.op_for_depth(0),
                 phase: 0,
                 seg: 0,
                 t: r.arrival,
@@ -556,13 +667,13 @@ impl BatchScheduler {
         let mut queues: Vec<ReadyQueue> = (0..clusters * 2).map(|_| BinaryHeap::new()).collect();
         let mut engine: SimEngine<Ev> = SimEngine::new(self.cfg.seed);
         for chain in 0..chains.len() {
-            settle(&mut engine, &mut chains, &mut served, &arrivals, chain);
+            settle(&mut engine, &mut chains, &mut served, &arrivals, ledger, chain);
         }
         engine.run(|eng, ev| match ev {
             Ev::Enqueue { chain, unit } => {
                 let slot = chains[chain].cluster * 2 + unit;
                 queues[slot].push(Reverse((eng.now(), chain)));
-                try_dispatch(eng, &mut units, &mut queues, &chains, slot, unit);
+                try_dispatch(eng, &mut units, &mut queues, &mut chains, ledger, slot, unit);
             }
             Ev::Done { chain, unit } => {
                 let slot = chains[chain].cluster * 2 + unit;
@@ -571,8 +682,8 @@ impl BatchScheduler {
                     c.t = eng.now();
                     c.seg += 1;
                 }
-                settle(eng, &mut chains, &mut served, &arrivals, chain);
-                try_dispatch(eng, &mut units, &mut queues, &chains, slot, unit);
+                settle(eng, &mut chains, &mut served, &arrivals, ledger, chain);
+                try_dispatch(eng, &mut units, &mut queues, &mut chains, ledger, slot, unit);
             }
         });
         served
@@ -580,14 +691,17 @@ impl BatchScheduler {
 
     /// Mesh-sharded over the engine: the whole mesh is one serial
     /// resource; each request's block is derated by the cluster count
-    /// and inflated by the NoC conflict slowdown.
-    fn run_mesh_sharded(&self, requests: &[Request]) -> Vec<Served> {
-        let clusters = self.cfg.clusters();
+    /// and inflated by the NoC conflict slowdown. Every cluster runs
+    /// lock-step, so the OP is the gang-wide [`governor::lockstep`]
+    /// choice at each request's start.
+    fn run_mesh_sharded(&self, requests: &[Request], ledger: &mut EnergyLedger) -> Vec<Served> {
+        let clusters = self.active_clusters();
         let slow = if clusters > 1 {
             mesh_slowdown(self.cfg.mesh_n, self.cfg.noc_trials, self.cfg.seed)
         } else {
             0.0
         };
+        let gov = self.lockstep_governor();
         let mut engine: SimEngine<usize> = SimEngine::new(self.cfg.seed);
         for (i, r) in requests.iter().enumerate() {
             engine.schedule(r.arrival, i);
@@ -596,16 +710,25 @@ impl BatchScheduler {
         let mut served = vec![Served::default(); requests.len()];
         engine.run(|eng, i| {
             let cost = self.costs.get(requests[i].class);
-            let service = (cost.service_cycles as f64 * (1.0 + slow) / clusters as f64)
+            let depth = usize::from(mesh.free_at() > eng.now());
+            let op = gov.op_for_depth(depth);
+            let shard = (cost.service_cycles as f64 * (1.0 + slow) / clusters as f64)
                 .ceil()
                 .max(1.0) as u64;
+            let service = op.ticks(shard).max(1);
             let start = mesh.acquire(eng.now(), service);
+            ledger.charge_class(cost, op);
             served[i] = tokenize_block(cost, start, service);
         });
         served
     }
 
-    fn build_report(&self, requests: &[Request], served: &[Served]) -> ServeReport {
+    fn build_report(
+        &self,
+        requests: &[Request],
+        served: &[Served],
+        ledger: &EnergyLedger,
+    ) -> ServeReport {
         let latencies: Vec<u64> = requests
             .iter()
             .zip(served)
@@ -628,14 +751,10 @@ impl BatchScheduler {
         let last_completion = completions.iter().copied().max().unwrap_or(0);
         let makespan = (last_completion - first_arrival).max(1);
 
-        let (mut total_ops, mut busy, mut e_thr, mut e_eff) = (0u64, 0u64, 0.0f64, 0.0f64);
-        let mut kv_spill_bytes = 0u64;
+        let (mut total_ops, mut kv_spill_bytes) = (0u64, 0u64);
         for r in requests {
             let cost = self.costs.get(r.class);
             total_ops += cost.ops;
-            busy += cost.service_cycles;
-            e_thr += cost.energy_j_throughput;
-            e_eff += cost.energy_j_efficiency;
             kv_spill_bytes += cost.kv_spill_bytes;
         }
 
@@ -650,6 +769,8 @@ impl BatchScheduler {
                 self.cfg.mesh_n
             ),
             mix: super::request::mix_label(requests.iter().map(|r| r.class)),
+            governor: self.cfg.governor.label().to_string(),
+            power_cap_w: self.cfg.governor.power_cap_w(),
             clusters: self.cfg.clusters(),
             n_requests: requests.len(),
             latencies: Latencies::from_unsorted(latencies),
@@ -657,9 +778,9 @@ impl BatchScheduler {
             tbt: Latencies::from_unsorted(tbt),
             makespan,
             total_ops,
-            busy_cycles: busy,
-            energy_j_throughput: e_thr,
-            energy_j_efficiency: e_eff,
+            busy_cycles: ledger.busy_ticks,
+            energy_j: ledger.energy_j,
+            op_cycles: ledger.op_cycles,
             mean_queue_depth,
             max_queue_depth,
             kv_spill_bytes,
@@ -791,8 +912,10 @@ mod tests {
         for class in WorkloadMix::edge_default().classes() {
             assert_eq!(model.service_cycles(class), s.service_cycles(class));
             assert!(model.ops(class) > 0);
-            let (thr, eff) = model.energy_j(class);
-            assert!(thr > 0.0 && eff > 0.0);
+            let thr = model.energy_j(class, OpId::Throughput);
+            let eff = model.energy_j(class, OpId::Efficiency);
+            // running the same cycles at 0.55 V costs strictly less
+            assert!(thr > 0.0 && eff > 0.0 && eff < thr);
         }
     }
 

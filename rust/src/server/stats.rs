@@ -1,15 +1,21 @@
 //! Serving-run accounting: latency percentiles, sustained throughput,
 //! queue depths, energy.
 //!
-//! Energy is accounted per activity mode through `coordinator::Metrics`
-//! at both paper operating points (`energy::OP_THROUGHPUT` for the
-//! latency axis, `energy::OP_EFFICIENCY` for the efficiency axis); NoC
-//! transfer energy is negligible at these scales (Sec. VIII: 0.29% of
-//! power at 8x8) and is not added.
+//! Energy is accounted per activity mode at the operating point each
+//! phase *actually ran at* under the run's DVFS governor
+//! (`energy::governor`, DESIGN.md §10): one timeline, one `energy_j`.
+//! The old pair of per-OP energy columns charged both OPs from the
+//! same cycle counts, which was physically inconsistent — at 0.55 V
+//! those cycles take 2.43× longer, shifting every queue. Timeline
+//! units are ticks (0.8 V clock periods), so wall-clock conversions
+//! use the throughput OP's frequency. NoC transfer energy is
+//! negligible at these scales (Sec. VIII: 0.29% of power at 8x8) and
+//! is not added.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use crate::energy::governor::OpId;
 use crate::report;
 use crate::softex::phys::{OperatingPoint, OP_THROUGHPUT};
 
@@ -92,6 +98,32 @@ pub fn queue_depths(arrivals: &[u64], completions: &[u64]) -> (f64, usize) {
     (depth_sum as f64 / arrivals.len() as f64, depth_max)
 }
 
+/// Wall-clock seconds of a tick count (one tick = one 0.8 V clock
+/// period). Shared by the serve and fleet reports so the timeline unit
+/// is defined in exactly one place.
+pub(crate) fn wall_seconds_of(ticks: u64) -> f64 {
+    ticks as f64 / OP_THROUGHPUT.freq_hz
+}
+
+/// Residency fractions from per-OP cycle counts; `[0, 0]` when no work
+/// ran, otherwise sums to 1.0.
+pub(crate) fn residency_of(op_cycles: &[u64; 2]) -> [f64; 2] {
+    let total = (op_cycles[0] + op_cycles[1]) as f64;
+    if total <= 0.0 {
+        return [0.0, 0.0];
+    }
+    [op_cycles[0] as f64 / total, op_cycles[1] as f64 / total]
+}
+
+/// Joules per token; 0 when no tokens were produced.
+pub(crate) fn joules_per_token_of(energy_j: f64, tokens: u64) -> f64 {
+    if tokens == 0 {
+        0.0
+    } else {
+        energy_j / tokens as f64
+    }
+}
+
 /// Aggregated result of simulating one request stream under one policy.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
@@ -101,6 +133,10 @@ pub struct ServeReport {
     /// comma-joined; `"empty"` for an empty stream) — the `--model`
     /// selection surfaces here and in the JSON.
     pub mix: String,
+    /// DVFS governor label the run was simulated under (`--governor`).
+    pub governor: String,
+    /// The watt budget when the governor is `power-cap`.
+    pub power_cap_w: Option<f64>,
     pub clusters: usize,
     pub n_requests: usize,
     /// Per-request latencies (completion - arrival), sorted, cycles.
@@ -116,14 +152,16 @@ pub struct ServeReport {
     pub makespan: u64,
     /// Total countable OPs served.
     pub total_ops: u64,
-    /// Engine-busy cycles summed over requests (before any mesh
+    /// Engine-busy ticks summed over requests (before any mesh
     /// derating); with continuous batching engines overlap, so this can
     /// exceed `clusters * makespan / 3`.
     pub busy_cycles: u64,
-    /// Energy at 0.8 V / 1.12 GHz, joules.
-    pub energy_j_throughput: f64,
-    /// Energy at 0.55 V / 460 MHz, joules.
-    pub energy_j_efficiency: f64,
+    /// Energy of this run's one timeline, joules: every phase charged
+    /// at the OP the governor actually ran it at.
+    pub energy_j: f64,
+    /// Clock cycles executed at each OP, indexed by [`OpId::idx`] —
+    /// the numerators of [`ServeReport::op_residency`].
+    pub op_cycles: [u64; 2],
     /// Mean number of in-system requests observed at arrival instants.
     pub mean_queue_depth: f64,
     /// Peak number of in-system requests observed at arrival instants.
@@ -134,6 +172,30 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
+    /// An empty report (no requests, unit makespan) for a cluster that
+    /// served nothing — e.g. a powered-off power-cap slot.
+    pub fn empty(label: String, governor: String) -> Self {
+        ServeReport {
+            label,
+            mix: "empty".to_string(),
+            governor,
+            power_cap_w: None,
+            clusters: 1,
+            n_requests: 0,
+            latencies: Latencies::default(),
+            ttft: Latencies::default(),
+            tbt: Latencies::default(),
+            makespan: 1,
+            total_ops: 0,
+            busy_cycles: 0,
+            energy_j: 0.0,
+            op_cycles: [0, 0],
+            mean_queue_depth: 0.0,
+            max_queue_depth: 0,
+            kv_spill_bytes: 0,
+        }
+    }
+
     /// Nearest-rank percentile over the sorted latencies, p clamped to
     /// [0, 100]; 0 for a report over zero requests.
     pub fn percentile(&self, p: f64) -> u64 {
@@ -176,14 +238,46 @@ impl ServeReport {
         self.tbt.percentile(99.0)
     }
 
-    /// Cycles to milliseconds at an operating point.
+    /// Cycles (or ticks) to milliseconds at an operating point. The
+    /// simulation timeline is in ticks — 0.8 V clock periods — so pass
+    /// `OP_THROUGHPUT` to convert a timeline value to wall-clock.
     pub fn ms(cycles: u64, op: &OperatingPoint) -> f64 {
         cycles as f64 / op.freq_hz * 1e3
     }
 
-    /// Sustained throughput over the whole run at an operating point.
-    pub fn sustained_gops(&self, op: &OperatingPoint) -> f64 {
-        self.total_ops as f64 / (self.makespan as f64 / op.freq_hz) / 1e9
+    /// Wall-clock seconds spanned by the run (ticks at the 0.8 V clock).
+    pub fn wall_seconds(&self) -> f64 {
+        wall_seconds_of(self.makespan)
+    }
+
+    /// Sustained throughput over the whole run's wall clock.
+    pub fn sustained_gops(&self) -> f64 {
+        self.total_ops as f64 / self.wall_seconds() / 1e9
+    }
+
+    /// Average power over the run's wall clock: the one-timeline energy
+    /// divided by the makespan. Under a `power-cap` governor this never
+    /// exceeds the cap.
+    pub fn avg_power_w(&self) -> f64 {
+        self.energy_j / self.wall_seconds()
+    }
+
+    /// Fraction of executed clock cycles at each OP, indexed by
+    /// [`OpId::idx`]; sums to 1.0 whenever any work ran (all zeros for
+    /// an empty run).
+    pub fn op_residency(&self) -> [f64; 2] {
+        residency_of(&self.op_cycles)
+    }
+
+    /// Tokens the run produced: one first token per request plus one
+    /// per decode gap.
+    pub fn tokens_served(&self) -> u64 {
+        (self.ttft.len() + self.tbt.len()) as u64
+    }
+
+    /// Joules per produced token (0 when the run produced none).
+    pub fn joules_per_token(&self) -> f64 {
+        joules_per_token_of(self.energy_j, self.tokens_served())
     }
 
     /// Engine-busy share of the mesh over the run (can exceed 1.0 when
@@ -201,28 +295,38 @@ impl ServeReport {
             report::f(Self::ms(self.p99(), &OP_THROUGHPUT), 2),
             report::f(Self::ms(self.ttft_p95(), &OP_THROUGHPUT), 2),
             report::f(Self::ms(self.tbt_p95(), &OP_THROUGHPUT), 2),
-            report::f(self.sustained_gops(&OP_THROUGHPUT), 0),
+            report::f(self.sustained_gops(), 0),
             report::pct(self.utilization()),
             report::f(self.mean_queue_depth, 1),
-            report::f(self.energy_j_throughput * 1e3, 1),
+            report::f(self.energy_j * 1e3, 1),
+            report::f(self.avg_power_w(), 2),
         ]
     }
 
     /// Standalone table for a single run.
     pub fn render(&self) -> String {
+        let cap = match self.power_cap_w {
+            Some(w) => format!(", cap {w} W"),
+            None => String::new(),
+        };
         let mut out = report::render_table(
             &format!(
-                "Serving run — {} ({} requests on {} clusters, mix {})",
-                self.label, self.n_requests, self.clusters, self.mix
+                "Serving run — {} ({} requests on {} clusters, mix {}, governor {}{})",
+                self.label, self.n_requests, self.clusters, self.mix, self.governor, cap
             ),
             &SUMMARY_HEADERS,
             &[self.row()],
         );
+        let res = self.op_residency();
         out.push_str(&format!(
-            "makespan {:.1} ms @0.8V | {:.2} J @0.8V / {:.2} J @0.55V | max depth {}\n",
+            "makespan {:.1} ms | {:.3} J | {:.2} W avg | {:.2} uJ/token | \
+             residency 0.8V {} / 0.55V {} | max depth {}\n",
             Self::ms(self.makespan, &OP_THROUGHPUT),
-            self.energy_j_throughput,
-            self.energy_j_efficiency,
+            self.energy_j,
+            self.avg_power_w(),
+            self.joules_per_token() * 1e6,
+            report::pct(res[OpId::Throughput.idx()]),
+            report::pct(res[OpId::Efficiency.idx()]),
             self.max_queue_depth
         ));
         out.push_str(&format!(
@@ -242,10 +346,15 @@ impl ServeReport {
     /// metrics are emitted raw plus converted to milliseconds at the
     /// throughput operating point.
     pub fn to_json(&self) -> String {
-        report::json::Obj::new()
+        let res = self.op_residency();
+        let mut obj = report::json::Obj::new()
             .str("label", &self.label)
             .str("mix", &self.mix)
-            .u64("clusters", self.clusters as u64)
+            .str("governor", &self.governor);
+        if let Some(cap) = self.power_cap_w {
+            obj = obj.f64("power_cap_w", cap);
+        }
+        obj.u64("clusters", self.clusters as u64)
             .u64("n_requests", self.n_requests as u64)
             .u64("p50_cycles", self.p50())
             .u64("p95_cycles", self.p95())
@@ -262,18 +371,23 @@ impl ServeReport {
             .u64("total_ops", self.total_ops)
             .u64("busy_cycles", self.busy_cycles)
             .u64("kv_spill_bytes", self.kv_spill_bytes)
-            .f64("sustained_gops_08v", self.sustained_gops(&OP_THROUGHPUT))
+            .f64("sustained_gops", self.sustained_gops())
             .f64("utilization", self.utilization())
             .f64("mean_queue_depth", self.mean_queue_depth)
             .u64("max_queue_depth", self.max_queue_depth as u64)
-            .f64("energy_j_throughput", self.energy_j_throughput)
-            .f64("energy_j_efficiency", self.energy_j_efficiency)
+            .f64("energy_j", self.energy_j)
+            .f64("avg_power_w", self.avg_power_w())
+            .f64("joules_per_token", self.joules_per_token())
+            .u64("op_cycles_throughput", self.op_cycles[OpId::Throughput.idx()])
+            .u64("op_cycles_efficiency", self.op_cycles[OpId::Efficiency.idx()])
+            .f64("op_residency_throughput", res[OpId::Throughput.idx()])
+            .f64("op_residency_efficiency", res[OpId::Efficiency.idx()])
             .finish()
     }
 }
 
 /// Column headers shared by [`ServeReport::row`].
-pub const SUMMARY_HEADERS: [&str; 10] = [
+pub const SUMMARY_HEADERS: [&str; 11] = [
     "policy@mesh",
     "p50 ms",
     "p95 ms",
@@ -283,7 +397,8 @@ pub const SUMMARY_HEADERS: [&str; 10] = [
     "GOPS",
     "util",
     "depth",
-    "mJ @0.8V",
+    "mJ",
+    "avgW",
 ];
 
 /// Render several runs as one comparison table.
@@ -302,6 +417,8 @@ mod tests {
         ServeReport {
             label: "test@1x1".into(),
             mix: "ViT-tiny".into(),
+            governor: "pinned-throughput".into(),
+            power_cap_w: None,
             clusters: 1,
             n_requests: n,
             latencies: Latencies::from_unsorted(latencies),
@@ -310,8 +427,8 @@ mod tests {
             makespan: 1_000_000,
             total_ops: 384_000_000,
             busy_cycles: 900_000,
-            energy_j_throughput: 1.0e-3,
-            energy_j_efficiency: 2.0e-4,
+            energy_j: 1.0e-3,
+            op_cycles: [900_000, 0],
             mean_queue_depth: 1.5,
             max_queue_depth: 4,
             kv_spill_bytes: 0,
@@ -397,10 +514,33 @@ mod tests {
 
     #[test]
     fn sustained_gops_uses_makespan() {
-        // 384 MOP in 1 Mcycle at 1.12 GHz = 430 GOPS
+        // 384 MOP in 1 Mtick at 1.12 GHz = 430 GOPS
         let r = report_with(vec![1; 10]);
-        let gops = r.sustained_gops(&OP_THROUGHPUT);
+        let gops = r.sustained_gops();
         assert!((gops - 430.0).abs() < 1.0, "{gops}");
+    }
+
+    #[test]
+    fn power_residency_and_tokens_derive_from_the_ledger() {
+        let r = report_with(vec![1; 10]);
+        // 1 mJ over 1 Mtick at 1.12 GHz: 1e-3 / (1e6 / 1.12e9) = 1.12 W
+        assert!((r.avg_power_w() - 1.12).abs() < 1e-9, "{}", r.avg_power_w());
+        let res = r.op_residency();
+        assert!((res[0] - 1.0).abs() < 1e-12 && res[1] == 0.0, "{res:?}");
+        assert!((res[0] + res[1] - 1.0).abs() < 1e-12);
+        // 10 first tokens + 3 decode gaps
+        assert_eq!(r.tokens_served(), 13);
+        assert!((r.joules_per_token() - 1.0e-3 / 13.0).abs() < 1e-15);
+        // an empty run reports zeros without dividing by zero
+        let empty = report_with(Vec::new());
+        assert_eq!(empty.tokens_served(), 0);
+        assert_eq!(empty.joules_per_token(), 0.0);
+        let empty_res = ServeReport {
+            op_cycles: [0, 0],
+            ..empty
+        }
+        .op_residency();
+        assert_eq!(empty_res, [0.0, 0.0]);
     }
 
     #[test]
@@ -439,10 +579,19 @@ mod tests {
         assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
         assert!(j.contains("\"label\":\"test@1x1\""), "{j}");
         assert!(j.contains("\"mix\":\"ViT-tiny\""), "{j}");
+        assert!(j.contains("\"governor\":\"pinned-throughput\""), "{j}");
         assert!(j.contains("\"p99_cycles\":10"), "{j}");
         assert!(j.contains("\"ttft_p95_cycles\":"), "{j}");
         assert!(j.contains("\"tbt_p50_cycles\":10"), "{j}");
         assert!(j.contains("\"kv_spill_bytes\":0"), "{j}");
+        assert!(j.contains("\"energy_j\":"), "{j}");
+        assert!(j.contains("\"avg_power_w\":"), "{j}");
+        assert!(j.contains("\"joules_per_token\":"), "{j}");
+        assert!(j.contains("\"op_residency_throughput\":1"), "{j}");
+        assert!(j.contains("\"op_residency_efficiency\":0"), "{j}");
+        // the dual-OP columns are gone: one timeline, one energy number
+        assert!(!j.contains("energy_j_throughput"), "{j}");
+        assert!(!j.contains("energy_j_efficiency"), "{j}");
         // exactly one top-level object, no trailing comma artifacts
         assert!(!j.contains(",}"), "{j}");
         assert!(!j.contains("{,"), "{j}");

@@ -26,6 +26,13 @@
 //! token granularity: prompt ingestion and each decode step are
 //! separate schedulable phases), and `fleet::dispatch` walks the
 //! arrival stream as engine events, so neither keeps a private loop.
+//!
+//! The engine's clock is unit-agnostic; the serving layers drive it in
+//! *ticks* — 0.8 V clock periods — so a phase dispatched at the 0.55 V
+//! operating point occupies `ceil(cycles·1120/460)` ticks
+//! (`energy::governor::OpId::ticks`). That is what makes per-cluster
+//! DVFS real: dropping the voltage stretches durations and shifts
+//! queues instead of only re-pricing a fixed timeline.
 
 pub mod engine;
 pub mod kv;

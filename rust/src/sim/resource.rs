@@ -102,15 +102,23 @@ impl ResourcePool {
             .expect("pool is never empty")
     }
 
-    /// Index of the resource with the least outstanding work at `at`;
-    /// ties go to the lowest index (the JSQ decision rule).
-    pub fn least_outstanding(&self, at: u64) -> usize {
-        self.resources
+    /// Index of the resource with the least outstanding work at `at`
+    /// among the first `n` resources; ties go to the lowest index (the
+    /// JSQ decision rule, restricted to e.g. a power-cap plan's
+    /// powered prefix). Panics on an empty prefix.
+    pub fn least_outstanding_in(&self, at: u64, n: usize) -> usize {
+        self.resources[..n]
             .iter()
             .enumerate()
             .min_by_key(|&(i, r)| (r.outstanding(at), i))
             .map(|(i, _)| i)
-            .expect("pool is never empty")
+            .expect("prefix is never empty")
+    }
+
+    /// Index of the resource with the least outstanding work at `at`;
+    /// ties go to the lowest index (the JSQ decision rule).
+    pub fn least_outstanding(&self, at: u64) -> usize {
+        self.least_outstanding_in(at, self.resources.len())
     }
 }
 

@@ -6,16 +6,26 @@
 //! stay identical (cross-checked by the golden-vector runtime tests).
 
 /// (a_i, b_i) weight pairs plus the achieved max relative error, per term
-/// count N_w in 2..=6.
-pub fn soe_coeffs(terms: usize) -> (&'static [f64], &'static [f64], f64) {
+/// count N_w in 2..=6; `None` outside the fitted range. Boundary code
+/// (the CLI, config validation) should use this instead of letting
+/// [`soe_coeffs`] panic on user input.
+pub fn soe_coeffs_checked(terms: usize) -> Option<(&'static [f64], &'static [f64], f64)> {
     match terms {
-        2 => (&A2, &B2, 5.471e-2),
-        3 => (&A3, &B3, 1.699e-2),
-        4 => (&A4, &B4, 6.48e-3),
-        5 => (&A5, &B5, 2.78e-3),
-        6 => (&A6, &B6, 3.91e-3),
-        _ => panic!("sum-of-exponentials fitted for 2..=6 terms, got {terms}"),
+        2 => Some((&A2, &B2, 5.471e-2)),
+        3 => Some((&A3, &B3, 1.699e-2)),
+        4 => Some((&A4, &B4, 6.48e-3)),
+        5 => Some((&A5, &B5, 2.78e-3)),
+        6 => Some((&A6, &B6, 3.91e-3)),
+        _ => None,
     }
+}
+
+/// (a_i, b_i) weight pairs plus the achieved max relative error, per term
+/// count N_w in 2..=6. Panics outside the fitted range — internal
+/// callers construct term counts from validated configs.
+pub fn soe_coeffs(terms: usize) -> (&'static [f64], &'static [f64], f64) {
+    soe_coeffs_checked(terms)
+        .unwrap_or_else(|| panic!("sum-of-exponentials fitted for 2..=6 terms, got {terms}"))
 }
 
 static A2: [f64; 2] = [0.26146600, 0.21117873];
@@ -98,6 +108,17 @@ mod tests {
     #[should_panic(expected = "fitted for 2..=6")]
     fn rejects_unfitted_term_count() {
         soe_coeffs(7);
+    }
+
+    #[test]
+    fn checked_variant_is_total() {
+        for t in [0usize, 1, 7, 100] {
+            assert!(soe_coeffs_checked(t).is_none(), "{t}");
+        }
+        for t in 2..=6 {
+            let (a, b, _) = soe_coeffs_checked(t).expect("fitted range");
+            assert_eq!((a.len(), b.len()), (t, t));
+        }
     }
 
     #[test]

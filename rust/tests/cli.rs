@@ -1,0 +1,158 @@
+//! CLI boundary tests: malformed flags must produce a usage error and
+//! a nonzero exit, never a panic backtrace; the governor flags must
+//! round-trip through the JSON report.
+
+use std::process::{Command, Output};
+
+fn softex(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_softex"))
+        .args(args)
+        .output()
+        .expect("spawn softex binary")
+}
+
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn malformed_numeric_flags_name_the_flag_and_exit_nonzero() {
+    for (args, flag) in [
+        (vec!["serve", "--requests", "abc"], "--requests"),
+        (vec!["serve", "--gap", "fast"], "--gap"),
+        (vec!["fleet", "--clusters", "many"], "--clusters"),
+        (vec!["softmax", "--rows", "-3"], "--rows"),
+        (vec!["gelu", "--n", "1e4"], "--n"),
+        (vec!["mesh", "--trials", "lots"], "--trials"),
+        (vec!["serve", "--power-cap-w", "watts"], "--power-cap-w"),
+    ] {
+        let out = softex(&args);
+        assert_eq!(out.status.code(), Some(2), "{args:?}");
+        let err = stderr(&out);
+        assert!(err.contains(flag), "{args:?}: {err}");
+        assert!(err.contains("usage:"), "{args:?}: {err}");
+        assert!(!err.contains("panicked"), "{args:?}: {err}");
+    }
+}
+
+#[test]
+fn gelu_terms_out_of_range_is_an_error_not_a_panic() {
+    for terms in ["7", "1", "0"] {
+        let out = softex(&["gelu", "--terms", terms, "--n", "64"]);
+        assert_eq!(out.status.code(), Some(2), "--terms {terms}");
+        let err = stderr(&out);
+        assert!(err.contains("--terms"), "{err}");
+        assert!(err.contains("between 2 and 6"), "{err}");
+        assert!(!err.contains("panicked"), "{err}");
+    }
+    // the fitted range still works
+    let ok = softex(&["gelu", "--terms", "3", "--n", "64"]);
+    assert!(ok.status.success(), "{}", stderr(&ok));
+    assert!(stdout(&ok).contains("terms=3"));
+}
+
+#[test]
+fn a_flag_swallowing_the_next_flag_is_reported() {
+    // `--model --json` used to silently parse as model="true"
+    let out = softex(&["serve", "--model", "--json", "--requests", "5"]);
+    assert_eq!(out.status.code(), Some(2));
+    let err = stderr(&out);
+    assert!(err.contains("--model") && err.contains("requires a value"), "{err}");
+
+    // a trailing value-flag with nothing after it is the same error
+    let out = softex(&["fleet", "--seed"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr(&out).contains("requires a value"), "{}", stderr(&out));
+}
+
+#[test]
+fn governor_flags_reach_the_json_report() {
+    let out = softex(&[
+        "serve",
+        "--requests",
+        "8",
+        "--mesh",
+        "1",
+        "--gap",
+        "2000000",
+        "--governor",
+        "race-to-idle",
+        "--json",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let json = stdout(&out);
+    assert!(json.trim_start().starts_with('{'), "{json}");
+    assert!(json.contains("\"governor\":\"race-to-idle\""), "{json}");
+    assert!(json.contains("\"energy_j\":"), "{json}");
+    assert!(json.contains("\"op_residency_throughput\":"), "{json}");
+
+    let out = softex(&[
+        "fleet",
+        "--clusters",
+        "4",
+        "--requests",
+        "8",
+        "--power-cap-w",
+        "2.5",
+        "--json",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let json = stdout(&out);
+    assert!(json.contains("\"governor\":\"power-cap\""), "{json}");
+    assert!(json.contains("\"power_cap_w\":2.5"), "{json}");
+    assert!(json.contains("\"avg_power_w\":"), "{json}");
+
+    // a capped serve run records its budget too (0.25 W powers one
+    // 0.55 V cluster, so a 1x1 mesh is feasible)
+    let out = softex(&[
+        "serve",
+        "--requests",
+        "5",
+        "--mesh",
+        "1",
+        "--gap",
+        "2000000",
+        "--power-cap-w",
+        "0.25",
+        "--json",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let json = stdout(&out);
+    assert!(json.contains("\"governor\":\"power-cap\""), "{json}");
+    assert!(json.contains("\"power_cap_w\":0.25"), "{json}");
+}
+
+#[test]
+fn governor_misuse_is_a_usage_error() {
+    // unknown governor name
+    let out = softex(&["serve", "--requests", "5", "--governor", "turbo"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr(&out).contains("unknown governor"), "{}", stderr(&out));
+
+    // power-cap by name needs the watt budget
+    let out = softex(&["fleet", "--requests", "5", "--governor", "power-cap"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr(&out).contains("--power-cap-w"), "{}", stderr(&out));
+
+    // a cap conflicts with a non-cap governor name
+    let out = softex(&[
+        "fleet",
+        "--requests",
+        "5",
+        "--governor",
+        "race-to-idle",
+        "--power-cap-w",
+        "2.0",
+    ]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr(&out).contains("conflicts"), "{}", stderr(&out));
+
+    // a serve cap too small to power one cluster cannot run at all
+    let out = softex(&["serve", "--requests", "5", "--mesh", "1", "--power-cap-w", "0.01"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr(&out).contains("0.55 V"), "{}", stderr(&out));
+}

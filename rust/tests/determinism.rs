@@ -13,6 +13,7 @@
 //!    including the new token metrics and regardless of thread count.
 
 use softex::coordinator::ExecConfig;
+use softex::energy::governor::GovernorPolicy;
 use softex::fleet::{DispatchPolicy, Fleet, FleetConfig};
 use softex::server::{
     ArrivalProcess, BatchScheduler, CostModel, Policy, Request, RequestClass, RequestGen,
@@ -86,7 +87,7 @@ fn every_server_policy_is_bit_deterministic() {
         assert_eq!(a.tbt, b.tbt, "{}", a.label);
         assert_eq!(a.makespan, b.makespan, "{}", a.label);
         assert_eq!(a.kv_spill_bytes, b.kv_spill_bytes);
-        assert!(a.energy_j_throughput == b.energy_j_throughput, "{}", a.label);
+        assert!(a.energy_j == b.energy_j, "{}", a.label);
     }
 }
 
@@ -110,6 +111,72 @@ fn spilling_kv_policies_are_bit_deterministic_too() {
         assert_eq!(a.tbt, b.tbt, "{}", a.label);
         assert!(a.kv_spill_bytes > 0, "{}", a.label);
         assert_eq!(a.kv_spill_bytes, b.kv_spill_bytes);
+    }
+}
+
+#[test]
+fn pinned_throughput_governor_reproduces_the_fifo_oracle() {
+    // the explicit pinned-throughput governor (not just the default)
+    // must reproduce the pre-governor FIFO schedule tick-for-tick: one
+    // tick is one 0.8 V clock period, so nothing stretches
+    for (seed, n, mesh) in [(0xA0u64, 120usize, 1usize), (0xA1, 120, 2)] {
+        let reqs = poisson_stream(seed, n, 8.0e5);
+        let golden = reference_fifo_completions(&reqs, mesh * mesh);
+        let mut golden_latencies: Vec<u64> = reqs
+            .iter()
+            .zip(&golden)
+            .map(|(r, &c)| c - r.arrival)
+            .collect();
+        golden_latencies.sort_unstable();
+
+        let mut cfg = ServerConfig::new(mesh, Policy::Fifo);
+        cfg.governor = GovernorPolicy::PinnedThroughput;
+        let rep = BatchScheduler::new(cfg).run(&reqs);
+        assert_eq!(
+            rep.latencies.as_slice(),
+            golden_latencies.as_slice(),
+            "mesh {mesh}"
+        );
+        // and the residency is pure 0.8 V
+        assert_eq!(rep.op_residency(), [1.0, 0.0], "mesh {mesh}");
+    }
+}
+
+#[test]
+fn governed_fleets_are_bit_identical_across_threads() {
+    // race-to-idle and power-cap change *what* is scheduled, never
+    // *whether* it is deterministic: 1, 2, and 8 worker threads must
+    // agree bit-for-bit on every metric including the energy ledger
+    let reqs = poisson_stream(0xA11, 200, 2.5e5);
+    for gov in [
+        GovernorPolicy::RaceToIdle,
+        GovernorPolicy::PowerCap { watts: 2.0 },
+    ] {
+        let run_with = |threads: usize| {
+            let mut cfg = FleetConfig::new(8, DispatchPolicy::PowerOfTwoChoices);
+            cfg.seed = 0xA11;
+            cfg.threads = threads;
+            cfg.governor = gov;
+            Fleet::new(cfg).run(&reqs)
+        };
+        let (a, b, c) = (run_with(1), run_with(2), run_with(8));
+        for other in [&b, &c] {
+            assert_eq!(a.latencies, other.latencies, "{gov:?}");
+            assert_eq!(a.ttft, other.ttft, "{gov:?}");
+            assert_eq!(a.tbt, other.tbt, "{gov:?}");
+            assert_eq!(a.makespan, other.makespan, "{gov:?}");
+            assert_eq!(a.n_admitted, other.n_admitted, "{gov:?}");
+            assert_eq!(a.op_cycles, other.op_cycles, "{gov:?}");
+            assert!(a.energy_j == other.energy_j, "{gov:?}");
+            for (x, y) in a.per_cluster.iter().zip(&other.per_cluster) {
+                assert_eq!(x.latencies, y.latencies, "{gov:?}");
+                assert_eq!(x.op_cycles, y.op_cycles, "{gov:?}");
+                assert!(x.energy_j == y.energy_j, "{gov:?}");
+            }
+        }
+        // the residency fractions always close to one with work served
+        let res = a.op_residency();
+        assert!((res[0] + res[1] - 1.0).abs() < 1e-12, "{gov:?} {res:?}");
     }
 }
 

@@ -56,7 +56,7 @@ fn p2c_fleet_is_bit_deterministic_across_thread_counts() {
         assert_eq!(a.latencies, other.latencies);
         assert_eq!(a.makespan, other.makespan);
         assert_eq!(a.n_admitted, other.n_admitted);
-        assert!(a.energy_j_throughput == other.energy_j_throughput);
+        assert!(a.energy_j == other.energy_j);
         for (x, y) in a.per_cluster.iter().zip(&other.per_cluster) {
             assert_eq!(x.latencies, y.latencies);
             assert_eq!(x.makespan, y.makespan);

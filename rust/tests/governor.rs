@@ -1,0 +1,258 @@
+//! Acceptance tests for the DVFS governor (DESIGN.md §10): one
+//! timeline produces one energy number, the latency/energy trade is
+//! real (pinned-efficiency is strictly slower AND strictly cheaper
+//! than pinned-throughput on the same stream), residency fractions
+//! close to 1, and a fleet power cap is never exceeded by the
+//! reported average power.
+
+use softex::energy::governor::{GovernorPolicy, OpId};
+use softex::fleet::{DispatchPolicy, Fleet, FleetConfig};
+use softex::server::{
+    ArrivalProcess, BatchScheduler, Policy, Request, RequestGen, ServeReport, ServerConfig,
+    WorkloadMix,
+};
+
+fn poisson_stream(seed: u64, n: usize, mean_gap: f64) -> Vec<Request> {
+    RequestGen::new(
+        seed,
+        ArrivalProcess::Poisson { mean_gap },
+        WorkloadMix::edge_default(),
+    )
+    .generate(n)
+}
+
+fn serve(policy: Policy, gov: GovernorPolicy, reqs: &[Request]) -> ServeReport {
+    let mut cfg = ServerConfig::new(2, policy);
+    cfg.governor = gov;
+    BatchScheduler::new(cfg).run(reqs)
+}
+
+#[test]
+fn op_residency_sums_to_one_for_every_policy_and_governor() {
+    let reqs = poisson_stream(0x0F, 80, 8.0e5);
+    for policy in Policy::ALL {
+        for gov in [
+            GovernorPolicy::PinnedThroughput,
+            GovernorPolicy::PinnedEfficiency,
+            GovernorPolicy::RaceToIdle,
+            GovernorPolicy::PowerCap { watts: 1.0 },
+        ] {
+            let rep = serve(policy, gov, &reqs);
+            let res = rep.op_residency();
+            assert!(
+                (res[0] + res[1] - 1.0).abs() < 1e-12,
+                "{policy:?} {gov:?}: {res:?}"
+            );
+            assert!(rep.energy_j > 0.0, "{policy:?} {gov:?}");
+        }
+    }
+}
+
+#[test]
+fn pinned_efficiency_trades_latency_for_energy() {
+    // the acceptance contract, pinned: on the same seed and load,
+    // 0.55 V is strictly worse on p99 latency and strictly better on
+    // energy than 0.8 V — the axes the dual-OP columns used to blur
+    let reqs = poisson_stream(0x17, 120, 1.0e6);
+    for policy in Policy::ALL {
+        let thr = serve(policy, GovernorPolicy::PinnedThroughput, &reqs);
+        let eff = serve(policy, GovernorPolicy::PinnedEfficiency, &reqs);
+        assert!(
+            eff.p99() > thr.p99(),
+            "{policy:?}: eff p99 {} vs thr p99 {}",
+            eff.p99(),
+            thr.p99()
+        );
+        assert!(
+            eff.energy_j < thr.energy_j,
+            "{policy:?}: eff {} J vs thr {} J",
+            eff.energy_j,
+            thr.energy_j
+        );
+        // residency matches the pin exactly
+        assert_eq!(thr.op_residency(), [1.0, 0.0], "{policy:?}");
+        assert_eq!(eff.op_residency(), [0.0, 1.0], "{policy:?}");
+        // identical work either way
+        assert_eq!(thr.total_ops, eff.total_ops, "{policy:?}");
+    }
+}
+
+#[test]
+fn pinned_efficiency_stretches_service_by_56_over_23() {
+    // a single uncontended request's latency is pure service time, so
+    // the 0.55 V run must take exactly ceil-per-block 1120/460 = 56/23
+    // times the ticks (FIFO charges one block per request)
+    let reqs = poisson_stream(0x23, 1, 1.0e9);
+    let thr = serve(Policy::Fifo, GovernorPolicy::PinnedThroughput, &reqs);
+    let eff = serve(Policy::Fifo, GovernorPolicy::PinnedEfficiency, &reqs);
+    let cycles = thr.latencies[0];
+    assert_eq!(eff.latencies[0], OpId::Efficiency.ticks(cycles));
+    assert_eq!(OpId::Efficiency.ticks(cycles), (cycles * 56).div_ceil(23));
+}
+
+#[test]
+fn race_to_idle_mixes_operating_points_under_bursts() {
+    // FIFO on one cluster with well-separated bursts: the first request
+    // of each burst finds the cluster idle (0.55 V), the queued rest
+    // race at 0.8 V — both residencies must be strictly positive and
+    // the energy must land strictly between the pinned extremes
+    let reqs: Vec<Request> = RequestGen::new(
+        0x31,
+        ArrivalProcess::Burst { size: 8, gap: 1 << 34 },
+        WorkloadMix::edge_default(),
+    )
+    .generate(64);
+    let mk = |gov| {
+        let mut cfg = ServerConfig::new(1, Policy::Fifo);
+        cfg.governor = gov;
+        BatchScheduler::new(cfg).run(&reqs)
+    };
+    let race = mk(GovernorPolicy::RaceToIdle);
+    let res = race.op_residency();
+    assert!(res[0] > 0.0 && res[1] > 0.0, "{res:?}");
+    assert!((res[0] + res[1] - 1.0).abs() < 1e-12);
+    let thr = mk(GovernorPolicy::PinnedThroughput);
+    let eff = mk(GovernorPolicy::PinnedEfficiency);
+    assert!(
+        eff.energy_j < race.energy_j && race.energy_j < thr.energy_j,
+        "{} < {} < {}",
+        eff.energy_j,
+        race.energy_j,
+        thr.energy_j
+    );
+    // racing only ever shortens the queue relative to pinned-efficiency
+    assert!(race.p99() <= eff.p99(), "{} vs {}", race.p99(), eff.p99());
+}
+
+fn fleet_run(gov: GovernorPolicy, reqs: &[Request], clusters: usize) -> softex::fleet::FleetReport {
+    let mut cfg = FleetConfig::new(clusters, DispatchPolicy::PowerOfTwoChoices);
+    cfg.seed = 0xCAFE;
+    cfg.threads = 2;
+    cfg.governor = gov;
+    Fleet::new(cfg).run(reqs)
+}
+
+#[test]
+fn fleet_power_cap_is_never_exceeded() {
+    // heavy offered load so the fleet is as busy as it ever gets; the
+    // reported average power must still respect every cap
+    let reqs = poisson_stream(0x47, 240, 1.0e5);
+    for watts in [1.0, 2.5, 5.0] {
+        let rep = fleet_run(GovernorPolicy::PowerCap { watts }, &reqs, 8);
+        assert!(
+            rep.avg_power_w() <= watts + 1e-9,
+            "cap {watts} W exceeded: {} W",
+            rep.avg_power_w()
+        );
+        assert_eq!(rep.power_cap_w, Some(watts));
+        assert_eq!(rep.governor, "power-cap");
+        let res = rep.op_residency();
+        assert!((res[0] + res[1] - 1.0).abs() < 1e-12, "{res:?}");
+    }
+    // and the pinned trade holds fleet-wide on the same stream
+    let thr = fleet_run(GovernorPolicy::PinnedThroughput, &reqs, 8);
+    let eff = fleet_run(GovernorPolicy::PinnedEfficiency, &reqs, 8);
+    assert!(eff.p99() > thr.p99(), "{} vs {}", eff.p99(), thr.p99());
+    assert!(eff.energy_j < thr.energy_j, "{} vs {}", eff.energy_j, thr.energy_j);
+    assert!(eff.joules_per_token() < thr.joules_per_token());
+}
+
+#[test]
+fn infeasible_power_cap_sheds_everything_at_the_door() {
+    // 50 mW cannot power one cluster at 0.55 V: the plan disables the
+    // whole fleet and the admission path sheds every request
+    let reqs = poisson_stream(0x53, 40, 1.0e6);
+    let rep = fleet_run(GovernorPolicy::PowerCap { watts: 0.05 }, &reqs, 4);
+    assert_eq!(rep.n_admitted, 0);
+    assert_eq!(rep.n_shed, 40);
+    assert_eq!(rep.energy_j, 0.0);
+    assert!(rep.avg_power_w() <= 0.05);
+    // the report still renders and serializes
+    assert!(rep.render().contains("power-cap"));
+    assert!(rep.to_json().contains("\"power_cap_w\":0.05"));
+}
+
+#[test]
+fn power_cap_throttles_spray_to_the_lockstep_op() {
+    // spray runs every powered cluster in lock-step; a cap that cannot
+    // let all of them race must pin the gang at 0.55 V (residency
+    // fully at the efficiency OP), and tokens still flow
+    let reqs = poisson_stream(0x61, 60, 1.0e6);
+    let mut cfg = FleetConfig::new(4, DispatchPolicy::Spray);
+    cfg.seed = 0xCAFE;
+    cfg.governor = GovernorPolicy::PowerCap { watts: 1.0 };
+    let rep = Fleet::new(cfg).run(&reqs);
+    assert!(rep.n_admitted > 0);
+    let res = rep.op_residency();
+    assert_eq!(res, [0.0, 1.0], "{res:?}");
+    assert!(rep.avg_power_w() <= 1.0 + 1e-9, "{}", rep.avg_power_w());
+    // the uncapped spray fleet on the same stream is faster
+    let mut open = FleetConfig::new(4, DispatchPolicy::Spray);
+    open.seed = 0xCAFE;
+    let fast = Fleet::new(open).run(&reqs);
+    assert!(rep.p99() > fast.p99(), "{} vs {}", rep.p99(), fast.p99());
+}
+
+#[test]
+fn power_cap_scales_with_multi_cluster_slot_templates() {
+    // a fleet slot simulating a 2x2 mesh draws up to 4 clusters' power
+    // at once, so a watt budget must power 4x fewer slots; the cap
+    // still binds the reported average power
+    let reqs = poisson_stream(0x67, 80, 5.0e5);
+    let mut cfg = FleetConfig::new(4, DispatchPolicy::JoinShortestQueue);
+    cfg.cluster = ServerConfig::new(2, Policy::ContinuousBatching);
+    cfg.governor = GovernorPolicy::PowerCap { watts: 2.0 };
+    let rep = Fleet::new(cfg).run(&reqs);
+    // 2.0 W / (4 clusters/slot * ~0.22 W) powers exactly two slots
+    let served_slots = rep
+        .per_cluster
+        .iter()
+        .filter(|r| r.n_requests > 0)
+        .count();
+    assert!(served_slots <= 2, "{served_slots} slots served");
+    assert_eq!(rep.per_cluster[2].n_requests + rep.per_cluster[3].n_requests, 0);
+    assert!(rep.avg_power_w() <= 2.0 + 1e-9, "{}", rep.avg_power_w());
+    assert_eq!(rep.n_admitted, 80, "open admission queues on the powered slots");
+}
+
+#[test]
+fn shed_outcomes_count_against_offered_not_admitted() {
+    // power-cap sheds are ordinary admission outcomes: conservation of
+    // requests holds and the latency sample set matches the admits
+    let reqs = poisson_stream(0x71, 100, 5.0e5);
+    let rep = fleet_run(GovernorPolicy::PowerCap { watts: 0.5 }, &reqs, 8);
+    // 0.5 W powers exactly two 0.55 V clusters (rated ~0.22 W each)
+    assert_eq!(rep.n_offered, 100);
+    assert_eq!(rep.n_admitted + rep.n_shed, 100);
+    assert_eq!(rep.latencies.len(), rep.n_admitted);
+    assert_eq!(rep.n_shed, 0, "open admission on a feasible cap sheds nothing");
+    assert!(rep.avg_power_w() <= 0.5 + 1e-9, "{}", rep.avg_power_w());
+}
+
+#[test]
+fn fleet_outcomes_respect_the_powered_prefix() {
+    use softex::energy::governor::{plan, worst_case_power_w};
+    // 0.5 W over 8 clusters powers exactly floor(0.5 / P_lo) of them;
+    // every assignment must land on that prefix
+    let gov = GovernorPolicy::PowerCap { watts: 0.5 };
+    let powered = plan(gov, 8).iter().filter(|g| g.enabled()).count();
+    assert_eq!(powered, (0.5 / worst_case_power_w(OpId::Efficiency)) as usize);
+    assert!(powered >= 1 && powered < 8, "{powered}");
+    let reqs = poisson_stream(0x7F, 60, 1.0e6);
+    let mut cfg = FleetConfig::new(8, DispatchPolicy::JoinShortestQueue);
+    cfg.governor = gov;
+    let mut fleet = Fleet::new(cfg);
+    let rep = fleet.run(&reqs);
+    for (c, cluster_rep) in rep.per_cluster.iter().enumerate() {
+        if c >= powered {
+            assert_eq!(cluster_rep.n_requests, 0, "cluster {c} is powered off");
+        }
+    }
+    assert_eq!(
+        rep.per_cluster[..powered]
+            .iter()
+            .map(|r| r.n_requests)
+            .sum::<usize>(),
+        60
+    );
+}

@@ -1,7 +1,6 @@
 //! Integration tests for the `server` serving simulator: determinism,
 //! policy behavior, and scaling across mesh sizes.
 
-use softex::energy::OP_THROUGHPUT;
 use softex::server::{
     summary_table, ArrivalProcess, BatchScheduler, Policy, RequestClass, RequestGen,
     ServerConfig, WorkloadMix,
@@ -27,7 +26,7 @@ fn same_seed_reproduces_identical_tail_latency() {
     assert_eq!(a.p99(), b.p99());
     assert_eq!(a.latencies, b.latencies);
     assert_eq!(a.makespan, b.makespan);
-    assert!((a.energy_j_throughput - b.energy_j_throughput).abs() == 0.0);
+    assert!((a.energy_j - b.energy_j).abs() == 0.0);
 }
 
 #[test]
@@ -37,7 +36,7 @@ fn saturated_throughput_scales_with_mesh() {
     let gops = |mesh: usize| {
         BatchScheduler::new(ServerConfig::new(mesh, Policy::Fifo))
             .run(&reqs)
-            .sustained_gops(&OP_THROUGHPUT)
+            .sustained_gops()
     };
     let (g1, g2, g4) = (gops(1), gops(2), gops(4));
     assert!(g2 > 2.0 * g1, "2x2 {g2} vs 1x1 {g1}");
@@ -212,18 +211,23 @@ fn genai_mix_is_deterministic_and_reports_all_classes() {
 
 #[test]
 fn energy_accounting_is_load_independent_but_policy_stable() {
-    // energy is per-request work; the same stream must cost the same
-    // joules under every policy
+    // energy is per-request work; under the default pinned-throughput
+    // governor the same stream must cost the same joules under every
+    // policy (up to float summation order — continuous batching sums
+    // per executed segment, FIFO per request)
     let reqs = poisson_stream(19, 80, 1.0e6);
     let e = |policy| {
         BatchScheduler::new(ServerConfig::new(2, policy))
             .run(&reqs)
-            .energy_j_throughput
+            .energy_j
     };
     let (a, b, c) = (
         e(Policy::Fifo),
         e(Policy::ContinuousBatching),
         e(Policy::MeshSharded),
     );
-    assert!((a - b).abs() < 1e-12 && (b - c).abs() < 1e-12, "{a} {b} {c}");
+    assert!(
+        (a - b).abs() / a < 1e-9 && (b - c).abs() / a < 1e-9,
+        "{a} {b} {c}"
+    );
 }
