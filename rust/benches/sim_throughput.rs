@@ -1,0 +1,169 @@
+//! Simulator throughput bench: simulated tokens per wall-clock second
+//! for every model preset x scheduling policy x governor, plus the
+//! headline batched-vs-reference speedup on a llama-edge continuous-
+//! batching decode workload (the DESIGN.md §11 fast path).
+//!
+//! Writes `BENCH_sim.json` at the repository root — CI regenerates it
+//! on every push and fails the build if a cell regresses more than 20%
+//! against the committed baseline or the headline speedup drops below
+//! 5x (see `.github/workflows/ci.yml`).
+//!
+//! Run: cargo bench --bench sim_throughput [-- --quick]
+
+use std::time::Instant;
+
+use softex::coordinator::ExecConfig;
+use softex::energy::governor::GovernorPolicy;
+use softex::report::json;
+use softex::server::{
+    ArrivalProcess, BatchScheduler, CostModel, Policy, RequestClass, RequestGen, ServerConfig,
+    WorkloadMix,
+};
+
+/// Every CLI model preset, canonical spellings.
+const PRESETS: [&str; 6] = [
+    "vit-tiny",
+    "vit-base",
+    "mobilebert",
+    "gpt2-xl",
+    "llama-edge",
+    "whisper-tiny-enc",
+];
+
+fn governors() -> [GovernorPolicy; 4] {
+    [
+        GovernorPolicy::PinnedThroughput,
+        GovernorPolicy::PinnedEfficiency,
+        GovernorPolicy::RaceToIdle,
+        GovernorPolicy::PowerCap { watts: 2.5 },
+    ]
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n_requests = if quick { 60 } else { 300 };
+    let seed = 0x51B;
+    let t0 = Instant::now();
+
+    // --- headline: batched vs reference on llama-edge decode under
+    // continuous batching. Sparse arrivals (rho 0.25) keep chains
+    // mostly alone on their cluster, which is the regime the batched
+    // fast path accelerates; a long decode budget makes runs long.
+    let headline_class = RequestClass::LlamaEdge { prompt: 128, decode: 64 };
+    let headline_mix = WorkloadMix::single(headline_class);
+    let mean_service =
+        CostModel::new(ExecConfig::paper_accelerated()).mean_service_cycles(&headline_mix);
+    let headline_n = if quick { 120 } else { 400 };
+    let reqs = RequestGen::new(
+        seed,
+        ArrivalProcess::Poisson { mean_gap: mean_service / 0.25 },
+        headline_mix,
+    )
+    .generate(headline_n);
+    let timed = |reference: bool| {
+        let mut sched = BatchScheduler::new(ServerConfig::new(1, Policy::ContinuousBatching));
+        sched.service_cycles(headline_class); // hoist trace building out of the timing
+        let t = Instant::now();
+        let rep = if reference {
+            sched.run_reference(&reqs)
+        } else {
+            sched.run(&reqs)
+        };
+        (t.elapsed().as_secs_f64(), rep)
+    };
+    let (dt_ref, rep_ref) = timed(true);
+    let (dt_new, rep_new) = timed(false);
+    assert_eq!(
+        rep_ref.to_json(),
+        rep_new.to_json(),
+        "batched and reference reports must be byte-identical"
+    );
+    let sim_tokens = rep_new.tokens_served();
+    let speedup = dt_ref / dt_new;
+    println!("headline llama-edge/128+64 cont-batch: {headline_n} requests, {sim_tokens} tokens");
+    println!(
+        "  reference {:>10.0} tok/s ({:.1} ms)   batched {:>10.0} tok/s ({:.1} ms)",
+        sim_tokens as f64 / dt_ref,
+        dt_ref * 1e3,
+        sim_tokens as f64 / dt_new,
+        dt_new * 1e3,
+    );
+    println!("  speedup {speedup:.2}x");
+    let headline = json::Obj::new()
+        .str("workload", "llama-edge/128+64 cont-batch rho=0.25")
+        .u64("requests", headline_n as u64)
+        .u64("sim_tokens", sim_tokens)
+        .f64("reference_tokens_per_sec", sim_tokens as f64 / dt_ref)
+        .f64("tokens_per_sec", sim_tokens as f64 / dt_new)
+        .f64("speedup_vs_reference", speedup)
+        .finish();
+
+    // --- full grid: every preset x policy x governor, batched engine,
+    // sim-tokens per wall second at rho 0.5 on a single cluster.
+    let mut cells = Vec::new();
+    println!("\ngrid ({n_requests} requests/cell, rho = 0.5, 1x1 mesh):");
+    println!(
+        "  {:>16} {:>11} {:>17} {:>12} {:>9}",
+        "model", "policy", "governor", "tok/s", "wall ms"
+    );
+    for name in PRESETS {
+        let class = RequestClass::for_model(name).expect(name);
+        let mix = WorkloadMix::single(class);
+        let mean_service =
+            CostModel::new(ExecConfig::paper_accelerated()).mean_service_cycles(&mix);
+        for policy in Policy::ALL {
+            for gov in governors() {
+                let reqs = RequestGen::new(
+                    seed,
+                    ArrivalProcess::Poisson { mean_gap: mean_service / 0.5 },
+                    mix.clone(),
+                )
+                .generate(n_requests);
+                let mut cfg = ServerConfig::new(1, policy);
+                cfg.governor = gov;
+                let mut sched = BatchScheduler::new(cfg);
+                sched.service_cycles(class);
+                let t = Instant::now();
+                let rep = sched.run(&reqs);
+                let dt = t.elapsed().as_secs_f64();
+                let tokens = rep.tokens_served();
+                let tok_per_sec = tokens as f64 / dt;
+                println!(
+                    "  {:>16} {:>11} {:>17} {:>12.0} {:>9.2}",
+                    name,
+                    policy.label(),
+                    gov.label(),
+                    tok_per_sec,
+                    dt * 1e3
+                );
+                cells.push(
+                    json::Obj::new()
+                        .str("model", name)
+                        .str("policy", policy.label())
+                        .str("governor", gov.label())
+                        .u64("requests", n_requests as u64)
+                        .u64("sim_tokens", tokens)
+                        .f64("tokens_per_sec", tok_per_sec)
+                        .f64("wall_ms", dt * 1e3)
+                        .finish(),
+                );
+            }
+        }
+    }
+
+    let out = json::Obj::new()
+        .str("bench", "sim_throughput")
+        .u64("schema", 1)
+        .raw("measured", "true")
+        .raw("quick", if quick { "true" } else { "false" })
+        .raw("headline", &headline)
+        .raw("cells", &json::array(cells))
+        .finish();
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim.json");
+    std::fs::write(path, format!("{out}\n")).expect("write BENCH_sim.json");
+    println!(
+        "\nwrote {path} ({} cells) in {:.2} s total",
+        PRESETS.len() * Policy::ALL.len() * governors().len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -75,6 +75,13 @@ impl OpId {
     /// in integer arithmetic. At the throughput OP ticks == cycles, so
     /// a pinned-throughput schedule is bit-identical to the historical
     /// cycle timeline.
+    ///
+    /// The ceil is **per dispatched segment** and not distributive over
+    /// addition: `ticks(a) + ticks(b) >= ticks(a + b)`. Any path that
+    /// amortizes work across segments — the batched decode runs of
+    /// `server::scheduler` (DESIGN.md §11) — must stretch each segment
+    /// separately, never sum cycles first, or low-voltage timelines
+    /// drift from the event-per-segment reference.
     pub fn ticks(&self, cycles: u64) -> u64 {
         match self {
             OpId::Throughput => cycles,
@@ -320,6 +327,25 @@ pub fn part_energies(parts: &[(ActivityMode, u64)]) -> [f64; 2] {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn per_segment_tick_ceils_survive_batching() {
+        // the batching invariant: a decode run dispatched as one batch
+        // must charge ceil per segment, because ceil-of-sum loses ticks
+        // as soon as two segments' remainders combine — 2827 vs 2825
+        // here. The throughput OP is the identity, so batching is
+        // trivially exact there.
+        let segs = [100u64, 37, 23, 1, 999];
+        let per_seg: u64 = segs.iter().map(|&c| OpId::Efficiency.ticks(c)).sum();
+        let of_sum = OpId::Efficiency.ticks(segs.iter().sum());
+        assert_eq!(per_seg, 2827);
+        assert_eq!(of_sum, 2825);
+        assert!(per_seg > of_sum);
+        assert_eq!(
+            segs.iter().map(|&c| OpId::Throughput.ticks(c)).sum::<u64>(),
+            OpId::Throughput.ticks(segs.iter().sum())
+        );
+    }
 
     #[test]
     fn ticks_are_exact_rational_stretches() {

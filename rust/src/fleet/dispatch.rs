@@ -302,15 +302,26 @@ impl Dispatcher {
         for (i, r) in requests.iter().enumerate() {
             engine.schedule(r.arrival, i);
         }
-        engine.run(|eng, i| {
+        // Explicit peek -> fast-forward -> pop walk of the arrival
+        // stream: the backlog horizon jumps idle gaps in closed form
+        // instead of cycling the heap. The peeked time is consumed
+        // immediately and re-peeked after every event — a horizon
+        // cached across intervening `schedule` calls can precede a
+        // newly inserted earlier event, and `fast_forward_to` panics
+        // on exactly that stale-peek race (pinned by
+        // `rust/tests/engine_edge.rs`) instead of silently skipping
+        // the event.
+        while let Some(horizon) = engine.peek_time() {
+            engine.fast_forward_to(horizon);
+            let i = engine.pop().expect("a peeked event pops");
             let r = &requests[i];
             // a power cap that cannot feed a single cluster sheds at
             // the door — the admission path is the enforcement point
             if self.active == 0 {
                 outcomes.push(Outcome::Shed);
-                return;
+                continue;
             }
-            let cluster = self.choose(r.arrival, eng.rng());
+            let cluster = self.choose(r.arrival, engine.rng());
             let outcome = self.admit(r, cluster, costs);
             match outcome {
                 Outcome::Assigned { cluster, class, .. } => {
@@ -337,7 +348,7 @@ impl Dispatcher {
                 Outcome::Shed => {}
             }
             outcomes.push(outcome);
-        });
+        }
         DispatchPlan {
             outcomes,
             streams,
@@ -568,6 +579,39 @@ mod tests {
         );
         let plan = d.dispatch(&reqs, &mut cm);
         assert!(plan.outcomes.iter().all(|o| *o == Outcome::Shed));
+    }
+
+    #[test]
+    fn horizon_walk_handles_same_cycle_bursts_and_gaps() {
+        // regression for the backlog-horizon walk: bursts of same-cycle
+        // arrivals interleaved with long idle gaps exercise the
+        // peek -> fast-forward -> pop loop where a stale cached horizon
+        // would have skipped or reordered events. Every request must
+        // get an outcome, in arrival order, deterministically.
+        let classes = [
+            RequestClass::VitTiny,
+            RequestClass::VitBase,
+            RequestClass::Gpt2Xl { prompt: 16, decode: 4 },
+        ];
+        let arrivals = [0u64, 0, 0, 5, 5, 1_000_000, 1_000_000, 1_000_001, 9_000_000];
+        let reqs: Vec<Request> = arrivals
+            .iter()
+            .enumerate()
+            .map(|(i, &arrival)| Request {
+                id: i as u64,
+                class: classes[i % classes.len()],
+                arrival,
+            })
+            .collect();
+        let run = || {
+            let mut d = dispatcher(DispatchPolicy::JoinShortestQueue, Admission::Open, 3, 7, 0.0);
+            d.dispatch(&reqs, &mut costs())
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.outcomes.len(), reqs.len());
+        assert_eq!(a.outcomes, b.outcomes);
+        assert!(a.outcomes.iter().all(|o| matches!(o, Outcome::Assigned { .. })));
+        assert_eq!(a.streams.iter().map(Vec::len).sum::<usize>(), reqs.len());
     }
 
     #[test]

@@ -278,13 +278,17 @@ impl Fleet {
         let mut ttft_samples = vec![0u64; shards.len()];
         let mut tbt_samples: Vec<u64> = Vec::new();
         let mut shard_ops: Vec<OpId> = vec![OpId::Throughput; shards.len()];
-        engine.run(|eng, i| {
+        // same guarded peek -> fast-forward -> pop walk as the
+        // dispatcher: idle gaps between spray gangs jump in closed form
+        while let Some(horizon) = engine.peek_time() {
+            engine.fast_forward_to(horizon);
+            let i = engine.pop().expect("a peeked event pops");
             let s = &shards[i];
-            let depth = usize::from(mesh.free_at() > eng.now());
+            let depth = usize::from(mesh.free_at() > engine.now());
             let op = gov.op_for_depth(depth);
             let ticks = op.ticks(s.cycles).max(1);
             shard_ops[i] = op;
-            let start = mesh.acquire(eng.now(), ticks);
+            let start = mesh.acquire(engine.now(), ticks);
             completions[i] = start + ticks;
             // same proportional placement the scheduler uses for its
             // exclusive blocks (single source of truth)
@@ -297,7 +301,7 @@ impl Fleet {
                 }
                 prev = Some(t);
             }
-        });
+        }
 
         let arrivals: Vec<u64> = shards.iter().map(|s| s.arrival).collect();
         let latency_samples: Vec<u64> = arrivals

@@ -91,6 +91,15 @@ pub struct ServerConfig {
     pub noc_trials: u32,
     /// Seed for the NoC Monte Carlo and the simulation engine.
     pub seed: u64,
+    /// Batch decode runs under continuous batching (DESIGN.md §11):
+    /// when a chain is alone on its cluster, its remaining segments are
+    /// resolved in closed form instead of one event per segment,
+    /// splitting back to event mode before any segment that could be
+    /// preempted by the next admission. Reports are bit-identical
+    /// either way — `rust/tests/determinism.rs` pins the full matrix —
+    /// so this is on by default; [`BatchScheduler::run_reference`]
+    /// forces it off.
+    pub batch_decode: bool,
 }
 
 impl ServerConfig {
@@ -104,6 +113,7 @@ impl ServerConfig {
             governor: GovernorPolicy::PinnedThroughput,
             noc_trials: 4096,
             seed: 0x5EED,
+            batch_decode: true,
         }
     }
 
@@ -230,6 +240,24 @@ impl EnergyLedger {
 
     fn charge_class(&mut self, cost: &ClassCost, op: OpId) {
         self.charge(cost.service_cycles, cost.energy, op);
+    }
+
+    /// Sum per-cluster ledgers in cluster-index order. Keeping one
+    /// ledger per cluster and merging here — instead of charging one
+    /// global ledger in event order — makes the f64 accumulation order
+    /// a cluster-local property, so the batched decode fast path
+    /// (which charges a cluster's segments in the same cluster-local
+    /// order as the event loop, just without the cross-cluster
+    /// interleaving) produces bit-identical energy totals.
+    fn merged(parts: &[EnergyLedger]) -> EnergyLedger {
+        let mut total = EnergyLedger::default();
+        for l in parts {
+            total.energy_j += l.energy_j;
+            total.op_cycles[0] += l.op_cycles[0];
+            total.op_cycles[1] += l.op_cycles[1];
+            total.busy_ticks += l.busy_ticks;
+        }
+        total
     }
 }
 
@@ -473,17 +501,31 @@ impl BatchScheduler {
     /// yields an empty report (zero requests, zero percentiles) — the
     /// fleet dispatcher legitimately leaves clusters idle.
     pub fn run(&mut self, requests: &[Request]) -> ServeReport {
+        self.run_inner(requests, self.cfg.batch_decode)
+    }
+
+    /// The executable reference: identical semantics with decode
+    /// batching forced off, i.e. the pre-batching one-event-per-segment
+    /// loop. `rust/tests/determinism.rs` pins [`Self::run`] byte-identical
+    /// to this across every preset × policy × governor × thread count;
+    /// `benches/sim_throughput.rs` times the two against each other.
+    pub fn run_reference(&mut self, requests: &[Request]) -> ServeReport {
+        self.run_inner(requests, false)
+    }
+
+    fn run_inner(&mut self, requests: &[Request], batch: bool) -> ServeReport {
         assert!(
             requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
             "requests must be sorted by arrival"
         );
         self.resolve_costs(requests);
-        let mut ledger = EnergyLedger::default();
+        let mut ledgers = vec![EnergyLedger::default(); self.active_clusters()];
         let served = match self.cfg.policy {
-            Policy::Fifo => self.run_fifo(requests, &mut ledger),
-            Policy::ContinuousBatching => self.run_continuous(requests, &mut ledger),
-            Policy::MeshSharded => self.run_mesh_sharded(requests, &mut ledger),
+            Policy::Fifo => self.run_fifo(requests, &mut ledgers),
+            Policy::ContinuousBatching => self.run_continuous(requests, &mut ledgers, batch),
+            Policy::MeshSharded => self.run_mesh_sharded(requests, &mut ledgers),
         };
+        let ledger = EnergyLedger::merged(&ledgers);
         self.build_report(requests, &served, &ledger)
     }
 
@@ -491,7 +533,7 @@ impl BatchScheduler {
     /// the earliest-free cluster resource for its whole service time at
     /// the OP the cluster's governor picks when it starts (queue depth
     /// at that instant: is work already waiting on the cluster?).
-    fn run_fifo(&self, requests: &[Request], ledger: &mut EnergyLedger) -> Vec<Served> {
+    fn run_fifo(&self, requests: &[Request], ledgers: &mut [EnergyLedger]) -> Vec<Served> {
         let mut engine: SimEngine<usize> = SimEngine::new(self.cfg.seed);
         for (i, r) in requests.iter().enumerate() {
             engine.schedule(r.arrival, i);
@@ -505,7 +547,7 @@ impl BatchScheduler {
             let op = self.govs[ci].op_for_depth(depth);
             let service = op.ticks(cost.service_cycles).max(1);
             let start = clusters.get_mut(ci).acquire(eng.now(), service);
-            ledger.charge_class(cost, op);
+            ledgers[ci].charge_class(cost, op);
             served[i] = tokenize_block(cost, start, service);
         });
         served
@@ -519,7 +561,21 @@ impl BatchScheduler {
     /// ready queues after every segment, other requests' phases are
     /// admitted between one request's tokens — admission and preemption
     /// happen at token boundaries for free.
-    fn run_continuous(&self, requests: &[Request], ledger: &mut EnergyLedger) -> Vec<Served> {
+    ///
+    /// With `batch` set, a chain that is provably alone on its cluster
+    /// (no other started chain, empty ready queues) runs its remaining
+    /// segments in closed form — one tight loop over the memoized phase
+    /// costs instead of one `Enqueue`/`Done` event round-trip per
+    /// segment — and drops back to event mode before any segment whose
+    /// completion could collide with the cluster's next admission.
+    /// DESIGN.md §11 gives the equivalence argument; the determinism
+    /// oracle in `rust/tests/determinism.rs` pins it byte-for-byte.
+    fn run_continuous(
+        &self,
+        requests: &[Request],
+        ledgers: &mut [EnergyLedger],
+        batch: bool,
+    ) -> Vec<Served> {
         struct Chain<'a> {
             phases: &'a [PhaseCost],
             cluster: usize,
@@ -531,6 +587,10 @@ impl BatchScheduler {
             phase: usize,
             seg: usize,
             t: u64,
+            /// Set when the chain's first `Enqueue` fires; from then
+            /// until completion it counts in its cluster's `in_flight`
+            /// population.
+            started: bool,
             tokens: Vec<u64>,
         }
 
@@ -575,60 +635,217 @@ impl BatchScheduler {
         /// FIFO ready queue of one accelerator: (ready cycle, chain).
         type ReadyQueue = BinaryHeap<Reverse<(u64, usize)>>;
 
-        /// Advance a chain and either queue its next accelerator
-        /// segment or record its completion.
-        fn settle(
-            eng: &mut SimEngine<Ev>,
-            chains: &mut [Chain<'_>],
-            served: &mut [Served],
-            arrivals: &[u64],
-            ledger: &mut EnergyLedger,
-            chain: usize,
-        ) {
-            match chains[chain].advance(ledger) {
-                Some(unit) => {
-                    let at = chains[chain].t;
-                    eng.schedule(at, Ev::Enqueue { chain, unit });
-                }
-                None => {
-                    let c = &mut chains[chain];
-                    let completion = c.t.max(arrivals[chain] + 1);
-                    let mut tokens = std::mem::take(&mut c.tokens);
-                    if let Some(last) = tokens.last_mut() {
-                        *last = completion;
-                    }
-                    served[chain] = Served { completion, tokens };
-                }
+        /// The accelerator slot offset of an engine segment.
+        fn accel_unit(engine: Engine) -> usize {
+            match engine {
+                Engine::TensorUnit => 0,
+                Engine::SoftEx => 1,
+                Engine::Cores => unreachable!("core glue never reaches a ready queue"),
             }
         }
 
-        /// Start the lowest-(ready, chain) queued segment if the unit
-        /// is free. The cluster governor picks the OP from the number
-        /// of ready segments still waiting behind this dispatch — the
-        /// batch-queue depth race-to-idle keys on.
-        fn try_dispatch(
-            eng: &mut SimEngine<Ev>,
-            units: &mut ResourcePool,
-            queues: &mut [ReadyQueue],
-            chains: &mut [Chain<'_>],
-            ledger: &mut EnergyLedger,
-            slot: usize,
-            unit: usize,
-        ) {
-            if units.get(slot).free_at() > eng.now() {
-                return; // busy; its Done event re-dispatches
+        /// Mutable continuous-batching simulation state, shared by the
+        /// event handlers and the closed-form alone-run fast path.
+        struct Cb<'a> {
+            chains: Vec<Chain<'a>>,
+            served: Vec<Served>,
+            arrivals: Vec<u64>,
+            /// Two serial accelerator resources per cluster:
+            /// slot = 2 * cluster + unit.
+            units: ResourcePool,
+            queues: Vec<ReadyQueue>,
+            /// Started-but-incomplete chains per cluster: the count
+            /// that proves a dispatching chain is alone.
+            in_flight: Vec<usize>,
+            /// First-ready times of not-yet-started chains, per
+            /// cluster: the batch fast path's admission horizon. These
+            /// are first-*Enqueue* times (arrival plus leading core
+            /// glue), not raw arrivals — leading glue shifts when a
+            /// chain first contends for an accelerator, and per-cluster
+            /// first-ready times are not sorted by request index.
+            pending: Vec<BinaryHeap<Reverse<u64>>>,
+            batch: bool,
+        }
+
+        impl Cb<'_> {
+            fn on_enqueue(
+                &mut self,
+                eng: &mut SimEngine<Ev>,
+                ledgers: &mut [EnergyLedger],
+                chain: usize,
+                unit: usize,
+            ) {
+                let cluster = self.chains[chain].cluster;
+                if !self.chains[chain].started {
+                    self.chains[chain].started = true;
+                    self.in_flight[cluster] += 1;
+                    let first = self.pending[cluster].pop();
+                    debug_assert_eq!(first, Some(Reverse(eng.now())));
+                }
+                let slot = cluster * 2 + unit;
+                self.queues[slot].push(Reverse((eng.now(), chain)));
+                self.try_dispatch(eng, ledgers, slot, unit);
             }
-            let Some(Reverse((_, chain))) = queues[slot].pop() else {
-                return;
-            };
-            let depth = queues[slot].len();
-            let c = &mut chains[chain];
-            c.op = c.gov.op_for_depth(depth);
-            let seg = c.phases[c.phase].segments[c.seg];
-            ledger.charge(seg.cycles, seg.energy, c.op);
-            let ticks = c.op.ticks(seg.cycles);
-            units.get_mut(slot).acquire(eng.now(), ticks);
-            eng.schedule_in(ticks, Ev::Done { chain, unit });
+
+            fn on_done(
+                &mut self,
+                eng: &mut SimEngine<Ev>,
+                ledgers: &mut [EnergyLedger],
+                chain: usize,
+                unit: usize,
+            ) {
+                let slot = self.chains[chain].cluster * 2 + unit;
+                {
+                    let c = &mut self.chains[chain];
+                    c.t = eng.now();
+                    c.seg += 1;
+                }
+                self.settle(eng, ledgers, chain);
+                self.try_dispatch(eng, ledgers, slot, unit);
+            }
+
+            /// Advance a chain and either queue its next accelerator
+            /// segment or record its completion.
+            fn settle(
+                &mut self,
+                eng: &mut SimEngine<Ev>,
+                ledgers: &mut [EnergyLedger],
+                chain: usize,
+            ) {
+                let cluster = self.chains[chain].cluster;
+                match self.chains[chain].advance(&mut ledgers[cluster]) {
+                    Some(unit) => {
+                        let at = self.chains[chain].t;
+                        if !self.chains[chain].started {
+                            self.pending[cluster].push(Reverse(at));
+                        }
+                        eng.schedule(at, Ev::Enqueue { chain, unit });
+                    }
+                    None => self.record_completion(chain),
+                }
+            }
+
+            fn record_completion(&mut self, chain: usize) {
+                let arrival = self.arrivals[chain];
+                let cluster = self.chains[chain].cluster;
+                let c = &mut self.chains[chain];
+                let completion = c.t.max(arrival + 1);
+                let mut tokens = std::mem::take(&mut c.tokens);
+                if let Some(last) = tokens.last_mut() {
+                    *last = completion;
+                }
+                let started = c.started;
+                self.served[chain] = Served { completion, tokens };
+                if started {
+                    self.in_flight[cluster] -= 1;
+                }
+            }
+
+            /// Start the lowest-(ready, chain) queued segment if the
+            /// unit is free. The cluster governor picks the OP from the
+            /// number of ready segments still waiting behind this
+            /// dispatch — the batch-queue depth race-to-idle keys on.
+            fn try_dispatch(
+                &mut self,
+                eng: &mut SimEngine<Ev>,
+                ledgers: &mut [EnergyLedger],
+                slot: usize,
+                unit: usize,
+            ) {
+                if !self.units.get(slot).idle_at(eng.now()) {
+                    return; // busy; its Done event re-dispatches
+                }
+                let Some(Reverse((_, chain))) = self.queues[slot].pop() else {
+                    return;
+                };
+                let depth = self.queues[slot].len();
+                let cluster = self.chains[chain].cluster;
+                if self.batch && depth == 0 && self.in_flight[cluster] == 1 {
+                    let horizon = self.pending[cluster]
+                        .peek()
+                        .map_or(u64::MAX, |&Reverse(at)| at);
+                    if self.run_alone(eng, ledgers, chain, horizon) {
+                        return;
+                    }
+                }
+                let c = &mut self.chains[chain];
+                c.op = c.gov.op_for_depth(depth);
+                let seg = c.phases[c.phase].segments[c.seg];
+                let op = c.op;
+                ledgers[cluster].charge(seg.cycles, seg.energy, op);
+                let ticks = op.ticks(seg.cycles);
+                self.units.get_mut(slot).acquire(eng.now(), ticks);
+                eng.schedule_in(ticks, Ev::Done { chain, unit });
+            }
+
+            /// The batched decode run. `chain` is alone on its cluster
+            /// (empty ready queues, in-flight count 1), so until the
+            /// next admission at `horizon` every dispatch would see
+            /// depth 0 and every `Done` would fire with both units
+            /// idle: the event sequence is fully determined. Replay it
+            /// in a tight loop — identical charges in identical
+            /// cluster-local order, identical per-segment tick ceils,
+            /// identical resource acquisitions — and return to event
+            /// mode before any segment whose completion could reach
+            /// `horizon`. Returns false when even the first segment
+            /// might collide; the caller then dispatches it as a
+            /// normal event.
+            fn run_alone(
+                &mut self,
+                eng: &mut SimEngine<Ev>,
+                ledgers: &mut [EnergyLedger],
+                chain: usize,
+                horizon: u64,
+            ) -> bool {
+                let cluster = self.chains[chain].cluster;
+                let mut t = eng.now();
+                {
+                    let c = &self.chains[chain];
+                    let seg = c.phases[c.phase].segments[c.seg];
+                    if t + c.gov.op_for_depth(0).ticks(seg.cycles) >= horizon {
+                        return false;
+                    }
+                }
+                loop {
+                    // dispatch the current accelerator segment at the
+                    // chain-local clock (both units idle: the alone-run
+                    // invariant makes acquire start exactly at `t`)
+                    let (seg, op) = {
+                        let c = &mut self.chains[chain];
+                        c.op = c.gov.op_for_depth(0);
+                        (c.phases[c.phase].segments[c.seg], c.op)
+                    };
+                    ledgers[cluster].charge(seg.cycles, seg.energy, op);
+                    let ticks = op.ticks(seg.cycles);
+                    self.units
+                        .get_mut(cluster * 2 + accel_unit(seg.engine))
+                        .acquire(t, ticks);
+                    t += ticks;
+                    // the segment's Done, handled inline
+                    {
+                        let c = &mut self.chains[chain];
+                        c.t = t;
+                        c.seg += 1;
+                    }
+                    match self.chains[chain].advance(&mut ledgers[cluster]) {
+                        None => {
+                            self.record_completion(chain);
+                            return true;
+                        }
+                        Some(next_unit) => {
+                            t = self.chains[chain].t;
+                            let c = &self.chains[chain];
+                            let nseg = c.phases[c.phase].segments[c.seg];
+                            if t + c.gov.op_for_depth(0).ticks(nseg.cycles) >= horizon {
+                                // the next admission could preempt:
+                                // split the run, back to event mode
+                                eng.schedule(t, Ev::Enqueue { chain, unit: next_unit });
+                                return true;
+                            }
+                        }
+                    }
+                }
+            }
         }
 
         let clusters = self.active_clusters();
@@ -656,37 +873,31 @@ impl BatchScheduler {
                 phase: 0,
                 seg: 0,
                 t: r.arrival,
+                started: false,
                 tokens: Vec::with_capacity(cost.phases.len()),
             });
         }
 
-        let arrivals: Vec<u64> = requests.iter().map(|r| r.arrival).collect();
-        let mut served = vec![Served::default(); requests.len()];
-        // two serial accelerator resources per cluster: slot = 2c + unit
-        let mut units = ResourcePool::new("accel", clusters * 2);
-        let mut queues: Vec<ReadyQueue> = (0..clusters * 2).map(|_| BinaryHeap::new()).collect();
+        let n = chains.len();
+        let mut cb = Cb {
+            chains,
+            served: vec![Served::default(); requests.len()],
+            arrivals: requests.iter().map(|r| r.arrival).collect(),
+            units: ResourcePool::new("accel", clusters * 2),
+            queues: (0..clusters * 2).map(|_| BinaryHeap::new()).collect(),
+            in_flight: vec![0; clusters],
+            pending: (0..clusters).map(|_| BinaryHeap::new()).collect(),
+            batch,
+        };
         let mut engine: SimEngine<Ev> = SimEngine::new(self.cfg.seed);
-        for chain in 0..chains.len() {
-            settle(&mut engine, &mut chains, &mut served, &arrivals, ledger, chain);
+        for chain in 0..n {
+            cb.settle(&mut engine, ledgers, chain);
         }
         engine.run(|eng, ev| match ev {
-            Ev::Enqueue { chain, unit } => {
-                let slot = chains[chain].cluster * 2 + unit;
-                queues[slot].push(Reverse((eng.now(), chain)));
-                try_dispatch(eng, &mut units, &mut queues, &mut chains, ledger, slot, unit);
-            }
-            Ev::Done { chain, unit } => {
-                let slot = chains[chain].cluster * 2 + unit;
-                {
-                    let c = &mut chains[chain];
-                    c.t = eng.now();
-                    c.seg += 1;
-                }
-                settle(eng, &mut chains, &mut served, &arrivals, ledger, chain);
-                try_dispatch(eng, &mut units, &mut queues, &mut chains, ledger, slot, unit);
-            }
+            Ev::Enqueue { chain, unit } => cb.on_enqueue(eng, ledgers, chain, unit),
+            Ev::Done { chain, unit } => cb.on_done(eng, ledgers, chain, unit),
         });
-        served
+        cb.served
     }
 
     /// Mesh-sharded over the engine: the whole mesh is one serial
@@ -694,7 +905,7 @@ impl BatchScheduler {
     /// and inflated by the NoC conflict slowdown. Every cluster runs
     /// lock-step, so the OP is the gang-wide [`governor::lockstep`]
     /// choice at each request's start.
-    fn run_mesh_sharded(&self, requests: &[Request], ledger: &mut EnergyLedger) -> Vec<Served> {
+    fn run_mesh_sharded(&self, requests: &[Request], ledgers: &mut [EnergyLedger]) -> Vec<Served> {
         let clusters = self.active_clusters();
         let slow = if clusters > 1 {
             mesh_slowdown(self.cfg.mesh_n, self.cfg.noc_trials, self.cfg.seed)
@@ -717,7 +928,9 @@ impl BatchScheduler {
                 .max(1.0) as u64;
             let service = op.ticks(shard).max(1);
             let start = mesh.acquire(eng.now(), service);
-            ledger.charge_class(cost, op);
+            // the mesh runs gang-scheduled: one ledger (cluster 0's)
+            // carries the whole lock-step charge
+            ledgers[0].charge_class(cost, op);
             served[i] = tokenize_block(cost, start, service);
         });
         served
@@ -978,6 +1191,48 @@ mod tests {
         let shard = BatchScheduler::new(ServerConfig::new(4, Policy::MeshSharded)).run(&reqs);
         assert!(shard.p99() < fifo.p99(), "{} vs {}", shard.p99(), fifo.p99());
         assert!(shard.p50() * 8 < fifo.p50() * 10); // at least ~1.25x better
+    }
+
+    #[test]
+    fn batched_decode_is_byte_identical_to_the_reference_loop() {
+        // the closed-form alone-run must reproduce the event-per-segment
+        // loop to the last byte, across load regimes: sparse (almost
+        // every chain runs alone start to finish), moderate, and a
+        // burst (batching rarely fires, preemption splits constantly)
+        for (seed, n, gap) in [(31u64, 40usize, 5.0e6), (33, 80, 3.0e5), (35, 48, 1.0)] {
+            let reqs = stream(seed, n, gap);
+            for mesh in [1usize, 2] {
+                let cfg = ServerConfig::new(mesh, Policy::ContinuousBatching);
+                let fast = BatchScheduler::new(cfg.clone()).run(&reqs);
+                let refr = BatchScheduler::new(cfg).run_reference(&reqs);
+                assert_eq!(fast.to_json(), refr.to_json(), "seed {seed} mesh {mesh}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_decode_flag_selects_the_reference_loop() {
+        // cfg.batch_decode = false must make run() and run_reference()
+        // literally the same computation (the fleet oracle relies on it)
+        let reqs = stream(37, 30, 4.0e5);
+        let mut cfg = ServerConfig::new(1, Policy::ContinuousBatching);
+        cfg.batch_decode = false;
+        let a = BatchScheduler::new(cfg.clone()).run(&reqs);
+        let b = BatchScheduler::new(cfg).run_reference(&reqs);
+        assert_eq!(a.to_json(), b.to_json());
+    }
+
+    #[test]
+    fn non_batching_policies_ignore_the_reference_switch() {
+        // FIFO and mesh-sharded have no per-segment loop to batch:
+        // run() and run_reference() must coincide trivially
+        let reqs = stream(39, 50, 2.0e5);
+        for policy in [Policy::Fifo, Policy::MeshSharded] {
+            let cfg = ServerConfig::new(2, policy);
+            let fast = BatchScheduler::new(cfg.clone()).run(&reqs);
+            let refr = BatchScheduler::new(cfg).run_reference(&reqs);
+            assert_eq!(fast.to_json(), refr.to_json(), "{policy:?}");
+        }
     }
 
     #[test]

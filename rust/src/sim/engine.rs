@@ -8,39 +8,18 @@
 //! interleavings. The engine owns a seeded [`Xoshiro256`] stream so
 //! randomized policies (e.g. the fleet's power-of-two-choices sampling)
 //! draw from a reproducible source tied to the simulation.
-
-use std::cmp::{Ordering, Reverse};
-use std::collections::BinaryHeap;
+//!
+//! Storage is the allocation-free slab heap of [`crate::sim::slab`]
+//! (DESIGN.md §11); `rust/tests/heap_model.rs` pins its pop order
+//! against a `std::collections::BinaryHeap` model. On top of the heap
+//! the engine offers [`Engine::fast_forward_to`]: a guarded clock jump
+//! that lets drivers skip idle stretches in closed form instead of
+//! heap-cycling filler events — the guard (never jump past a pending
+//! event) is what turns a stale peeked horizon into a panic instead of
+//! a silently corrupted schedule.
 
 use crate::rng::Xoshiro256;
-
-/// One scheduled event: payload `E` plus its firing time and the
-/// insertion sequence number used as the deterministic tie-break.
-struct Scheduled<E> {
-    at: u64,
-    seq: u64,
-    event: E,
-}
-
-impl<E> PartialEq for Scheduled<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-
-impl<E> Eq for Scheduled<E> {}
-
-impl<E> PartialOrd for Scheduled<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl<E> Ord for Scheduled<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        (self.at, self.seq).cmp(&(other.at, other.seq))
-    }
-}
+use crate::sim::slab::SlabHeap;
 
 /// A deterministic discrete-event engine over events of type `E`.
 ///
@@ -50,7 +29,7 @@ impl<E> Ord for Scheduled<E> {
 pub struct Engine<E> {
     now: u64,
     seq: u64,
-    heap: BinaryHeap<Reverse<Scheduled<E>>>,
+    heap: SlabHeap<E>,
     rng: Xoshiro256,
 }
 
@@ -60,7 +39,7 @@ impl<E> Engine<E> {
         Self {
             now: 0,
             seq: 0,
-            heap: BinaryHeap::new(),
+            heap: SlabHeap::new(),
             rng: Xoshiro256::new(seed),
         }
     }
@@ -77,11 +56,17 @@ impl<E> Engine<E> {
     }
 
     /// Schedule `event` at absolute cycle `at` (>= the current clock).
+    /// `at == now` is legal: the event fires this instant, after any
+    /// earlier-scheduled events already pending at `now`.
     pub fn schedule(&mut self, at: u64, event: E) {
         assert!(at >= self.now, "event scheduled in the past: {at} < {}", self.now);
         let seq = self.seq;
-        self.seq += 1;
-        self.heap.push(Reverse(Scheduled { at, seq, event }));
+        // refuse the 2^64-th schedule instead of wrapping: a wrapped
+        // sequence would silently reorder same-cycle ties
+        self.seq = seq
+            .checked_add(1)
+            .expect("event sequence space exhausted");
+        self.heap.push(at, seq, event);
     }
 
     /// Schedule `event` `delay` cycles from now.
@@ -91,14 +76,30 @@ impl<E> Engine<E> {
 
     /// Pop the next event, advancing the clock to its firing time.
     pub fn pop(&mut self) -> Option<E> {
-        let Reverse(s) = self.heap.pop()?;
-        self.now = s.at;
-        Some(s.event)
+        let (at, _seq, event) = self.heap.pop()?;
+        self.now = at;
+        Some(event)
     }
 
     /// Firing time of the next event, if any.
     pub fn peek_time(&self) -> Option<u64> {
-        self.heap.peek().map(|Reverse(s)| s.at)
+        self.heap.peek().map(|(at, _)| at)
+    }
+
+    /// Jump the clock to `t` without processing anything — the
+    /// closed-form idle skip. Legal only when nothing can happen in
+    /// `(now, t)`: `t` must not precede the clock and must not pass the
+    /// next pending event. Both violations panic, so a driver that
+    /// caches a peeked horizon across `schedule` calls (the
+    /// `fleet::dispatch` backlog-horizon race) fails loudly instead of
+    /// silently skipping an event. An empty heap imposes no upper
+    /// bound: the clock may jump arbitrarily far.
+    pub fn fast_forward_to(&mut self, t: u64) {
+        assert!(t >= self.now, "fast-forward into the past: {t} < {}", self.now);
+        if let Some(next) = self.peek_time() {
+            assert!(t <= next, "fast-forward past a pending event: {t} > {next}");
+        }
+        self.now = t;
     }
 
     /// Number of pending events.
@@ -117,6 +118,13 @@ impl<E> Engine<E> {
         while let Some(event) = self.pop() {
             handler(self, event);
         }
+    }
+
+    /// Test hook: pin the next insertion sequence number, so the
+    /// sequence-exhaustion guard is reachable without 2^64 schedules.
+    #[doc(hidden)]
+    pub fn set_next_seq(&mut self, seq: u64) {
+        self.seq = seq;
     }
 }
 
@@ -192,5 +200,27 @@ mod tests {
         e.schedule(10, ());
         e.pop();
         e.schedule(5, ());
+    }
+
+    #[test]
+    fn fast_forward_jumps_to_the_next_event() {
+        let mut e: Engine<u32> = Engine::new(1);
+        e.schedule(1_000_000, 7);
+        let horizon = e.peek_time().expect("pending event");
+        e.fast_forward_to(horizon);
+        assert_eq!(e.now(), 1_000_000);
+        assert_eq!(e.pop(), Some(7)); // the event still fires
+        assert_eq!(e.now(), 1_000_000);
+    }
+
+    #[test]
+    fn fast_forward_partway_preserves_the_pending_event() {
+        let mut e: Engine<u32> = Engine::new(1);
+        e.schedule(100, 1);
+        e.fast_forward_to(40);
+        assert_eq!(e.now(), 40);
+        e.schedule(60, 0); // inserting before the old horizon is fine
+        assert_eq!(e.pop(), Some(0));
+        assert_eq!(e.pop(), Some(1));
     }
 }

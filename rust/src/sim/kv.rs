@@ -16,6 +16,13 @@
 //! pre-existing serving semantics — and the FIFO golden values pinned
 //! by `rust/tests/determinism.rs` — are unchanged unless a caller opts
 //! into [`KvPolicy::TcdmSpill`].
+//!
+//! Spill is a pure function of `(model, ctx)`, so
+//! `server::CostModel` memoizes the per-step phase (spill charge
+//! included) once per context length. The batched decode fast path
+//! (DESIGN.md §11) replays those memoized phases in a tight loop — a
+//! whole decode run costs one memo hit per step instead of one event
+//! round-trip per accelerator segment, with identical charges.
 
 use crate::cluster::TCDM_BYTES;
 use crate::workload::ModelConfig;

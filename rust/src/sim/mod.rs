@@ -10,7 +10,13 @@
 //!   event heap with a seeded [`crate::rng::Xoshiro256`] stream. Ties
 //!   break by insertion order, so every simulation is a pure function
 //!   of (inputs, seed) — the property behind the fleet's
-//!   any-`--threads` bit-determinism contract;
+//!   any-`--threads` bit-determinism contract. The engine also offers
+//!   `fast_forward_to`, a guarded closed-form idle skip drivers use
+//!   instead of heap-cycling filler events (DESIGN.md §11);
+//! * [`slab`] — [`slab::SlabHeap`]: the allocation-free event store
+//!   under the engine — a 4-ary min-heap of `(at, seq, u32 slot)`
+//!   triples over a slab arena with an O(1) free list, pinned against
+//!   `std::collections::BinaryHeap` by `rust/tests/heap_model.rs`;
 //! * [`resource`] — [`Resource`] / [`ResourcePool`]: named serial
 //!   resources with occupancy accounting (`start = max(now, free_at)`),
 //!   the single queueing primitive clusters, accelerators, the spray
@@ -37,6 +43,7 @@
 pub mod engine;
 pub mod kv;
 pub mod resource;
+pub mod slab;
 
 pub use engine::Engine;
 pub use kv::{KvConfig, KvPolicy};

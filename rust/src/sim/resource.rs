@@ -34,6 +34,13 @@ impl Resource {
         self.free_at
     }
 
+    /// Whether the resource is idle at instant `at` — i.e. an
+    /// `acquire(at, _)` would start immediately. The complement of the
+    /// busy test schedulers gate dispatch on.
+    pub fn idle_at(&self, at: u64) -> bool {
+        self.free_at <= at
+    }
+
     /// Cumulative occupancy, cycles.
     pub fn busy_cycles(&self) -> u64 {
         self.busy_cycles
@@ -141,6 +148,15 @@ mod tests {
         r.acquire(0, 10);
         assert_eq!(r.acquire(1000, 5), 1000); // idle gap is not busy time
         assert_eq!(r.busy_cycles(), 15);
+    }
+
+    #[test]
+    fn idle_at_is_the_acquire_boundary() {
+        let mut r = Resource::new("unit");
+        r.acquire(0, 100);
+        assert!(!r.idle_at(99));
+        assert!(r.idle_at(100)); // a new acquire at 100 starts at 100
+        assert!(r.idle_at(500));
     }
 
     #[test]

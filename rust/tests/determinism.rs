@@ -180,6 +180,88 @@ fn governed_fleets_are_bit_identical_across_threads() {
     }
 }
 
+/// Every governor the crate ships, including the fleet-level cap.
+fn governors() -> [GovernorPolicy; 4] {
+    [
+        GovernorPolicy::PinnedThroughput,
+        GovernorPolicy::PinnedEfficiency,
+        GovernorPolicy::RaceToIdle,
+        GovernorPolicy::PowerCap { watts: 2.5 },
+    ]
+}
+
+/// Every CLI model preset (`RequestClass::for_model` spellings).
+const PRESETS: [&str; 6] = [
+    "vit-tiny",
+    "vit-base",
+    "mobilebert",
+    "gpt2-xl",
+    "llama-edge",
+    "whisper-tiny-enc",
+];
+
+#[test]
+fn batched_engine_is_bit_identical_across_the_full_matrix() {
+    // the tentpole contract: for every preset x policy x governor cell,
+    // the batched decode engine produces the byte-for-byte same report
+    // JSON as the one-event-per-segment reference loop (which is the
+    // pre-batching scheduler, kept executable via `run_reference`)
+    for (pi, preset) in PRESETS.into_iter().enumerate() {
+        let mix = WorkloadMix::for_model(preset).expect(preset);
+        let reqs = RequestGen::new(
+            0x3A7 + pi as u64,
+            ArrivalProcess::Poisson { mean_gap: 2.0e5 },
+            mix,
+        )
+        .generate(10);
+        for policy in Policy::ALL {
+            for gov in governors() {
+                let mk = || {
+                    let mut cfg = ServerConfig::new(2, policy);
+                    cfg.governor = gov;
+                    cfg
+                };
+                let batched = BatchScheduler::new(mk()).run(&reqs);
+                let reference = BatchScheduler::new(mk()).run_reference(&reqs);
+                assert_eq!(
+                    batched.to_json(),
+                    reference.to_json(),
+                    "{preset} / {policy:?} / {gov:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_fleets_are_bit_identical_across_threads_and_modes() {
+    // fleet level: the batch_decode flag and the worker thread count
+    // are both simulation-invisible — all six (mode, threads) combos
+    // serialize to the same FleetReport JSON per cluster policy
+    let reqs = poisson_stream(0xBA7C, 48, 3.0e5);
+    for policy in Policy::ALL {
+        let run_with = |batch: bool, threads: usize| {
+            let mut cfg = FleetConfig::new(4, DispatchPolicy::PowerOfTwoChoices);
+            cfg.seed = 0xBA7C;
+            cfg.threads = threads;
+            cfg.governor = GovernorPolicy::RaceToIdle;
+            cfg.cluster.policy = policy;
+            cfg.cluster.batch_decode = batch;
+            Fleet::new(cfg).run(&reqs).to_json()
+        };
+        let golden = run_with(true, 1);
+        for batch in [true, false] {
+            for threads in [1usize, 2, 8] {
+                assert_eq!(
+                    golden,
+                    run_with(batch, threads),
+                    "{policy:?} batch={batch} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn every_fleet_policy_is_bit_deterministic_across_threads() {
     let reqs = poisson_stream(0xF00D, 240, 2.5e5);

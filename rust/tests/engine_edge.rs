@@ -1,0 +1,180 @@
+//! Edge-case tests for the slab-heap engine and the batched decode
+//! fast path: the guard rails (`fast_forward_to` panics, sequence
+//! exhaustion) and the split-boundary sweep that probes batched-run
+//! preemption exactly at, one cycle before, and one cycle after every
+//! token boundary of a decode run.
+
+use softex::coordinator::ExecConfig;
+use softex::energy::governor::GovernorPolicy;
+use softex::server::{BatchScheduler, CostModel, Policy, Request, RequestClass, ServerConfig};
+use softex::sim::Engine;
+
+// --- fast_forward_to guard rails -----------------------------------
+
+#[test]
+#[should_panic(expected = "fast-forward into the past")]
+fn fast_forward_rejects_the_past() {
+    let mut e: Engine<()> = Engine::new(1);
+    e.schedule(10, ());
+    e.pop(); // clock is now 10
+    e.fast_forward_to(5);
+}
+
+#[test]
+#[should_panic(expected = "fast-forward past a pending event")]
+fn fast_forward_rejects_a_stale_horizon() {
+    // the fleet::dispatch backlog-horizon race in miniature: peek a
+    // horizon, schedule an earlier event, then trust the stale peek
+    let mut e: Engine<u32> = Engine::new(1);
+    e.schedule(100, 0);
+    let stale = e.peek_time().expect("pending event");
+    e.schedule(40, 1); // an arrival lands before the peeked horizon
+    e.fast_forward_to(stale);
+}
+
+#[test]
+fn fast_forward_to_now_is_a_noop() {
+    let mut e: Engine<u32> = Engine::new(1);
+    e.schedule(10, 0);
+    e.fast_forward_to(0);
+    assert_eq!(e.now(), 0);
+    assert_eq!(e.pop(), Some(0));
+}
+
+#[test]
+fn empty_heap_fast_forward_jumps_arbitrarily_far() {
+    let mut e: Engine<u32> = Engine::new(1);
+    assert!(e.is_empty());
+    e.fast_forward_to(u64::MAX / 2);
+    assert_eq!(e.now(), u64::MAX / 2);
+    // scheduling at exactly the jumped-to clock is legal
+    e.schedule(e.now(), 9);
+    assert_eq!(e.pop(), Some(9));
+    assert_eq!(e.now(), u64::MAX / 2);
+}
+
+// --- schedule edge cases -------------------------------------------
+
+#[test]
+fn schedule_at_exactly_now_fires_after_pending_same_cycle_events() {
+    let mut e: Engine<u32> = Engine::new(1);
+    e.schedule(5, 0);
+    e.schedule(5, 1);
+    let first = e.pop();
+    assert_eq!(first, Some(0));
+    assert_eq!(e.now(), 5);
+    // an event scheduled at the current instant queues behind the
+    // same-cycle event that was scheduled earlier
+    e.schedule(5, 2);
+    assert_eq!(e.pop(), Some(1));
+    assert_eq!(e.pop(), Some(2));
+    assert_eq!(e.now(), 5);
+}
+
+#[test]
+fn seq_space_near_the_end_still_orders_ties() {
+    let mut e: Engine<u32> = Engine::new(1);
+    e.set_next_seq(u64::MAX - 2);
+    e.schedule(7, 0); // seq MAX-2
+    e.schedule(7, 1); // seq MAX-1
+    assert_eq!(e.pop(), Some(0));
+    assert_eq!(e.pop(), Some(1));
+}
+
+#[test]
+#[should_panic(expected = "event sequence space exhausted")]
+fn seq_wraparound_is_refused_not_wrapped() {
+    let mut e: Engine<u32> = Engine::new(1);
+    e.set_next_seq(u64::MAX);
+    // seq u64::MAX itself has no successor: wrapping to 0 would order
+    // this event *before* every earlier same-cycle event, so the
+    // engine refuses the schedule instead
+    e.schedule(1, 0);
+}
+
+// --- batched decode split boundaries -------------------------------
+
+/// `run()` (batched) and `run_reference()` (one event per segment)
+/// must produce byte-identical reports for this config and stream.
+fn assert_batched_matches_reference(gov: GovernorPolicy, requests: &[Request], tag: &str) {
+    let mk = || {
+        let mut cfg = ServerConfig::new(1, Policy::ContinuousBatching);
+        cfg.governor = gov;
+        cfg
+    };
+    let batched = BatchScheduler::new(mk()).run(requests);
+    let reference = BatchScheduler::new(mk()).run_reference(requests);
+    assert_eq!(
+        batched.to_json(),
+        reference.to_json(),
+        "batched vs reference diverged: {tag}"
+    );
+}
+
+#[test]
+fn decode_run_splits_identically_at_every_token_boundary() {
+    // sweep the second request's arrival across every token boundary
+    // of the first request's decode run: one cycle before, exactly at,
+    // and one cycle after each cumulative phase end — the admissions
+    // that must split (or not split) a batched run
+    let class = RequestClass::LlamaEdge { prompt: 32, decode: 8 };
+    let cums = CostModel::new(ExecConfig::paper_accelerated()).token_cums(class);
+    assert!(cums.len() >= 9, "prompt + 8 decode boundaries");
+    let mut offsets: Vec<u64> = vec![0, 1];
+    for &c in &cums {
+        offsets.push(c.saturating_sub(1));
+        offsets.push(c);
+        offsets.push(c + 1);
+    }
+    offsets.push(cums.last().unwrap() * 4); // long after completion
+    for gov in [
+        GovernorPolicy::PinnedThroughput,
+        GovernorPolicy::PinnedEfficiency,
+        GovernorPolicy::RaceToIdle,
+    ] {
+        for &off in &offsets {
+            let requests = [
+                Request { id: 0, class, arrival: 0 },
+                Request { id: 1, class, arrival: off },
+            ];
+            assert_batched_matches_reference(gov, &requests, &format!("{gov:?} offset {off}"));
+        }
+    }
+}
+
+#[test]
+fn decode_run_split_during_an_op_switch_is_identical() {
+    // race-to-idle flips OPs with queue depth; a three-deep burst
+    // right at the first decode boundary forces admissions while the
+    // governor is mid-switch
+    let class = RequestClass::LlamaEdge { prompt: 32, decode: 8 };
+    let first_boundary = CostModel::new(ExecConfig::paper_accelerated()).token_cums(class)[0];
+    for jitter in [0u64, 1, 2, 7] {
+        let requests = [
+            Request { id: 0, class, arrival: 0 },
+            Request { id: 1, class, arrival: first_boundary + jitter },
+            Request { id: 2, class, arrival: first_boundary + jitter },
+            Request { id: 3, class, arrival: first_boundary + 2 * jitter + 3 },
+        ];
+        assert_batched_matches_reference(
+            GovernorPolicy::RaceToIdle,
+            &requests,
+            &format!("op-switch burst, jitter {jitter}"),
+        );
+    }
+}
+
+#[test]
+fn single_request_decode_run_batches_end_to_end() {
+    // the pure alone-run case: nothing ever preempts, so the whole
+    // decode run resolves in closed form — and still matches the
+    // reference event loop byte-for-byte, including the zero-decode
+    // (step-0 split boundary) and one-step degenerate runs
+    for decode in [0usize, 1, 8] {
+        let class = RequestClass::LlamaEdge { prompt: 32, decode };
+        let requests = [Request { id: 0, class, arrival: 0 }];
+        for gov in [GovernorPolicy::PinnedThroughput, GovernorPolicy::PinnedEfficiency] {
+            assert_batched_matches_reference(gov, &requests, &format!("{gov:?} decode {decode}"));
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Differential property tests: the slab-arena 4-ary heap under the
+//! `sim` engine versus a reference `std::collections::BinaryHeap`
+//! model, over seeded random schedule/pop interleavings.
+//!
+//! The model is the exact structure the engine used before the slab
+//! rework (`BinaryHeap<Reverse<(at, seq)>>`), so identical pop order
+//! here *is* the refactor's semantics-preservation proof at the heap
+//! level; `rust/tests/determinism.rs` extends it to whole reports.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use softex::rng::Xoshiro256;
+use softex::sim::slab::SlabHeap;
+use softex::sim::Engine;
+
+/// Drive both heaps through `steps` random operations: `push_bias` out
+/// of 100 are schedules (times drawn below `horizon`, so same-cycle
+/// ties are common at small horizons), the rest pops. Every pop is
+/// compared; the drain at the end is compared too.
+fn differential_run(seed: u64, steps: usize, push_bias: u64, horizon: u64) {
+    let mut rng = Xoshiro256::new(seed);
+    let mut slab: SlabHeap<u64> = SlabHeap::new();
+    let mut model: BinaryHeap<Reverse<(u64, u64)>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    for _ in 0..steps {
+        if rng.below(100) < push_bias || slab.is_empty() {
+            let at = rng.below(horizon);
+            slab.push(at, seq, seq); // payload = seq, so pops self-check
+            model.push(Reverse((at, seq)));
+            seq += 1;
+        } else {
+            let (at, s, payload) = slab.pop().expect("slab is non-empty");
+            let Reverse((mat, mseq)) = model.pop().expect("model is non-empty");
+            assert_eq!((at, s), (mat, mseq), "pop order diverged at seq {seq}");
+            assert_eq!(payload, s, "slab returned the wrong payload");
+        }
+        assert_eq!(slab.len(), model.len());
+        assert_eq!(slab.peek(), model.peek().map(|&Reverse(k)| k));
+    }
+    while let Some((at, s, payload)) = slab.pop() {
+        let Reverse((mat, mseq)) = model.pop().expect("model drains with the slab");
+        assert_eq!((at, s), (mat, mseq), "drain order diverged");
+        assert_eq!(payload, s);
+    }
+    assert!(model.is_empty());
+}
+
+#[test]
+fn random_interleavings_match_the_binary_heap_model() {
+    for seed in 0..16u64 {
+        differential_run(0xBEEF ^ seed, 4_000, 55, 1 << 20);
+    }
+}
+
+#[test]
+fn dense_same_cycle_ties_match_the_model() {
+    // horizon 4: nearly every event collides on a cycle, so ordering is
+    // carried almost entirely by the seq tie-break
+    for seed in 0..8u64 {
+        differential_run(0x71E5 ^ seed, 2_000, 60, 4);
+    }
+}
+
+#[test]
+fn pop_heavy_interleaved_frees_match_the_model() {
+    // pop-biased churn keeps the free list hot: most pushes land in
+    // recycled slots rather than fresh ones
+    for seed in 0..8u64 {
+        differential_run(0xF4EE ^ seed, 3_000, 35, 1 << 10);
+    }
+}
+
+#[test]
+fn stress_100k_events_matches_the_model() {
+    // sawtooth load: ramp the heap up, drain most of it, repeat —
+    // 100k+ events through deep heaps and a heavily reused arena
+    let mut rng = Xoshiro256::new(0x100_000);
+    let mut slab: SlabHeap<u64> = SlabHeap::new();
+    let mut model: BinaryHeap<Reverse<(u64, u64)>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    for wave in 0..10 {
+        for _ in 0..10_000 {
+            let at = rng.below(1 << 30);
+            slab.push(at, seq, seq);
+            model.push(Reverse((at, seq)));
+            seq += 1;
+        }
+        let drain = if wave == 9 { slab.len() } else { 9_000 };
+        for _ in 0..drain {
+            let (at, s, payload) = slab.pop().expect("slab is non-empty");
+            let Reverse(k) = model.pop().expect("model is non-empty");
+            assert_eq!((at, s), k);
+            assert_eq!(payload, s);
+        }
+    }
+    assert_eq!(seq, 100_000);
+    assert!(slab.is_empty() && model.is_empty());
+}
+
+#[test]
+fn engine_level_interleavings_match_a_model_engine() {
+    // the same differential through the full Engine API: schedule and
+    // pop interleaved, with the model tracking (at, seq) keys
+    for seed in 0..8u64 {
+        let mut rng = Xoshiro256::new(0xE46 ^ seed);
+        let mut eng: Engine<u64> = Engine::new(1);
+        let mut model: BinaryHeap<Reverse<(u64, u64)>> = BinaryHeap::new();
+        let mut seq = 0u64;
+        for _ in 0..2_000 {
+            if rng.below(100) < 60 || eng.is_empty() {
+                // schedule relative to now so the past-event guard
+                // never trips
+                let at = eng.now() + rng.below(1 << 16);
+                eng.schedule(at, seq);
+                model.push(Reverse((at, seq)));
+                seq += 1;
+            } else {
+                let expect_at = eng.peek_time().expect("non-empty");
+                let payload = eng.pop().expect("non-empty");
+                let Reverse((mat, mseq)) = model.pop().expect("non-empty");
+                assert_eq!(expect_at, mat);
+                assert_eq!(payload, mseq);
+                assert_eq!(eng.now(), mat, "pop must advance the clock");
+            }
+        }
+        while let Some(payload) = eng.pop() {
+            let Reverse((mat, mseq)) = model.pop().expect("drains together");
+            assert_eq!(payload, mseq);
+            assert_eq!(eng.now(), mat);
+        }
+        assert!(model.is_empty());
+    }
+}
