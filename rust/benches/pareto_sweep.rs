@@ -1,19 +1,23 @@
-//! Latency/energy Pareto frontier: offered load x DVFS governor
-//! (DESIGN.md §10).
+//! Latency/energy Pareto frontier: nonlin backend x DVFS governor x
+//! offered load (DESIGN.md §10, §12).
 //!
 //! Sweeps rho (offered load as a fraction of fleet capacity) against
 //! every governor — pinned-throughput, pinned-efficiency,
-//! race-to-idle, and a power cap — and reports the p99 latency,
+//! race-to-idle, and a power cap — for each non-linearity engine
+//! backend (softex / vexp / sole), and reports the p99 latency,
 //! energy, joules/token, average watts, and 0.8 V residency of each
 //! point, then marks the points on the (p99, J/token) Pareto frontier.
 //! This is the co-design trade co-designed softmax/normalization
-//! accelerators are evaluated on: how much tail latency a joule buys.
+//! accelerators are evaluated on: how much tail latency a joule buys —
+//! and which backend buys it. Power-cap cells are skipped for vexp:
+//! cores-resident nonlinearities escape the rated budget, and both the
+//! fleet and the CLI reject that combination.
 //!
 //! Run: cargo bench --bench pareto_sweep
 
 use std::time::Instant;
 
-use softex::coordinator::ExecConfig;
+use softex::coordinator::{ExecConfig, NonlinEngine};
 use softex::energy::governor::{GovernorPolicy, OpId};
 use softex::energy::OP_THROUGHPUT;
 use softex::fleet::{DispatchPolicy, Fleet, FleetConfig, FleetReport};
@@ -26,8 +30,6 @@ fn main() {
     let n_requests = 300;
     let seed: u64 = 0x9A1E70;
     let mix = WorkloadMix::edge_default();
-    let mean_service =
-        CostModel::new(ExecConfig::paper_accelerated()).mean_service_cycles(&mix);
 
     let governors = [
         GovernorPolicy::PinnedThroughput,
@@ -36,16 +38,29 @@ fn main() {
         GovernorPolicy::PowerCap { watts: 1.5 },
     ];
 
-    let mut points: Vec<(f64, GovernorPolicy, FleetReport)> = Vec::new();
-    for rho in [0.3f64, 0.6, 0.9, 1.2] {
-        let mean_gap = mean_service / (clusters as f64 * rho);
-        let requests = RequestGen::new(seed, ArrivalProcess::Poisson { mean_gap }, mix.clone())
-            .generate(n_requests);
-        for gov in governors {
-            let mut cfg = FleetConfig::new(clusters, DispatchPolicy::PowerOfTwoChoices);
-            cfg.seed = seed;
-            cfg.governor = gov;
-            points.push((rho, gov, Fleet::new(cfg).run(&requests)));
+    let mut points: Vec<(NonlinEngine, f64, GovernorPolicy, FleetReport)> = Vec::new();
+    for engine in NonlinEngine::ALL {
+        let exec = ExecConfig::for_engine(engine);
+        // each backend's rho is measured against its own service rate,
+        // so rho=0.9 means the same relative pressure on every engine
+        let mean_service = CostModel::new(exec).mean_service_cycles(&mix);
+        for rho in [0.3f64, 0.6, 0.9, 1.2] {
+            let mean_gap = mean_service / (clusters as f64 * rho);
+            let requests =
+                RequestGen::new(seed, ArrivalProcess::Poisson { mean_gap }, mix.clone())
+                    .generate(n_requests);
+            for gov in governors {
+                if engine == NonlinEngine::Vexp
+                    && matches!(gov, GovernorPolicy::PowerCap { .. })
+                {
+                    continue;
+                }
+                let mut cfg = FleetConfig::new(clusters, DispatchPolicy::PowerOfTwoChoices);
+                cfg.seed = seed;
+                cfg.governor = gov;
+                cfg.cluster.exec = exec;
+                points.push((engine, rho, gov, Fleet::new(cfg).run(&requests)));
+            }
         }
     }
 
@@ -54,8 +69,8 @@ fn main() {
     // better on one.
     let frontier: Vec<bool> = points
         .iter()
-        .map(|(_, _, a)| {
-            !points.iter().any(|(_, _, b)| {
+        .map(|(_, _, _, a)| {
+            !points.iter().any(|(_, _, _, b)| {
                 let better_lat = b.p99() < a.p99();
                 let better_energy = b.joules_per_token() < a.joules_per_token();
                 (better_lat && b.joules_per_token() <= a.joules_per_token())
@@ -67,8 +82,9 @@ fn main() {
     let rows: Vec<Vec<String>> = points
         .iter()
         .zip(&frontier)
-        .map(|((rho, gov, rep), &on_frontier)| {
+        .map(|((engine, rho, gov, rep), &on_frontier)| {
             vec![
+                engine.label().to_string(),
                 gov.label().to_string(),
                 report::f(*rho, 1),
                 report::f(ServeReport::ms(rep.p99(), &OP_THROUGHPUT), 1),
@@ -85,10 +101,14 @@ fn main() {
         "{}",
         report::render_table(
             &format!(
-                "governor x load Pareto sweep — p2c@{clusters}, {n_requests} requests/point, \
-                 edge-default mix (* = on the latency/energy frontier)"
+                "engine x governor x load Pareto sweep — p2c@{clusters}, \
+                 {n_requests} requests/point, edge-default mix \
+                 (* = on the latency/energy frontier)"
             ),
-            &["governor", "rho", "p99 ms", "ttft95", "J", "uJ/tok", "avgW", "res 0.8V", "pareto"],
+            &[
+                "engine", "governor", "rho", "p99 ms", "ttft95", "J", "uJ/tok", "avgW",
+                "res 0.8V", "pareto",
+            ],
             &rows
         )
     );

@@ -95,6 +95,32 @@ pub fn elementwise_cycles(n: usize, ops_per_elem: f64) -> u64 {
     (n as f64 * ops_per_elem * CORE_OP_CYCLES / NUM_CORES as f64).ceil() as u64
 }
 
+/// Exponential cost per element with a VEXP-style fast-exp instruction
+/// (arXiv 2504.11227, DESIGN.md §12): one fully pipelined FP instruction
+/// (~2 cycles/core with the load folded into the softmax stream) across
+/// the 8 cores — ~3x faster than even Schraudolph's exps sequence, but
+/// still on the cores rather than a dedicated unit.
+pub const VEXP_EXP_CYCLES_PER_ELEM: f64 = 0.25;
+
+/// Softmax on VEXP-extended cores: the exp becomes one instruction but
+/// the non-exponential work (max search, reduction tree, normalize) is
+/// unchanged from the software baseline.
+pub fn vexp_softmax_cycles(rows: usize, len: usize) -> u64 {
+    let elems = (rows * len) as f64;
+    (elems * (VEXP_EXP_CYCLES_PER_ELEM + softmax_rest_cycles_per_elem(len))).ceil() as u64
+}
+
+/// GELU / SiLU on VEXP-extended cores: the sigmoid form x·σ(kx) with a
+/// one-instruction exp — exp plus ~5 surrounding elementwise ops
+/// (scale, add-1, reciprocal, product) ≈ 2.2 cycles/element on 8 cores,
+/// vs 7.2 for the exps software sigmoid.
+pub const VEXP_GELU_CYCLES_PER_ELEM: f64 = 2.2;
+
+/// Cycles for a VEXP GELU/SiLU over `n` elements.
+pub fn vexp_gelu_cycles(n: usize) -> u64 {
+    (n as f64 * VEXP_GELU_CYCLES_PER_ELEM).ceil() as u64
+}
+
 /// 8-core software matmul throughput in MACs/cycle (Fig. 1 baseline):
 /// ~2.7 cycles per bf16 FMA per core (load/load/fma + loop overhead on
 /// RV32 without SIMD), calibrated so a 12x4 RedMulE yields the paper's
@@ -194,6 +220,23 @@ mod tests {
         );
         // floor kicks in for short rows
         assert_eq!(softmax_rest_cycles_per_elem(16), 0.30);
+    }
+
+    #[test]
+    fn vexp_sits_between_software_and_softex() {
+        // strictly faster than the exps software baseline …
+        for (rows, len) in [(512usize, 128usize), (2048, 512)] {
+            assert!(vexp_softmax_cycles(rows, len) < softmax_sw_cycles(ExpAlgo::Exps, rows, len));
+            // … but strictly slower than the dedicated SoftEx pipeline
+            let hw = softmax_cycles(&SoftExConfig::default(), rows, len, 0).total();
+            assert!(vexp_softmax_cycles(rows, len) > hw, "rows={rows} len={len}");
+        }
+        let n = 1 << 14;
+        assert!(vexp_gelu_cycles(n) < gelu_sw_cycles(GeluAlgo::Sigmoid, n));
+        let assisted =
+            crate::softex::timing::gelu_cycles(&SoftExConfig::default(), n)
+                + gelu_assisted_core_cycles(n);
+        assert!(vexp_gelu_cycles(n) > assisted);
     }
 
     #[test]

@@ -1,0 +1,108 @@
+//! Pluggable non-linearity engine backends (DESIGN.md §12).
+//!
+//! The paper frames SoftEx as one instance of a *flexible template* for
+//! accelerating Transformer non-linearities; this module makes the
+//! backend a value. [`NonlinEngine`] selects which datapath
+//! `coordinator::op_cost` charges for Softmax / GELU / SiLU /
+//! LayerNorm / RMSNorm, how the operator-graph walker
+//! (`workload::graph`) lowers the attention block, and which activity
+//! modes the energy ledger bills:
+//!
+//! * [`NonlinEngine::Softex`] — the paper's SoftEx unit (arXiv
+//!   2412.06321): a dedicated softmax/GELU accelerator beside the
+//!   tensor unit. The default, bit-identical to every pre-engine
+//!   report.
+//! * [`NonlinEngine::Vexp`] — no accelerator (arXiv 2504.11227): the
+//!   8 PULP cores issue VEXP-style fast-exp instructions, so every
+//!   non-linearity runs on the cores and competes with core-assist
+//!   work instead of overlapping with it.
+//! * [`NonlinEngine::Sole`] — a SOLE-style fused Softmax+LayerNorm
+//!   unit (arXiv 2510.17189): the attention softmax and the norm that
+//!   opens the FFN sub-block collapse into one fused phase, shortening
+//!   the phase chain under continuous batching.
+//!
+//! Every backend parses from its CLI name and labels itself back:
+//!
+//! ```
+//! use softex::coordinator::NonlinEngine;
+//!
+//! assert_eq!(NonlinEngine::parse("vexp"), Some(NonlinEngine::Vexp));
+//! assert_eq!(NonlinEngine::parse("turbo"), None);
+//! assert_eq!(NonlinEngine::default(), NonlinEngine::Softex);
+//!
+//! let labels: Vec<&str> = NonlinEngine::ALL.iter().map(|e| e.label()).collect();
+//! assert_eq!(labels, ["softex", "vexp", "sole"]);
+//! assert!(NonlinEngine::Sole.fuses_attn_norm());
+//! ```
+
+/// Which non-linearity backend the cost model charges.
+///
+/// Carried inside `coordinator::ExecConfig`, so it flows through
+/// `op_cost`, the serving cost memo, the fleet SLO predictor, and the
+/// per-OP energy ledgers without any side channel.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum NonlinEngine {
+    /// The paper's SoftEx accelerator (default; bit-identical to the
+    /// pre-engine cost model).
+    #[default]
+    Softex,
+    /// No accelerator: cores with VEXP-style fast-exp instructions.
+    Vexp,
+    /// SOLE-style fused Softmax+LayerNorm unit.
+    Sole,
+}
+
+impl NonlinEngine {
+    /// Every backend, in CLI/report order.
+    pub const ALL: [NonlinEngine; 3] =
+        [NonlinEngine::Softex, NonlinEngine::Vexp, NonlinEngine::Sole];
+
+    /// The CLI / report name of the backend.
+    pub fn label(self) -> &'static str {
+        match self {
+            NonlinEngine::Softex => "softex",
+            NonlinEngine::Vexp => "vexp",
+            NonlinEngine::Sole => "sole",
+        }
+    }
+
+    /// Parse a CLI `--engine` name. Returns `None` for unknown names
+    /// so the caller can produce a usage error listing [`Self::ALL`].
+    pub fn parse(name: &str) -> Option<NonlinEngine> {
+        NonlinEngine::ALL.into_iter().find(|e| e.label() == name)
+    }
+
+    /// Does this backend fuse the attention softmax with the norm that
+    /// follows the attention sub-block? When true the graph walker
+    /// lowers `AttnSoftmax` + `FfnNorm` as one `Op::FusedSoftmaxNorm`.
+    pub fn fuses_attn_norm(self) -> bool {
+        matches!(self, NonlinEngine::Sole)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_round_trip_through_parse() {
+        for e in NonlinEngine::ALL {
+            assert_eq!(NonlinEngine::parse(e.label()), Some(e));
+        }
+        assert_eq!(NonlinEngine::parse("softmax"), None);
+        assert_eq!(NonlinEngine::parse("SOFTEX"), None);
+        assert_eq!(NonlinEngine::parse(""), None);
+    }
+
+    #[test]
+    fn only_sole_fuses() {
+        assert!(!NonlinEngine::Softex.fuses_attn_norm());
+        assert!(!NonlinEngine::Vexp.fuses_attn_norm());
+        assert!(NonlinEngine::Sole.fuses_attn_norm());
+    }
+
+    #[test]
+    fn default_is_the_paper_backend() {
+        assert_eq!(NonlinEngine::default(), NonlinEngine::Softex);
+    }
+}

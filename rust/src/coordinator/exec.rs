@@ -11,6 +11,7 @@ use crate::redmule;
 use crate::softex::timing;
 use crate::workload::Op;
 
+use super::engine::NonlinEngine;
 use super::metrics::{KernelClass, Metrics};
 use super::schedule::{EngineChoice, ExecConfig};
 
@@ -54,6 +55,59 @@ pub fn op_cost(cfg: &ExecConfig, op: &Op) -> OpCost {
                 cycles,
                 ops: op.ops(),
                 parts: vec![(ActivityMode::MatMul, cycles)],
+            }
+        }
+        // The VEXP backend (DESIGN.md §12, arXiv 2504.11227) has no
+        // SoftEx unit: the cores run every exp-bearing non-linearity
+        // through fast-exp instructions, so these kernels occupy the
+        // Cores engine and compete with the elementwise glue instead
+        // of overlapping with it.
+        Op::Softmax { rows, len } if cfg.nonlin == NonlinEngine::Vexp => {
+            let cycles = cores::vexp_softmax_cycles(rows, len);
+            OpCost {
+                class: KernelClass::Softmax,
+                engine: Engine::Cores,
+                cycles,
+                ops: op.ops(),
+                parts: vec![(ActivityMode::VexpCores, cycles)],
+            }
+        }
+        Op::Gelu { n } | Op::Silu { n } if cfg.nonlin == NonlinEngine::Vexp => {
+            let cycles = cores::vexp_gelu_cycles(n);
+            OpCost {
+                class: KernelClass::Gelu,
+                engine: Engine::Cores,
+                cycles,
+                ops: op.ops(),
+                parts: vec![(ActivityMode::VexpCores, cycles)],
+            }
+        }
+        // no accumulate/rsqrt pipeline either: RMSNorm falls back to
+        // the 3-pass elementwise kernel (no exp to accelerate)
+        Op::RmsNorm { rows, len } if cfg.nonlin == NonlinEngine::Vexp => {
+            elementwise_cost(cores::elementwise_cycles(rows * len, 3.0), op.ops())
+        }
+        // The SOLE fused Softmax+LayerNorm unit (DESIGN.md §12, arXiv
+        // 2510.17189): the softmax half is the SoftEx pipeline (same
+        // rescale estimate as the standalone op); the norm half streams
+        // its elements through the N-lane accumulate/scale drain at one
+        // element per lane per cycle, overlapped behind the softmax
+        // writeback — far cheaper than the 4-pass core LayerNorm it
+        // replaces, and billed at the fused unit's own power mode.
+        Op::FusedSoftmaxNorm { rows, len, norm_n } => {
+            let chunks = len.div_ceil(cfg.softex.lanes) as f64;
+            let est_rescales = (rows as f64 * (chunks.ln() + 0.58)).round() as u64;
+            let sm = timing::softmax_cycles(&cfg.softex, rows, len, est_rescales).total();
+            let norm = (norm_n as u64).div_ceil(cfg.softex.lanes as u64);
+            OpCost {
+                class: KernelClass::Softmax,
+                engine: Engine::SoftEx,
+                cycles: sm + norm,
+                ops: op.ops(),
+                parts: vec![
+                    (ActivityMode::SoftmaxHw, sm),
+                    (ActivityMode::SoleFusedNorm, norm),
+                ],
             }
         }
         Op::Softmax { rows, len } => match cfg.softmax_engine {
@@ -418,6 +472,58 @@ mod tests {
         assert!(hw.total_cycles() > 0);
         assert!(hw.total_cycles() < sw.total_cycles());
         assert_eq!(hw.total_ops, sw.total_ops);
+    }
+
+    #[test]
+    fn vexp_backend_moves_nonlinearities_onto_the_cores() {
+        use crate::energy::ActivityMode;
+        let vexp = ExecConfig::for_engine(NonlinEngine::Vexp);
+        let softex = ExecConfig::paper_accelerated();
+        for op in [
+            Op::Softmax { rows: 512, len: 128 },
+            Op::Gelu { n: 1 << 14 },
+            Op::Silu { n: 1 << 14 },
+        ] {
+            let v = op_cost(&vexp, &op);
+            let s = op_cost(&softex, &op);
+            assert_eq!(v.engine, Engine::Cores, "{op:?}");
+            assert_eq!(v.parts.len(), 1);
+            assert_eq!(v.parts[0].0, ActivityMode::VexpCores);
+            // strictly slower than the dedicated unit, faster than the
+            // exps software baseline
+            assert!(v.cycles > s.cycles, "{op:?}");
+            let sw = op_cost(&ExecConfig::sw_nonlinearities(ExpAlgo::Exps), &op);
+            assert!(v.cycles < sw.cycles, "{op:?}");
+        }
+        // RMSNorm has no exp: the 3-pass cores kernel, not VexpCores
+        let rn = op_cost(&vexp, &Op::RmsNorm { rows: 128, len: 2048 });
+        assert_eq!(rn.engine, Engine::Cores);
+        // matmuls are untouched by the nonlin backend
+        let mm = Op::MatMul { m: 64, k: 64, n: 64 };
+        assert_eq!(op_cost(&vexp, &mm).cycles, op_cost(&softex, &mm).cycles);
+    }
+
+    #[test]
+    fn fused_softmax_norm_is_cheaper_than_its_halves() {
+        use crate::energy::ActivityMode;
+        let cfg = ExecConfig::for_engine(NonlinEngine::Sole);
+        let fused = op_cost(
+            &cfg,
+            &Op::FusedSoftmaxNorm { rows: 12 * 197, len: 197, norm_n: 197 * 768 },
+        );
+        assert_eq!(fused.engine, Engine::SoftEx);
+        let parts: u64 = fused.parts.iter().map(|(_, c)| c).sum();
+        assert_eq!(parts, fused.cycles);
+        assert!(fused
+            .parts
+            .iter()
+            .any(|(m, _)| *m == ActivityMode::SoleFusedNorm));
+        // the fused phase undercuts softmax + 4-pass core LayerNorm
+        let sm = op_cost(&cfg, &Op::Softmax { rows: 12 * 197, len: 197 });
+        let ln = op_cost(&cfg, &Op::LayerNorm { n: 197 * 768 });
+        assert!(fused.cycles < sm.cycles + ln.cycles);
+        // and conserves the op count
+        assert_eq!(fused.ops, sm.ops + ln.ops);
     }
 
     #[test]

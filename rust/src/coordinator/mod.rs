@@ -8,10 +8,12 @@
 //! the assumption of sufficient memory bandwidth ... using double
 //! buffering to hide the memory-related latencies").
 
+pub mod engine;
 pub mod exec;
 pub mod metrics;
 pub mod schedule;
 
+pub use engine::NonlinEngine;
 pub use exec::{execute_trace, op_cost, Engine, OpCost};
 pub use metrics::{KernelClass, Metrics};
 pub use schedule::{EngineChoice, ExecConfig};

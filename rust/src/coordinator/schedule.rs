@@ -1,6 +1,7 @@
 //! Engine selection policy: which unit runs each kernel class.
 
 use crate::cluster::cores::{ExpAlgo, GeluAlgo};
+use crate::coordinator::NonlinEngine;
 use crate::redmule::RedMuleConfig;
 use crate::softex::SoftExConfig;
 
@@ -26,6 +27,10 @@ pub struct ExecConfig {
     /// GELU engine and, if on cores, the approximation.
     pub gelu_engine: EngineChoice,
     pub gelu_sw_algo: GeluAlgo,
+    /// Non-linearity backend (DESIGN.md §12). `Softex` reproduces the
+    /// paper datapath bit-identically; `Vexp` / `Sole` substitute the
+    /// alternative engines from the template literature.
+    pub nonlin: NonlinEngine,
 }
 
 impl ExecConfig {
@@ -39,6 +44,17 @@ impl ExecConfig {
             softmax_sw_algo: ExpAlgo::Exps,
             gelu_engine: EngineChoice::SoftEx,
             gelu_sw_algo: GeluAlgo::Sigmoid,
+            nonlin: NonlinEngine::Softex,
+        }
+    }
+
+    /// The paper-accelerated configuration with a substituted
+    /// non-linearity backend (DESIGN.md §12). `for_engine(Softex)` is
+    /// exactly `paper_accelerated()`.
+    pub fn for_engine(engine: NonlinEngine) -> Self {
+        Self {
+            nonlin: engine,
+            ..Self::paper_accelerated()
         }
     }
 
@@ -86,5 +102,16 @@ mod tests {
     #[test]
     fn all_software_has_no_redmule() {
         assert!(ExecConfig::all_software().redmule.is_none());
+    }
+
+    #[test]
+    fn for_engine_only_swaps_the_nonlin_backend() {
+        let base = ExecConfig::paper_accelerated();
+        assert_eq!(base.nonlin, NonlinEngine::Softex);
+        let sole = ExecConfig::for_engine(NonlinEngine::Sole);
+        assert_eq!(sole.nonlin, NonlinEngine::Sole);
+        assert_eq!(sole.softmax_engine, base.softmax_engine);
+        assert_eq!(sole.gelu_engine, base.gelu_engine);
+        assert!(sole.redmule.is_some());
     }
 }

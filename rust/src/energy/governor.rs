@@ -23,6 +23,24 @@
 //!   affords may race to 0.8 V, the next tranche is pinned at 0.55 V,
 //!   and the rest are powered off (work routed to them is shed through
 //!   the existing admission path).
+//!
+//! ```
+//! use softex::energy::governor::{plan, GovernorPolicy, OpId};
+//!
+//! // the efficiency OP stretches cycles by exactly 1120/460
+//! assert_eq!(OpId::Throughput.ticks(460), 460);
+//! assert_eq!(OpId::Efficiency.ticks(460), 1120);
+//!
+//! // pinned policies resolve to the same governor on every cluster
+//! let govs = plan(GovernorPolicy::PinnedEfficiency, 3);
+//! assert!(govs.iter().all(|g| g.nominal_op() == OpId::Efficiency));
+//!
+//! // an infeasible watt budget powers nothing; a generous one, everything
+//! let starved = plan(GovernorPolicy::PowerCap { watts: 0.01 }, 4);
+//! assert!(starved.iter().all(|g| !g.enabled()));
+//! let fed = plan(GovernorPolicy::PowerCap { watts: 100.0 }, 4);
+//! assert!(fed.iter().all(|g| g.enabled()));
+//! ```
 
 use super::{cluster_power_w, ActivityMode};
 use crate::softex::phys::{OperatingPoint, OP_EFFICIENCY, OP_THROUGHPUT};

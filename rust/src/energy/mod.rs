@@ -43,6 +43,15 @@ pub enum ActivityMode {
     /// 8 cores running generic elementwise work (LN, residual, bias,
     /// the core-side steps of the assisted GELU).
     CoresElementwise,
+    /// 8 cores running a non-linearity through VEXP-style fast-exp
+    /// instructions (arXiv 2504.11227, DESIGN.md §12): the FP pipelines
+    /// toggle like elementwise work plus the exp lookup/normalization
+    /// datapath, far below the long software exp sequences.
+    VexpCores,
+    /// The SOLE-style fused Softmax+LayerNorm unit draining the norm
+    /// half of a fused phase (arXiv 2510.17189, DESIGN.md §12): a tiny
+    /// streaming accumulate/scale datapath beside SoftEx.
+    SoleFusedNorm,
     /// Idle / waiting on DMA.
     Idle,
 }
@@ -56,6 +65,8 @@ fn power_08v(mode: ActivityMode) -> f64 {
         ActivityMode::SoftmaxSw => 0.690,
         ActivityMode::GeluSw => 0.290,
         ActivityMode::CoresElementwise => 0.280,
+        ActivityMode::VexpCores => 0.296,
+        ActivityMode::SoleFusedNorm => 0.096,
         ActivityMode::Idle => 0.060,
     }
 }
@@ -148,6 +159,27 @@ mod tests {
             let hi = cluster_power_w(mode, &OP_THROUGHPUT);
             let lo = cluster_power_w(mode, &OP_EFFICIENCY);
             assert!(lo < 0.25 * hi, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn engine_backend_modes_sit_between_the_anchors() {
+        // VEXP cores toggle a bit more than generic elementwise work
+        // but far less than the long software-exp sequences …
+        let vexp = cluster_power_w(ActivityMode::VexpCores, &OP_THROUGHPUT);
+        assert!(vexp > cluster_power_w(ActivityMode::CoresElementwise, &OP_THROUGHPUT));
+        assert!(vexp < cluster_power_w(ActivityMode::SoftmaxSw, &OP_THROUGHPUT));
+        // … and the SOLE norm drain is a tiny streaming datapath: well
+        // under the SoftEx softmax pipeline, just above the idle floor.
+        let sole = cluster_power_w(ActivityMode::SoleFusedNorm, &OP_THROUGHPUT);
+        assert!(sole < cluster_power_w(ActivityMode::SoftmaxHw, &OP_THROUGHPUT) / 2.0);
+        assert!(sole > cluster_power_w(ActivityMode::Idle, &OP_THROUGHPUT));
+        assert!(sole < cluster_power_w(ActivityMode::CoresElementwise, &OP_THROUGHPUT));
+        // no direct 0.55 V anchors: both scale by the softmax pair
+        for mode in [ActivityMode::VexpCores, ActivityMode::SoleFusedNorm] {
+            let hi = cluster_power_w(mode, &OP_THROUGHPUT);
+            let lo = cluster_power_w(mode, &OP_EFFICIENCY);
+            assert!((lo / hi - 56.1 / 278.0).abs() < 1e-12, "{mode:?}");
         }
     }
 

@@ -39,7 +39,7 @@
 pub mod dispatch;
 pub mod report;
 
-use crate::coordinator::EngineChoice;
+use crate::coordinator::{EngineChoice, NonlinEngine};
 use crate::energy::governor::{self, ClusterGovernor, GovernorPolicy, OpId};
 use crate::mesh::montecarlo::{mesh_edge_for, mesh_slowdown};
 use crate::server::scheduler::place_tokens;
@@ -135,12 +135,15 @@ impl Fleet {
         let costs = CostModel::with_kv(cfg.cluster.exec, cfg.cluster.kv);
         // per-slot policies are pinned/race (never power-cap), so the
         // scheduler-level engine-set guard would not fire — enforce the
-        // cap's rating precondition here too
+        // cap's rating precondition here too (vexp is cores-resident
+        // and escapes the rated budget; softex and sole stay cappable)
         assert!(
             !matches!(cfg.governor, GovernorPolicy::PowerCap { .. })
                 || (cfg.cluster.exec.softmax_engine == EngineChoice::SoftEx
-                    && cfg.cluster.exec.gelu_engine == EngineChoice::SoftEx),
-            "power-cap governors require the paper-accelerated engine set"
+                    && cfg.cluster.exec.gelu_engine == EngineChoice::SoftEx
+                    && cfg.cluster.exec.nonlin != NonlinEngine::Vexp),
+            "power-cap governors require an accelerated engine set \
+             (--engine softex or sole)"
         );
         // a fleet slot simulates `cluster.clusters()` concurrent mesh
         // clusters, so a watt budget must be divided by that count
@@ -331,6 +334,7 @@ impl Fleet {
         let proto = ServeReport {
             label: String::new(),
             mix: mix_label(shards.iter().map(|s| s.class)),
+            engine: self.cfg.cluster.exec.nonlin.label().to_string(),
             governor: gov.as_policy().label().to_string(),
             power_cap_w: None,
             clusters: 1,
@@ -357,6 +361,7 @@ impl Fleet {
                     // a powered-off cluster contributes an empty report
                     ServeReport::empty(
                         format!("c{c}:spray"),
+                        self.cfg.cluster.exec.nonlin.label().to_string(),
                         self.plan[c].as_policy().label().to_string(),
                     )
                 }
@@ -406,6 +411,7 @@ impl Fleet {
         FleetReport {
             label: format!("{}@{}", self.cfg.policy.label(), self.cfg.clusters),
             mix: mix_label(requests.iter().map(|r| r.class)),
+            engine: self.cfg.cluster.exec.nonlin.label().to_string(),
             clusters: self.cfg.clusters,
             policy: self.cfg.policy,
             n_offered: requests.len(),

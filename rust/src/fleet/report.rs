@@ -21,6 +21,9 @@ pub struct FleetReport {
     /// Class population of the offered stream (distinct class labels,
     /// comma-joined; `server::mix_label`).
     pub mix: String,
+    /// Non-linearity backend label every cluster costed with
+    /// (`--engine`, DESIGN.md §12): `softex`, `vexp`, or `sole`.
+    pub engine: String,
     pub clusters: usize,
     pub policy: DispatchPolicy,
     /// Requests offered to the dispatcher.
@@ -193,6 +196,7 @@ impl FleetReport {
         let mut obj = report::json::Obj::new()
             .str("label", &self.label)
             .str("mix", &self.mix)
+            .str("engine", &self.engine)
             .str("governor", &self.governor)
             .u64("clusters", self.clusters as u64)
             .str("policy", self.policy.label());

@@ -18,11 +18,16 @@
 //!   the operator-graph layer lowering it to kernel op traces; presets:
 //!   ViT-tiny/base, MobileBERT, GPT-2 XL, Llama-edge, Whisper-tiny-enc
 //!   (`DESIGN.md` §9);
-//! * [`coordinator`] — the L3 scheduler mapping workloads onto engines;
+//! * [`coordinator`] — the L3 scheduler mapping workloads onto engines,
+//!   with pluggable non-linearity backends
+//!   ([`coordinator::NonlinEngine`]: the paper's SoftEx unit, a
+//!   VEXP-style fast-exp ISA extension, or a SOLE-style fused
+//!   softmax+LayerNorm unit, `DESIGN.md` §12);
 //! * [`mesh`] — the FlooNoC compute-mesh scalability model (Sec. VIII);
 //! * [`sim`] — the token-granular simulation core: a deterministic
-//!   discrete-event engine, named serial resources with occupancy, and
-//!   the KV-cache/TCDM residency model (`DESIGN.md` §8);
+//!   discrete-event engine over the slab-allocated event heap of
+//!   [`sim::slab`], named serial resources with occupancy, and the
+//!   KV-cache/TCDM residency model (`DESIGN.md` §8);
 //! * [`server`] — the multi-request serving simulator layered on the
 //!   coordinator, mesh, and `sim` models, with token-level TTFT /
 //!   time-between-tokens reporting (`DESIGN.md` §6, §8);

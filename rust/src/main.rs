@@ -6,16 +6,16 @@
 //!   gelu --n N [--terms T] [--bits B]                   one GELU job
 //!   mesh [--max 8] [--trials 16384]                     Fig. 15 sweep
 //!   serve [--requests N] [--mesh n] [--policy P] [--model M] [--kv K]
-//!         [--governor G] [--power-cap-w W] [--json]                   serving sim
+//!         [--engine E] [--governor G] [--power-cap-w W] [--json]      serving sim
 //!   fleet [--clusters N] [--policy P] [--model M] [--threads T]
-//!         [--governor G] [--power-cap-w W] [--json]                   fleet dispatcher
+//!         [--engine E] [--governor G] [--power-cap-w W] [--json]      fleet dispatcher
 //!   verify [--artifacts DIR]                            golden checks
 //!   info                                                cluster summary
 
 use std::collections::HashMap;
 
 use softex::cluster::cores::ExpAlgo;
-use softex::coordinator::{execute_trace, ExecConfig, KernelClass};
+use softex::coordinator::{execute_trace, ExecConfig, KernelClass, NonlinEngine};
 use softex::energy::governor::{self, GovernorPolicy};
 use softex::energy::{OP_EFFICIENCY, OP_THROUGHPUT};
 use softex::fleet::{Admission, DispatchPolicy, Fleet, FleetConfig};
@@ -238,6 +238,7 @@ fn cmd_mesh(flags: &HashMap<String, String>) {
 const SERVE_USAGE: &str =
     "usage: softex serve [--requests N] [--mesh N] [--gap CYCLES] [--seed S] \
      [--policy fifo|cb|mesh] [--model NAME|edge|genai] [--kv resident|spill] \
+     [--engine softex|vexp|sole] \
      [--governor pinned-throughput|pinned-efficiency|race-to-idle] [--power-cap-w W] [--json]";
 
 /// Parse the shared `--governor` / `--power-cap-w` pair into a DVFS
@@ -295,6 +296,36 @@ fn parse_mix(flags: &HashMap<String, String>, usage: &str) -> WorkloadMix {
     }
 }
 
+/// Parse the shared `--engine` flag into a non-linearity backend
+/// (DESIGN.md §12), exiting with `usage` on unknown names. The vexp
+/// backend runs nonlinearities on the cores outside the rated cluster
+/// power budget, so it conflicts with a power-cap governor — report
+/// that here as a usage error instead of tripping the scheduler's
+/// assert.
+fn parse_engine(
+    flags: &HashMap<String, String>,
+    gov: GovernorPolicy,
+    usage: &str,
+) -> NonlinEngine {
+    let engine = match flags.get("engine").map(String::as_str) {
+        None => NonlinEngine::default(),
+        Some(name) => NonlinEngine::parse(name).unwrap_or_else(|| {
+            usage_error(
+                &format!("unknown engine `{name}` (expected softex, vexp, or sole)"),
+                usage,
+            )
+        }),
+    };
+    if engine == NonlinEngine::Vexp && matches!(gov, GovernorPolicy::PowerCap { .. }) {
+        usage_error(
+            "--engine vexp conflicts with --power-cap-w (cores-resident \
+             nonlinearities escape the rated budget; use softex or sole)",
+            usage,
+        );
+    }
+    engine
+}
+
 /// Parse the shared `--kv` flag, exiting with `usage` on unknown names.
 fn parse_kv(flags: &HashMap<String, String>, usage: &str) -> KvConfig {
     match flags.get("kv").map(String::as_str) {
@@ -334,6 +365,7 @@ fn cmd_serve(flags: &HashMap<String, String>) {
     let kv = parse_kv(flags, SERVE_USAGE);
     let mix = parse_mix(flags, SERVE_USAGE);
     let gov = parse_governor(flags, SERVE_USAGE);
+    let engine = parse_engine(flags, gov, SERVE_USAGE);
     // a serve run has no admission path to shed through: the cap must
     // power at least one of the mesh's clusters
     if !governor::plan(gov, mesh * mesh).iter().any(|g| g.enabled()) {
@@ -348,6 +380,7 @@ fn cmd_serve(flags: &HashMap<String, String>) {
     server_cfg.seed = seed;
     server_cfg.kv = kv;
     server_cfg.governor = gov;
+    server_cfg.exec = ExecConfig::for_engine(engine);
     let mut sched = BatchScheduler::new(server_cfg);
     let rep = sched.run(&requests);
     if flags.contains_key("json") {
@@ -361,7 +394,7 @@ const FLEET_USAGE: &str =
     "usage: softex fleet [--clusters N] [--policy rr|jsq|p2c|spray] [--requests N] \
      [--rho LOAD | --gap CYCLES] [--burst SIZE] [--seed S] [--threads T] \
      [--slo-ms MS [--admission shed|downgrade]] [--model NAME|edge|genai] \
-     [--kv resident|spill] \
+     [--kv resident|spill] [--engine softex|vexp|sole] \
      [--governor pinned-throughput|pinned-efficiency|race-to-idle] [--power-cap-w W] [--json]";
 
 fn fleet_usage_error(msg: &str) -> ! {
@@ -387,6 +420,7 @@ fn cmd_fleet(flags: &HashMap<String, String>) {
     let kv = parse_kv(flags, FLEET_USAGE);
     let mix = parse_mix(flags, FLEET_USAGE);
     let gov = parse_governor(flags, FLEET_USAGE);
+    let engine = parse_engine(flags, gov, FLEET_USAGE);
     // offered load: --gap (per-request spacing, ticks) wins; otherwise
     // --rho (fraction of aggregate fleet service capacity on the
     // selected mix under the chosen KV model AND the governor plan:
@@ -405,8 +439,8 @@ fn cmd_fleet(flags: &HashMap<String, String>) {
             if rho <= 0.0 {
                 fleet_usage_error("--rho must be positive");
             }
-            let mean_service = CostModel::with_kv(ExecConfig::paper_accelerated(), kv)
-                .mean_service_cycles(&mix);
+            let mean_service =
+                CostModel::with_kv(ExecConfig::for_engine(engine), kv).mean_service_cycles(&mix);
             // requests per tick the powered fleet can drain
             let service_rate: f64 = governor::plan(gov, clusters)
                 .iter()
@@ -469,6 +503,7 @@ fn cmd_fleet(flags: &HashMap<String, String>) {
     cfg.seed = seed;
     cfg.admission = admission;
     cfg.cluster.kv = kv;
+    cfg.cluster.exec = ExecConfig::for_engine(engine);
     cfg.governor = gov;
     if flags.contains_key("threads") {
         cfg.threads = num_flag(flags, "threads", 1, FLEET_USAGE);

@@ -29,11 +29,11 @@
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap};
 
-use crate::coordinator::{op_cost, Engine, EngineChoice, ExecConfig};
+use crate::coordinator::{op_cost, Engine, EngineChoice, ExecConfig, NonlinEngine};
 use crate::energy::governor::{self, part_energies, ClusterGovernor, GovernorPolicy, OpId};
 use crate::mesh::montecarlo::mesh_slowdown;
 use crate::sim::{Engine as SimEngine, KvConfig, Resource, ResourcePool};
-use crate::workload::{trace_decode_step, Op};
+use crate::workload::{trace_decode_step_for, trace_model_for, Op};
 
 use super::request::{Request, RequestClass, WorkloadMix};
 use super::stats::{queue_depths, Latencies, ServeReport};
@@ -274,12 +274,14 @@ pub struct CostModel {
     exec: ExecConfig,
     kv: KvConfig,
     costs: BTreeMap<RequestClass, ClassCost>,
-    /// Decode-step phase memo keyed by (model name, context length):
-    /// `trace_decode_step` depends only on the model IR and the
-    /// context, never the prompt, so any causal-decoder class (GPT-2
-    /// XL, Llama-edge, future IR presets) shares step costs with every
-    /// other class of the same model.
-    decode_steps: BTreeMap<(String, usize), PhaseCost>,
+    /// Decode-step phase memo keyed by (nonlin engine, model name,
+    /// context length): `trace_decode_step_for` depends only on the
+    /// backend, the model IR, and the context, never the prompt, so
+    /// any causal-decoder class (GPT-2 XL, Llama-edge, future IR
+    /// presets) shares step costs with every other class of the same
+    /// model — and two cost models that differ only in their engine
+    /// can never alias each other's entries.
+    decode_steps: BTreeMap<(NonlinEngine, String, usize), PhaseCost>,
 }
 
 impl CostModel {
@@ -311,20 +313,24 @@ impl CostModel {
 
     fn resolve(&mut self, class: RequestClass) -> &ClassCost {
         if !self.costs.contains_key(&class) {
-            let mut phases = vec![phase_cost(&self.exec, &class.prompt_trace())];
+            // lower for the configured nonlin backend: Softex lowering
+            // is bit-identical to the legacy `prompt_trace`; Sole fuses
+            // the attention softmax with the following LayerNorm
+            let engine = self.exec.nonlin;
             let model = class.model();
+            let mut phases = vec![phase_cost(&self.exec, &trace_model_for(&model, engine))];
             let exec = &self.exec;
             let kv = &self.kv;
             for step in 0..class.decode_tokens() {
                 let ctx = class.context_at(step);
                 let step_cost = self
                     .decode_steps
-                    .entry((model.name.clone(), ctx))
+                    .entry((engine, model.name.clone(), ctx))
                     .or_insert_with(|| {
                         let mut trace = vec![Op::KvSpill {
                             bytes: kv.spill_bytes(&model, ctx) as usize,
                         }];
-                        trace.extend(trace_decode_step(&model, ctx));
+                        trace.extend(trace_decode_step_for(&model, ctx, engine));
                         phase_cost(exec, &trace)
                     });
                 phases.push(step_cost.clone());
@@ -460,12 +466,17 @@ impl BatchScheduler {
         // the cap's rated cluster power budgets the accelerated engine
         // set; software nonlinearities run on the cores without
         // resource contention and can exceed the cores slot's rating,
-        // so the avg-power-under-cap invariant would not be structural
+        // so the avg-power-under-cap invariant would not be structural.
+        // The vexp backend is cores-resident for the same reason; sole
+        // stays within the SoftEx slot's rating (the fused drain never
+        // exceeds the softmax pipeline's power) and remains cappable.
         assert!(
             !matches!(cfg.governor, GovernorPolicy::PowerCap { .. })
                 || (cfg.exec.softmax_engine == EngineChoice::SoftEx
-                    && cfg.exec.gelu_engine == EngineChoice::SoftEx),
-            "power-cap governors require the paper-accelerated engine set"
+                    && cfg.exec.gelu_engine == EngineChoice::SoftEx
+                    && cfg.exec.nonlin != NonlinEngine::Vexp),
+            "power-cap governors require an accelerated engine set \
+             (--engine softex or sole)"
         );
         Self { cfg, costs, govs }
     }
@@ -982,6 +993,7 @@ impl BatchScheduler {
                 self.cfg.mesh_n
             ),
             mix: super::request::mix_label(requests.iter().map(|r| r.class)),
+            engine: self.cfg.exec.nonlin.label().to_string(),
             governor: self.cfg.governor.label().to_string(),
             power_cap_w: self.cfg.governor.power_cap_w(),
             clusters: self.cfg.clusters(),

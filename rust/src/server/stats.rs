@@ -133,6 +133,9 @@ pub struct ServeReport {
     /// comma-joined; `"empty"` for an empty stream) — the `--model`
     /// selection surfaces here and in the JSON.
     pub mix: String,
+    /// Non-linearity backend label the run was costed with (`--engine`,
+    /// DESIGN.md §12): `softex`, `vexp`, or `sole`.
+    pub engine: String,
     /// DVFS governor label the run was simulated under (`--governor`).
     pub governor: String,
     /// The watt budget when the governor is `power-cap`.
@@ -174,10 +177,11 @@ pub struct ServeReport {
 impl ServeReport {
     /// An empty report (no requests, unit makespan) for a cluster that
     /// served nothing — e.g. a powered-off power-cap slot.
-    pub fn empty(label: String, governor: String) -> Self {
+    pub fn empty(label: String, engine: String, governor: String) -> Self {
         ServeReport {
             label,
             mix: "empty".to_string(),
+            engine,
             governor,
             power_cap_w: None,
             clusters: 1,
@@ -350,6 +354,7 @@ impl ServeReport {
         let mut obj = report::json::Obj::new()
             .str("label", &self.label)
             .str("mix", &self.mix)
+            .str("engine", &self.engine)
             .str("governor", &self.governor);
         if let Some(cap) = self.power_cap_w {
             obj = obj.f64("power_cap_w", cap);
@@ -417,6 +422,7 @@ mod tests {
         ServeReport {
             label: "test@1x1".into(),
             mix: "ViT-tiny".into(),
+            engine: "softex".into(),
             governor: "pinned-throughput".into(),
             power_cap_w: None,
             clusters: 1,
@@ -579,6 +585,7 @@ mod tests {
         assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
         assert!(j.contains("\"label\":\"test@1x1\""), "{j}");
         assert!(j.contains("\"mix\":\"ViT-tiny\""), "{j}");
+        assert!(j.contains("\"engine\":\"softex\""), "{j}");
         assert!(j.contains("\"governor\":\"pinned-throughput\""), "{j}");
         assert!(j.contains("\"p99_cycles\":10"), "{j}");
         assert!(j.contains("\"ttft_p95_cycles\":"), "{j}");

@@ -16,6 +16,7 @@
 
 use super::arch::{BlockKind, FfnKind, ModelConfig, NormKind};
 use super::trace::Op;
+use crate::coordinator::NonlinEngine;
 
 /// One token-producing phase of a model's execution.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -173,17 +174,62 @@ pub fn lower_node(cfg: &ModelConfig, phase: Phase, node: Node, ops: &mut Vec<Op>
     }
 }
 
+/// [`lower_node`] for a specific non-linearity backend (DESIGN.md
+/// §12). `Softex` and `Vexp` lower every node identically — they
+/// differ only in how `coordinator::op_cost` prices the ops. `Sole`
+/// owns a fused Softmax+LayerNorm unit, so for LayerNorm models the
+/// attention softmax absorbs the norm that opens the FFN sub-block:
+/// [`Node::AttnSoftmax`] emits one [`Op::FusedSoftmaxNorm`] carrying
+/// the norm's element count and [`Node::FfnNorm`] emits nothing —
+/// one fewer phase per layer in the continuous-batching chain.
+/// RMSNorm models are outside the SOLE unit's reach and keep the
+/// unfused lowering.
+pub fn lower_node_for(
+    cfg: &ModelConfig,
+    phase: Phase,
+    node: Node,
+    engine: NonlinEngine,
+    ops: &mut Vec<Op>,
+) {
+    if engine.fuses_attn_norm() && matches!(cfg.norm, NormKind::LayerNorm) {
+        let t = phase.tokens();
+        match node {
+            Node::AttnSoftmax => {
+                ops.push(Op::FusedSoftmaxNorm {
+                    rows: cfg.heads * t,
+                    len: phase.attended(),
+                    norm_n: t * cfg.d_model,
+                });
+                return;
+            }
+            Node::FfnNorm => return,
+            _ => {}
+        }
+    }
+    lower_node(cfg, phase, node, ops);
+}
+
 /// The op sequence of one block layer at a phase.
 pub fn lower_layer(cfg: &ModelConfig, phase: Phase) -> Vec<Op> {
+    lower_layer_for(cfg, phase, NonlinEngine::Softex)
+}
+
+/// [`lower_layer`] for a specific non-linearity backend.
+pub fn lower_layer_for(cfg: &ModelConfig, phase: Phase, engine: NonlinEngine) -> Vec<Op> {
     let mut ops = Vec::new();
     for node in LAYER_NODES {
-        lower_node(cfg, phase, node, &mut ops);
+        lower_node_for(cfg, phase, node, engine, &mut ops);
     }
     ops
 }
 
 /// The full-stack op trace of one phase (the layer repeated).
 pub fn trace_phase(cfg: &ModelConfig, phase: Phase) -> Vec<Op> {
+    trace_phase_for(cfg, phase, NonlinEngine::Softex)
+}
+
+/// [`trace_phase`] for a specific non-linearity backend.
+pub fn trace_phase_for(cfg: &ModelConfig, phase: Phase, engine: NonlinEngine) -> Vec<Op> {
     if let Phase::Decode { ctx } = phase {
         assert!(ctx > 0, "decode step needs a non-empty context");
         assert_eq!(
@@ -193,7 +239,7 @@ pub fn trace_phase(cfg: &ModelConfig, phase: Phase) -> Vec<Op> {
             cfg.name
         );
     }
-    let layer = lower_layer(cfg, phase);
+    let layer = lower_layer_for(cfg, phase, engine);
     let mut ops = Vec::with_capacity(layer.len() * cfg.layers);
     for _ in 0..cfg.layers {
         ops.extend_from_slice(&layer);
@@ -274,6 +320,50 @@ mod tests {
     #[should_panic(expected = "only causal decoders")]
     fn encoders_reject_decode_phases() {
         trace_phase(&ModelConfig::vit_base(), Phase::Decode { ctx: 10 });
+    }
+
+    #[test]
+    fn sole_fuses_softmax_with_the_ffn_norm_for_layernorm_models() {
+        let v = ModelConfig::vit_base();
+        let p = Phase::Prompt { seq: v.seq };
+        let base = lower_layer(&v, p);
+        let sole = lower_layer_for(&v, p, NonlinEngine::Sole);
+        // one op shorter: AttnSoftmax + FfnNorm collapsed into one
+        assert_eq!(sole.len(), base.len() - 1);
+        assert_eq!(
+            sole.iter()
+                .filter(|o| matches!(o, Op::FusedSoftmaxNorm { .. }))
+                .count(),
+            1
+        );
+        assert!(!sole.iter().any(|o| matches!(o, Op::Softmax { .. })));
+        // only the AttnNorm LayerNorm survives unfused
+        let norms = sole.iter().filter(|o| matches!(o, Op::LayerNorm { .. })).count();
+        assert_eq!(norms, 1);
+        // the fused op carries both halves' dimensions
+        let fused = sole
+            .iter()
+            .find_map(|o| match *o {
+                Op::FusedSoftmaxNorm { rows, len, norm_n } => Some((rows, len, norm_n)),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(fused, (v.heads * v.seq, v.seq, v.seq * v.d_model));
+    }
+
+    #[test]
+    fn sole_keeps_rmsnorm_models_unfused() {
+        let l = ModelConfig::llama_edge();
+        let p = Phase::Prompt { seq: 16 };
+        assert_eq!(lower_layer_for(&l, p, NonlinEngine::Sole), lower_layer(&l, p));
+    }
+
+    #[test]
+    fn vexp_lowering_is_identical_to_softex() {
+        for cfg in [ModelConfig::vit_base(), ModelConfig::llama_edge()] {
+            let p = Phase::Prompt { seq: 16 };
+            assert_eq!(lower_layer_for(&cfg, p, NonlinEngine::Vexp), lower_layer(&cfg, p));
+        }
     }
 
     #[test]

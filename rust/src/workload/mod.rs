@@ -20,4 +20,6 @@ pub mod trace;
 
 pub use arch::{BlockKind, FfnKind, ModelConfig, NormKind};
 pub use graph::Phase;
-pub use trace::{trace_decode_step, trace_layer, trace_model, Op};
+pub use trace::{
+    trace_decode_step, trace_decode_step_for, trace_layer, trace_model, trace_model_for, Op,
+};

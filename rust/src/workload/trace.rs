@@ -9,6 +9,7 @@
 
 use super::arch::ModelConfig;
 use super::graph::{self, Phase, ATTENTION_CORE_NODES};
+use crate::coordinator::NonlinEngine;
 
 /// One schedulable kernel.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -34,6 +35,13 @@ pub enum Op {
     Residual { n: usize },
     /// Bias add over n elements.
     Bias { n: usize },
+    /// SOLE-style fused attention-softmax + LayerNorm (arXiv
+    /// 2510.17189, DESIGN.md §12): the row-wise softmax over `rows`
+    /// rows of `len` scores and the `norm_n`-element norm that opens
+    /// the FFN sub-block collapse into one phase on the fused unit.
+    /// Only emitted when lowering under `NonlinEngine::Sole` for
+    /// LayerNorm models (`workload::graph::trace_phase_for`).
+    FusedSoftmaxNorm { rows: usize, len: usize, norm_n: usize },
     /// DMA-stream `bytes` of spilled KV cache between L2 and the TCDM
     /// (`sim::kv`). A bandwidth cost, not compute: contributes zero OPs
     /// and occupies no accelerator. Never emitted by the model tracers;
@@ -57,6 +65,7 @@ impl Op {
         match *self {
             Op::MatMul { .. } => 2 * self.macs(),
             Op::Softmax { rows, len } | Op::RmsNorm { rows, len } => (rows * len) as u64,
+            Op::FusedSoftmaxNorm { rows, len, norm_n } => (rows * len + norm_n) as u64,
             Op::Gelu { n }
             | Op::Silu { n }
             | Op::LayerNorm { n }
@@ -85,6 +94,19 @@ pub fn trace_model(cfg: &ModelConfig) -> Vec<Op> {
 /// prompt has been ingested with [`trace_model`] at `seq = prompt_len`.
 pub fn trace_decode_step(cfg: &ModelConfig, ctx: usize) -> Vec<Op> {
     graph::trace_phase(cfg, Phase::Decode { ctx })
+}
+
+/// [`trace_model`] lowered for a specific non-linearity backend
+/// (DESIGN.md §12): `Softex`/`Vexp` lower identically (they differ only
+/// in costing); `Sole` fuses the attention softmax with the following
+/// LayerNorm.
+pub fn trace_model_for(cfg: &ModelConfig, engine: NonlinEngine) -> Vec<Op> {
+    graph::trace_phase_for(cfg, Phase::Prompt { seq: cfg.seq }, engine)
+}
+
+/// [`trace_decode_step`] lowered for a specific non-linearity backend.
+pub fn trace_decode_step_for(cfg: &ModelConfig, ctx: usize, engine: NonlinEngine) -> Vec<Op> {
+    graph::trace_phase_for(cfg, Phase::Decode { ctx }, engine)
 }
 
 /// Only the attention core (QK^T -> softmax -> PV), the workload of the
@@ -210,6 +232,26 @@ mod tests {
         assert_eq!(Op::Silu { n: 100 }.ops(), 100);
         assert_eq!(Op::RmsNorm { rows: 2, len: 32 }.ops(), 64);
         assert_eq!(Op::LayerNorm { n: 64 }.ops(), 64);
+    }
+
+    #[test]
+    fn fused_softmax_norm_counts_both_halves() {
+        let fused = Op::FusedSoftmaxNorm { rows: 4, len: 8, norm_n: 64 };
+        assert_eq!(fused.ops(), 32 + 64);
+        assert_eq!(fused.macs(), 0);
+    }
+
+    #[test]
+    fn engine_tracers_only_diverge_under_sole() {
+        let v = ModelConfig::vit_base();
+        assert_eq!(trace_model_for(&v, NonlinEngine::Softex), trace_model(&v));
+        assert_eq!(trace_model_for(&v, NonlinEngine::Vexp), trace_model(&v));
+        let sole = trace_model_for(&v, NonlinEngine::Sole);
+        assert_ne!(sole, trace_model(&v));
+        assert!(sole.iter().any(|o| matches!(o, Op::FusedSoftmaxNorm { .. })));
+        // the two halves' op counts are conserved by the fusion
+        let total = |ops: &[Op]| -> u64 { ops.iter().map(|o| o.ops()).sum() };
+        assert_eq!(total(&sole), total(&trace_model(&v)));
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! CLI boundary tests: malformed flags must produce a usage error and
-//! a nonzero exit, never a panic backtrace; the governor flags must
-//! round-trip through the JSON report.
+//! a nonzero exit, never a panic backtrace; the governor and engine
+//! flags must round-trip through the JSON report.
 
 use std::process::{Command, Output};
 
@@ -124,6 +124,84 @@ fn governor_flags_reach_the_json_report() {
     let json = stdout(&out);
     assert!(json.contains("\"governor\":\"power-cap\""), "{json}");
     assert!(json.contains("\"power_cap_w\":0.25"), "{json}");
+}
+
+#[test]
+fn engine_flag_reaches_the_json_report() {
+    for engine in ["softex", "vexp", "sole"] {
+        let out = softex(&[
+            "serve",
+            "--requests",
+            "6",
+            "--mesh",
+            "1",
+            "--gap",
+            "2000000",
+            "--engine",
+            engine,
+            "--json",
+        ]);
+        assert!(out.status.success(), "--engine {engine}: {}", stderr(&out));
+        let json = stdout(&out);
+        assert!(json.contains(&format!("\"engine\":\"{engine}\"")), "{json}");
+    }
+    // the default backend is the paper datapath
+    let out = softex(&["fleet", "--clusters", "2", "--requests", "6", "--json"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("\"engine\":\"softex\""), "{}", stdout(&out));
+}
+
+#[test]
+fn engine_misuse_is_a_usage_error() {
+    // unknown backend name: list the valid ones, never panic
+    let out = softex(&["serve", "--requests", "5", "--engine", "turbo"]);
+    assert_eq!(out.status.code(), Some(2));
+    let err = stderr(&out);
+    assert!(err.contains("unknown engine"), "{err}");
+    assert!(
+        err.contains("softex") && err.contains("vexp") && err.contains("sole"),
+        "{err}"
+    );
+    assert!(err.contains("usage:"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+
+    let out = softex(&["fleet", "--requests", "5", "--engine", "nope"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr(&out).contains("unknown engine"), "{}", stderr(&out));
+
+    // vexp runs nonlinearities on the cores outside the rated budget,
+    // so it cannot be power-capped — usage error, not an assert
+    let out = softex(&[
+        "fleet",
+        "--requests",
+        "5",
+        "--engine",
+        "vexp",
+        "--power-cap-w",
+        "2.0",
+    ]);
+    assert_eq!(out.status.code(), Some(2));
+    let err = stderr(&out);
+    assert!(err.contains("--engine vexp"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+
+    // sole stays within the rated budget and may be capped
+    let out = softex(&[
+        "serve",
+        "--requests",
+        "5",
+        "--mesh",
+        "1",
+        "--gap",
+        "2000000",
+        "--engine",
+        "sole",
+        "--power-cap-w",
+        "0.25",
+        "--json",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("\"engine\":\"sole\""), "{}", stdout(&out));
 }
 
 #[test]

@@ -1,0 +1,206 @@
+//! Cross-engine backend matrix (DESIGN.md §12): every non-linearity
+//! backend must be bit-deterministic under every policy/governor cell
+//! and thread count, `softex` must reproduce the default reports
+//! byte-identically, and the substitution model's headline
+//! inequalities must hold — vexp strictly slower than the dedicated
+//! unit on softmax-heavy mixes, sole strictly cheaper on the
+//! LayerNorm-attributed energy of encoder presets.
+
+use softex::coordinator::{op_cost, ExecConfig, NonlinEngine};
+use softex::energy::governor::{part_energies, GovernorPolicy, OpId};
+use softex::energy::ActivityMode;
+use softex::fleet::{DispatchPolicy, Fleet, FleetConfig};
+use softex::server::{
+    ArrivalProcess, BatchScheduler, CostModel, Policy, Request, RequestGen, ServerConfig,
+    WorkloadMix,
+};
+use softex::workload::{trace_model_for, ModelConfig, Op};
+
+fn stream(seed: u64, n: usize, mean_gap: f64) -> Vec<Request> {
+    RequestGen::new(
+        seed,
+        ArrivalProcess::Poisson { mean_gap },
+        WorkloadMix::edge_default(),
+    )
+    .generate(n)
+}
+
+#[test]
+fn cross_engine_determinism_matrix() {
+    // 3 engines x 2 policies x 2 governors: the JSON report is
+    // bit-identical across reruns of the same seed in every cell
+    for engine in NonlinEngine::ALL {
+        for policy in [Policy::Fifo, Policy::ContinuousBatching] {
+            for gov in [GovernorPolicy::PinnedThroughput, GovernorPolicy::RaceToIdle] {
+                let run = || {
+                    let mut cfg = ServerConfig::new(1, policy);
+                    cfg.seed = 0xE16;
+                    cfg.governor = gov;
+                    cfg.exec = ExecConfig::for_engine(engine);
+                    BatchScheduler::new(cfg)
+                        .run(&stream(0xE16, 60, 8.0e5))
+                        .to_json()
+                };
+                let (a, b) = (run(), run());
+                assert_eq!(a, b, "{engine:?}/{policy:?}/{gov:?}");
+                assert!(
+                    a.contains(&format!("\"engine\":\"{}\"", engine.label())),
+                    "{a}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fleet_reports_are_thread_count_invariant_for_every_engine() {
+    let reqs = stream(0xF7, 90, 5.0e5);
+    for engine in NonlinEngine::ALL {
+        let json_for = |threads: usize| {
+            let mut cfg = FleetConfig::new(4, DispatchPolicy::PowerOfTwoChoices);
+            cfg.threads = threads;
+            cfg.cluster.exec = ExecConfig::for_engine(engine);
+            Fleet::new(cfg).run(&reqs).to_json()
+        };
+        let one = json_for(1);
+        assert_eq!(one, json_for(2), "{engine:?}");
+        assert_eq!(one, json_for(8), "{engine:?}");
+        assert!(
+            one.contains(&format!("\"engine\":\"{}\"", engine.label())),
+            "{one}"
+        );
+    }
+}
+
+#[test]
+fn softex_engine_is_byte_identical_to_the_default_report() {
+    // `--engine softex` must not perturb a single byte of the reports
+    // the determinism suite pins for the default configuration
+    let reqs = stream(0xBEEF, 80, 1.0e6);
+    for policy in [Policy::Fifo, Policy::ContinuousBatching] {
+        let mut default_cfg = ServerConfig::new(2, policy);
+        default_cfg.seed = 7;
+        let mut engine_cfg = default_cfg.clone();
+        engine_cfg.exec = ExecConfig::for_engine(NonlinEngine::Softex);
+        let a = BatchScheduler::new(default_cfg).run(&reqs).to_json();
+        let b = BatchScheduler::new(engine_cfg).run(&reqs).to_json();
+        assert_eq!(a, b, "{policy:?}");
+    }
+}
+
+#[test]
+fn vexp_is_strictly_slower_on_softmax_heavy_mixes() {
+    // without the dedicated unit the cores pay for every exp kernel:
+    // mean service time must strictly rise on attention-dominated
+    // single-model mixes and on the serving defaults
+    for name in ["mobilebert", "vit", "gpt2-xl"] {
+        let mix = WorkloadMix::for_model(name).expect("preset mix");
+        let mean = |e: NonlinEngine| -> f64 {
+            CostModel::new(ExecConfig::for_engine(e)).mean_service_cycles(&mix)
+        };
+        let (softex, vexp) = (mean(NonlinEngine::Softex), mean(NonlinEngine::Vexp));
+        assert!(vexp > softex, "{name}: vexp {vexp} softex {softex}");
+    }
+    let mix = WorkloadMix::edge_default();
+    let mean = |e: NonlinEngine| -> f64 {
+        CostModel::new(ExecConfig::for_engine(e)).mean_service_cycles(&mix)
+    };
+    assert!(mean(NonlinEngine::Vexp) > mean(NonlinEngine::Softex));
+}
+
+/// Throughput-OP energy attributed to normalization under a backend:
+/// standalone LayerNorm kernels, plus — under sole — the fused unit's
+/// norm drain (the `SoleFusedNorm` part of the fused op).
+fn norm_energy_j(model: &ModelConfig, engine: NonlinEngine) -> f64 {
+    let cfg = ExecConfig::for_engine(engine);
+    let mut e = 0.0;
+    for op in trace_model_for(model, engine) {
+        let cost = op_cost(&cfg, &op);
+        match op {
+            Op::LayerNorm { .. } => e += part_energies(&cost.parts)[OpId::Throughput.idx()],
+            Op::FusedSoftmaxNorm { .. } => {
+                let norm_parts: Vec<(ActivityMode, u64)> = cost
+                    .parts
+                    .iter()
+                    .copied()
+                    .filter(|(m, _)| *m == ActivityMode::SoleFusedNorm)
+                    .collect();
+                e += part_energies(&norm_parts)[OpId::Throughput.idx()];
+            }
+            _ => {}
+        }
+    }
+    e
+}
+
+#[test]
+fn sole_cuts_layernorm_energy_on_encoder_presets() {
+    for model in [
+        ModelConfig::vit_base(),
+        ModelConfig::mobilebert(512),
+        ModelConfig::whisper_tiny_enc(),
+    ] {
+        let softex = norm_energy_j(&model, NonlinEngine::Softex);
+        let sole = norm_energy_j(&model, NonlinEngine::Sole);
+        assert!(softex > 0.0, "{}", model.name);
+        assert!(
+            sole < softex,
+            "{}: sole {sole} softex {softex}",
+            model.name
+        );
+    }
+}
+
+#[test]
+fn sole_fuses_only_where_a_layernorm_exists() {
+    // RMSNorm models lower identically under sole: nothing to fuse
+    let llama = ModelConfig::llama_edge();
+    assert_eq!(
+        trace_model_for(&llama, NonlinEngine::Sole),
+        trace_model_for(&llama, NonlinEngine::Softex),
+    );
+    // and an RMSNorm mix costs the same under sole as under softex
+    let mix = WorkloadMix::for_model("llama-edge").expect("preset mix");
+    let mean = |e: NonlinEngine| -> f64 {
+        CostModel::new(ExecConfig::for_engine(e)).mean_service_cycles(&mix)
+    };
+    assert_eq!(mean(NonlinEngine::Sole), mean(NonlinEngine::Softex));
+}
+
+#[test]
+fn sole_speeds_up_layernorm_models_end_to_end() {
+    // fusing the softmax with the FFN norm must shorten encoder
+    // service time, and decode-step costing must follow: the fleet's
+    // SLO backlog predictor and the scheduler share this cost model
+    for name in ["vit", "mobilebert", "gpt2-xl"] {
+        let mix = WorkloadMix::for_model(name).expect("preset mix");
+        let mean = |e: NonlinEngine| -> f64 {
+            CostModel::new(ExecConfig::for_engine(e)).mean_service_cycles(&mix)
+        };
+        let (softex, sole) = (mean(NonlinEngine::Softex), mean(NonlinEngine::Sole));
+        assert!(sole < softex, "{name}: sole {sole} softex {softex}");
+    }
+}
+
+#[test]
+#[should_panic(expected = "power-cap governors")]
+fn vexp_power_cap_fleet_is_rejected() {
+    let mut cfg = FleetConfig::new(2, DispatchPolicy::RoundRobin);
+    cfg.cluster.exec = ExecConfig::for_engine(NonlinEngine::Vexp);
+    cfg.governor = GovernorPolicy::PowerCap { watts: 2.0 };
+    let _ = Fleet::new(cfg);
+}
+
+#[test]
+fn sole_power_cap_fleet_is_allowed() {
+    // sole stays within the SoftEx slot's worst-case rating, so the
+    // cap's static allocation remains sound
+    let reqs = stream(0x50, 40, 1.0e6);
+    let mut cfg = FleetConfig::new(4, DispatchPolicy::PowerOfTwoChoices);
+    cfg.cluster.exec = ExecConfig::for_engine(NonlinEngine::Sole);
+    cfg.governor = GovernorPolicy::PowerCap { watts: 1.5 };
+    let rep = Fleet::new(cfg).run(&reqs);
+    let cap_w = 1.5 * 1.0001; // float slack
+    assert!(rep.avg_power_w() <= cap_w, "{}", rep.avg_power_w());
+    assert!(rep.to_json().contains("\"engine\":\"sole\""));
+}
