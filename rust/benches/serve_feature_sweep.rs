@@ -1,0 +1,269 @@
+//! Modern-serving feature sweep (DESIGN.md §13): simulated serving
+//! throughput and tail latency across prefix-share x prefill-chunk x
+//! draft-length, plus three self-asserting headline experiments:
+//!
+//! * shared-prefix KV reuse lifts tokens/sec >= 1.3x at
+//!   `--prefix-share 0.5` on an overloaded llama-edge stream;
+//! * chunked prefill cuts the long-prompt p99 time-between-tokens
+//!   >= 2x at rho >= 0.5 on a whisper + llama mix;
+//! * speculative decoding helps exactly when the acceptance rate
+//!   clears the draft/verify break-even — high alpha gains, low alpha
+//!   loses, and token counts are conserved either way.
+//!
+//! Throughput here is *simulated* tokens per simulated wall second
+//! (`tokens_served / wall_seconds`), not harness wall-clock: the bench
+//! measures what the features do to the served timeline, and
+//! `.claude/skills/verify/xval_serving.py` replays the arithmetic.
+//!
+//! Writes `BENCH_serve.json` at the repository root — CI regenerates
+//! it on every push (see `.github/workflows/ci.yml`).
+//!
+//! Run: cargo bench --bench serve_feature_sweep [-- --quick]
+
+use std::time::Instant;
+
+use softex::coordinator::ExecConfig;
+use softex::report::json;
+use softex::server::ServeReport;
+use softex::softex::phys::OP_THROUGHPUT;
+use softex::server::{
+    ArrivalProcess, BatchScheduler, CostModel, Policy, RequestClass, RequestGen, ServerConfig,
+    ServingFeatures, WorkloadMix,
+};
+
+/// Simulated tokens per simulated second of one run.
+fn tokens_per_sec(rep: &ServeReport) -> f64 {
+    rep.tokens_served() as f64 / rep.wall_seconds()
+}
+
+/// Run `mix` at offered load `rho` on one continuous-batching cluster
+/// with the given features.
+fn run(mix: &WorkloadMix, n: usize, rho: f64, features: ServingFeatures) -> ServeReport {
+    let mean_service = CostModel::with_features(
+        ExecConfig::paper_accelerated(),
+        Default::default(),
+        features.clone(),
+    )
+    .mean_service_cycles(mix);
+    let reqs = RequestGen::new(
+        0x5EED,
+        ArrivalProcess::Poisson { mean_gap: mean_service / rho },
+        mix.clone(),
+    )
+    .generate(n);
+    let mut cfg = ServerConfig::new(1, Policy::ContinuousBatching);
+    cfg.features = features;
+    BatchScheduler::new(cfg).run(&reqs)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 80 } else { 240 };
+    let t0 = Instant::now();
+
+    // --- headline 1: shared-prefix KV reuse. An overloaded (rho 1.5)
+    // single-class llama-edge stream is service-bound, so every prompt
+    // cycle a cache hit skips shortens the makespan directly.
+    let llama = WorkloadMix::single(RequestClass::LlamaEdge { prompt: 128, decode: 8 });
+    let base = run(&llama, n, 1.5, ServingFeatures::default());
+    let shared = run(
+        &llama,
+        n,
+        1.5,
+        ServingFeatures { prefix_share: 0.5, ..Default::default() },
+    );
+    assert_eq!(
+        base.tokens_served(),
+        shared.tokens_served(),
+        "prefix reuse must not change how many tokens are served"
+    );
+    let prefix_stats = shared.prefix.as_ref().expect("prefix stats reported");
+    let prefix_speedup = tokens_per_sec(&shared) / tokens_per_sec(&base);
+    println!(
+        "prefix-share 0.5 (llama-edge/128+8, rho 1.5): {:.0} -> {:.0} tok/s ({:.2}x), \
+         hit rate {:.0}%",
+        tokens_per_sec(&base),
+        tokens_per_sec(&shared),
+        prefix_speedup,
+        prefix_stats.hit_rate() * 100.0
+    );
+    assert!(
+        prefix_speedup >= 1.3,
+        "prefix-share 0.5 must lift throughput >= 1.3x, got {prefix_speedup:.3}x"
+    );
+    let headline_prefix = json::Obj::new()
+        .str("workload", "llama-edge/128+8 cont-batch rho=1.5")
+        .f64("prefix_share", 0.5)
+        .u64("prefix_len", 96)
+        .f64("tokens_per_sec_off", tokens_per_sec(&base))
+        .f64("tokens_per_sec_on", tokens_per_sec(&shared))
+        .f64("speedup", prefix_speedup)
+        .f64("prefix_hit_rate", prefix_stats.hit_rate())
+        .finish();
+
+    // --- headline 2: chunked prefill. Whisper's 1500-token prompts
+    // head-of-line-block llama decode steps under continuous batching;
+    // 64-token chunks let decode interleave between chunks.
+    let long_mix = WorkloadMix::new(vec![
+        (RequestClass::WhisperTinyEnc, 0.5),
+        (RequestClass::LlamaEdge { prompt: 128, decode: 16 }, 0.5),
+    ]);
+    let mut chunk_cells = Vec::new();
+    let mut chunk_improvement_at_low_rho = 0.0;
+    for rho in [0.5, 0.7] {
+        let mono = run(&long_mix, n, rho, ServingFeatures::default());
+        let chunked = run(
+            &long_mix,
+            n,
+            rho,
+            ServingFeatures { prefill_chunk: 64, ..Default::default() },
+        );
+        let improvement = mono.tbt_p99() as f64 / chunked.tbt_p99().max(1) as f64;
+        println!(
+            "prefill-chunk 64 (whisper+llama, rho {rho}): p99 TBT {} -> {} cycles ({:.1}x), \
+             {} chunks",
+            mono.tbt_p99(),
+            chunked.tbt_p99(),
+            improvement,
+            chunked.prefill_chunks.unwrap_or(0)
+        );
+        assert!(
+            improvement >= 2.0,
+            "chunked prefill must cut long-prompt p99 TBT >= 2x at rho {rho}, \
+             got {improvement:.2}x"
+        );
+        if rho == 0.5 {
+            chunk_improvement_at_low_rho = improvement;
+        }
+        chunk_cells.push(
+            json::Obj::new()
+                .f64("rho", rho)
+                .u64("prefill_chunk", 64)
+                .u64("p99_tbt_off_cycles", mono.tbt_p99())
+                .u64("p99_tbt_on_cycles", chunked.tbt_p99())
+                .f64("improvement", improvement)
+                .u64("prefill_chunks", chunked.prefill_chunks.unwrap_or(0))
+                .finish(),
+        );
+    }
+    let headline_chunk = json::Obj::new()
+        .str("workload", "whisper+llama cont-batch")
+        .f64("p99_tbt_improvement_at_rho_0_5", chunk_improvement_at_low_rho)
+        .raw("cells", &json::array(chunk_cells))
+        .finish();
+
+    // --- headline 3: speculative decoding on a decode-heavy stream.
+    // At k = 4 the break-even acceptance sits near E[a]+1 = 3.9; alpha
+    // 0.9 clears it, alpha 0.3 does not, and both conserve tokens.
+    let decode_heavy = WorkloadMix::single(RequestClass::LlamaEdge { prompt: 32, decode: 64 });
+    let spec_base = run(&decode_heavy, n, 1.2, ServingFeatures::default());
+    let mut spec_cells = Vec::new();
+    for accept in [0.3, 0.75, 0.9] {
+        let rep = run(
+            &decode_heavy,
+            n,
+            1.2,
+            ServingFeatures { speculate: 4, spec_accept: accept, ..Default::default() },
+        );
+        assert_eq!(
+            rep.tokens_served(),
+            spec_base.tokens_served(),
+            "speculation must conserve the served token count (alpha {accept})"
+        );
+        let s = rep.spec.as_ref().expect("speculation stats reported");
+        let gain = tokens_per_sec(&rep) / tokens_per_sec(&spec_base);
+        println!(
+            "speculate 4 @ alpha {accept} (llama-edge/32+64, rho 1.2): {:.2}x tok/s, \
+             accept {:.0}%, class speedup {:.2}x",
+            gain,
+            s.accept_rate() * 100.0,
+            s.speedup()
+        );
+        // throughput moves with the class-level speculation speedup:
+        // above break-even both exceed 1, below both fall short
+        if s.speedup() > 1.0 {
+            assert!(gain > 1.0, "alpha {accept}: class speedup {} but tok/s {gain}", s.speedup());
+        } else {
+            assert!(gain < 1.0, "alpha {accept}: class speedup {} but tok/s {gain}", s.speedup());
+        }
+        spec_cells.push(
+            json::Obj::new()
+                .u64("speculate", 4)
+                .f64("spec_accept", accept)
+                .f64("accept_rate", s.accept_rate())
+                .f64("class_speedup", s.speedup())
+                .f64("tokens_per_sec_gain", gain)
+                .finish(),
+        );
+    }
+    // the profitable corner is the one the JSON headline quotes
+    let headline_spec = json::Obj::new()
+        .str("workload", "llama-edge/32+64 cont-batch rho=1.2")
+        .raw("cells", &json::array(spec_cells))
+        .finish();
+
+    // --- full grid: prefix-share x prefill-chunk x draft length on the
+    // mixed stream, one cell each.
+    let grid_mix = WorkloadMix::new(vec![
+        (RequestClass::LlamaEdge { prompt: 128, decode: 16 }, 0.6),
+        (RequestClass::WhisperTinyEnc, 0.2),
+        (RequestClass::Gpt2Xl { prompt: 128, decode: 16 }, 0.2),
+    ]);
+    let grid_n = if quick { 60 } else { 160 };
+    let mut cells = Vec::new();
+    println!("\ngrid ({grid_n} requests/cell, rho 0.9, llama+whisper+gpt2 mix):");
+    println!(
+        "  {:>6} {:>6} {:>5} {:>10} {:>10} {:>10}",
+        "share", "chunk", "k", "tok/s", "p99 ms", "ttft95 ms"
+    );
+    for share in [0.0, 0.5, 1.0] {
+        for chunk in [0usize, 64, 128] {
+            for k in [0usize, 2, 4] {
+                let features = ServingFeatures {
+                    prefix_share: share,
+                    prefill_chunk: chunk,
+                    speculate: k,
+                    spec_accept: 0.9,
+                    ..Default::default()
+                };
+                let rep = run(&grid_mix, grid_n, 0.9, features);
+                let tps = tokens_per_sec(&rep);
+                println!(
+                    "  {:>6} {:>6} {:>5} {:>10.0} {:>10.2} {:>10.2}",
+                    share,
+                    chunk,
+                    k,
+                    tps,
+                    ServeReport::ms(rep.p99(), &OP_THROUGHPUT),
+                    ServeReport::ms(rep.ttft_p95(), &OP_THROUGHPUT)
+                );
+                cells.push(
+                    json::Obj::new()
+                        .f64("prefix_share", share)
+                        .u64("prefill_chunk", chunk as u64)
+                        .u64("speculate", k as u64)
+                        .u64("requests", grid_n as u64)
+                        .f64("tokens_per_sec", tps)
+                        .u64("p99_cycles", rep.p99())
+                        .u64("ttft_p95_cycles", rep.ttft_p95())
+                        .u64("tbt_p99_cycles", rep.tbt_p99())
+                        .finish(),
+                );
+            }
+        }
+    }
+
+    let out = json::Obj::new()
+        .str("bench", "serve_feature_sweep")
+        .u64("schema", 1)
+        .raw("measured", "true")
+        .raw("quick", if quick { "true" } else { "false" })
+        .raw("headline_prefix", &headline_prefix)
+        .raw("headline_chunk", &headline_chunk)
+        .raw("headline_speculation", &headline_spec)
+        .raw("cells", &json::array(cells))
+        .finish();
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    std::fs::write(path, format!("{out}\n")).expect("write BENCH_serve.json");
+    println!("\nwrote {path} (27 grid cells) in {:.2} s total", t0.elapsed().as_secs_f64());
+}

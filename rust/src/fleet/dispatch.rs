@@ -30,6 +30,7 @@
 
 use crate::energy::governor::{ClusterGovernor, OpId};
 use crate::rng::Xoshiro256;
+use crate::server::features;
 use crate::server::{CostModel, Request, RequestClass};
 use crate::sim::{Engine as SimEngine, ResourcePool};
 
@@ -230,18 +231,40 @@ impl Dispatcher {
         }
     }
 
-    /// FIFO-backlog latency prediction (ticks) for admitting `class`
-    /// now, at the target cluster's nominal OP.
+    /// Backlog service estimate for one request at `class` (possibly a
+    /// downgrade of its own), cycles. Requests tagged as sharing a
+    /// cached prefix (DESIGN.md §13) are priced at the optimistic
+    /// *hit* variant: after the first admission warms a cluster's
+    /// prefix cache the cluster skips the cached prompt span, and a
+    /// predictor still charging full prompts would over-shed tagged
+    /// traffic under a tight SLO. With every feature off this is
+    /// exactly `CostModel::service_cycles`.
+    fn predicted_service(&self, r: &Request, class: RequestClass, costs: &mut CostModel) -> u64 {
+        let probe = Request { class, ..*r };
+        if features::prefix_eligible(costs.features(), &probe) {
+            costs.hit_service_cycles(class)
+        } else {
+            costs.service_cycles(class)
+        }
+    }
+
+    /// FIFO-backlog latency prediction (ticks) for admitting `r` as
+    /// `class` now, at the target cluster's nominal OP.
     fn predicted_latency(
         &self,
-        arrival: u64,
+        r: &Request,
         class: RequestClass,
         cluster: usize,
         costs: &mut CostModel,
     ) -> u64 {
-        let service = costs.service_cycles(class);
+        let arrival = r.arrival;
         match self.policy {
             DispatchPolicy::Spray => {
+                // sprayed shards replicate the whole prompt on every
+                // cluster — no prefix cache exists on the gang path,
+                // so the plain (featured) service time is the honest
+                // estimate
+                let service = costs.service_cycles(class);
                 let shard = self.spray_op.ticks(self.shard_cycles(service));
                 (0..self.active)
                     .map(|c| arrival.max(self.backlog.get(c).free_at()) + shard)
@@ -250,6 +273,7 @@ impl Dispatcher {
                     - arrival
             }
             _ => {
+                let service = self.predicted_service(r, class, costs);
                 let ticks = self.nominal[cluster].ticks(service);
                 arrival.max(self.backlog.get(cluster).free_at()) + ticks - arrival
             }
@@ -273,12 +297,12 @@ impl Dispatcher {
             Admission::Open => return self.admitted(r.class, cluster, false),
             Admission::Shed { deadline } | Admission::Downgrade { deadline } => deadline,
         };
-        if self.predicted_latency(r.arrival, r.class, cluster, costs) <= deadline {
+        if self.predicted_latency(r, r.class, cluster, costs) <= deadline {
             return self.admitted(r.class, cluster, false);
         }
         if let Admission::Downgrade { .. } = self.admission {
             if let Some(cheaper) = r.class.downgraded() {
-                if self.predicted_latency(r.arrival, cheaper, cluster, costs) <= deadline {
+                if self.predicted_latency(r, cheaper, cluster, costs) <= deadline {
                     return self.admitted(cheaper, cluster, true);
                 }
             }
@@ -325,7 +349,11 @@ impl Dispatcher {
             let outcome = self.admit(r, cluster, costs);
             match outcome {
                 Outcome::Assigned { cluster, class, .. } => {
-                    let ticks = self.nominal[cluster].ticks(costs.service_cycles(class));
+                    // the horizon grows by the same hit-optimistic
+                    // estimate the SLO prediction used, so the two
+                    // never disagree about a tagged request's backlog
+                    let service = self.predicted_service(r, class, costs);
+                    let ticks = self.nominal[cluster].ticks(service);
                     self.backlog.get_mut(cluster).acquire(r.arrival, ticks);
                     streams[cluster].push(Request {
                         id: r.id,
@@ -612,6 +640,50 @@ mod tests {
         assert_eq!(a.outcomes, b.outcomes);
         assert!(a.outcomes.iter().all(|o| matches!(o, Outcome::Assigned { .. })));
         assert_eq!(a.streams.iter().map(Vec::len).sum::<usize>(), reqs.len());
+    }
+
+    #[test]
+    fn slo_predictor_is_hit_optimistic_for_tagged_prefixes() {
+        use crate::server::ServingFeatures;
+        use crate::sim::KvConfig;
+        let class = RequestClass::LlamaEdge { prompt: 128, decode: 4 };
+        let f = ServingFeatures { prefix_share: 1.0, ..Default::default() };
+        let mut cm =
+            CostModel::with_features(ExecConfig::paper_accelerated(), KvConfig::default(), f);
+        let hit = cm.hit_service_cycles(class);
+        let miss = cm.service_cycles(class);
+        assert!(hit < miss);
+        // a deadline only the hit variant meets: the featured
+        // predictor admits every tagged request, the plain one sheds
+        let deadline = (hit + miss) / 2;
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| Request {
+                id: i,
+                class,
+                arrival: i * 100 * miss,
+            })
+            .collect();
+        let mut d = dispatcher(
+            DispatchPolicy::JoinShortestQueue,
+            Admission::Shed { deadline },
+            2,
+            1,
+            0.0,
+        );
+        let plan = d.dispatch(&reqs, &mut cm);
+        assert!(plan
+            .outcomes
+            .iter()
+            .all(|o| matches!(o, Outcome::Assigned { .. })));
+        let mut d = dispatcher(
+            DispatchPolicy::JoinShortestQueue,
+            Admission::Shed { deadline },
+            2,
+            1,
+            0.0,
+        );
+        let plan = d.dispatch(&reqs, &mut costs());
+        assert!(plan.outcomes.iter().all(|o| *o == Outcome::Shed));
     }
 
     #[test]

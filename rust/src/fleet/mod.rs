@@ -45,7 +45,8 @@ use crate::mesh::montecarlo::{mesh_edge_for, mesh_slowdown};
 use crate::server::scheduler::place_tokens;
 use crate::server::stats::queue_depths;
 use crate::server::{
-    mix_label, BatchScheduler, CostModel, Latencies, Policy, Request, ServeReport, ServerConfig,
+    mix_label, BatchScheduler, CostModel, Latencies, Policy, PrefixStats, Request, ServeReport,
+    ServerConfig, SpecStats,
 };
 use crate::sim::{Engine as SimEngine, Resource};
 
@@ -132,7 +133,15 @@ pub struct Fleet {
 
 impl Fleet {
     pub fn new(cfg: FleetConfig) -> Self {
-        let costs = CostModel::with_kv(cfg.cluster.exec, cfg.cluster.kv);
+        // the dispatcher's backlog predictor prices the same featured
+        // cost model the clusters run (chunked prompts, speculative
+        // decode rounds, hit-optimistic prefix variants) — a plain
+        // model here would systematically mis-predict SLO misses
+        let costs = CostModel::with_features(
+            cfg.cluster.exec,
+            cfg.cluster.kv,
+            cfg.cluster.features.clone(),
+        );
         // per-slot policies are pinned/race (never power-cap), so the
         // scheduler-level engine-set guard would not fire — enforce the
         // cap's rating precondition here too (vexp is cores-resident
@@ -350,6 +359,14 @@ impl Fleet {
             mean_queue_depth: mean_depth,
             max_queue_depth: max_depth,
             kv_spill_bytes: spill,
+            // spray replicates every whole prompt on every cluster:
+            // no prefix cache exists on the gang path, and the shard
+            // timeline already absorbs chunk/speculation effects
+            // through its featured service cycles, so the per-request
+            // feature counters are not broken out here
+            prefix: None,
+            prefill_chunks: None,
+            spec: None,
         };
         let reports = (0..self.cfg.clusters)
             .map(|c| {
@@ -404,9 +421,24 @@ impl Fleet {
         let last_arrival = requests.last().map(|r| r.arrival).unwrap_or(0);
         let energy_j: f64 = sim.reports.iter().map(|r| r.energy_j).sum();
         let mut op_cycles = [0u64; 2];
+        // serving-feature counters (DESIGN.md §13) aggregate over the
+        // clusters that reported them; all-None stays None so default
+        // fleet JSON is byte-identical to the pre-feature layout
+        let mut prefix: Option<PrefixStats> = None;
+        let mut prefill_chunks: Option<u64> = None;
+        let mut spec: Option<SpecStats> = None;
         for r in &sim.reports {
             op_cycles[0] += r.op_cycles[0];
             op_cycles[1] += r.op_cycles[1];
+            if let Some(p) = &r.prefix {
+                prefix.get_or_insert_with(PrefixStats::default).add(p);
+            }
+            if let Some(c) = r.prefill_chunks {
+                *prefill_chunks.get_or_insert(0) += c;
+            }
+            if let Some(s) = &r.spec {
+                spec.get_or_insert_with(SpecStats::default).add(s);
+            }
         }
         FleetReport {
             label: format!("{}@{}", self.cfg.policy.label(), self.cfg.clusters),
@@ -429,6 +461,9 @@ impl Fleet {
             power_cap_w: self.cfg.governor.power_cap_w(),
             energy_j,
             op_cycles,
+            prefix,
+            prefill_chunks,
+            spec,
             per_cluster: sim.reports,
         }
     }
@@ -531,6 +566,55 @@ mod tests {
             assert!(rep.tbt_p50() > 0, "{}", rep.label);
             // a request's first token never lands after its completion
             assert!(rep.ttft_p99() <= rep.p99(), "{}", rep.label);
+        }
+    }
+
+    #[test]
+    fn feature_counters_aggregate_across_clusters() {
+        use crate::server::{RequestClass, ServingFeatures};
+        let mix = WorkloadMix::single(RequestClass::LlamaEdge { prompt: 128, decode: 8 });
+        let reqs =
+            RequestGen::new(17, ArrivalProcess::Poisson { mean_gap: 2.0e5 }, mix).generate(60);
+        let mut cfg = FleetConfig::new(3, DispatchPolicy::RoundRobin);
+        cfg.cluster.features = ServingFeatures {
+            prefix_share: 1.0,
+            speculate: 4,
+            spec_accept: 0.9,
+            ..Default::default()
+        };
+        let rep = Fleet::new(cfg).run(&reqs);
+        let p = rep.prefix.expect("aggregated prefix stats");
+        assert_eq!(p.hits + p.misses, 60);
+        // round-robin feeds all three clusters; each warms its own
+        // cache with exactly one miss
+        assert_eq!(p.misses, 3);
+        let s = rep.spec.expect("aggregated speculation stats");
+        assert!(s.accepted <= s.drafted);
+        assert!(s.speedup() > 1.0, "alpha 0.9 at k=4 must profit: {}", s.speedup());
+        assert!(rep.prefill_chunks.is_none(), "chunking was off");
+        // the global counters are exactly the per-cluster sums
+        let hits: u64 = rep
+            .per_cluster
+            .iter()
+            .filter_map(|r| r.prefix.map(|p| p.hits))
+            .sum();
+        assert_eq!(hits, p.hits);
+        // and the JSON carries them
+        let json = rep.to_json();
+        assert!(json.contains("\"prefix_hit_rate\":"), "{json}");
+        assert!(json.contains("\"spec_speedup\":"), "{json}");
+    }
+
+    #[test]
+    fn feature_off_fleet_json_is_unchanged() {
+        use crate::server::ServingFeatures;
+        let reqs = stream(19, 80, 4.0e5);
+        for policy in DispatchPolicy::ALL {
+            let base = Fleet::new(FleetConfig::new(3, policy)).run(&reqs);
+            let mut cfg = FleetConfig::new(3, policy);
+            cfg.cluster.features = ServingFeatures::default();
+            let with = Fleet::new(cfg).run(&reqs);
+            assert_eq!(base.to_json(), with.to_json(), "{}", base.label);
         }
     }
 

@@ -6,7 +6,7 @@
 use crate::energy::governor::OpId;
 use crate::report;
 use crate::server::stats;
-use crate::server::{Latencies, ServeReport};
+use crate::server::{Latencies, PrefixStats, ServeReport, SpecStats};
 use crate::softex::phys::OP_THROUGHPUT;
 
 use super::dispatch::DispatchPolicy;
@@ -60,6 +60,15 @@ pub struct FleetReport {
     /// Clock cycles executed at each OP across the fleet, indexed by
     /// [`OpId::idx`].
     pub op_cycles: [u64; 2],
+    /// Fleet-wide prefix-cache counters summed over the clusters that
+    /// reported them (DESIGN.md §13); `None` with prefix reuse off
+    /// (and under spray, which has no per-cluster prefix caches).
+    pub prefix: Option<PrefixStats>,
+    /// Fleet-wide prefill chunk count; `None` with chunking off.
+    pub prefill_chunks: Option<u64>,
+    /// Fleet-wide speculative-decoding counters; `None` with
+    /// speculation off.
+    pub spec: Option<SpecStats>,
     /// One report per cluster, indexed by cluster id.
     pub per_cluster: Vec<ServeReport>,
 }
@@ -203,7 +212,7 @@ impl FleetReport {
         if let Some(cap) = self.power_cap_w {
             obj = obj.f64("power_cap_w", cap);
         }
-        obj
+        obj = obj
             .u64("n_offered", self.n_offered as u64)
             .u64("n_admitted", self.n_admitted as u64)
             .u64("n_downgraded", self.n_downgraded as u64)
@@ -229,9 +238,32 @@ impl FleetReport {
             .f64("avg_power_w", self.avg_power_w())
             .f64("joules_per_token", self.joules_per_token())
             .f64("op_residency_throughput", res[OpId::Throughput.idx()])
-            .f64("op_residency_efficiency", res[OpId::Efficiency.idx()])
-            .raw("per_cluster", &per_cluster)
-            .finish()
+            .f64("op_residency_efficiency", res[OpId::Efficiency.idx()]);
+        // serving-feature counters appear only when a lever was on,
+        // same keys as the per-cluster reports, so default fleet JSON
+        // stays byte-identical to the pre-feature layout
+        if let Some(p) = &self.prefix {
+            obj = obj
+                .u64("prefix_hits", p.hits)
+                .u64("prefix_misses", p.misses)
+                .f64("prefix_hit_rate", p.hit_rate());
+        }
+        if let Some(chunks) = self.prefill_chunks {
+            obj = obj.u64("prefill_chunks", chunks);
+        }
+        if let Some(s) = &self.spec {
+            obj = obj
+                .u64("spec_drafted_tokens", s.drafted)
+                .u64("spec_accepted_tokens", s.accepted)
+                .u64("spec_rounds", s.rounds)
+                .f64("spec_accept_rate", s.accept_rate())
+                .u64("spec_draft_cycles", s.draft_cycles)
+                .u64("spec_verify_cycles", s.verify_cycles)
+                .u64("spec_baseline_decode_cycles", s.baseline_decode_cycles)
+                .u64("spec_decode_cycles", s.decode_cycles)
+                .f64("spec_speedup", s.speedup());
+        }
+        obj.raw("per_cluster", &per_cluster).finish()
     }
 
     /// Standalone report: global summary plus a per-cluster table.
@@ -295,6 +327,29 @@ impl FleetReport {
             ServeReport::ms(self.tbt_p95(), &OP_THROUGHPUT),
             ServeReport::ms(self.tbt_p99(), &OP_THROUGHPUT),
         ));
+        let mut feats: Vec<String> = Vec::new();
+        if let Some(p) = &self.prefix {
+            feats.push(format!(
+                "prefix hits {}/{} ({})",
+                p.hits,
+                p.hits + p.misses,
+                report::pct(p.hit_rate())
+            ));
+        }
+        if let Some(chunks) = self.prefill_chunks {
+            feats.push(format!("prefill chunks {chunks}"));
+        }
+        if let Some(s) = &self.spec {
+            feats.push(format!(
+                "spec accept {} | spec speedup {:.2}x",
+                report::pct(s.accept_rate()),
+                s.speedup()
+            ));
+        }
+        if !feats.is_empty() {
+            out.push_str(&feats.join(" | "));
+            out.push('\n');
+        }
         out
     }
 }

@@ -30,7 +30,10 @@
 //!   KV-cache/TCDM residency model (`DESIGN.md` §8);
 //! * [`server`] — the multi-request serving simulator layered on the
 //!   coordinator, mesh, and `sim` models, with token-level TTFT /
-//!   time-between-tokens reporting (`DESIGN.md` §6, §8);
+//!   time-between-tokens reporting (`DESIGN.md` §6, §8) and the
+//!   modern-serving levers of [`server::ServingFeatures`] —
+//!   shared-prefix KV reuse, chunked prefill, and speculative
+//!   decoding, all off by default (`DESIGN.md` §13);
 //! * [`fleet`] — the fleet-scale dispatcher: N clusters behind
 //!   pluggable load balancing (round-robin, join-shortest-queue,
 //!   power-of-two-choices, spray) with SLO-aware admission control,

@@ -6,9 +6,11 @@
 //!   gelu --n N [--terms T] [--bits B]                   one GELU job
 //!   mesh [--max 8] [--trials 16384]                     Fig. 15 sweep
 //!   serve [--requests N] [--mesh n] [--policy P] [--model M] [--kv K]
-//!         [--engine E] [--governor G] [--power-cap-w W] [--json]      serving sim
+//!         [--engine E] [--governor G] [--power-cap-w W]
+//!         [--prefix-share R] [--prefill-chunk C] [--speculate K] [--json]   serving sim
 //!   fleet [--clusters N] [--policy P] [--model M] [--threads T]
-//!         [--engine E] [--governor G] [--power-cap-w W] [--json]      fleet dispatcher
+//!         [--engine E] [--governor G] [--power-cap-w W]
+//!         [--prefix-share R] [--prefill-chunk C] [--speculate K] [--json]   fleet dispatcher
 //!   verify [--artifacts DIR]                            golden checks
 //!   info                                                cluster summary
 
@@ -23,7 +25,8 @@ use softex::mesh::sweep_mesh;
 use softex::report;
 use softex::runtime::Engine;
 use softex::server::{
-    ArrivalProcess, BatchScheduler, CostModel, Policy, RequestGen, ServerConfig, WorkloadMix,
+    ArrivalProcess, BatchScheduler, CostModel, Policy, RequestGen, ServerConfig, ServingFeatures,
+    WorkloadMix,
 };
 use softex::sim::{KvConfig, KvPolicy};
 use softex::softex::phys;
@@ -239,7 +242,9 @@ const SERVE_USAGE: &str =
     "usage: softex serve [--requests N] [--mesh N] [--gap CYCLES] [--seed S] \
      [--policy fifo|cb|mesh] [--model NAME|edge|genai] [--kv resident|spill] \
      [--engine softex|vexp|sole] \
-     [--governor pinned-throughput|pinned-efficiency|race-to-idle] [--power-cap-w W] [--json]";
+     [--governor pinned-throughput|pinned-efficiency|race-to-idle] [--power-cap-w W] \
+     [--prefix-share R [--prefix-len L]] [--prefill-chunk C] \
+     [--speculate K [--spec-accept P]] [--json]";
 
 /// Parse the shared `--governor` / `--power-cap-w` pair into a DVFS
 /// policy. `--power-cap-w W` selects the power-cap governor (and is
@@ -326,6 +331,40 @@ fn parse_engine(
     engine
 }
 
+/// Parse the modern-serving levers shared by `serve` and `fleet`
+/// (DESIGN.md §13) into a [`ServingFeatures`]: `--prefix-share R`
+/// tags a fraction R of the causal-decoder stream as sharing one
+/// cached prompt prefix (`--prefix-len L` tokens, default 96),
+/// `--prefill-chunk C` splits prompt ingestion into C-token chunks,
+/// and `--speculate K` drafts K tokens per round on the model's
+/// shrunk draft companion with acceptance probability `--spec-accept P`
+/// (default 0.75). The tagging seed is the run seed, so the tagged
+/// subset is reproducible alongside the arrival stream.
+fn parse_features(flags: &HashMap<String, String>, seed: u64, usage: &str) -> ServingFeatures {
+    let mut f = ServingFeatures { tag_seed: seed, ..Default::default() };
+    f.prefix_share = num_flag(flags, "prefix-share", 0.0, usage);
+    if !(0.0..=1.0).contains(&f.prefix_share) {
+        usage_error("--prefix-share must be within [0, 1]", usage);
+    }
+    if flags.contains_key("prefix-len") && !flags.contains_key("prefix-share") {
+        usage_error("--prefix-len requires --prefix-share", usage);
+    }
+    f.prefix_len = num_flag(flags, "prefix-len", f.prefix_len, usage);
+    if f.prefix_len == 0 {
+        usage_error("--prefix-len must be at least 1", usage);
+    }
+    f.prefill_chunk = num_flag(flags, "prefill-chunk", 0, usage);
+    f.speculate = num_flag(flags, "speculate", 0, usage);
+    if flags.contains_key("spec-accept") && !flags.contains_key("speculate") {
+        usage_error("--spec-accept requires --speculate", usage);
+    }
+    f.spec_accept = num_flag(flags, "spec-accept", f.spec_accept, usage);
+    if !(0.0..=1.0).contains(&f.spec_accept) {
+        usage_error("--spec-accept must be within [0, 1]", usage);
+    }
+    f
+}
+
 /// Parse the shared `--kv` flag, exiting with `usage` on unknown names.
 fn parse_kv(flags: &HashMap<String, String>, usage: &str) -> KvConfig {
     match flags.get("kv").map(String::as_str) {
@@ -354,13 +393,13 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         usage_error("--gap must be positive", SERVE_USAGE);
     }
     let policy = match flags.get("policy").map(String::as_str) {
-        Some("fifo") => Policy::Fifo,
-        Some("mesh") | Some("mesh-shard") => Policy::MeshSharded,
-        Some("cb") | Some("cont-batch") | None => Policy::ContinuousBatching,
-        Some(other) => usage_error(
-            &format!("unknown serve policy `{other}` (expected fifo, cb, or mesh)"),
-            SERVE_USAGE,
-        ),
+        None => Policy::ContinuousBatching,
+        Some(name) => Policy::parse(name).unwrap_or_else(|| {
+            usage_error(
+                &format!("unknown serve policy `{name}` (expected fifo, cb, or mesh)"),
+                SERVE_USAGE,
+            )
+        }),
     };
     let kv = parse_kv(flags, SERVE_USAGE);
     let mix = parse_mix(flags, SERVE_USAGE);
@@ -381,6 +420,7 @@ fn cmd_serve(flags: &HashMap<String, String>) {
     server_cfg.kv = kv;
     server_cfg.governor = gov;
     server_cfg.exec = ExecConfig::for_engine(engine);
+    server_cfg.features = parse_features(flags, seed, SERVE_USAGE);
     let mut sched = BatchScheduler::new(server_cfg);
     let rep = sched.run(&requests);
     if flags.contains_key("json") {
@@ -395,7 +435,9 @@ const FLEET_USAGE: &str =
      [--rho LOAD | --gap CYCLES] [--burst SIZE] [--seed S] [--threads T] \
      [--slo-ms MS [--admission shed|downgrade]] [--model NAME|edge|genai] \
      [--kv resident|spill] [--engine softex|vexp|sole] \
-     [--governor pinned-throughput|pinned-efficiency|race-to-idle] [--power-cap-w W] [--json]";
+     [--governor pinned-throughput|pinned-efficiency|race-to-idle] [--power-cap-w W] \
+     [--prefix-share R [--prefix-len L]] [--prefill-chunk C] \
+     [--speculate K [--spec-accept P]] [--json]";
 
 fn fleet_usage_error(msg: &str) -> ! {
     usage_error(msg, FLEET_USAGE)
@@ -421,6 +463,7 @@ fn cmd_fleet(flags: &HashMap<String, String>) {
     let mix = parse_mix(flags, FLEET_USAGE);
     let gov = parse_governor(flags, FLEET_USAGE);
     let engine = parse_engine(flags, gov, FLEET_USAGE);
+    let features = parse_features(flags, seed, FLEET_USAGE);
     // offered load: --gap (per-request spacing, ticks) wins; otherwise
     // --rho (fraction of aggregate fleet service capacity on the
     // selected mix under the chosen KV model AND the governor plan:
@@ -439,8 +482,12 @@ fn cmd_fleet(flags: &HashMap<String, String>) {
             if rho <= 0.0 {
                 fleet_usage_error("--rho must be positive");
             }
+            // the capacity anchor prices the same featured cost model
+            // the clusters run — a speculating fleet drains decode
+            // cheaper, and rho must stay honest about it
             let mean_service =
-                CostModel::with_kv(ExecConfig::for_engine(engine), kv).mean_service_cycles(&mix);
+                CostModel::with_features(ExecConfig::for_engine(engine), kv, features.clone())
+                    .mean_service_cycles(&mix);
             // requests per tick the powered fleet can drain
             let service_rate: f64 = governor::plan(gov, clusters)
                 .iter()
@@ -504,6 +551,7 @@ fn cmd_fleet(flags: &HashMap<String, String>) {
     cfg.admission = admission;
     cfg.cluster.kv = kv;
     cfg.cluster.exec = ExecConfig::for_engine(engine);
+    cfg.cluster.features = features;
     cfg.governor = gov;
     if flags.contains_key("threads") {
         cfg.threads = num_flag(flags, "threads", 1, FLEET_USAGE);

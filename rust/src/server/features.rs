@@ -1,0 +1,310 @@
+//! Serving-feature configuration (DESIGN.md §13): shared-prefix KV
+//! reuse, chunked prefill, and speculative decoding.
+//!
+//! All three levers default to *off*, and every scheduler keeps its
+//! pre-feature code path literally unchanged when they are — the
+//! byte-identity of default reports against PR 7 is pinned by the
+//! determinism oracles in `rust/tests/determinism.rs`.
+//!
+//! Prefix tagging is a pure function of `(tag_seed, request id)` rather
+//! than a draw from the arrival RNG, for two reasons: the arrival
+//! stream stays bit-identical whether or not the feature is on, and
+//! the tagged set is *monotone* in `prefix_share` (a request tagged at
+//! share R stays tagged at every R' > R), which is what makes the
+//! "TTFT strictly improves as share rises" acceptance test in
+//! `rust/tests/serving_features.rs` well-posed. The seed lives in the
+//! feature config itself — not in `ServerConfig.seed` — so a fleet's
+//! clusters (which each run under a `derive_seed`-split scheduler
+//! seed) still agree on which requests carry the shared prompt.
+
+use crate::sim::kv::prefix_kv_bytes;
+use crate::workload::BlockKind;
+
+use super::request::{Request, RequestClass};
+
+/// Scheduler-level serving optimizations (all off by default).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServingFeatures {
+    /// Fraction of causal-decoder requests carrying the shared system
+    /// prompt (`--prefix-share`; 0 disables prefix reuse entirely).
+    pub prefix_share: f64,
+    /// Shared-prefix length in tokens (`--prefix-len`), capped per
+    /// class at `prompt - 1` so a hit still computes at least the
+    /// suffix token that produces the first output.
+    pub prefix_len: usize,
+    /// Per-cluster prefix-pool capacity in bytes. Not CLI-exposed;
+    /// tests shrink it to exercise LRU eviction.
+    pub prefix_capacity_bytes: u64,
+    /// Prefill chunk size in tokens (`--prefill-chunk`; 0 keeps
+    /// prompts monolithic).
+    pub prefill_chunk: usize,
+    /// Draft length `k` for speculative decoding (`--speculate`;
+    /// 0 disables speculation).
+    pub speculate: usize,
+    /// Per-position draft acceptance probability (`--spec-accept`).
+    pub spec_accept: f64,
+    /// Seed of the prefix-tagging hash. The CLI couples it to
+    /// `--seed`; the default matches `ServerConfig::new`'s.
+    pub tag_seed: u64,
+}
+
+impl Default for ServingFeatures {
+    fn default() -> Self {
+        Self {
+            prefix_share: 0.0,
+            prefix_len: 96,
+            prefix_capacity_bytes: crate::sim::kv::PREFIX_CACHE_BYTES,
+            prefill_chunk: 0,
+            speculate: 0,
+            spec_accept: 0.75,
+            tag_seed: 0x5EED,
+        }
+    }
+}
+
+/// One SplitMix64 finalizer round (the same scramble
+/// `fleet::derive_seed` uses).
+pub(crate) fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl ServingFeatures {
+    /// Is any serving feature on? When `false`, schedulers take their
+    /// pre-feature code paths untouched.
+    pub fn any_enabled(&self) -> bool {
+        self.prefix_enabled() || self.chunk_enabled() || self.spec_enabled()
+    }
+
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix_share > 0.0
+    }
+
+    pub fn chunk_enabled(&self) -> bool {
+        self.prefill_chunk > 0
+    }
+
+    pub fn spec_enabled(&self) -> bool {
+        self.speculate > 0
+    }
+
+    /// Panic on out-of-range parameters (schedulers call this once at
+    /// construction; the CLI reports the same conditions as usage
+    /// errors before getting here).
+    pub fn assert_valid(&self) {
+        assert!(
+            (0.0..=1.0).contains(&self.prefix_share),
+            "--prefix-share must be within [0, 1]"
+        );
+        assert!(
+            !self.prefix_enabled() || self.prefix_len > 0,
+            "--prefix-len must be positive when prefix reuse is on"
+        );
+        assert!(
+            !self.spec_enabled() || (0.0..=1.0).contains(&self.spec_accept),
+            "--spec-accept must be within [0, 1]"
+        );
+    }
+
+    /// Does request `id` carry the shared system prompt? A pure hash
+    /// of `(tag_seed, id)` thresholded at `prefix_share`, so the
+    /// tagged set is deterministic, leaves the arrival RNG untouched,
+    /// and is monotone in the share.
+    pub fn prefix_tagged(&self, id: usize) -> bool {
+        if self.prefix_share <= 0.0 {
+            return false;
+        }
+        if self.prefix_share >= 1.0 {
+            return true;
+        }
+        let h = mix64(
+            self.tag_seed.wrapping_mul(0xD1B54A32D192ED03)
+                ^ (id as u64).wrapping_add(1).wrapping_mul(0x9E3779B97F4A7C15),
+        );
+        // 53 uniform mantissa bits, the same convention as
+        // `Xoshiro256::uniform`
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        u < self.prefix_share
+    }
+
+    /// The shared-prefix length effective for a `prompt`-token class:
+    /// capped at `prompt - 1` (a hit always computes at least one
+    /// suffix token), 0 — i.e. no reuse — for single-token prompts.
+    pub fn prefix_len_for(&self, prompt: usize) -> usize {
+        self.prefix_len.min(prompt.saturating_sub(1))
+    }
+}
+
+/// Can `r` reuse a shared prefix at all? It must be tagged by the
+/// seeded hash, its class must be a causal decoder (encoder attention
+/// is bidirectional, so cached prefix KV would depend on the suffix),
+/// and a nonzero effective prefix length must survive the per-class
+/// cap.
+pub fn prefix_eligible(features: &ServingFeatures, r: &Request) -> bool {
+    if !features.prefix_enabled() {
+        return false;
+    }
+    let model = r.class.model();
+    model.block == BlockKind::CausalDecoder
+        && features.prefix_len_for(model.seq) > 0
+        && features.prefix_tagged(r.id)
+}
+
+/// The prefix-pool key and entry size of a tagged request's class:
+/// one shared system prompt per model family (keyed by model name),
+/// sized at the class's effective prefix length.
+pub fn prefix_entry(features: &ServingFeatures, class: RequestClass) -> (String, u64) {
+    let model = class.model();
+    let len = features.prefix_len_for(model.seq);
+    let bytes = prefix_kv_bytes(&model, len);
+    (model.name, bytes)
+}
+
+/// Deterministic seed of a class's speculative-acceptance draw: a
+/// SplitMix64 hash of the model family and the speculation
+/// parameters. A class's realized acceptance sequence is a pure
+/// function of `(model, k, accept)` — identical across policies,
+/// clusters, and `--threads`, and independent of the arrival seed, so
+/// a fleet's admission predictor and its clusters always agree on
+/// class service times.
+pub(crate) fn spec_seed(model_name: &str, k: usize, accept: f64) -> u64 {
+    let mut h = 0x5BEC_D0DE_u64;
+    for &b in model_name.as_bytes() {
+        h = mix64(h ^ u64::from(b));
+    }
+    h = mix64(h ^ k as u64);
+    mix64(h ^ accept.to_bits())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_all_off() {
+        let f = ServingFeatures::default();
+        assert!(!f.any_enabled());
+        assert!(!f.prefix_enabled() && !f.chunk_enabled() && !f.spec_enabled());
+        f.assert_valid();
+        assert!(!f.prefix_tagged(0));
+    }
+
+    #[test]
+    fn each_lever_flips_any_enabled() {
+        let base = ServingFeatures::default();
+        for f in [
+            ServingFeatures { prefix_share: 0.5, ..base.clone() },
+            ServingFeatures { prefill_chunk: 64, ..base.clone() },
+            ServingFeatures { speculate: 4, ..base.clone() },
+        ] {
+            assert!(f.any_enabled());
+            f.assert_valid();
+        }
+    }
+
+    #[test]
+    fn tagging_is_deterministic_and_tracks_the_share() {
+        let n = 20_000;
+        for share in [0.25, 0.5, 0.75] {
+            let f = ServingFeatures { prefix_share: share, tag_seed: 42, ..Default::default() };
+            let tagged = (0..n).filter(|&id| f.prefix_tagged(id)).count();
+            let frac = tagged as f64 / n as f64;
+            assert!((frac - share).abs() < 0.02, "share {share}: {frac}");
+            for id in 0..100 {
+                assert_eq!(f.prefix_tagged(id), f.prefix_tagged(id));
+            }
+        }
+        let all = ServingFeatures { prefix_share: 1.0, tag_seed: 3, ..Default::default() };
+        assert!((0..100).all(|id| all.prefix_tagged(id)));
+    }
+
+    #[test]
+    fn tagged_sets_are_monotone_in_the_share() {
+        // a request tagged at a lower share stays tagged at any higher
+        // share — the property behind the strict-TTFT acceptance test
+        let shares = [0.1, 0.3, 0.5, 0.9];
+        for w in shares.windows(2) {
+            let lo =
+                ServingFeatures { prefix_share: w[0], tag_seed: 11, ..Default::default() };
+            let hi =
+                ServingFeatures { prefix_share: w[1], tag_seed: 11, ..Default::default() };
+            for id in 0..5000 {
+                if lo.prefix_tagged(id) {
+                    assert!(hi.prefix_tagged(id), "id {id}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_tag_different_sets() {
+        let a_cfg = ServingFeatures { prefix_share: 0.5, tag_seed: 1, ..Default::default() };
+        let b_cfg = ServingFeatures { prefix_share: 0.5, tag_seed: 2, ..Default::default() };
+        let a: Vec<bool> = (0..256).map(|id| a_cfg.prefix_tagged(id)).collect();
+        let b: Vec<bool> = (0..256).map(|id| b_cfg.prefix_tagged(id)).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn prefix_len_caps_at_the_prompt_minus_one() {
+        let f = ServingFeatures { prefix_share: 0.5, prefix_len: 96, ..Default::default() };
+        assert_eq!(f.prefix_len_for(128), 96);
+        assert_eq!(f.prefix_len_for(64), 63);
+        assert_eq!(f.prefix_len_for(1), 0);
+        assert_eq!(f.prefix_len_for(0), 0);
+    }
+
+    #[test]
+    fn eligibility_is_causal_decoder_only() {
+        let f = ServingFeatures { prefix_share: 1.0, ..Default::default() };
+        let causal = Request {
+            id: 0,
+            arrival: 0,
+            class: RequestClass::LlamaEdge { prompt: 128, decode: 8 },
+        };
+        let encoder = Request {
+            id: 1,
+            arrival: 0,
+            class: RequestClass::VitBase,
+        };
+        assert!(prefix_eligible(&f, &causal));
+        assert!(!prefix_eligible(&f, &encoder), "encoder KV is suffix-dependent");
+        assert!(!prefix_eligible(&ServingFeatures::default(), &causal));
+    }
+
+    #[test]
+    fn prefix_entries_key_by_family_and_scale_with_len() {
+        let f = ServingFeatures { prefix_share: 1.0, prefix_len: 96, ..Default::default() };
+        let (key_a, bytes_a) =
+            prefix_entry(&f, RequestClass::LlamaEdge { prompt: 128, decode: 8 });
+        let (key_b, bytes_b) =
+            prefix_entry(&f, RequestClass::LlamaEdge { prompt: 256, decode: 4 });
+        // same family shares one pool entry; both prompts clear the
+        // 96-token cap so the entry size agrees too
+        assert_eq!(key_a, key_b);
+        assert_eq!(bytes_a, bytes_b);
+        assert!(bytes_a > 0);
+    }
+
+    #[test]
+    fn spec_seeds_separate_models_and_parameters() {
+        let a = spec_seed("Llama-edge", 4, 0.75);
+        assert_eq!(a, spec_seed("Llama-edge", 4, 0.75));
+        assert_ne!(a, spec_seed("GPT-2 XL", 4, 0.75));
+        assert_ne!(a, spec_seed("Llama-edge", 2, 0.75));
+        assert_ne!(a, spec_seed("Llama-edge", 4, 0.9));
+    }
+
+    #[test]
+    #[should_panic(expected = "--prefix-share")]
+    fn out_of_range_share_is_rejected() {
+        ServingFeatures { prefix_share: 1.5, ..Default::default() }.assert_valid();
+    }
+
+    #[test]
+    #[should_panic(expected = "--spec-accept")]
+    fn out_of_range_acceptance_is_rejected() {
+        ServingFeatures { speculate: 4, spec_accept: -0.1, ..Default::default() }.assert_valid();
+    }
+}

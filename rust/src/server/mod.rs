@@ -24,11 +24,18 @@
 //!
 //! Everything is deterministic under a fixed seed; see
 //! `examples/serving.rs` and `benches/serve_load_sweep.rs`.
+//!
+//! [`features`] adds the modern-serving levers (DESIGN.md §13) —
+//! shared-prefix KV reuse, chunked prefill, and speculative decoding —
+//! as scheduler-level policies that default to off and leave default
+//! reports byte-identical.
 
+pub mod features;
 pub mod request;
 pub mod scheduler;
 pub mod stats;
 
+pub use features::ServingFeatures;
 pub use request::{mix_label, ArrivalProcess, Request, RequestClass, RequestGen, WorkloadMix};
 pub use scheduler::{BatchScheduler, CostModel, Policy, ServerConfig};
-pub use stats::{summary_table, Latencies, ServeReport};
+pub use stats::{summary_table, Latencies, PrefixStats, ServeReport, SpecStats};

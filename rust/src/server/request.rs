@@ -28,6 +28,9 @@ pub enum RequestClass {
     /// The Whisper-tiny audio encoder over its fixed 1500-frame mel
     /// sequence (single pass, no decode).
     WhisperTinyEnc,
+    /// The shrunk Llama-edge draft companion (speculative decoding,
+    /// DESIGN.md §13), servable standalone like any causal decoder.
+    LlamaEdgeDraft { prompt: usize, decode: usize },
 }
 
 impl RequestClass {
@@ -39,6 +42,9 @@ impl RequestClass {
             RequestClass::Gpt2Xl { prompt, decode } => format!("GPT-2 XL/{prompt}+{decode}"),
             RequestClass::LlamaEdge { prompt, decode } => format!("Llama-edge/{prompt}+{decode}"),
             RequestClass::WhisperTinyEnc => "Whisper-tiny-enc".to_string(),
+            RequestClass::LlamaEdgeDraft { prompt, decode } => {
+                format!("Llama-edge-draft/{prompt}+{decode}")
+            }
         }
     }
 
@@ -58,6 +64,10 @@ impl RequestClass {
                 ..ModelConfig::llama_edge()
             },
             RequestClass::WhisperTinyEnc => ModelConfig::whisper_tiny_enc(),
+            RequestClass::LlamaEdgeDraft { prompt, .. } => ModelConfig {
+                seq: prompt,
+                ..ModelConfig::llama_edge_draft()
+            },
         }
     }
 
@@ -73,6 +83,7 @@ impl RequestClass {
             "mobilebert" => RequestClass::MobileBert { seq: 512 },
             "gpt2-xl" => RequestClass::Gpt2Xl { prompt: 128, decode: 16 },
             "llama-edge" => RequestClass::LlamaEdge { prompt: 128, decode: 16 },
+            "llama-edge-draft" => RequestClass::LlamaEdgeDraft { prompt: 128, decode: 16 },
             "whisper" | "whisper-tiny-enc" => RequestClass::WhisperTinyEnc,
             _ => return None,
         })
@@ -101,6 +112,10 @@ impl RequestClass {
             }
             RequestClass::LlamaEdge { .. } => None,
             RequestClass::WhisperTinyEnc => None,
+            RequestClass::LlamaEdgeDraft { prompt, decode } if decode > 4 => {
+                Some(RequestClass::LlamaEdgeDraft { prompt, decode: 4 })
+            }
+            RequestClass::LlamaEdgeDraft { .. } => None,
         }
     }
 
@@ -116,7 +131,9 @@ impl RequestClass {
     /// the single-pass vision/encoder classes.
     pub fn decode_tokens(&self) -> usize {
         match *self {
-            RequestClass::Gpt2Xl { decode, .. } | RequestClass::LlamaEdge { decode, .. } => decode,
+            RequestClass::Gpt2Xl { decode, .. }
+            | RequestClass::LlamaEdge { decode, .. }
+            | RequestClass::LlamaEdgeDraft { decode, .. } => decode,
             _ => 0,
         }
     }
@@ -125,9 +142,9 @@ impl RequestClass {
     /// from 0. Only meaningful for classes with decode steps.
     pub fn context_at(&self, step: usize) -> usize {
         match *self {
-            RequestClass::Gpt2Xl { prompt, .. } | RequestClass::LlamaEdge { prompt, .. } => {
-                prompt + step
-            }
+            RequestClass::Gpt2Xl { prompt, .. }
+            | RequestClass::LlamaEdge { prompt, .. }
+            | RequestClass::LlamaEdgeDraft { prompt, .. } => prompt + step,
             _ => 0,
         }
     }
@@ -498,6 +515,25 @@ mod tests {
             Some(RequestClass::LlamaEdge { prompt: 64, decode: 4 })
         );
         assert_eq!(RequestClass::LlamaEdge { prompt: 64, decode: 4 }.downgraded(), None);
+    }
+
+    #[test]
+    fn draft_requests_decode_like_their_target() {
+        let class = RequestClass::LlamaEdgeDraft { prompt: 64, decode: 4 };
+        assert_eq!(class.decode_tokens(), 4);
+        assert_eq!(class.context_at(0), 64);
+        assert_eq!(class.context_at(3), 67);
+        assert_eq!(class.model().name, "Llama-edge-draft");
+        assert_eq!(class.model().seq, 64);
+        assert_eq!(
+            RequestClass::LlamaEdgeDraft { prompt: 64, decode: 16 }.downgraded(),
+            Some(RequestClass::LlamaEdgeDraft { prompt: 64, decode: 4 })
+        );
+        assert_eq!(
+            RequestClass::LlamaEdgeDraft { prompt: 64, decode: 4 }.downgraded(),
+            None
+        );
+        assert_eq!(class.label(), "Llama-edge-draft/64+4");
     }
 
     #[test]

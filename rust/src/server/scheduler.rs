@@ -32,11 +32,15 @@ use std::collections::{BTreeMap, BinaryHeap};
 use crate::coordinator::{op_cost, Engine, EngineChoice, ExecConfig, NonlinEngine};
 use crate::energy::governor::{self, part_energies, ClusterGovernor, GovernorPolicy, OpId};
 use crate::mesh::montecarlo::mesh_slowdown;
-use crate::sim::{Engine as SimEngine, KvConfig, Resource, ResourcePool};
-use crate::workload::{trace_decode_step_for, trace_model_for, Op};
+use crate::rng::Xoshiro256;
+use crate::sim::{Engine as SimEngine, KvConfig, PrefixCache, Resource, ResourcePool};
+use crate::workload::{
+    trace_chunk_for, trace_decode_step_for, trace_model_for, ModelConfig, Op,
+};
 
+use super::features::{self, ServingFeatures};
 use super::request::{Request, RequestClass, WorkloadMix};
-use super::stats::{queue_depths, Latencies, ServeReport};
+use super::stats::{queue_depths, Latencies, PrefixStats, ServeReport, SpecStats};
 
 /// Scheduling policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -72,6 +76,18 @@ impl Policy {
             Policy::MeshSharded => "mesh-shard",
         }
     }
+
+    /// Parse a CLI policy name — every [`Self::label`] spelling plus
+    /// the short aliases the `serve` subcommand has always accepted.
+    /// `None` for unknown names.
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "fifo" => Some(Policy::Fifo),
+            "cb" | "cont-batch" => Some(Policy::ContinuousBatching),
+            "mesh" | "mesh-shard" => Some(Policy::MeshSharded),
+            _ => None,
+        }
+    }
 }
 
 /// Server configuration: mesh size, policy, per-cluster execution
@@ -100,6 +116,10 @@ pub struct ServerConfig {
     /// so this is on by default; [`BatchScheduler::run_reference`]
     /// forces it off.
     pub batch_decode: bool,
+    /// Modern-serving levers (DESIGN.md §13): shared-prefix KV reuse,
+    /// chunked prefill, speculative decoding. All off by default, in
+    /// which case every code path is the pre-feature one.
+    pub features: ServingFeatures,
 }
 
 impl ServerConfig {
@@ -114,6 +134,7 @@ impl ServerConfig {
             noc_trials: 4096,
             seed: 0x5EED,
             batch_decode: true,
+            features: ServingFeatures::default(),
         }
     }
 
@@ -147,6 +168,11 @@ struct PhaseCost {
     energy: [f64; 2],
     /// KV bytes DMA-streamed by this phase (0 unless spilling).
     kv_spill_bytes: u64,
+    /// Tokens this phase emits at its boundary. 1 for every
+    /// pre-feature phase (prompt pass, decode step); 0 for
+    /// non-final prefill chunks and speculative draft steps; up to
+    /// `k + 1` for a speculative verification batch.
+    tokens: u32,
 }
 
 fn phase_cost(exec: &ExecConfig, trace: &[Op]) -> PhaseCost {
@@ -187,6 +213,7 @@ fn phase_cost(exec: &ExecConfig, trace: &[Op]) -> PhaseCost {
         ops,
         energy,
         kv_spill_bytes,
+        tokens: 1,
     }
 }
 
@@ -194,7 +221,10 @@ fn phase_cost(exec: &ExecConfig, trace: &[Op]) -> PhaseCost {
 /// token phases plus their aggregates.
 #[derive(Clone, Debug)]
 struct ClassCost {
-    /// Phase 0 is the prompt pass; phases 1.. are decode steps.
+    /// Phase 0 is the prompt pass; phases 1.. are decode steps. With
+    /// serving features on, the prompt may be several chunk phases and
+    /// the decode tail may be draft/verify rounds — phases still run
+    /// strictly in order, and each carries its own token emission.
     phases: Vec<PhaseCost>,
     /// Total engine-occupancy cycles (sum over phases).
     service_cycles: u64,
@@ -202,6 +232,11 @@ struct ClassCost {
     /// Whole-request energy at each OP, indexed by [`OpId::idx`].
     energy: [f64; 2],
     kv_spill_bytes: u64,
+    /// Prompt-phase count (1 unless chunked prefill split it).
+    prompt_chunks: u64,
+    /// Speculative-decoding counters; zero unless the class was costed
+    /// with `--speculate`.
+    spec: SpecStats,
 }
 
 impl ClassCost {
@@ -217,6 +252,8 @@ impl ClassCost {
             energy,
             kv_spill_bytes: phases.iter().map(|p| p.kv_spill_bytes).sum(),
             phases,
+            prompt_chunks: 1,
+            spec: SpecStats::default(),
         }
     }
 }
@@ -273,7 +310,15 @@ impl EnergyLedger {
 pub struct CostModel {
     exec: ExecConfig,
     kv: KvConfig,
+    /// Serving features the costs are built under. With everything off
+    /// (the default) resolution takes the pre-feature path untouched.
+    features: ServingFeatures,
     costs: BTreeMap<RequestClass, ClassCost>,
+    /// Prefix-cache *hit* variants: the same class with its prompt
+    /// reduced to the suffix past the cached shared prefix. Kept apart
+    /// from `costs` so miss-path requests (and every pre-feature
+    /// caller) see the unmodified full-prompt entry.
+    prefix_hits: BTreeMap<RequestClass, ClassCost>,
     /// Decode-step phase memo keyed by (nonlin engine, model name,
     /// context length): `trace_decode_step_for` depends only on the
     /// backend, the model IR, and the context, never the prompt, so
@@ -282,6 +327,12 @@ pub struct CostModel {
     /// model — and two cost models that differ only in their engine
     /// can never alias each other's entries.
     decode_steps: BTreeMap<(NonlinEngine, String, usize), PhaseCost>,
+    /// Chunk-phase memo keyed by (nonlin engine, model name, tokens,
+    /// attended span, charges-KV-DMA): prefill chunks and prefix-hit
+    /// suffixes (no KV streaming — prompt phases never spill) and
+    /// speculative verification batches (one decode-style KV DMA
+    /// charge at the batch's final context) all share it.
+    batch_phases: BTreeMap<(NonlinEngine, String, usize, usize, bool), PhaseCost>,
 }
 
 impl CostModel {
@@ -290,11 +341,19 @@ impl CostModel {
     }
 
     pub fn with_kv(exec: ExecConfig, kv: KvConfig) -> Self {
+        Self::with_features(exec, kv, ServingFeatures::default())
+    }
+
+    pub fn with_features(exec: ExecConfig, kv: KvConfig, features: ServingFeatures) -> Self {
+        features.assert_valid();
         Self {
             exec,
             kv,
+            features,
             costs: BTreeMap::new(),
+            prefix_hits: BTreeMap::new(),
             decode_steps: BTreeMap::new(),
+            batch_phases: BTreeMap::new(),
         }
     }
 
@@ -306,6 +365,10 @@ impl CostModel {
         &self.kv
     }
 
+    pub fn features(&self) -> &ServingFeatures {
+        &self.features
+    }
+
     /// Distinct decode-step contexts resolved so far (memo size).
     pub fn decode_steps_resolved(&self) -> usize {
         self.decode_steps.len()
@@ -313,31 +376,187 @@ impl CostModel {
 
     fn resolve(&mut self, class: RequestClass) -> &ClassCost {
         if !self.costs.contains_key(&class) {
-            // lower for the configured nonlin backend: Softex lowering
-            // is bit-identical to the legacy `prompt_trace`; Sole fuses
-            // the attention softmax with the following LayerNorm
-            let engine = self.exec.nonlin;
-            let model = class.model();
-            let mut phases = vec![phase_cost(&self.exec, &trace_model_for(&model, engine))];
-            let exec = &self.exec;
-            let kv = &self.kv;
-            for step in 0..class.decode_tokens() {
-                let ctx = class.context_at(step);
-                let step_cost = self
-                    .decode_steps
-                    .entry((engine, model.name.clone(), ctx))
-                    .or_insert_with(|| {
-                        let mut trace = vec![Op::KvSpill {
-                            bytes: kv.spill_bytes(&model, ctx) as usize,
-                        }];
-                        trace.extend(trace_decode_step_for(&model, ctx, engine));
-                        phase_cost(exec, &trace)
-                    });
-                phases.push(step_cost.clone());
-            }
-            self.costs.insert(class, ClassCost::from_phases(phases));
+            let cost = self.class_cost(class);
+            self.costs.insert(class, cost);
         }
         self.costs.get(&class).expect("just inserted")
+    }
+
+    /// Resolve the prefix-cache *hit* variant of a class.
+    fn resolve_hit(&mut self, class: RequestClass) -> &ClassCost {
+        if !self.prefix_hits.contains_key(&class) {
+            let cost = self.featured_cost(class, true);
+            self.prefix_hits.insert(class, cost);
+        }
+        self.prefix_hits.get(&class).expect("just inserted")
+    }
+
+    /// Build a class's cost: the pre-feature path when every serving
+    /// lever is off (bit-identical costs to PR 7), the feature-aware
+    /// path otherwise.
+    fn class_cost(&mut self, class: RequestClass) -> ClassCost {
+        if self.features.any_enabled() {
+            return self.featured_cost(class, false);
+        }
+        // lower for the configured nonlin backend: Softex lowering
+        // is bit-identical to the legacy `prompt_trace`; Sole fuses
+        // the attention softmax with the following LayerNorm
+        let engine = self.exec.nonlin;
+        let model = class.model();
+        let mut phases = vec![phase_cost(&self.exec, &trace_model_for(&model, engine))];
+        for step in 0..class.decode_tokens() {
+            let ctx = class.context_at(step);
+            phases.push(self.decode_step(&model, ctx).clone());
+        }
+        ClassCost::from_phases(phases)
+    }
+
+    /// The memoized decode-step phase of `model` at context `ctx`
+    /// (KV DMA charge included under a spilling [`KvConfig`]).
+    fn decode_step(&mut self, model: &ModelConfig, ctx: usize) -> &PhaseCost {
+        let engine = self.exec.nonlin;
+        let exec = &self.exec;
+        let kv = &self.kv;
+        self.decode_steps
+            .entry((engine, model.name.clone(), ctx))
+            .or_insert_with(|| {
+                let mut trace = vec![Op::KvSpill {
+                    bytes: kv.spill_bytes(model, ctx) as usize,
+                }];
+                trace.extend(trace_decode_step_for(model, ctx, engine));
+                phase_cost(exec, &trace)
+            })
+    }
+
+    /// The memoized cost of a `(tokens, attended)` chunk phase of
+    /// `model`: prefill chunks and prefix-hit suffixes pass
+    /// `spill = false` (prompt phases never stream KV); speculative
+    /// verification batches pass `spill = true` and pay one
+    /// decode-style KV DMA charge at the batch's final context.
+    fn chunk_phase(
+        &mut self,
+        model: &ModelConfig,
+        tokens: usize,
+        attended: usize,
+        spill: bool,
+    ) -> &PhaseCost {
+        let engine = self.exec.nonlin;
+        let exec = &self.exec;
+        let kv = &self.kv;
+        self.batch_phases
+            .entry((engine, model.name.clone(), tokens, attended, spill))
+            .or_insert_with(|| {
+                let mut trace = Vec::new();
+                if spill {
+                    trace.push(Op::KvSpill {
+                        bytes: kv.spill_bytes(model, attended) as usize,
+                    });
+                }
+                trace.extend(trace_chunk_for(model, tokens, attended, engine));
+                phase_cost(exec, &trace)
+            })
+    }
+
+    /// Feature-aware class cost (DESIGN.md §13). `prefix_hit` selects
+    /// the prefix-cache hit variant, whose prompt computes only the
+    /// suffix past the cached shared prefix.
+    fn featured_cost(&mut self, class: RequestClass, prefix_hit: bool) -> ClassCost {
+        let model = class.model();
+        let prompt = model.seq;
+        let mut phases: Vec<PhaseCost> = Vec::new();
+
+        // -- prompt: optionally suffix-only, optionally chunked --
+        // A hit skips the cached prefix's prompt compute; the suffix
+        // still attends the full prompt span (its KV is resident from
+        // the cache), so hit phases use Chunk { suffix, prompt }.
+        let skip = if prefix_hit {
+            self.features.prefix_len_for(prompt)
+        } else {
+            0
+        };
+        let compute = prompt - skip; // >= 1 by prefix_len_for's cap
+        let chunk = if self.features.prefill_chunk > 0 {
+            self.features.prefill_chunk
+        } else {
+            compute
+        };
+        let mut done = 0usize;
+        let mut prompt_chunks = 0u64;
+        while done < compute {
+            let step = chunk.min(compute - done);
+            done += step;
+            let mut pc = self.chunk_phase(&model, step, prompt, false).clone();
+            // only the final chunk completes the prompt and emits the
+            // first token
+            pc.tokens = u32::from(done == compute);
+            phases.push(pc);
+            prompt_chunks += 1;
+        }
+
+        // -- decode: plain steps, or speculative draft/verify rounds --
+        let decode = class.decode_tokens();
+        let k = self.features.speculate;
+        let mut spec = SpecStats::default();
+        if k == 0 || decode == 0 {
+            for step in 0..decode {
+                let ctx = class.context_at(step);
+                phases.push(self.decode_step(&model, ctx).clone());
+            }
+        } else {
+            let draft = model
+                .draft_of()
+                .expect("decode tokens imply a causal decoder, which always drafts");
+            let accept = self.features.spec_accept;
+            let mut rng = Xoshiro256::new(features::spec_seed(&model.name, k, accept));
+            // what the same tail costs without speculation (resolves
+            // the target's step memo; the report's speedup baseline)
+            for step in 0..decode {
+                spec.baseline_decode_cycles +=
+                    self.decode_step(&model, class.context_at(step)).cycles;
+            }
+            let mut produced = 0usize;
+            while produced < decode {
+                let remaining = decode - produced;
+                let k_round = k.min(remaining);
+                let ctx0 = class.context_at(produced);
+                // draft k_round tokens on the shrunk geometry; drafts
+                // emit nothing until the target verifies them
+                for i in 0..k_round {
+                    let mut pc = self.decode_step(&draft, ctx0 + i).clone();
+                    pc.tokens = 0;
+                    spec.draft_cycles += pc.cycles;
+                    phases.push(pc);
+                }
+                // one batched verification pass on the target: k_round
+                // query tokens attending the full context, amortizing
+                // tile fill/drain and per-op setup over the batch
+                let mut verify = self.chunk_phase(&model, k_round, ctx0 + k_round, true).clone();
+                spec.verify_cycles += verify.cycles;
+                // leading-acceptance draw: position i is accepted with
+                // probability `accept`, stopping at the first miss;
+                // the verifier always contributes one token of its own
+                let mut a = 0usize;
+                while a < k_round && rng.uniform() < accept {
+                    a += 1;
+                }
+                let a = a.min(remaining - 1); // the +1 below stays in budget
+                verify.tokens = (a + 1) as u32;
+                phases.push(verify);
+                // rejected drafts roll back: their KV entries are
+                // discarded and the next round's context advances only
+                // by the a + 1 tokens actually produced
+                spec.drafted += k_round as u64;
+                spec.accepted += a as u64;
+                spec.rounds += 1;
+                produced += a + 1;
+            }
+            spec.decode_cycles = spec.draft_cycles + spec.verify_cycles;
+        }
+
+        let mut cost = ClassCost::from_phases(phases);
+        cost.prompt_chunks = prompt_chunks;
+        cost.spec = spec;
+        cost
     }
 
     /// Resolved cost entry; panics unless previously resolved.
@@ -347,10 +566,30 @@ impl CostModel {
             .expect("request class cost not resolved")
     }
 
+    /// Resolved cost of the requested variant; panics unless
+    /// previously resolved (misses and pre-feature callers get the
+    /// base entry).
+    fn get_variant(&self, class: RequestClass, prefix_hit: bool) -> &ClassCost {
+        if prefix_hit {
+            self.prefix_hits
+                .get(&class)
+                .expect("prefix-hit cost not resolved")
+        } else {
+            self.get(class)
+        }
+    }
+
     /// Uncontended single-cluster service time of a class, cycles
     /// (including any KV spill DMA under a spilling [`KvConfig`]).
     pub fn service_cycles(&mut self, class: RequestClass) -> u64 {
         self.resolve(class).service_cycles
+    }
+
+    /// Service time of the prefix-cache *hit* variant of a class —
+    /// the number an optimistic admission predictor uses for tagged
+    /// requests. Only meaningful with prefix reuse on.
+    pub fn hit_service_cycles(&mut self, class: RequestClass) -> u64 {
+        self.resolve_hit(class).service_cycles
     }
 
     /// Countable OPs of one request of a class.
@@ -371,17 +610,20 @@ impl CostModel {
     /// Cumulative engine-occupancy cycles at each token boundary of a
     /// class: prompt completion first, then each decode step. Used to
     /// place token timestamps inside exclusively-served blocks (FIFO /
-    /// mesh-sharded / spray).
+    /// mesh-sharded / spray). A phase contributes one entry per token
+    /// it emits — zero for draft steps and non-final prefill chunks,
+    /// several for a speculative verification batch.
     pub fn token_cums(&mut self, class: RequestClass) -> Vec<u64> {
         let cost = self.resolve(class);
         let mut cum = 0u64;
-        cost.phases
-            .iter()
-            .map(|p| {
-                cum += p.cycles;
-                cum
-            })
-            .collect()
+        let mut cums = Vec::new();
+        for p in &cost.phases {
+            cum += p.cycles;
+            for _ in 0..p.tokens {
+                cums.push(cum);
+            }
+        }
+        cums
     }
 
     /// Weighted mean uncontended service time of a mix, cycles — the
@@ -427,14 +669,13 @@ pub(crate) fn place_tokens(cums: &[u64], total: u64, start: u64, service: u64) -
 /// [`Served`] record for a request occupying one exclusive block.
 fn tokenize_block(cost: &ClassCost, start: u64, service: u64) -> Served {
     let mut cum = 0u64;
-    let cums: Vec<u64> = cost
-        .phases
-        .iter()
-        .map(|p| {
-            cum += p.cycles;
-            cum
-        })
-        .collect();
+    let mut cums: Vec<u64> = Vec::new();
+    for p in &cost.phases {
+        cum += p.cycles;
+        for _ in 0..p.tokens {
+            cums.push(cum);
+        }
+    }
     Served {
         completion: start + service,
         tokens: place_tokens(&cums, cost.service_cycles, start, service),
@@ -454,7 +695,7 @@ pub struct BatchScheduler {
 
 impl BatchScheduler {
     pub fn new(cfg: ServerConfig) -> Self {
-        let costs = CostModel::with_kv(cfg.exec, cfg.kv);
+        let costs = CostModel::with_features(cfg.exec, cfg.kv, cfg.features.clone());
         let govs: Vec<ClusterGovernor> = governor::plan(cfg.governor, cfg.clusters())
             .into_iter()
             .filter(ClusterGovernor::enabled)
@@ -499,7 +740,16 @@ impl BatchScheduler {
     fn resolve_costs(&mut self, requests: &[Request]) {
         for r in requests {
             self.service_cycles(r.class);
+            if self.prefix_eligible(r) {
+                self.costs.hit_service_cycles(r.class);
+            }
         }
+    }
+
+    /// Can this request reuse a cached shared prefix? (Tagged causal
+    /// decoders with a nonzero effective prefix length.)
+    fn prefix_eligible(&self, r: &Request) -> bool {
+        features::prefix_eligible(&self.cfg.features, r)
     }
 
     /// Uncontended single-cluster service time of a class, cycles.
@@ -531,29 +781,55 @@ impl BatchScheduler {
         );
         self.resolve_costs(requests);
         let mut ledgers = vec![EnergyLedger::default(); self.active_clusters()];
+        // per-request prefix-cache outcome: None = not tagged/eligible,
+        // Some(hit) = decided at this request's admission instant
+        let mut hits: Vec<Option<bool>> = vec![None; requests.len()];
         let served = match self.cfg.policy {
-            Policy::Fifo => self.run_fifo(requests, &mut ledgers),
-            Policy::ContinuousBatching => self.run_continuous(requests, &mut ledgers, batch),
-            Policy::MeshSharded => self.run_mesh_sharded(requests, &mut ledgers),
+            Policy::Fifo => self.run_fifo(requests, &mut ledgers, &mut hits),
+            Policy::ContinuousBatching => {
+                self.run_continuous(requests, &mut ledgers, &mut hits, batch)
+            }
+            Policy::MeshSharded => self.run_mesh_sharded(requests, &mut ledgers, &mut hits),
         };
         let ledger = EnergyLedger::merged(&ledgers);
-        self.build_report(requests, &served, &ledger)
+        self.build_report(requests, &served, &ledger, &hits)
+    }
+
+    /// Fresh per-cluster prefix pools for one simulation run. Pools
+    /// start cold — a cluster powered off by the cap plan simply has
+    /// no pool, and nothing survives across runs.
+    fn prefix_caches(&self, n: usize) -> Vec<PrefixCache> {
+        (0..n)
+            .map(|_| PrefixCache::new(self.cfg.features.prefix_capacity_bytes))
+            .collect()
     }
 
     /// FIFO over the engine: arrivals are events; each request occupies
     /// the earliest-free cluster resource for its whole service time at
     /// the OP the cluster's governor picks when it starts (queue depth
     /// at that instant: is work already waiting on the cluster?).
-    fn run_fifo(&self, requests: &[Request], ledgers: &mut [EnergyLedger]) -> Vec<Served> {
+    fn run_fifo(
+        &self,
+        requests: &[Request],
+        ledgers: &mut [EnergyLedger],
+        hits: &mut [Option<bool>],
+    ) -> Vec<Served> {
         let mut engine: SimEngine<usize> = SimEngine::new(self.cfg.seed);
         for (i, r) in requests.iter().enumerate() {
             engine.schedule(r.arrival, i);
         }
         let mut clusters = ResourcePool::new("cluster", self.active_clusters());
+        let mut caches = self.prefix_caches(self.active_clusters());
         let mut served = vec![Served::default(); requests.len()];
         engine.run(|eng, i| {
-            let cost = self.costs.get(requests[i].class);
             let ci = clusters.earliest_free();
+            // prefix residency is decided when the request binds to a
+            // cluster: the pool it probes is that cluster's
+            if self.prefix_eligible(&requests[i]) {
+                let (key, bytes) = features::prefix_entry(&self.cfg.features, requests[i].class);
+                hits[i] = Some(caches[ci].access(&key, bytes));
+            }
+            let cost = self.costs.get_variant(requests[i].class, hits[i] == Some(true));
             let depth = usize::from(clusters.get(ci).free_at() > eng.now());
             let op = self.govs[ci].op_for_depth(depth);
             let service = op.ticks(cost.service_cycles).max(1);
@@ -585,6 +861,7 @@ impl BatchScheduler {
         &self,
         requests: &[Request],
         ledgers: &mut [EnergyLedger],
+        hits: &mut [Option<bool>],
         batch: bool,
     ) -> Vec<Served> {
         struct Chain<'a> {
@@ -616,8 +893,13 @@ impl BatchScheduler {
                 loop {
                     let phase = phases.get(self.phase)?;
                     let Some(seg) = phase.segments.get(self.seg) else {
-                        // token boundary: this phase's token is done
-                        self.tokens.push(self.t);
+                        // token boundary: emit this phase's tokens (one
+                        // for ordinary phases; none for draft steps and
+                        // non-final prefill chunks; the whole accepted
+                        // run for a speculative verification batch)
+                        for _ in 0..phase.tokens {
+                            self.tokens.push(self.t);
+                        }
                         self.phase += 1;
                         self.seg = 0;
                         continue;
@@ -868,12 +1150,19 @@ impl BatchScheduler {
         // plan nominal ticks == cycles and the historical placement is
         // preserved bit-for-bit.
         let mut load = vec![0u64; clusters];
+        let mut caches = self.prefix_caches(clusters);
         let mut chains: Vec<Chain> = Vec::with_capacity(requests.len());
-        for r in requests {
-            let cost = self.costs.get(r.class);
+        for (i, r) in requests.iter().enumerate() {
             let ci = (0..clusters)
                 .min_by_key(|&i| (load[i], i))
                 .expect("at least one cluster");
+            // prefix residency is decided at admission, when the chain
+            // binds to its least-loaded cluster
+            if self.prefix_eligible(r) {
+                let (key, bytes) = features::prefix_entry(&self.cfg.features, r.class);
+                hits[i] = Some(caches[ci].access(&key, bytes));
+            }
+            let cost = self.costs.get_variant(r.class, hits[i] == Some(true));
             let gov = self.govs[ci];
             load[ci] += gov.nominal_op().ticks(cost.service_cycles);
             chains.push(Chain {
@@ -916,7 +1205,12 @@ impl BatchScheduler {
     /// and inflated by the NoC conflict slowdown. Every cluster runs
     /// lock-step, so the OP is the gang-wide [`governor::lockstep`]
     /// choice at each request's start.
-    fn run_mesh_sharded(&self, requests: &[Request], ledgers: &mut [EnergyLedger]) -> Vec<Served> {
+    fn run_mesh_sharded(
+        &self,
+        requests: &[Request],
+        ledgers: &mut [EnergyLedger],
+        hits: &mut [Option<bool>],
+    ) -> Vec<Served> {
         let clusters = self.active_clusters();
         let slow = if clusters > 1 {
             mesh_slowdown(self.cfg.mesh_n, self.cfg.noc_trials, self.cfg.seed)
@@ -929,9 +1223,16 @@ impl BatchScheduler {
             engine.schedule(r.arrival, i);
         }
         let mut mesh = Resource::new("mesh");
+        // gang execution shards every request over the whole mesh, so
+        // there is one mesh-wide prefix pool
+        let mut caches = self.prefix_caches(1);
         let mut served = vec![Served::default(); requests.len()];
         engine.run(|eng, i| {
-            let cost = self.costs.get(requests[i].class);
+            if self.prefix_eligible(&requests[i]) {
+                let (key, bytes) = features::prefix_entry(&self.cfg.features, requests[i].class);
+                hits[i] = Some(caches[0].access(&key, bytes));
+            }
+            let cost = self.costs.get_variant(requests[i].class, hits[i] == Some(true));
             let depth = usize::from(mesh.free_at() > eng.now());
             let op = gov.op_for_depth(depth);
             let shard = (cost.service_cycles as f64 * (1.0 + slow) / clusters as f64)
@@ -952,6 +1253,7 @@ impl BatchScheduler {
         requests: &[Request],
         served: &[Served],
         ledger: &EnergyLedger,
+        hits: &[Option<bool>],
     ) -> ServeReport {
         let latencies: Vec<u64> = requests
             .iter()
@@ -976,14 +1278,23 @@ impl BatchScheduler {
         let makespan = (last_completion - first_arrival).max(1);
 
         let (mut total_ops, mut kv_spill_bytes) = (0u64, 0u64);
-        for r in requests {
-            let cost = self.costs.get(r.class);
+        let (mut prompt_chunks, mut spec) = (0u64, SpecStats::default());
+        for (r, h) in requests.iter().zip(hits) {
+            let cost = self.costs.get_variant(r.class, *h == Some(true));
             total_ops += cost.ops;
             kv_spill_bytes += cost.kv_spill_bytes;
+            prompt_chunks += cost.prompt_chunks;
+            spec.add(&cost.spec);
         }
 
         let arrivals: Vec<u64> = requests.iter().map(|r| r.arrival).collect();
         let (mean_queue_depth, max_queue_depth) = queue_depths(&arrivals, &completions);
+
+        let f = &self.cfg.features;
+        let prefix = f.prefix_enabled().then(|| PrefixStats {
+            hits: hits.iter().filter(|h| **h == Some(true)).count() as u64,
+            misses: hits.iter().filter(|h| **h == Some(false)).count() as u64,
+        });
 
         ServeReport {
             label: format!(
@@ -1009,6 +1320,9 @@ impl BatchScheduler {
             mean_queue_depth,
             max_queue_depth,
             kv_spill_bytes,
+            prefix,
+            prefill_chunks: f.chunk_enabled().then_some(prompt_chunks),
+            spec: f.spec_enabled().then_some(spec),
         }
     }
 }
@@ -1361,5 +1675,209 @@ mod tests {
         let mut reqs = stream(23, 10, 1.0e6);
         reqs.reverse();
         BatchScheduler::new(ServerConfig::new(1, Policy::Fifo)).run(&reqs);
+    }
+
+    #[test]
+    fn policy_parse_round_trips() {
+        for policy in Policy::ALL {
+            assert_eq!(Policy::parse(policy.label()), Some(policy), "{policy:?}");
+        }
+        // the CLI's historical short aliases
+        assert_eq!(Policy::parse("cb"), Some(Policy::ContinuousBatching));
+        assert_eq!(Policy::parse("mesh"), Some(Policy::MeshSharded));
+        assert_eq!(Policy::parse("round-robin"), None);
+        assert_eq!(Policy::parse(""), None);
+    }
+
+    fn features_cfg(mesh: usize, policy: Policy, features: ServingFeatures) -> ServerConfig {
+        let mut cfg = ServerConfig::new(mesh, policy);
+        cfg.features = features;
+        cfg
+    }
+
+    fn llama_stream(seed: u64, n: usize, mean_gap: f64) -> Vec<Request> {
+        RequestGen::new(
+            seed,
+            ArrivalProcess::Poisson { mean_gap },
+            WorkloadMix::single(RequestClass::LlamaEdge { prompt: 128, decode: 8 }),
+        )
+        .generate(n)
+    }
+
+    #[test]
+    fn prefix_only_base_costs_match_the_plain_model() {
+        // with only prefix reuse on, a *miss* (the base entry) covers
+        // the whole prompt in one chunk — which lowers identically to
+        // the monolithic prompt pass, so base costs are unchanged
+        let exec = ExecConfig::paper_accelerated();
+        let f = ServingFeatures { prefix_share: 0.5, ..Default::default() };
+        let mut plain = CostModel::new(exec);
+        let mut feat = CostModel::with_features(exec, KvConfig::default(), f);
+        for class in WorkloadMix::genai_default().classes() {
+            assert_eq!(
+                plain.service_cycles(class),
+                feat.service_cycles(class),
+                "{}",
+                class.label()
+            );
+            assert_eq!(plain.ops(class), feat.ops(class));
+        }
+    }
+
+    #[test]
+    fn prefix_hit_variant_is_cheaper_and_keeps_tokens() {
+        let exec = ExecConfig::paper_accelerated();
+        let f = ServingFeatures { prefix_share: 0.5, prefix_len: 96, ..Default::default() };
+        let mut costs = CostModel::with_features(exec, KvConfig::default(), f);
+        let class = RequestClass::LlamaEdge { prompt: 128, decode: 8 };
+        let miss = costs.service_cycles(class);
+        let hit = costs.hit_service_cycles(class);
+        // the hit variant computes a 32-token suffix instead of the
+        // 128-token prompt
+        assert!(hit < miss, "{hit} vs {miss}");
+        // token emission is variant-independent: 1 first token + decode
+        assert_eq!(costs.token_cums(class).len(), 9);
+    }
+
+    #[test]
+    fn chunked_prefill_conserves_ops_and_tokens() {
+        let exec = ExecConfig::paper_accelerated();
+        let f = ServingFeatures { prefill_chunk: 48, ..Default::default() };
+        let mut plain = CostModel::new(exec);
+        let mut chunked = CostModel::with_features(exec, KvConfig::default(), f);
+        for class in [
+            RequestClass::LlamaEdge { prompt: 128, decode: 4 },
+            RequestClass::WhisperTinyEnc,
+            RequestClass::VitBase,
+        ] {
+            // chunking a non-causal prompt into (tokens, full-span)
+            // slices executes exactly the same op totals
+            assert_eq!(plain.ops(class), chunked.ops(class), "{}", class.label());
+            assert_eq!(
+                plain.token_cums(class).len(),
+                chunked.token_cums(class).len(),
+                "{}",
+                class.label()
+            );
+        }
+        // whisper's 1500-token prompt splits into ceil(1500/48) chunks
+        let reqs: Vec<Request> = RequestGen::new(
+            3,
+            ArrivalProcess::Poisson { mean_gap: 1.0e9 },
+            WorkloadMix::single(RequestClass::WhisperTinyEnc),
+        )
+        .generate(2);
+        let f = ServingFeatures { prefill_chunk: 48, ..Default::default() };
+        let rep = BatchScheduler::new(features_cfg(1, Policy::ContinuousBatching, f)).run(&reqs);
+        assert_eq!(rep.prefill_chunks, Some(2 * 1500u64.div_ceil(48)));
+        assert!(rep.prefix.is_none() && rep.spec.is_none());
+    }
+
+    #[test]
+    fn speculation_reconciles_its_token_ledger() {
+        let exec = ExecConfig::paper_accelerated();
+        let class = RequestClass::LlamaEdge { prompt: 128, decode: 8 };
+        for accept in [0.1, 0.5, 0.9] {
+            let f = ServingFeatures { speculate: 4, spec_accept: accept, ..Default::default() };
+            let mut costs = CostModel::with_features(exec, KvConfig::default(), f);
+            // token emission is conserved: 1 first token + decode
+            assert_eq!(costs.token_cums(class).len(), 9, "accept {accept}");
+            let drafted = costs.resolve(class).spec.drafted;
+            let accepted = costs.resolve(class).spec.accepted;
+            let rounds = costs.resolve(class).spec.rounds;
+            assert!(accepted <= drafted, "accept {accept}");
+            // every round produces 1..=k+1 tokens, so round count is
+            // bounded by the decode budget on both sides
+            assert!(rounds >= 8u64.div_ceil(5) && rounds <= 8, "accept {accept}: {rounds}");
+            // accepted + one verifier token per round = decode budget
+            assert_eq!(accepted + rounds, 8, "accept {accept}");
+            let spec = costs.resolve(class).spec;
+            assert_eq!(spec.decode_cycles, spec.draft_cycles + spec.verify_cycles);
+            assert!(spec.baseline_decode_cycles > 0);
+        }
+    }
+
+    #[test]
+    fn speculation_speedup_tracks_acceptance() {
+        // at k=4 the break-even acceptance sits near 0.75 (DESIGN.md
+        // §13): alpha = 0.9 amortizes the verify batch, alpha = 0.1
+        // cannot
+        let exec = ExecConfig::paper_accelerated();
+        let class = RequestClass::LlamaEdge { prompt: 128, decode: 16 };
+        let spec_of = |accept: f64| {
+            let f = ServingFeatures { speculate: 4, spec_accept: accept, ..Default::default() };
+            let mut costs = CostModel::with_features(exec, KvConfig::default(), f);
+            costs.service_cycles(class);
+            costs.resolve(class).spec
+        };
+        let hi = spec_of(0.9);
+        let lo = spec_of(0.1);
+        assert!(hi.speedup() > 1.0, "alpha 0.9 must profit: {}", hi.speedup());
+        assert!(lo.speedup() < 1.0, "alpha 0.1 must not: {}", lo.speedup());
+        assert!(hi.accept_rate() > lo.accept_rate());
+    }
+
+    #[test]
+    fn feature_reports_stay_oracle_identical() {
+        // run() vs run_reference() byte-identity must survive every
+        // lever: feature phases are ordinary phases to the event loop
+        let reqs = llama_stream(41, 24, 2.0e5);
+        for f in [
+            ServingFeatures { prefix_share: 0.5, ..Default::default() },
+            ServingFeatures { prefill_chunk: 32, ..Default::default() },
+            ServingFeatures { speculate: 4, ..Default::default() },
+            ServingFeatures {
+                prefix_share: 0.7,
+                prefill_chunk: 48,
+                speculate: 4,
+                spec_accept: 0.9,
+                ..Default::default()
+            },
+        ] {
+            let cfg = features_cfg(2, Policy::ContinuousBatching, f.clone());
+            let fast = BatchScheduler::new(cfg.clone()).run(&reqs);
+            let refr = BatchScheduler::new(cfg).run_reference(&reqs);
+            assert_eq!(fast.to_json(), refr.to_json(), "{f:?}");
+        }
+    }
+
+    #[test]
+    fn prefix_reuse_reports_hits_and_cuts_ttft() {
+        // a shared-prompt-heavy stream on one cluster: the first tagged
+        // request donates the prefix, later tagged ones hit it
+        let reqs = llama_stream(43, 32, 1.0e5);
+        let f = ServingFeatures { prefix_share: 1.0, ..Default::default() };
+        for policy in Policy::ALL {
+            let base = BatchScheduler::new(ServerConfig::new(1, policy)).run(&reqs);
+            let rep =
+                BatchScheduler::new(features_cfg(1, policy, f.clone())).run(&reqs);
+            let p = rep.prefix.expect("prefix stats must be reported");
+            assert_eq!(p.hits + p.misses, 32, "{}", rep.label);
+            assert!(p.hits > 0, "{}: a 1-cluster run re-hits its own prefix", rep.label);
+            assert!(p.hit_rate() > 0.9, "{}: {}", rep.label, p.hit_rate());
+            assert!(
+                rep.ttft_p95() < base.ttft_p95(),
+                "{}: {} vs {}",
+                rep.label,
+                rep.ttft_p95(),
+                base.ttft_p95()
+            );
+            assert!(rep.total_ops < base.total_ops, "{}", rep.label);
+            assert_eq!(base.prefix, None);
+        }
+    }
+
+    #[test]
+    fn feature_off_reports_match_pr7_byte_for_byte() {
+        // an explicitly-defaulted features struct must leave every
+        // policy's JSON untouched (the determinism matrix relies on it)
+        let reqs = stream(45, 40, 3.0e5);
+        for policy in Policy::ALL {
+            let base = BatchScheduler::new(ServerConfig::new(2, policy)).run(&reqs);
+            let with =
+                BatchScheduler::new(features_cfg(2, policy, ServingFeatures::default()))
+                    .run(&reqs);
+            assert_eq!(base.to_json(), with.to_json(), "{policy:?}");
+        }
     }
 }

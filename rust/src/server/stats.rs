@@ -124,6 +124,90 @@ pub(crate) fn joules_per_token_of(energy_j: f64, tokens: u64) -> f64 {
     }
 }
 
+/// Shared-prefix cache outcome counters of one run; reports carry them
+/// only when `--prefix-share` is on (DESIGN.md §13).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Tagged requests whose cluster held the shared prefix resident.
+    pub hits: u64,
+    /// Tagged requests that found the pool cold and donated the prefix.
+    pub misses: u64,
+}
+
+impl PrefixStats {
+    /// Hits over all tagged requests; 0 when nothing was tagged.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn add(&mut self, other: &PrefixStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+    }
+}
+
+/// Speculative-decoding work counters; reports carry them only when
+/// `--speculate` is on (DESIGN.md §13). Cycle counters cover decode
+/// tails only — prompts are speculation-free — and the work ledger
+/// reconciles exactly: every decode token was either drafted-and-
+/// accepted or produced by a verification pass, and rejected drafts
+/// (`drafted - accepted`) paid draft cycles but emitted nothing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Draft tokens generated on the shrunk geometry.
+    pub drafted: u64,
+    /// Drafted tokens accepted by verification (and emitted).
+    pub accepted: u64,
+    /// Draft-then-verify rounds run.
+    pub rounds: u64,
+    /// Engine cycles spent on draft-model decode steps.
+    pub draft_cycles: u64,
+    /// Engine cycles spent on batched target verification passes.
+    pub verify_cycles: u64,
+    /// What the same decode tails would cost sequentially, without
+    /// speculation — the speedup baseline.
+    pub baseline_decode_cycles: u64,
+    /// What the speculative tails actually cost (draft + verify).
+    pub decode_cycles: u64,
+}
+
+impl SpecStats {
+    pub fn add(&mut self, other: &SpecStats) {
+        self.drafted += other.drafted;
+        self.accepted += other.accepted;
+        self.rounds += other.rounds;
+        self.draft_cycles += other.draft_cycles;
+        self.verify_cycles += other.verify_cycles;
+        self.baseline_decode_cycles += other.baseline_decode_cycles;
+        self.decode_cycles += other.decode_cycles;
+    }
+
+    /// Accepted over drafted; 0 when nothing was drafted.
+    pub fn accept_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Sequential-decode cycles over speculative-decode cycles: above
+    /// 1.0 iff acceptance beat the draft + verify overhead (the
+    /// break-even inequality `xval_serving.py` replays).
+    pub fn speedup(&self) -> f64 {
+        if self.decode_cycles == 0 {
+            0.0
+        } else {
+            self.baseline_decode_cycles as f64 / self.decode_cycles as f64
+        }
+    }
+}
+
 /// Aggregated result of simulating one request stream under one policy.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
@@ -172,6 +256,16 @@ pub struct ServeReport {
     /// KV-cache bytes DMA-streamed because decode working sets outgrew
     /// the TCDM (0 under the resident policy, `sim::kv`).
     pub kv_spill_bytes: u64,
+    /// Shared-prefix cache outcomes; `None` unless the run had
+    /// `--prefix-share` on (absent fields keep default JSON
+    /// byte-identical to pre-feature reports).
+    pub prefix: Option<PrefixStats>,
+    /// Prompt chunk phases executed; `None` unless `--prefill-chunk`
+    /// was on.
+    pub prefill_chunks: Option<u64>,
+    /// Speculative-decoding counters; `None` unless `--speculate` was
+    /// on.
+    pub spec: Option<SpecStats>,
 }
 
 impl ServeReport {
@@ -197,6 +291,9 @@ impl ServeReport {
             mean_queue_depth: 0.0,
             max_queue_depth: 0,
             kv_spill_bytes: 0,
+            prefix: None,
+            prefill_chunks: None,
+            spec: None,
         }
     }
 
@@ -343,6 +440,29 @@ impl ServeReport {
             Self::ms(self.tbt_p99(), &OP_THROUGHPUT),
             self.kv_spill_bytes as f64 / (1024.0 * 1024.0),
         ));
+        let mut feats: Vec<String> = Vec::new();
+        if let Some(p) = &self.prefix {
+            feats.push(format!(
+                "prefix hits {}/{} ({})",
+                p.hits,
+                p.hits + p.misses,
+                report::pct(p.hit_rate())
+            ));
+        }
+        if let Some(chunks) = self.prefill_chunks {
+            feats.push(format!("prefill chunks {chunks}"));
+        }
+        if let Some(s) = &self.spec {
+            feats.push(format!(
+                "spec accept {} | spec speedup {:.2}x",
+                report::pct(s.accept_rate()),
+                s.speedup()
+            ));
+        }
+        if !feats.is_empty() {
+            out.push_str(&feats.join(" | "));
+            out.push('\n');
+        }
         out
     }
 
@@ -359,7 +479,8 @@ impl ServeReport {
         if let Some(cap) = self.power_cap_w {
             obj = obj.f64("power_cap_w", cap);
         }
-        obj.u64("clusters", self.clusters as u64)
+        obj = obj
+            .u64("clusters", self.clusters as u64)
             .u64("n_requests", self.n_requests as u64)
             .u64("p50_cycles", self.p50())
             .u64("p95_cycles", self.p95())
@@ -375,8 +496,31 @@ impl ServeReport {
             .u64("makespan_cycles", self.makespan)
             .u64("total_ops", self.total_ops)
             .u64("busy_cycles", self.busy_cycles)
-            .u64("kv_spill_bytes", self.kv_spill_bytes)
-            .f64("sustained_gops", self.sustained_gops())
+            .u64("kv_spill_bytes", self.kv_spill_bytes);
+        // serving-feature counters are emitted only when their lever
+        // was on, so default reports stay byte-identical
+        if let Some(p) = &self.prefix {
+            obj = obj
+                .u64("prefix_hits", p.hits)
+                .u64("prefix_misses", p.misses)
+                .f64("prefix_hit_rate", p.hit_rate());
+        }
+        if let Some(chunks) = self.prefill_chunks {
+            obj = obj.u64("prefill_chunks", chunks);
+        }
+        if let Some(s) = &self.spec {
+            obj = obj
+                .u64("spec_drafted_tokens", s.drafted)
+                .u64("spec_accepted_tokens", s.accepted)
+                .u64("spec_rounds", s.rounds)
+                .f64("spec_accept_rate", s.accept_rate())
+                .u64("spec_draft_cycles", s.draft_cycles)
+                .u64("spec_verify_cycles", s.verify_cycles)
+                .u64("spec_baseline_decode_cycles", s.baseline_decode_cycles)
+                .u64("spec_decode_cycles", s.decode_cycles)
+                .f64("spec_speedup", s.speedup());
+        }
+        obj.f64("sustained_gops", self.sustained_gops())
             .f64("utilization", self.utilization())
             .f64("mean_queue_depth", self.mean_queue_depth)
             .u64("max_queue_depth", self.max_queue_depth as u64)
@@ -438,6 +582,9 @@ mod tests {
             mean_queue_depth: 1.5,
             max_queue_depth: 4,
             kv_spill_bytes: 0,
+            prefix: None,
+            prefill_chunks: None,
+            spec: None,
         }
     }
 
@@ -602,5 +749,70 @@ mod tests {
         // exactly one top-level object, no trailing comma artifacts
         assert!(!j.contains(",}"), "{j}");
         assert!(!j.contains("{,"), "{j}");
+    }
+
+    #[test]
+    fn feature_fields_are_absent_by_default() {
+        // byte-identity of default reports depends on the feature
+        // counters never appearing unless their lever was on
+        let r = report_with((1..=10).collect());
+        let j = r.to_json();
+        for key in ["prefix_hits", "prefill_chunks", "spec_drafted_tokens", "spec_speedup"] {
+            assert!(!j.contains(key), "{key} leaked into default JSON: {j}");
+        }
+        assert!(!r.render().contains("prefix hits"));
+    }
+
+    #[test]
+    fn feature_fields_render_when_present() {
+        let mut r = report_with((1..=10).collect());
+        r.prefix = Some(PrefixStats { hits: 3, misses: 1 });
+        r.prefill_chunks = Some(24);
+        r.spec = Some(SpecStats {
+            drafted: 16,
+            accepted: 12,
+            rounds: 4,
+            draft_cycles: 1_000,
+            verify_cycles: 9_000,
+            baseline_decode_cycles: 20_000,
+            decode_cycles: 10_000,
+        });
+        let j = r.to_json();
+        assert!(j.contains("\"prefix_hits\":3"), "{j}");
+        assert!(j.contains("\"prefix_misses\":1"), "{j}");
+        assert!(j.contains("\"prefix_hit_rate\":0.75"), "{j}");
+        assert!(j.contains("\"prefill_chunks\":24"), "{j}");
+        assert!(j.contains("\"spec_drafted_tokens\":16"), "{j}");
+        assert!(j.contains("\"spec_accept_rate\":0.75"), "{j}");
+        assert!(j.contains("\"spec_speedup\":2"), "{j}");
+        let t = r.render();
+        assert!(t.contains("prefix hits 3/4"), "{t}");
+        assert!(t.contains("prefill chunks 24"), "{t}");
+        assert!(t.contains("spec speedup 2.00x"), "{t}");
+    }
+
+    #[test]
+    fn feature_counter_arithmetic() {
+        let mut p = PrefixStats::default();
+        assert_eq!(p.hit_rate(), 0.0);
+        p.add(&PrefixStats { hits: 2, misses: 2 });
+        p.add(&PrefixStats { hits: 2, misses: 0 });
+        assert_eq!((p.hits, p.misses), (4, 2));
+        assert!((p.hit_rate() - 4.0 / 6.0).abs() < 1e-12);
+
+        let mut s = SpecStats::default();
+        assert_eq!(s.accept_rate(), 0.0);
+        assert_eq!(s.speedup(), 0.0);
+        s.add(&SpecStats {
+            drafted: 8,
+            accepted: 6,
+            rounds: 2,
+            draft_cycles: 100,
+            verify_cycles: 400,
+            baseline_decode_cycles: 1_000,
+            decode_cycles: 500,
+        });
+        assert!((s.accept_rate() - 0.75).abs() < 1e-12);
+        assert!((s.speedup() - 2.0).abs() < 1e-12);
     }
 }

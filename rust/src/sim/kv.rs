@@ -126,6 +126,110 @@ pub fn decode_spill_bytes(model: &ModelConfig, ctx: usize, capacity_bytes: u64) 
     model.layers as u64 * working_set.saturating_sub(capacity_bytes)
 }
 
+/// Default capacity of a cluster's shared-prefix KV pool (DESIGN.md
+/// §13): prefix KV lives in L2/DRAM (not the 256 KiB TCDM), so the
+/// pool is sized like an edge L2 partition, not a scratchpad.
+pub const PREFIX_CACHE_BYTES: u64 = 64 << 20;
+
+/// KV bytes a cached shared prefix of `len` tokens occupies across all
+/// layers of `model` (the unit [`PrefixCache`] accounts in).
+pub fn prefix_kv_bytes(model: &ModelConfig, len: usize) -> u64 {
+    model.layers as u64 * len as u64 * kv_bytes_per_token(model)
+}
+
+#[derive(Clone, Debug)]
+struct PrefixEntry {
+    key: String,
+    bytes: u64,
+    last_use: u64,
+}
+
+/// Per-cluster shared-prefix KV residency (DESIGN.md §13): one entry
+/// per shared system prompt (keyed by model family), capacity-bounded
+/// with LRU eviction. A hit lets the prompt phase skip the cached
+/// prefix's prompt cycles and KV spill bytes; a miss computes the full
+/// prompt and donates its prefix KV to the pool. The cache is plain
+/// state owned by a scheduler's cluster — clusters powered off by the
+/// power-cap governor are never dispatched to, so their pools stay
+/// cold by construction.
+#[derive(Clone, Debug)]
+pub struct PrefixCache {
+    capacity_bytes: u64,
+    used_bytes: u64,
+    clock: u64,
+    entries: Vec<PrefixEntry>,
+}
+
+impl PrefixCache {
+    pub fn new(capacity_bytes: u64) -> Self {
+        Self { capacity_bytes, used_bytes: 0, clock: 0, entries: Vec::new() }
+    }
+
+    /// Look up the shared prefix `key` occupying `bytes` of KV. A hit
+    /// refreshes the entry's recency and returns `true`; a miss
+    /// inserts the entry (the missing request donates its prefix KV),
+    /// evicting least-recently-used entries while over capacity, and
+    /// returns `false`. Prefixes larger than the whole pool are never
+    /// retained. Fully deterministic: recency is a strictly increasing
+    /// access counter, so LRU ties cannot occur.
+    pub fn access(&mut self, key: &str, bytes: u64) -> bool {
+        self.clock += 1;
+        if let Some(e) = self.entries.iter_mut().find(|e| e.key == key) {
+            e.last_use = self.clock;
+            return true;
+        }
+        if bytes > self.capacity_bytes {
+            return false;
+        }
+        self.entries.push(PrefixEntry {
+            key: key.to_string(),
+            bytes,
+            last_use: self.clock,
+        });
+        self.used_bytes += bytes;
+        while self.used_bytes > self.capacity_bytes {
+            // the just-inserted entry carries the highest recency, so
+            // the LRU scan always lands on an older entry first
+            let idx = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(i, _)| i)
+                .unwrap();
+            let evicted = self.entries.remove(idx);
+            self.used_bytes -= evicted.bytes;
+        }
+        false
+    }
+
+    /// Drop every entry (a cold pool, e.g. after cluster power-off).
+    pub fn invalidate(&mut self) {
+        self.entries.clear();
+        self.used_bytes = 0;
+    }
+
+    /// Resident prefix bytes.
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    /// Resident prefix entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+impl Default for PrefixCache {
+    fn default() -> Self {
+        Self::new(PREFIX_CACHE_BYTES)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,5 +293,59 @@ mod tests {
             assert_eq!(KvPolicy::parse(p.label()), Some(p));
         }
         assert_eq!(KvPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn prefix_cache_first_access_misses_then_hits() {
+        let mut cache = PrefixCache::default();
+        assert!(!cache.access("Llama-edge", 1 << 20));
+        assert!(cache.access("Llama-edge", 1 << 20));
+        assert!(!cache.access("GPT-2 XL", 2 << 20));
+        assert!(cache.access("GPT-2 XL", 2 << 20));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.used_bytes(), 3 << 20);
+    }
+
+    #[test]
+    fn prefix_cache_evicts_least_recently_used() {
+        // room for two 1 MiB prefixes
+        let mut cache = PrefixCache::new(2 << 20);
+        cache.access("a", 1 << 20);
+        cache.access("b", 1 << 20);
+        // refresh "a" so "b" is the LRU victim
+        assert!(cache.access("a", 1 << 20));
+        cache.access("c", 1 << 20);
+        assert!(cache.access("a", 1 << 20), "a survived");
+        assert!(!cache.access("b", 1 << 20), "b was evicted");
+    }
+
+    #[test]
+    fn prefix_cache_never_retains_oversize_prefixes() {
+        let mut cache = PrefixCache::new(1 << 10);
+        assert!(!cache.access("huge", 1 << 20));
+        assert!(!cache.access("huge", 1 << 20), "still a miss");
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn prefix_cache_invalidate_goes_cold() {
+        let mut cache = PrefixCache::default();
+        cache.access("a", 1 << 20);
+        assert!(cache.access("a", 1 << 20));
+        cache.invalidate();
+        assert!(!cache.access("a", 1 << 20), "cold after invalidate");
+        assert_eq!(cache.used_bytes(), 1 << 20);
+    }
+
+    #[test]
+    fn prefix_kv_bytes_scales_with_layers_and_kv_width() {
+        let l = ModelConfig::llama_edge();
+        assert_eq!(
+            prefix_kv_bytes(&l, 96),
+            l.layers as u64 * 96 * kv_bytes_per_token(&l)
+        );
+        // GQA: a quarter of the MHA prefix footprint
+        let mha = ModelConfig { kv_heads: l.heads, ..l.clone() };
+        assert_eq!(prefix_kv_bytes(&l, 96) * 4, prefix_kv_bytes(&mha, 96));
     }
 }

@@ -46,5 +46,5 @@ pub mod resource;
 pub mod slab;
 
 pub use engine::Engine;
-pub use kv::{KvConfig, KvPolicy};
+pub use kv::{KvConfig, KvPolicy, PrefixCache};
 pub use resource::{Resource, ResourcePool};

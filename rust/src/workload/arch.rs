@@ -211,6 +211,51 @@ impl ModelConfig {
         }
     }
 
+    /// The shrunk draft companion of [`Self::llama_edge`] for
+    /// speculative decoding (DESIGN.md §13): a quarter of the layers,
+    /// a quarter-width FFN, and the GQA ratio kept, so a draft decode
+    /// step costs a small fraction of the target's while sharing the
+    /// SoftEx-priced non-linearity datapath.
+    pub fn llama_edge_draft() -> Self {
+        Self {
+            name: "Llama-edge-draft".to_string(),
+            layers: 4,
+            d_model: 512,
+            heads: 8,
+            kv_heads: 2,
+            d_head: 64,
+            d_ff: 2048,
+            seq: 128,
+            block: BlockKind::CausalDecoder,
+            norm: NormKind::RmsNorm,
+            ffn: FfnKind::SwiGlu,
+            biases: false,
+        }
+    }
+
+    /// The draft model used to speculate for `self` (causal decoders
+    /// only): Llama-edge pairs with the [`Self::llama_edge_draft`]
+    /// preset; any other causal decoder gets a generic shrink (layers
+    /// and FFN divided by 4) that keeps the attention geometry, so the
+    /// drafted KV rows stay compatible with the target's verification
+    /// contexts. Encoders have no decode phase and return `None`.
+    pub fn draft_of(&self) -> Option<Self> {
+        if self.block != BlockKind::CausalDecoder {
+            return None;
+        }
+        if self.name == "Llama-edge" {
+            let mut draft = Self::llama_edge_draft();
+            draft.seq = self.seq;
+            return Some(draft);
+        }
+        Some(Self {
+            name: format!("{}-draft", self.name),
+            layers: (self.layers / 4).max(1),
+            d_ff: (self.d_ff / 4).max(1),
+            ..self.clone()
+        })
+    }
+
     /// Look up a preset by its CLI name; `None` for unknown names.
     pub fn by_name(name: &str) -> Option<Self> {
         match name {
@@ -219,18 +264,20 @@ impl ModelConfig {
             "gpt2-xl" => Some(Self::gpt2_xl()),
             "vit-tiny" => Some(Self::vit_tiny()),
             "llama-edge" => Some(Self::llama_edge()),
+            "llama-edge-draft" => Some(Self::llama_edge_draft()),
             "whisper" | "whisper-tiny-enc" => Some(Self::whisper_tiny_enc()),
             _ => None,
         }
     }
 
     /// The CLI names [`Self::by_name`] accepts (canonical spellings).
-    pub const PRESET_NAMES: [&'static str; 6] = [
+    pub const PRESET_NAMES: [&'static str; 7] = [
         "vit-base",
         "mobilebert",
         "gpt2-xl",
         "vit-tiny",
         "llama-edge",
+        "llama-edge-draft",
         "whisper-tiny-enc",
     ];
 
@@ -419,6 +466,39 @@ mod tests {
         assert_eq!(w.block, BlockKind::Encoder);
         assert_eq!(w.seq, 1500);
         assert_eq!(w.q_dim(), w.d_model);
+    }
+
+    #[test]
+    fn draft_preset_is_a_genuine_shrink() {
+        let target = ModelConfig::llama_edge();
+        let draft = target.draft_of().expect("causal decoder has a draft");
+        assert_eq!(draft.name, "Llama-edge-draft");
+        assert_eq!(draft.seq, target.seq);
+        assert_eq!(draft.block, BlockKind::CausalDecoder);
+        // a draft decode step must be much cheaper than the target's
+        assert!(draft.total_ops() * 8 < target.total_ops());
+        // GQA ratio kept (4 query heads per KV head)
+        assert_eq!(draft.heads / draft.kv_heads, target.heads / target.kv_heads);
+    }
+
+    #[test]
+    fn draft_of_covers_every_causal_decoder_and_no_encoder() {
+        for name in ModelConfig::PRESET_NAMES {
+            let m = ModelConfig::by_name(name).expect(name);
+            match m.block {
+                BlockKind::CausalDecoder => {
+                    let d = m.draft_of().expect(name);
+                    assert!(d.total_ops() < m.total_ops(), "{name}");
+                    assert_eq!(d.block, BlockKind::CausalDecoder);
+                }
+                BlockKind::Encoder => assert!(m.draft_of().is_none(), "{name}"),
+            }
+        }
+        // the generic shrink path (GPT-2 XL has no named draft preset)
+        let g = ModelConfig::gpt2_xl().draft_of().unwrap();
+        assert_eq!(g.name, "GPT-2 XL-draft");
+        assert_eq!(g.layers, 12);
+        assert_eq!(g.d_ff, 1600);
     }
 
     #[test]

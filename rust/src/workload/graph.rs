@@ -28,6 +28,15 @@ pub enum Phase {
     /// One autoregressive token attending over a `ctx`-token KV cache
     /// (causal decoders only).
     Decode { ctx: usize },
+    /// A slice of `tokens` query rows attending over `attended`
+    /// keys/values: the general (t, a) phase backing the serving
+    /// features (DESIGN.md §13). A prefill chunk is
+    /// `Chunk { tokens: C, attended: P }` (same attended span as the
+    /// monolithic prompt, so total op work is conserved exactly across
+    /// the split); a prefix-cache hit computes only the suffix as
+    /// `Chunk { tokens: P - L, attended: P }`; a speculative
+    /// verification batch is `Chunk { tokens: k, attended: ctx + k }`.
+    Chunk { tokens: usize, attended: usize },
 }
 
 impl Phase {
@@ -36,6 +45,7 @@ impl Phase {
         match *self {
             Phase::Prompt { seq } => seq,
             Phase::Decode { .. } => 1,
+            Phase::Chunk { tokens, .. } => tokens,
         }
     }
 
@@ -44,6 +54,7 @@ impl Phase {
         match *self {
             Phase::Prompt { seq } => seq,
             Phase::Decode { ctx } => ctx,
+            Phase::Chunk { attended, .. } => attended,
         }
     }
 }
@@ -239,6 +250,14 @@ pub fn trace_phase_for(cfg: &ModelConfig, phase: Phase, engine: NonlinEngine) ->
             cfg.name
         );
     }
+    if let Phase::Chunk { tokens, attended } = phase {
+        assert!(tokens > 0, "chunk phase needs at least one query token");
+        assert!(
+            attended >= tokens,
+            "{}: a chunk's attended span covers at least its own tokens",
+            cfg.name
+        );
+    }
     let layer = lower_layer_for(cfg, phase, engine);
     let mut ops = Vec::with_capacity(layer.len() * cfg.layers);
     for _ in 0..cfg.layers {
@@ -257,6 +276,47 @@ mod tests {
         assert_eq!((p.tokens(), p.attended()), (197, 197));
         let d = Phase::Decode { ctx: 300 };
         assert_eq!((d.tokens(), d.attended()), (1, 300));
+        let c = Phase::Chunk { tokens: 64, attended: 197 };
+        assert_eq!((c.tokens(), c.attended()), (64, 197));
+    }
+
+    #[test]
+    fn chunk_split_conserves_prompt_op_work() {
+        // splitting a prompt into chunks at the full attended span
+        // conserves total countable OPs exactly (DESIGN.md §13)
+        for cfg in [ModelConfig::vit_base(), ModelConfig::llama_edge()] {
+            let seq = cfg.seq;
+            let whole: u64 = trace_phase(&cfg, Phase::Prompt { seq })
+                .iter()
+                .map(|o| o.ops())
+                .sum();
+            let chunk = 48;
+            let mut split = 0u64;
+            let mut done = 0;
+            while done < seq {
+                let t = chunk.min(seq - done);
+                split += trace_phase(&cfg, Phase::Chunk { tokens: t, attended: seq })
+                    .iter()
+                    .map(|o| o.ops())
+                    .sum::<u64>();
+                done += t;
+            }
+            assert_eq!(split, whole, "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn chunk_matching_the_prompt_lowers_identically() {
+        let v = ModelConfig::vit_base();
+        let p = trace_phase(&v, Phase::Prompt { seq: v.seq });
+        let c = trace_phase(&v, Phase::Chunk { tokens: v.seq, attended: v.seq });
+        assert_eq!(p, c);
+    }
+
+    #[test]
+    #[should_panic(expected = "attended span")]
+    fn chunk_rejects_attended_shorter_than_tokens() {
+        trace_phase(&ModelConfig::vit_base(), Phase::Chunk { tokens: 8, attended: 4 });
     }
 
     #[test]

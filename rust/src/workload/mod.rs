@@ -21,5 +21,6 @@ pub mod trace;
 pub use arch::{BlockKind, FfnKind, ModelConfig, NormKind};
 pub use graph::Phase;
 pub use trace::{
-    trace_decode_step, trace_decode_step_for, trace_layer, trace_model, trace_model_for, Op,
+    trace_chunk_for, trace_decode_step, trace_decode_step_for, trace_layer, trace_model,
+    trace_model_for, Op,
 };

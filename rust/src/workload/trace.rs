@@ -109,6 +109,22 @@ pub fn trace_decode_step_for(cfg: &ModelConfig, ctx: usize, engine: NonlinEngine
     graph::trace_phase_for(cfg, Phase::Decode { ctx }, engine)
 }
 
+/// A general `(tokens, attended)` slice of a forward pass, lowered for
+/// a specific non-linearity backend (DESIGN.md §13): `tokens` query
+/// rows attend over `attended` keys/values through all layers. Backs
+/// the serving features — prefill chunks and prefix-hit suffixes use
+/// `attended = prompt_len` (conserving the monolithic prompt's op work
+/// exactly), speculative verification batches use
+/// `attended = ctx + tokens`.
+pub fn trace_chunk_for(
+    cfg: &ModelConfig,
+    tokens: usize,
+    attended: usize,
+    engine: NonlinEngine,
+) -> Vec<Op> {
+    graph::trace_phase_for(cfg, Phase::Chunk { tokens, attended }, engine)
+}
+
 /// Only the attention core (QK^T -> softmax -> PV), the workload of the
 /// paper's Fig. 10/11 "attention layer" experiment.
 pub fn trace_attention_core(cfg: &ModelConfig) -> Vec<Op> {

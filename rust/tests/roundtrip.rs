@@ -1,0 +1,100 @@
+//! Consolidated name round-trips for every CLI-parseable enum: each
+//! variant's canonical `label()` must parse back to the same variant,
+//! documented aliases must resolve, and unknown names must be
+//! rejected (the CLI turns `None` into a usage error naming the
+//! accepted spellings).
+
+use softex::coordinator::NonlinEngine;
+use softex::energy::GovernorPolicy;
+use softex::fleet::DispatchPolicy;
+use softex::server::{Policy, RequestClass, WorkloadMix};
+use softex::sim::KvPolicy;
+use softex::workload::ModelConfig;
+
+#[test]
+fn serve_policy_labels_round_trip() {
+    for p in Policy::ALL {
+        assert_eq!(Policy::parse(p.label()), Some(p), "{}", p.label());
+    }
+    // the short aliases `serve --policy` has always accepted
+    assert_eq!(Policy::parse("cb"), Some(Policy::ContinuousBatching));
+    assert_eq!(Policy::parse("mesh"), Some(Policy::MeshSharded));
+    assert_eq!(Policy::parse("lifo"), None);
+    assert_eq!(Policy::parse(""), None);
+}
+
+#[test]
+fn dispatch_policy_labels_round_trip() {
+    for p in DispatchPolicy::ALL {
+        assert_eq!(DispatchPolicy::parse(p.label()), Some(p), "{}", p.label());
+    }
+    assert_eq!(
+        DispatchPolicy::parse("round-robin"),
+        Some(DispatchPolicy::RoundRobin)
+    );
+    assert_eq!(
+        DispatchPolicy::parse("join-shortest-queue"),
+        Some(DispatchPolicy::JoinShortestQueue)
+    );
+    assert_eq!(
+        DispatchPolicy::parse("power-of-two"),
+        Some(DispatchPolicy::PowerOfTwoChoices)
+    );
+    assert_eq!(DispatchPolicy::parse("random"), None);
+}
+
+#[test]
+fn governor_labels_round_trip_except_the_parameterized_cap() {
+    for g in [
+        GovernorPolicy::PinnedThroughput,
+        GovernorPolicy::PinnedEfficiency,
+        GovernorPolicy::RaceToIdle,
+    ] {
+        assert_eq!(GovernorPolicy::parse(g.label()), Some(g), "{}", g.label());
+    }
+    assert_eq!(
+        GovernorPolicy::parse("throughput"),
+        Some(GovernorPolicy::PinnedThroughput)
+    );
+    assert_eq!(GovernorPolicy::parse("race"), Some(GovernorPolicy::RaceToIdle));
+    // power-cap needs a watt budget (`--power-cap-w`), so its label
+    // deliberately does not parse into a bare variant
+    assert_eq!(GovernorPolicy::parse("power-cap"), None);
+    assert_eq!(
+        GovernorPolicy::PowerCap { watts: 2.0 }.label(),
+        "power-cap"
+    );
+}
+
+#[test]
+fn kv_policy_labels_round_trip() {
+    for p in [KvPolicy::Resident, KvPolicy::TcdmSpill] {
+        assert_eq!(KvPolicy::parse(p.label()), Some(p), "{}", p.label());
+    }
+    assert_eq!(KvPolicy::parse("tcdm-spill"), Some(KvPolicy::TcdmSpill));
+    assert_eq!(KvPolicy::parse("dram"), None);
+}
+
+#[test]
+fn nonlin_engine_labels_round_trip() {
+    for e in NonlinEngine::ALL {
+        assert_eq!(NonlinEngine::parse(e.label()), Some(e), "{}", e.label());
+    }
+    assert_eq!(NonlinEngine::parse("softmax"), None);
+}
+
+#[test]
+fn model_preset_names_resolve_and_cover_every_class() {
+    for name in ModelConfig::PRESET_NAMES {
+        let m = ModelConfig::by_name(name).expect(name);
+        assert!(m.layers > 0 && m.seq > 0, "{name}");
+        // every preset is serveable: a request class resolves to the
+        // same model family
+        let class = RequestClass::for_model(name).expect(name);
+        assert_eq!(class.model().name, m.name, "{name}");
+        // and a single-model mix builds from the same spelling
+        assert!(WorkloadMix::for_model(name).is_some(), "{name}");
+    }
+    assert!(ModelConfig::by_name("gpt5").is_none());
+    assert!(RequestClass::for_model("gpt5").is_none());
+}

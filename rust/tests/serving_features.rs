@@ -1,0 +1,207 @@
+//! Acceptance tests for the modern-serving levers (DESIGN.md §13):
+//! shared-prefix KV reuse, chunked prefill, and speculative decoding.
+//! Each lever must move the serving metric it targets in the promised
+//! direction — TTFT for prefix reuse, tail TBT for chunked prefill,
+//! tokens/sec for speculation — while conserving served work, staying
+//! deterministic across `--threads`, and matching the one-event-per-
+//! segment reference loop. `.claude/skills/verify/xval_serving.py`
+//! replays the cost arithmetic behind these inequalities in Python.
+
+use softex::coordinator::{ExecConfig, NonlinEngine};
+use softex::fleet::{DispatchPolicy, Fleet, FleetConfig};
+use softex::server::{
+    ArrivalProcess, BatchScheduler, CostModel, Policy, Request, RequestClass, RequestGen,
+    ServeReport, ServerConfig, ServingFeatures, WorkloadMix,
+};
+
+/// Poisson stream of one class at offered load `rho` against the
+/// plain (feature-off) cost model.
+fn stream_at_rho(seed: u64, n: usize, mix: &WorkloadMix, rho: f64) -> Vec<Request> {
+    let mean = CostModel::new(ExecConfig::paper_accelerated()).mean_service_cycles(mix);
+    RequestGen::new(seed, ArrivalProcess::Poisson { mean_gap: mean / rho }, mix.clone())
+        .generate(n)
+}
+
+fn tokens_per_sec(rep: &ServeReport) -> f64 {
+    rep.tokens_served() as f64 / rep.wall_seconds()
+}
+
+#[test]
+fn ttft_strictly_improves_as_prefix_share_rises() {
+    // overloaded single-class llama stream: every cache hit removes
+    // prefix prompt cycles from the queue ahead of later arrivals, so
+    // raising the share (a superset of tagged requests, by the
+    // monotone tagging hash) must strictly cut the TTFT tail
+    let mix = WorkloadMix::single(RequestClass::LlamaEdge { prompt: 128, decode: 8 });
+    let reqs = stream_at_rho(0xFB8, 64, &mix, 1.5);
+    let run = |share: f64| {
+        let mut cfg = ServerConfig::new(1, Policy::ContinuousBatching);
+        cfg.features = ServingFeatures { prefix_share: share, ..Default::default() };
+        BatchScheduler::new(cfg).run(&reqs)
+    };
+    let (off, half, full) = (run(0.0), run(0.5), run(1.0));
+    assert_eq!(off.tokens_served(), half.tokens_served());
+    assert_eq!(off.tokens_served(), full.tokens_served());
+    assert!(
+        half.ttft_p95() < off.ttft_p95(),
+        "share 0.5 ttft p95 {} vs off {}",
+        half.ttft_p95(),
+        off.ttft_p95()
+    );
+    assert!(
+        full.ttft_p95() < half.ttft_p95(),
+        "share 1.0 ttft p95 {} vs 0.5 {}",
+        full.ttft_p95(),
+        half.ttft_p95()
+    );
+    // hit counters grow with the share; the off run reports none
+    assert!(off.prefix.is_none());
+    let (h5, h10) = (
+        half.prefix.expect("stats at share 0.5").hits,
+        full.prefix.expect("stats at share 1.0").hits,
+    );
+    assert!(0 < h5 && h5 < h10, "hits {h5} -> {h10}");
+}
+
+#[test]
+fn chunked_prefill_cuts_long_prompt_tail_tbt() {
+    // whisper's 1500-token prompts head-of-line-block llama decode
+    // steps; 64-token chunks bound the blocking at one chunk, cutting
+    // the p99 time-between-tokens at least 2x (the bench headline)
+    let mix = WorkloadMix::new(vec![
+        (RequestClass::WhisperTinyEnc, 0.5),
+        (RequestClass::LlamaEdge { prompt: 128, decode: 16 }, 0.5),
+    ]);
+    for rho in [0.5, 0.7] {
+        let reqs = stream_at_rho(0xC44, 80, &mix, rho);
+        let run = |chunk: usize| {
+            let mut cfg = ServerConfig::new(1, Policy::ContinuousBatching);
+            cfg.features = ServingFeatures { prefill_chunk: chunk, ..Default::default() };
+            BatchScheduler::new(cfg).run(&reqs)
+        };
+        let (mono, chunked) = (run(0), run(64));
+        assert_eq!(mono.tokens_served(), chunked.tokens_served(), "rho {rho}");
+        assert!(mono.prefill_chunks.is_none());
+        assert!(chunked.prefill_chunks.unwrap() > 0, "rho {rho}");
+        let improvement = mono.tbt_p99() as f64 / chunked.tbt_p99().max(1) as f64;
+        assert!(
+            improvement >= 2.0,
+            "rho {rho}: p99 TBT {} -> {} ({improvement:.2}x) must be >= 2x",
+            mono.tbt_p99(),
+            chunked.tbt_p99()
+        );
+    }
+}
+
+#[test]
+fn speculation_pays_iff_acceptance_clears_break_even_on_every_engine() {
+    // k=4 on llama-edge: E[accepted]+1 must clear the draft+verify
+    // cost ratio (~3.5x a target step). Alpha 0.9 clears it, alpha
+    // 0.3 does not — on every nonlinearity backend, with the served
+    // token count conserved exactly either way.
+    let class = RequestClass::LlamaEdge { prompt: 32, decode: 64 };
+    let mix = WorkloadMix::single(class);
+    for engine in NonlinEngine::ALL {
+        let exec = ExecConfig::for_engine(engine);
+        let mean = CostModel::new(exec).mean_service_cycles(&mix);
+        let reqs = RequestGen::new(
+            0x5BEC,
+            ArrivalProcess::Poisson { mean_gap: mean / 1.2 },
+            mix.clone(),
+        )
+        .generate(60);
+        let run = |k: usize, accept: f64| {
+            let mut cfg = ServerConfig::new(1, Policy::ContinuousBatching);
+            cfg.exec = exec;
+            cfg.features =
+                ServingFeatures { speculate: k, spec_accept: accept, ..Default::default() };
+            BatchScheduler::new(cfg).run(&reqs)
+        };
+        let base = run(0, 0.75);
+        assert!(base.spec.is_none());
+        for (accept, profits) in [(0.9, true), (0.3, false)] {
+            let rep = run(4, accept);
+            assert_eq!(
+                rep.tokens_served(),
+                base.tokens_served(),
+                "{} alpha {accept}: speculation must conserve tokens",
+                engine.label()
+            );
+            let s = rep.spec.as_ref().expect("spec stats");
+            assert_eq!(s.accepted + s.rounds, 64 * 60, "{}", engine.label());
+            assert!(s.accepted <= s.drafted, "{}", engine.label());
+            assert_eq!(
+                s.speedup() > 1.0,
+                profits,
+                "{} alpha {accept}: class speedup {:.3}",
+                engine.label(),
+                s.speedup()
+            );
+            let gain = tokens_per_sec(&rep) / tokens_per_sec(&base);
+            assert_eq!(
+                gain > 1.0,
+                profits,
+                "{} alpha {accept}: tokens/sec gain {gain:.3} (class speedup {:.3})",
+                engine.label(),
+                s.speedup()
+            );
+        }
+    }
+}
+
+#[test]
+fn featured_fleets_are_bit_identical_across_threads() {
+    // all three levers on at once: worker threading must stay
+    // simulation-invisible, including the new feature counters
+    let mix = WorkloadMix::single(RequestClass::LlamaEdge { prompt: 128, decode: 16 });
+    let reqs = stream_at_rho(0xF8, 120, &mix, 1.2);
+    let run_with = |threads: usize| {
+        let mut cfg = FleetConfig::new(6, DispatchPolicy::PowerOfTwoChoices);
+        cfg.seed = 0xF8;
+        cfg.threads = threads;
+        cfg.cluster.features = ServingFeatures {
+            prefix_share: 0.6,
+            prefill_chunk: 48,
+            speculate: 4,
+            spec_accept: 0.9,
+            ..Default::default()
+        };
+        Fleet::new(cfg).run(&reqs)
+    };
+    let a = run_with(1);
+    for threads in [2usize, 8] {
+        let b = run_with(threads);
+        assert_eq!(a.to_json(), b.to_json(), "threads {threads}");
+    }
+    // the counters themselves are live in the aggregate
+    let p = a.prefix.expect("prefix stats");
+    assert!(p.hits > 0, "{p:?}");
+    assert!(a.prefill_chunks.unwrap() > 0);
+    assert!(a.spec.expect("spec stats").drafted > 0);
+}
+
+#[test]
+fn featured_reports_match_the_reference_oracle_under_every_policy() {
+    // the batched-decode fast path and the one-event-per-segment
+    // reference loop must agree byte-for-byte with every lever on
+    let reqs = stream_at_rho(0x0AC1E, 24, &WorkloadMix::genai_default(), 0.8);
+    let features = ServingFeatures {
+        prefix_share: 0.5,
+        prefill_chunk: 48,
+        speculate: 2,
+        spec_accept: 0.75,
+        ..Default::default()
+    };
+    for policy in Policy::ALL {
+        let mk = || {
+            let mut cfg = ServerConfig::new(2, policy);
+            cfg.features = features.clone();
+            BatchScheduler::new(cfg)
+        };
+        assert_eq!(
+            mk().run(&reqs).to_json(),
+            mk().run_reference(&reqs).to_json(),
+            "{policy:?}"
+        );
+    }
+}
