@@ -1,0 +1,149 @@
+//! Fleet throughput bench: simulated requests per wall-clock second
+//! across cluster count x worker threads x dispatch policy, plus the
+//! headline speedup of the fleet-scale runtime rework (shared frozen
+//! cost model + work-stealing workers + arena request store,
+//! DESIGN.md §14) over the per-cluster re-derivation baseline
+//! (`share_costs: false`) at 256 clusters x 8 threads. Both headline
+//! arms must serialize to byte-identical `FleetReport` JSON — the
+//! bench asserts it, so a speedup that changes results cannot land.
+//!
+//! Writes `BENCH_fleet.json` at the repository root — CI regenerates
+//! it on every push and fails the build if a cell regresses more than
+//! 20% against the committed baseline or the headline speedup drops
+//! below 3x (see `.github/workflows/ci.yml`).
+//!
+//! Run: cargo bench --bench fleet_throughput [-- --quick]
+
+use std::time::Instant;
+
+use softex::coordinator::ExecConfig;
+use softex::fleet::{DispatchPolicy, Fleet, FleetConfig};
+use softex::report::json;
+use softex::server::{ArrivalProcess, CostModel, Request, RequestGen, WorkloadMix};
+
+/// Edge-default stream sized so every cluster sees per-cluster load
+/// rho: the fleet splits one arrival process `clusters` ways.
+fn stream(n: usize, rho: f64, clusters: usize) -> Vec<Request> {
+    let mix = WorkloadMix::edge_default();
+    let mean_service = CostModel::new(ExecConfig::paper_accelerated()).mean_service_cycles(&mix);
+    RequestGen::new(
+        0xF1E7,
+        ArrivalProcess::Poisson { mean_gap: mean_service / (rho * clusters as f64) },
+        mix,
+    )
+    .generate(n)
+}
+
+/// One timed fleet run; returns wall seconds and the report JSON.
+fn timed_run(
+    clusters: usize,
+    threads: usize,
+    policy: DispatchPolicy,
+    share_costs: bool,
+    reqs: &[Request],
+) -> (f64, String) {
+    let mut cfg = FleetConfig::new(clusters, policy);
+    cfg.threads = threads;
+    cfg.share_costs = share_costs;
+    let mut fleet = Fleet::new(cfg);
+    let t = Instant::now();
+    let rep = fleet.run(reqs);
+    (t.elapsed().as_secs_f64(), rep.to_json())
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let per_cluster = if quick { 8 } else { 40 };
+    let t0 = Instant::now();
+
+    // --- headline: shared frozen cost model vs per-cluster
+    // re-derivation at 256 clusters x 8 threads under p2c. Short
+    // per-cluster streams are exactly the regime where re-deriving 256
+    // memo tables dominates the simulated work itself.
+    let (clusters, threads) = (256usize, 8usize);
+    let policy = DispatchPolicy::PowerOfTwoChoices;
+    let n = clusters * per_cluster;
+    let reqs = stream(n, 0.5, clusters);
+    let (dt_base, json_base) = timed_run(clusters, threads, policy, false, &reqs);
+    let (dt_new, json_new) = timed_run(clusters, threads, policy, true, &reqs);
+    assert_eq!(
+        json_base, json_new,
+        "share_costs must be simulation-invisible"
+    );
+    let speedup = dt_base / dt_new;
+    println!("headline edge-default p2c@{clusters} x{threads} threads: {n} requests");
+    println!(
+        "  rederive {:>10.0} req/s ({:.1} ms)   shared {:>10.0} req/s ({:.1} ms)",
+        n as f64 / dt_base,
+        dt_base * 1e3,
+        n as f64 / dt_new,
+        dt_new * 1e3,
+    );
+    println!("  speedup {speedup:.2}x");
+    let headline = json::Obj::new()
+        .str("workload", "edge-default p2c@256 x8 threads rho=0.5")
+        .u64("clusters", clusters as u64)
+        .u64("threads", threads as u64)
+        .u64("requests", n as u64)
+        .f64("rederive_requests_per_sec", n as f64 / dt_base)
+        .f64("requests_per_sec", n as f64 / dt_new)
+        .f64("speedup_vs_rederive", speedup)
+        .finish();
+
+    // --- full grid: clusters x threads x policy with the shared
+    // model on (the shipping configuration), requests per wall second.
+    let grid_policies = [
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::JoinShortestQueue,
+        DispatchPolicy::PowerOfTwoChoices,
+    ];
+    let mut cells = Vec::new();
+    println!("\ngrid ({per_cluster} requests/cluster, rho = 0.5):");
+    println!(
+        "  {:>8} {:>8} {:>11} {:>12} {:>9}",
+        "clusters", "threads", "policy", "req/s", "wall ms"
+    );
+    for clusters in [32usize, 128, 256] {
+        let n = clusters * per_cluster;
+        let reqs = stream(n, 0.5, clusters);
+        for threads in [1usize, 8] {
+            for policy in grid_policies {
+                let (dt, _) = timed_run(clusters, threads, policy, true, &reqs);
+                let req_per_sec = n as f64 / dt;
+                println!(
+                    "  {:>8} {:>8} {:>11} {:>12.0} {:>9.2}",
+                    clusters,
+                    threads,
+                    policy.label(),
+                    req_per_sec,
+                    dt * 1e3
+                );
+                cells.push(
+                    json::Obj::new()
+                        .u64("clusters", clusters as u64)
+                        .u64("threads", threads as u64)
+                        .str("policy", policy.label())
+                        .u64("requests", n as u64)
+                        .f64("requests_per_sec", req_per_sec)
+                        .f64("wall_ms", dt * 1e3)
+                        .finish(),
+                );
+            }
+        }
+    }
+
+    let out = json::Obj::new()
+        .str("bench", "fleet_throughput")
+        .u64("schema", 1)
+        .raw("measured", "true")
+        .raw("quick", if quick { "true" } else { "false" })
+        .raw("headline", &headline)
+        .raw("cells", &json::array(cells))
+        .finish();
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fleet.json");
+    std::fs::write(path, format!("{out}\n")).expect("write BENCH_fleet.json");
+    println!(
+        "\nwrote {path} (18 cells) in {:.2} s total",
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -28,11 +28,14 @@
 //! none, every request is shed at the door — the cap reuses the
 //! existing admission path instead of growing a second one.
 
+use std::collections::BTreeSet;
+
 use crate::energy::governor::{ClusterGovernor, OpId};
 use crate::rng::Xoshiro256;
 use crate::server::features;
 use crate::server::{CostModel, Request, RequestClass};
-use crate::sim::{Engine as SimEngine, ResourcePool};
+use crate::sim::slab::Arena;
+use crate::sim::Engine as SimEngine;
 
 /// Load-balancing policy of the fleet dispatcher.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -122,22 +125,171 @@ pub struct Shard {
     pub class: RequestClass,
 }
 
+/// Admitted whole requests in one contiguous [`Arena`] slab, grouped
+/// by cluster (DESIGN.md §14). PR 2's plan held one heap-allocated
+/// `Vec<Request>` per cluster; at 1000+ clusters the per-cluster
+/// allocations and the pointer chase per stream dominated plan
+/// construction. Here every admitted request lives in one flat arena —
+/// cluster `c`'s stream is the slice `offsets[c]..offsets[c+1]`, in
+/// arrival order — built by a single counting-sort scatter over the
+/// arrival-ordered admission log (stable, so per-cluster arrival order
+/// is preserved).
+#[derive(Clone, Debug)]
+pub struct RequestStore {
+    arena: Arena<Request>,
+    /// `offsets[c]..offsets[c + 1]` bounds cluster `c`'s slice;
+    /// `clusters + 1` entries.
+    offsets: Vec<usize>,
+}
+
+impl RequestStore {
+    /// Scatter the arrival-ordered admission log (`assigned[i]` went to
+    /// cluster `cluster_of[i]`) into per-cluster groups.
+    fn build(clusters: usize, assigned: &[Request], cluster_of: &[u32]) -> Self {
+        debug_assert_eq!(assigned.len(), cluster_of.len());
+        let mut offsets = vec![0usize; clusters + 1];
+        for &c in cluster_of {
+            offsets[c as usize + 1] += 1;
+        }
+        for c in 1..offsets.len() {
+            offsets[c] += offsets[c - 1];
+        }
+        // stable counting-sort scatter: walk the log in arrival order,
+        // handing each request the next slot of its cluster's range
+        let mut cursor: Vec<usize> = offsets[..clusters].to_vec();
+        let mut source = vec![0usize; assigned.len()];
+        for (i, &c) in cluster_of.iter().enumerate() {
+            source[cursor[c as usize]] = i;
+            cursor[c as usize] += 1;
+        }
+        let arena = Arena::from_vec(source.iter().map(|&i| assigned[i]).collect());
+        Self { arena, offsets }
+    }
+
+    /// Cluster `c`'s admitted requests, in arrival order.
+    pub fn stream(&self, cluster: usize) -> &[Request] {
+        &self.arena.as_slice()[self.offsets[cluster]..self.offsets[cluster + 1]]
+    }
+
+    /// Total admitted whole requests (the arena occupancy the fleet
+    /// report surfaces).
+    pub fn len(&self) -> usize {
+        self.arena.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arena.is_empty()
+    }
+
+    /// Number of cluster groups.
+    pub fn clusters(&self) -> usize {
+        self.offsets.len() - 1
+    }
+}
+
 /// The dispatcher's output: outcomes in arrival order plus the
 /// per-cluster work it produced.
 #[derive(Clone, Debug)]
 pub struct DispatchPlan {
     /// Outcome per offered request, parallel to the input stream.
     pub outcomes: Vec<Outcome>,
-    /// Per-cluster whole-request streams, each sorted by arrival
-    /// (empty under spray).
-    pub streams: Vec<Vec<Request>>,
+    /// Admitted whole requests grouped by cluster, each group sorted by
+    /// arrival (empty under spray).
+    pub store: RequestStore,
     /// Admitted spray shards in arrival order (empty unless spray).
     pub shards: Vec<Shard>,
 }
 
-/// Serial front-end state: per-cluster backlog horizons (a
-/// `sim::Resource` each), the round-robin cursor, and the seed of the
-/// engine whose RNG drives p2c candidate sampling.
+impl DispatchPlan {
+    /// Cluster `c`'s admitted requests, in arrival order.
+    pub fn stream(&self, cluster: usize) -> &[Request] {
+        self.store.stream(cluster)
+    }
+}
+
+/// Incrementally-maintained per-cluster backlog horizons over the
+/// powered prefix `0..active` (DESIGN.md §14). Semantically each
+/// cluster is a `sim::Resource` FIFO drain horizon (`free_at`), but
+/// the JSQ argmin — PR 2 scanned all N clusters per request — is
+/// answered from two ordered index sets instead:
+///
+/// * `idle` — clusters whose horizon has already drained at the query
+///   instant (`free_at <= at`, outstanding 0). The JSQ rule breaks
+///   outstanding-ties by lowest index, so the answer is `idle.first()`.
+/// * `busy` — `(free_at, cluster)` pairs still draining. At a fixed
+///   query instant, ordering by `free_at` *is* ordering by outstanding
+///   work, and the tuple's second field gives the lowest-index
+///   tie-break — so the answer is `busy.first()` when nothing is idle.
+///
+/// Arrivals are non-decreasing (the dispatch walk's contract), so
+/// clusters migrate `busy -> idle` monotonically and each acquire
+/// re-inserts one key: O(log N) per request against the old O(N) scan.
+struct BacklogBoard {
+    /// `free_at` per powered cluster — the O(1) `outstanding` input
+    /// p2c sampling and the SLO predictor read directly.
+    free_at: Vec<u64>,
+    busy: BTreeSet<(u64, u32)>,
+    idle: BTreeSet<u32>,
+}
+
+impl BacklogBoard {
+    fn new(active: usize) -> Self {
+        Self {
+            free_at: vec![0; active],
+            busy: BTreeSet::new(),
+            idle: (0..active as u32).collect(),
+        }
+    }
+
+    fn free_at(&self, cluster: usize) -> u64 {
+        self.free_at[cluster]
+    }
+
+    /// Outstanding dispatched work on a cluster at an arrival instant.
+    fn outstanding(&self, cluster: usize, at: u64) -> u64 {
+        self.free_at[cluster].saturating_sub(at)
+    }
+
+    /// Migrate every cluster whose horizon drained by `at` into the
+    /// idle set. Monotone: `at` never decreases across calls.
+    fn drain_to(&mut self, at: u64) {
+        while let Some(&(free, c)) = self.busy.first() {
+            if free > at {
+                break;
+            }
+            self.busy.remove(&(free, c));
+            self.idle.insert(c);
+        }
+    }
+
+    /// The JSQ decision: least outstanding work at `at`, ties to the
+    /// lowest cluster index — identical to PR 2's full scan
+    /// (`ResourcePool::least_outstanding_in`), in O(log N).
+    fn least_outstanding(&mut self, at: u64) -> usize {
+        self.drain_to(at);
+        if let Some(&c) = self.idle.first() {
+            return c as usize;
+        }
+        self.busy.first().expect("board is never empty").1 as usize
+    }
+
+    /// Grow a cluster's horizon: `free_at = max(arrival, free_at) +
+    /// ticks` (the `sim::Resource::acquire` rule).
+    fn acquire(&mut self, cluster: usize, arrival: u64, ticks: u64) {
+        let c = cluster as u32;
+        let old = self.free_at[cluster];
+        if !self.busy.remove(&(old, c)) {
+            self.idle.remove(&c);
+        }
+        let free = arrival.max(old) + ticks;
+        self.free_at[cluster] = free;
+        self.busy.insert((free, c));
+    }
+}
+
+/// Serial front-end state: the incrementally-maintained per-cluster
+/// backlog board, the round-robin cursor, and the seed of the engine
+/// whose RNG drives p2c candidate sampling.
 pub struct Dispatcher {
     policy: DispatchPolicy,
     admission: Admission,
@@ -149,9 +301,10 @@ pub struct Dispatcher {
     nominal: Vec<OpId>,
     /// The lock-step nominal OP of the spray gang.
     spray_op: OpId,
-    /// Per-cluster FIFO drain horizons: `free_at` is the tick at which
-    /// dispatched work would drain back-to-back.
-    backlog: ResourcePool,
+    /// Per-cluster FIFO drain horizons over the powered prefix:
+    /// `free_at` is the tick at which dispatched work would drain
+    /// back-to-back, with the JSQ argmin kept incrementally.
+    backlog: BacklogBoard,
     seed: u64,
     rr_next: usize,
     /// Spray shard inflation: (1 + NoC slowdown) / active clusters.
@@ -179,7 +332,7 @@ impl Dispatcher {
             active,
             nominal,
             spray_op,
-            backlog: ResourcePool::new("backlog", clusters),
+            backlog: BacklogBoard::new(active),
             seed,
             rr_next: 0,
             spray_scale: (1.0 + spray_slowdown) / active.max(1) as f64,
@@ -192,7 +345,7 @@ impl Dispatcher {
 
     /// Outstanding dispatched work on a cluster at an arrival instant.
     fn outstanding(&self, cluster: usize, arrival: u64) -> u64 {
-        self.backlog.get(cluster).outstanding(arrival)
+        self.backlog.outstanding(cluster, arrival)
     }
 
     /// Candidate cluster for a whole-request policy, restricted to the
@@ -207,9 +360,7 @@ impl Dispatcher {
                 self.rr_next = (self.rr_next + 1) % self.active;
                 c
             }
-            DispatchPolicy::JoinShortestQueue => {
-                self.backlog.least_outstanding_in(arrival, self.active)
-            }
+            DispatchPolicy::JoinShortestQueue => self.backlog.least_outstanding(arrival),
             DispatchPolicy::PowerOfTwoChoices => {
                 if self.active == 1 {
                     return 0;
@@ -267,7 +418,7 @@ impl Dispatcher {
                 let service = costs.service_cycles(class);
                 let shard = self.spray_op.ticks(self.shard_cycles(service));
                 (0..self.active)
-                    .map(|c| arrival.max(self.backlog.get(c).free_at()) + shard)
+                    .map(|c| arrival.max(self.backlog.free_at(c)) + shard)
                     .max()
                     .expect("at least one powered cluster")
                     - arrival
@@ -275,7 +426,7 @@ impl Dispatcher {
             _ => {
                 let service = self.predicted_service(r, class, costs);
                 let ticks = self.nominal[cluster].ticks(service);
-                arrival.max(self.backlog.get(cluster).free_at()) + ticks - arrival
+                arrival.max(self.backlog.free_at(cluster)) + ticks - arrival
             }
         }
     }
@@ -320,7 +471,10 @@ impl Dispatcher {
             "requests must be sorted by arrival"
         );
         let mut outcomes = Vec::with_capacity(requests.len());
-        let mut streams: Vec<Vec<Request>> = vec![Vec::new(); self.clusters];
+        // arrival-ordered admission log, scattered into the arena
+        // store in one pass after the walk
+        let mut assigned: Vec<Request> = Vec::new();
+        let mut cluster_of: Vec<u32> = Vec::new();
         let mut shards = Vec::new();
         let mut engine: SimEngine<usize> = SimEngine::new(self.seed);
         for (i, r) in requests.iter().enumerate() {
@@ -354,18 +508,19 @@ impl Dispatcher {
                     // never disagree about a tagged request's backlog
                     let service = self.predicted_service(r, class, costs);
                     let ticks = self.nominal[cluster].ticks(service);
-                    self.backlog.get_mut(cluster).acquire(r.arrival, ticks);
-                    streams[cluster].push(Request {
+                    self.backlog.acquire(cluster, r.arrival, ticks);
+                    assigned.push(Request {
                         id: r.id,
                         class,
                         arrival: r.arrival,
                     });
+                    cluster_of.push(cluster as u32);
                 }
                 Outcome::Sprayed { class, .. } => {
                     let shard = self.shard_cycles(costs.service_cycles(class));
                     let ticks = self.spray_op.ticks(shard);
                     for c in 0..self.active {
-                        self.backlog.get_mut(c).acquire(r.arrival, ticks);
+                        self.backlog.acquire(c, r.arrival, ticks);
                     }
                     shards.push(Shard {
                         arrival: r.arrival,
@@ -379,7 +534,7 @@ impl Dispatcher {
         }
         DispatchPlan {
             outcomes,
-            streams,
+            store: RequestStore::build(self.clusters, &assigned, &cluster_of),
             shards,
         }
     }
@@ -444,7 +599,8 @@ mod tests {
                 _ => panic!("round-robin sheds nothing under open admission"),
             }
         }
-        assert_eq!(plan.streams.iter().map(Vec::len).sum::<usize>(), 9);
+        assert_eq!(plan.store.len(), 9);
+        assert_eq!(plan.store.clusters(), 3);
     }
 
     #[test]
@@ -465,8 +621,8 @@ mod tests {
         )
         .generate(4);
         let plan = d.dispatch(&reqs, &mut costs());
-        assert_eq!(plan.streams[0].len(), 2);
-        assert_eq!(plan.streams[1].len(), 2);
+        assert_eq!(plan.stream(0).len(), 2);
+        assert_eq!(plan.stream(1).len(), 2);
     }
 
     #[test]
@@ -499,7 +655,7 @@ mod tests {
         let mut cm = costs();
         let plan = d.dispatch(&reqs, &mut cm);
         assert_eq!(plan.shards.len(), 20);
-        assert!(plan.streams.iter().all(Vec::is_empty));
+        assert!(plan.store.is_empty());
         // shard = ceil(service * 1.10 / 4), always within [1, service]
         for (s, r) in plan.shards.iter().zip(&reqs) {
             let service = cm.service_cycles(r.class);
@@ -520,7 +676,7 @@ mod tests {
         );
         let plan = d.dispatch(&reqs, &mut costs());
         assert!(plan.outcomes.iter().all(|o| *o == Outcome::Shed));
-        assert!(plan.streams.iter().all(Vec::is_empty));
+        assert!(plan.store.is_empty());
     }
 
     #[test]
@@ -639,7 +795,7 @@ mod tests {
         assert_eq!(a.outcomes.len(), reqs.len());
         assert_eq!(a.outcomes, b.outcomes);
         assert!(a.outcomes.iter().all(|o| matches!(o, Outcome::Assigned { .. })));
-        assert_eq!(a.streams.iter().map(Vec::len).sum::<usize>(), reqs.len());
+        assert_eq!(a.store.len(), reqs.len());
     }
 
     #[test]
@@ -696,9 +852,68 @@ mod tests {
         ] {
             let mut d = dispatcher(policy, Admission::Open, 4, 9, 0.0);
             let plan = d.dispatch(&reqs, &mut costs());
-            for s in &plan.streams {
+            for c in 0..plan.store.clusters() {
+                let s = plan.stream(c);
                 assert!(s.windows(2).all(|w| w[0].arrival <= w[1].arrival));
             }
+        }
+    }
+
+    #[test]
+    fn store_scatter_matches_per_cluster_push() {
+        // differential pin for the arena request store: grouping the
+        // admission log by a counting-sort scatter must equal the old
+        // one-Vec-per-cluster push, per cluster and in order
+        let reqs = stream(0x57AB, 400, 1.5e5);
+        for policy in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::JoinShortestQueue,
+            DispatchPolicy::PowerOfTwoChoices,
+        ] {
+            let mut d = dispatcher(policy, Admission::Open, 5, 21, 0.0);
+            let plan = d.dispatch(&reqs, &mut costs());
+            let mut golden: Vec<Vec<Request>> = vec![Vec::new(); 5];
+            for (r, o) in reqs.iter().zip(&plan.outcomes) {
+                if let Outcome::Assigned { cluster, class, .. } = *o {
+                    golden[cluster].push(Request { class, ..*r });
+                }
+            }
+            for (c, g) in golden.iter().enumerate() {
+                let s = plan.stream(c);
+                assert_eq!(s.len(), g.len(), "{policy:?} cluster {c}");
+                assert!(
+                    s.iter()
+                        .zip(g)
+                        .all(|(a, b)| a.id == b.id && a.arrival == b.arrival && a.class == b.class),
+                    "{policy:?} cluster {c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_jsq_board_matches_the_full_scan() {
+        // differential pin for the BacklogBoard: replay a seeded
+        // acquire/query interleaving against the O(N) argmin rule the
+        // board replaces, non-decreasing query instants included
+        let mut board = BacklogBoard::new(7);
+        let mut free = vec![0u64; 7];
+        let mut rng = Xoshiro256::new(0xB0A2D);
+        let mut at = 0u64;
+        for _ in 0..2000 {
+            at += rng.below(50_000);
+            let want = (0..7)
+                .min_by_key(|&i| (free[i].saturating_sub(at), i))
+                .unwrap();
+            assert_eq!(board.least_outstanding(at), want, "at {at}");
+            for c in 0..7 {
+                assert_eq!(board.outstanding(c, at), free[c].saturating_sub(at));
+                assert_eq!(board.free_at(c), free[c]);
+            }
+            let c = rng.below(7) as usize;
+            let ticks = 1 + rng.below(100_000);
+            free[c] = at.max(free[c]) + ticks;
+            board.acquire(c, at, ticks);
         }
     }
 }

@@ -20,12 +20,16 @@
 //! Per-cluster simulations run on `std::thread` scoped threads; both
 //! the dispatcher and every per-cluster scheduler are actors over the
 //! shared `sim::Engine`, so neither keeps a private event loop.
-//! Dispatch is strictly serial and each cluster simulation is an
-//! independent deterministic function of its stream and derived seed,
-//! so the result is bit-identical for any worker-thread count —
-//! `rust/tests/fleet.rs` pins this contract. Reports aggregate token
-//! metrics (TTFT / time-between-tokens) alongside the request
-//! percentiles.
+//! Workers pull cluster indices from an atomic work queue (DESIGN.md
+//! §14) instead of a static chunked partition, and every cluster
+//! reads class costs from one frozen [`CostModel`] prewarmed before
+//! the parallel section ([`FleetConfig::share_costs`]). Dispatch is
+//! strictly serial, each cluster simulation is an independent
+//! deterministic function of its stream and derived seed, and results
+//! merge in cluster-index order, so the report is bit-identical for
+//! any worker-thread count — `rust/tests/fleet.rs` pins this
+//! contract. Reports aggregate token metrics (TTFT /
+//! time-between-tokens) alongside the request percentiles.
 //!
 //! Every cluster carries a DVFS governor resolved from
 //! [`FleetConfig::governor`] (`energy::governor`, DESIGN.md §10):
@@ -49,6 +53,8 @@ use crate::server::{
     ServerConfig, SpecStats,
 };
 use crate::sim::{Engine as SimEngine, Resource};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 pub use dispatch::{Admission, DispatchPlan, DispatchPolicy, Dispatcher, Outcome, Shard};
 pub use report::{fleet_table, FleetReport};
@@ -62,6 +68,56 @@ pub fn derive_seed(fleet_seed: u64, cluster: usize) -> u64 {
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
     z ^ (z >> 31)
+}
+
+/// Run `f` over `0..n` on `threads` scoped workers sharing an atomic
+/// work queue: worker `t` seeds itself with index `t`, then claims the
+/// next unclaimed index via `fetch_add` until the queue drains. The
+/// *schedule* (who ran what) depends on timing; the *output* does not:
+/// each `f(i)` is an independent pure function of `i`, and results are
+/// merged in index order. Returns the results plus how many indices
+/// each worker retired — with the queue, every worker retires at least
+/// one index whenever `n >= threads`, where the static chunked
+/// partition this replaces (`chunk = ceil(n / threads)`) could leave
+/// `threads - ceil(n / chunk)` workers fully idle (DESIGN.md §14).
+fn steal_run<T, F>(n: usize, threads: usize, f: F) -> (Vec<T>, Vec<usize>)
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    let next = AtomicUsize::new(threads);
+    let mut per_worker: Vec<Vec<(usize, T)>> = Vec::with_capacity(threads);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let (next, f) = (&next, &f);
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    let mut i = t;
+                    while i < n {
+                        out.push((i, f(i)));
+                        i = next.fetch_add(1, Ordering::Relaxed);
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            per_worker.push(h.join().expect("a fleet worker panicked"));
+        }
+    });
+    let retired: Vec<usize> = per_worker.iter().map(Vec::len).collect();
+    let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (i, r) in per_worker.into_iter().flatten() {
+        debug_assert!(results[i].is_none(), "index {i} claimed twice");
+        results[i] = Some(r);
+    }
+    let results = results
+        .into_iter()
+        .map(|r| r.expect("every index claimed exactly once"))
+        .collect();
+    (results, retired)
 }
 
 /// Fleet configuration: cluster count, dispatch policy, admission
@@ -86,6 +142,14 @@ pub struct FleetConfig {
     /// bit-identical for any value >= 1; threads only decide who runs
     /// which cluster.
     pub threads: usize,
+    /// Prewarm one [`CostModel`] with every cluster's stream before
+    /// the parallel section, freeze it behind an `Arc`, and hand every
+    /// cluster lock-free reads (`true`, the default). `false` makes
+    /// each cluster re-derive its own model — the pre-sharing baseline
+    /// `benches/fleet_throughput.rs` compares against. Class costs are
+    /// pure functions of the exec/KV/features config, so reports are
+    /// byte-identical either way.
+    pub share_costs: bool,
     /// Monte Carlo trials for the spray NoC penalty.
     pub noc_trials: u32,
 }
@@ -103,6 +167,7 @@ impl FleetConfig {
             threads: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1),
+            share_costs: true,
             noc_trials: 4096,
         }
     }
@@ -200,6 +265,14 @@ impl Fleet {
             &self.plan,
         );
         let plan = dispatcher.dispatch(requests, &mut self.costs);
+        // resolve every class cost any cluster will read *before* the
+        // parallel section; `run_assigned` freezes this model behind
+        // an `Arc` so the workers share one memo table instead of
+        // re-deriving `clusters` copies of it (no-op under spray,
+        // whose store carries no per-cluster streams)
+        for c in 0..self.cfg.clusters {
+            self.costs.prewarm(plan.stream(c));
+        }
         let sim = match self.cfg.policy {
             DispatchPolicy::Spray => self.run_spray(&plan),
             _ => self.run_assigned(&plan),
@@ -208,46 +281,37 @@ impl Fleet {
     }
 
     /// Whole-request policies: one independent [`BatchScheduler`] per
-    /// cluster, simulated on scoped worker threads. Cluster indices are
-    /// chunked contiguously over the workers; each writes only its own
-    /// result slots, so the merge by index is race-free and the output
-    /// does not depend on the thread count.
+    /// cluster, simulated on scoped worker threads that pull cluster
+    /// indices from the `steal_run` work queue. Every cluster reads
+    /// the one frozen cost model prewarmed in [`Fleet::run`] (unless
+    /// `share_costs` is off, in which case each re-derives its own,
+    /// byte-identically); results merge in cluster-index order, so the
+    /// output depends on neither the thread count nor who stole what.
     fn run_assigned(&self, plan: &DispatchPlan) -> SimOutput {
         let clusters = self.cfg.clusters;
-        let threads = self.cfg.threads.clamp(1, clusters);
-        let chunk = clusters.div_ceil(threads);
-        let mut reports: Vec<Option<ServeReport>> = (0..clusters).map(|_| None).collect();
+        let frozen = self.cfg.share_costs.then(|| Arc::new(self.costs.clone()));
         let cfg = &self.cfg;
         let govs = &self.plan;
-        let streams = &plan.streams;
-        std::thread::scope(|scope| {
-            for (t, out) in reports.chunks_mut(chunk).enumerate() {
-                scope.spawn(move || {
-                    for (i, slot) in out.iter_mut().enumerate() {
-                        let c = t * chunk + i;
-                        let mut server_cfg = cfg.cluster.clone();
-                        server_cfg.seed = derive_seed(cfg.seed, c);
-                        server_cfg.governor = govs[c].as_policy();
-                        let mut sched = BatchScheduler::new(server_cfg);
-                        let mut rep = sched.run(&streams[c]);
-                        rep.label = format!("c{c}:{}", rep.label);
-                        *slot = Some(rep);
-                    }
-                });
-            }
+        let (reports, _retired) = steal_run(clusters, cfg.threads, |c| {
+            let mut server_cfg = cfg.cluster.clone();
+            server_cfg.seed = derive_seed(cfg.seed, c);
+            server_cfg.governor = govs[c].as_policy();
+            let mut sched = match &frozen {
+                Some(model) => BatchScheduler::with_shared_costs(server_cfg, Arc::clone(model)),
+                None => BatchScheduler::new(server_cfg),
+            };
+            let mut rep = sched.run(plan.stream(c));
+            rep.label = format!("c{c}:{}", rep.label);
+            rep
         });
-        let reports: Vec<ServeReport> = reports
-            .into_iter()
-            .map(|r| r.expect("every cluster simulated"))
-            .collect();
         let latencies = Latencies::merged(reports.iter().map(|r| &r.latencies));
         let ttft = Latencies::merged(reports.iter().map(|r| &r.ttft));
         let tbt = Latencies::merged(reports.iter().map(|r| &r.tbt));
-        let last_completion = streams
+        let last_completion = reports
             .iter()
-            .zip(&reports)
-            .filter(|(s, _)| !s.is_empty())
-            .map(|(s, r)| s[0].arrival + r.makespan)
+            .enumerate()
+            .filter(|&(c, _)| !plan.stream(c).is_empty())
+            .map(|(c, r)| plan.stream(c)[0].arrival + r.makespan)
             .max()
             .unwrap_or(0);
         SimOutput {
@@ -461,6 +525,8 @@ impl Fleet {
             power_cap_w: self.cfg.governor.power_cap_w(),
             energy_j,
             op_cycles,
+            memo_entries: self.costs.memo_entries(),
+            arena_occupancy: plan.store.len(),
             prefix,
             prefill_chunks,
             spec,
@@ -492,6 +558,45 @@ mod tests {
         // and stable across calls
         assert_eq!(derive_seed(1, 7), derive_seed(1, 7));
         assert_ne!(derive_seed(1, 7), derive_seed(2, 7));
+    }
+
+    #[test]
+    fn every_worker_retires_a_cluster_when_clusters_cover_threads() {
+        // the thread-clamp waste regression: with 10 clusters on 8
+        // workers the old chunked partition (chunk = 2) fed only 5
+        // workers and idled 3; the work queue seeds every worker with
+        // one cluster before any stealing starts
+        for (n, threads) in [(10usize, 8usize), (8, 8), (9, 4), (256, 8), (3, 7)] {
+            let (results, retired) = steal_run(n, threads, |i| i * i);
+            assert_eq!(results, (0..n).map(|i| i * i).collect::<Vec<_>>());
+            let workers = threads.clamp(1, n.max(1));
+            assert_eq!(retired.len(), workers, "{n}/{threads}");
+            assert_eq!(retired.iter().sum::<usize>(), n, "{n}/{threads}");
+            assert!(
+                retired.iter().all(|&r| r >= 1),
+                "idle worker at {n} clusters / {threads} threads: {retired:?}"
+            );
+        }
+        // degenerate inputs stay well-formed
+        let (empty, retired) = steal_run(0, 4, |i| i);
+        assert!(empty.is_empty());
+        assert_eq!(retired, [0]);
+    }
+
+    #[test]
+    fn shared_and_rederived_cost_models_agree_byte_for_byte() {
+        // `share_costs: false` is the pre-sharing baseline the bench
+        // compares against — the flag must be simulation-invisible
+        let reqs = stream(23, 160, 3.0e5);
+        for policy in DispatchPolicy::ALL {
+            let run_with = |share: bool| {
+                let mut cfg = FleetConfig::new(5, policy);
+                cfg.threads = 3;
+                cfg.share_costs = share;
+                Fleet::new(cfg).run(&reqs).to_json()
+            };
+            assert_eq!(run_with(true), run_with(false), "{policy:?}");
+        }
     }
 
     #[test]

@@ -60,6 +60,15 @@ pub struct FleetReport {
     /// Clock cycles executed at each OP across the fleet, indexed by
     /// [`OpId::idx`].
     pub op_cycles: [u64; 2],
+    /// Memo entries in the shared cost model after the serial prewarm
+    /// (class costs + prefix-hit variants + decode steps + chunk
+    /// phases) — the derivation work each cluster would repeat without
+    /// [`crate::fleet::FleetConfig::share_costs`] (DESIGN.md §14).
+    pub memo_entries: usize,
+    /// Requests resident in the dispatch plan's contiguous arena store
+    /// (`fleet::dispatch::RequestStore`): the admitted non-spray
+    /// requests, scattered once into cluster order.
+    pub arena_occupancy: usize,
     /// Fleet-wide prefix-cache counters summed over the clusters that
     /// reported them (DESIGN.md §13); `None` with prefix reuse off
     /// (and under spray, which has no per-cluster prefix caches).
@@ -194,6 +203,8 @@ impl FleetReport {
             report::f(self.utilization_imbalance(), 2),
             report::f(self.energy_j, 3),
             report::f(self.avg_power_w(), 2),
+            self.memo_entries.to_string(),
+            self.arena_occupancy.to_string(),
         ]
     }
 
@@ -238,7 +249,11 @@ impl FleetReport {
             .f64("avg_power_w", self.avg_power_w())
             .f64("joules_per_token", self.joules_per_token())
             .f64("op_residency_throughput", res[OpId::Throughput.idx()])
-            .f64("op_residency_efficiency", res[OpId::Efficiency.idx()]);
+            .f64("op_residency_efficiency", res[OpId::Efficiency.idx()])
+            // the only two keys the fleet-scale runtime rework adds
+            // to the fleet JSON (DESIGN.md §14)
+            .u64("memo_entries", self.memo_entries as u64)
+            .u64("arena_occupancy", self.arena_occupancy as u64);
         // serving-feature counters appear only when a lever was on,
         // same keys as the per-cluster reports, so default fleet JSON
         // stays byte-identical to the pre-feature layout
@@ -355,7 +370,7 @@ impl FleetReport {
 }
 
 /// Column headers shared by [`FleetReport::row`].
-pub const FLEET_HEADERS: [&str; 12] = [
+pub const FLEET_HEADERS: [&str; 14] = [
     "policy@N",
     "p50 ms",
     "p95 ms",
@@ -368,6 +383,8 @@ pub const FLEET_HEADERS: [&str; 12] = [
     "imbal",
     "J",
     "avgW",
+    "memo",
+    "arena",
 ];
 
 /// Render several fleet runs as one comparison table.

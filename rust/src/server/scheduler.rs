@@ -28,6 +28,7 @@
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap};
+use std::sync::Arc;
 
 use crate::coordinator::{op_cost, Engine, EngineChoice, ExecConfig, NonlinEngine};
 use crate::energy::governor::{self, part_energies, ClusterGovernor, GovernorPolicy, OpId};
@@ -374,6 +375,43 @@ impl CostModel {
         self.decode_steps.len()
     }
 
+    /// Total memo entries resolved so far across every table (class
+    /// costs, prefix-hit variants, decode steps, chunk phases) — the
+    /// fleet report's observable for how much derivation work memo
+    /// sharing saved the parallel section (DESIGN.md §14).
+    pub fn memo_entries(&self) -> usize {
+        self.costs.len()
+            + self.prefix_hits.len()
+            + self.decode_steps.len()
+            + self.batch_phases.len()
+    }
+
+    /// Resolve every cost a scheduler simulating `requests` will read:
+    /// the base class entry per request, plus the prefix-hit variant
+    /// for cache-eligible ones — exactly the set
+    /// [`BatchScheduler::run`] derives on its own. A fleet prewarms one
+    /// model with every cluster's stream, freezes it behind an `Arc`,
+    /// and hands all clusters lock-free reads
+    /// ([`BatchScheduler::with_shared_costs`], DESIGN.md §14).
+    pub fn prewarm(&mut self, requests: &[Request]) {
+        for r in requests {
+            self.service_cycles(r.class);
+            if features::prefix_eligible(&self.features, r) {
+                self.hit_service_cycles(r.class);
+            }
+        }
+    }
+
+    /// Is the base cost entry of `class` resolved?
+    pub(crate) fn resolved(&self, class: RequestClass) -> bool {
+        self.costs.contains_key(&class)
+    }
+
+    /// Is the prefix-hit variant of `class` resolved?
+    pub(crate) fn hit_resolved(&self, class: RequestClass) -> bool {
+        self.prefix_hits.contains_key(&class)
+    }
+
     fn resolve(&mut self, class: RequestClass) -> &ClassCost {
         if !self.costs.contains_key(&class) {
             let cost = self.class_cost(class);
@@ -682,11 +720,31 @@ fn tokenize_block(cost: &ClassCost, start: u64, service: u64) -> Served {
     }
 }
 
+/// Where a scheduler's request costs live: its own mutable model (the
+/// standalone path — resolves lazily as streams arrive), or a
+/// fleet-wide frozen model behind an [`Arc`] that every cluster reads
+/// lock-free (DESIGN.md §14). The shared variant never mutates, so the
+/// identical `BTreeMap` memos stop being re-derived once per cluster.
+enum CostHandle {
+    Owned(CostModel),
+    Shared(Arc<CostModel>),
+}
+
+impl CostHandle {
+    /// Read-only view — every simulation-time lookup goes through this.
+    fn model(&self) -> &CostModel {
+        match self {
+            CostHandle::Owned(m) => m,
+            CostHandle::Shared(m) => m,
+        }
+    }
+}
+
 /// The batch scheduler: simulates a request stream under a policy on
 /// the shared `sim` engine and produces a [`ServeReport`].
 pub struct BatchScheduler {
     cfg: ServerConfig,
-    costs: CostModel,
+    costs: CostHandle,
     /// Enabled per-cluster governors (the power-cap plan's `Off`
     /// clusters are dropped here; scheduling spans `govs.len()`
     /// clusters while reports keep the configured total).
@@ -696,6 +754,21 @@ pub struct BatchScheduler {
 impl BatchScheduler {
     pub fn new(cfg: ServerConfig) -> Self {
         let costs = CostModel::with_features(cfg.exec, cfg.kv, cfg.features.clone());
+        Self::with_costs(cfg, CostHandle::Owned(costs))
+    }
+
+    /// A scheduler reading a fleet-wide frozen [`CostModel`] instead of
+    /// deriving its own (DESIGN.md §14). The model must have been built
+    /// under this config's exec/kv/features and
+    /// [`CostModel::prewarm`]ed with every stream the scheduler will
+    /// see — [`Self::run`] panics on the first unresolved class
+    /// otherwise. Costs are a pure function of (exec, kv, features,
+    /// class), so reports are bit-identical to the owned path.
+    pub fn with_shared_costs(cfg: ServerConfig, costs: Arc<CostModel>) -> Self {
+        Self::with_costs(cfg, CostHandle::Shared(costs))
+    }
+
+    fn with_costs(cfg: ServerConfig, costs: CostHandle) -> Self {
         let govs: Vec<ClusterGovernor> = governor::plan(cfg.governor, cfg.clusters())
             .into_iter()
             .filter(ClusterGovernor::enabled)
@@ -737,11 +810,28 @@ impl BatchScheduler {
         governor::lockstep(&self.govs)
     }
 
+    /// Make every cost this run will read available: resolve into the
+    /// owned model, or check the frozen shared model was prewarmed with
+    /// this stream (a missed class would otherwise surface as an
+    /// opaque panic deep inside the simulation).
     fn resolve_costs(&mut self, requests: &[Request]) {
-        for r in requests {
-            self.service_cycles(r.class);
-            if self.prefix_eligible(r) {
-                self.costs.hit_service_cycles(r.class);
+        match &mut self.costs {
+            CostHandle::Owned(costs) => costs.prewarm(requests),
+            CostHandle::Shared(costs) => {
+                for r in requests {
+                    assert!(
+                        costs.resolved(r.class),
+                        "shared CostModel is missing a class cost: \
+                         prewarm every dispatched stream before freezing"
+                    );
+                    if features::prefix_eligible(&self.cfg.features, r) {
+                        assert!(
+                            costs.hit_resolved(r.class),
+                            "shared CostModel is missing a prefix-hit cost: \
+                             prewarm every dispatched stream before freezing"
+                        );
+                    }
+                }
             }
         }
     }
@@ -753,8 +843,12 @@ impl BatchScheduler {
     }
 
     /// Uncontended single-cluster service time of a class, cycles.
+    /// On a shared frozen model the class must have been prewarmed.
     pub fn service_cycles(&mut self, class: RequestClass) -> u64 {
-        self.costs.service_cycles(class)
+        match &mut self.costs {
+            CostHandle::Owned(costs) => costs.service_cycles(class),
+            CostHandle::Shared(costs) => costs.get(class).service_cycles,
+        }
     }
 
     /// Simulate a stream (must be sorted by arrival, as [`super::RequestGen`]
@@ -829,7 +923,7 @@ impl BatchScheduler {
                 let (key, bytes) = features::prefix_entry(&self.cfg.features, requests[i].class);
                 hits[i] = Some(caches[ci].access(&key, bytes));
             }
-            let cost = self.costs.get_variant(requests[i].class, hits[i] == Some(true));
+            let cost = self.costs.model().get_variant(requests[i].class, hits[i] == Some(true));
             let depth = usize::from(clusters.get(ci).free_at() > eng.now());
             let op = self.govs[ci].op_for_depth(depth);
             let service = op.ticks(cost.service_cycles).max(1);
@@ -1162,7 +1256,7 @@ impl BatchScheduler {
                 let (key, bytes) = features::prefix_entry(&self.cfg.features, r.class);
                 hits[i] = Some(caches[ci].access(&key, bytes));
             }
-            let cost = self.costs.get_variant(r.class, hits[i] == Some(true));
+            let cost = self.costs.model().get_variant(r.class, hits[i] == Some(true));
             let gov = self.govs[ci];
             load[ci] += gov.nominal_op().ticks(cost.service_cycles);
             chains.push(Chain {
@@ -1232,7 +1326,7 @@ impl BatchScheduler {
                 let (key, bytes) = features::prefix_entry(&self.cfg.features, requests[i].class);
                 hits[i] = Some(caches[0].access(&key, bytes));
             }
-            let cost = self.costs.get_variant(requests[i].class, hits[i] == Some(true));
+            let cost = self.costs.model().get_variant(requests[i].class, hits[i] == Some(true));
             let depth = usize::from(mesh.free_at() > eng.now());
             let op = gov.op_for_depth(depth);
             let shard = (cost.service_cycles as f64 * (1.0 + slow) / clusters as f64)
@@ -1280,7 +1374,7 @@ impl BatchScheduler {
         let (mut total_ops, mut kv_spill_bytes) = (0u64, 0u64);
         let (mut prompt_chunks, mut spec) = (0u64, SpecStats::default());
         for (r, h) in requests.iter().zip(hits) {
-            let cost = self.costs.get_variant(r.class, *h == Some(true));
+            let cost = self.costs.model().get_variant(r.class, *h == Some(true));
             total_ops += cost.ops;
             kv_spill_bytes += cost.kv_spill_bytes;
             prompt_chunks += cost.prompt_chunks;
@@ -1583,7 +1677,7 @@ mod tests {
             .min()
             .unwrap();
         let rep = s.run(&reqs);
-        assert!(rep.latencies[0] >= min_service);
+        assert!(rep.latencies.iter().all(|&l| l >= min_service));
     }
 
     #[test]

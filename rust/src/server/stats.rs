@@ -14,58 +14,138 @@
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::Mutex;
 
 use crate::energy::governor::OpId;
 use crate::report;
 use crate::softex::phys::{OperatingPoint, OP_THROUGHPUT};
 
-/// A sorted per-request latency sample set (cycles).
+/// A per-request latency sample set (cycles), stored in completion
+/// (insertion) order.
 ///
 /// Percentiles are nearest-rank over the order statistics, total over
 /// every input: `p` is clamped to [0, 100], a single sample answers
 /// every percentile, and the empty set reports 0 (an empty cluster in a
 /// fleet run contributes no latency mass, it must not panic).
-#[derive(Clone, Debug, Default, PartialEq, Eq)]
-pub struct Latencies(Vec<u64>);
+///
+/// Samples are *not* kept sorted (DESIGN.md §14): a fleet run only ever
+/// asks for a handful of ranks (p50/p95/p99 over latencies, TTFT, TBT),
+/// so each rank is answered with one O(n) `select_nth_unstable` pass
+/// over a lazily-allocated scratch buffer instead of an O(n log n)
+/// full sort of a million-entry vector. The scratch stays a permutation
+/// of the samples across calls, so every select is exact, and resolved
+/// ranks are memoized. Equality and ordering-sensitive consumers see
+/// the deterministic insertion order; use [`Latencies::sorted`] when an
+/// oracle needs the full order statistics.
+#[derive(Default)]
+pub struct Latencies {
+    /// Samples in insertion (completion) order.
+    samples: Vec<u64>,
+    /// Order-statistic scratch: a permutation of `samples` plus the
+    /// (rank, value) pairs already resolved. Behind a `Mutex` only for
+    /// interior mutability under `&self` — reports cross scoped-thread
+    /// joins, so the cache must be `Sync`; contention is nil (one
+    /// report, a handful of percentile calls).
+    select: Mutex<SelectScratch>,
+}
+
+#[derive(Default)]
+struct SelectScratch {
+    buf: Vec<u64>,
+    resolved: Vec<(usize, u64)>,
+}
 
 impl Latencies {
-    /// Take ownership of the samples and sort them.
-    pub fn from_unsorted(mut samples: Vec<u64>) -> Self {
-        samples.sort_unstable();
-        Self(samples)
+    /// Take ownership of the samples (kept in the given order).
+    pub fn from_unsorted(samples: Vec<u64>) -> Self {
+        Self {
+            samples,
+            select: Mutex::default(),
+        }
     }
 
     /// Concatenate several sample sets into one (the fleet aggregation
-    /// path: global percentiles over all clusters).
+    /// path: global percentiles over all clusters). Input order is
+    /// preserved, so merging per-cluster reports in cluster-index order
+    /// stays bit-deterministic for any `--threads`.
     pub fn merged<'a, I: IntoIterator<Item = &'a Latencies>>(sets: I) -> Latencies {
         let mut all = Vec::new();
         for s in sets {
-            all.extend_from_slice(&s.0);
+            all.extend_from_slice(&s.samples);
         }
         Latencies::from_unsorted(all)
     }
 
+    /// The samples in insertion (completion) order.
     pub fn as_slice(&self) -> &[u64] {
-        &self.0
+        &self.samples
+    }
+
+    /// A sorted copy of the samples — the full order statistics, for
+    /// oracles and differential tests that pin every rank at once.
+    pub fn sorted(&self) -> Vec<u64> {
+        let mut all = self.samples.clone();
+        all.sort_unstable();
+        all
     }
 
     /// Nearest-rank percentile; `p` clamped to [0, 100], 0 when empty.
     pub fn percentile(&self, p: f64) -> u64 {
-        if self.0.is_empty() {
+        if self.samples.is_empty() {
             return 0;
         }
-        let last = self.0.len() - 1;
+        let last = self.samples.len() - 1;
         let p = if p.is_nan() { 0.0 } else { p.clamp(0.0, 100.0) };
         let idx = ((p / 100.0) * last as f64).round() as usize;
-        self.0[idx.min(last)]
+        self.rank(idx.min(last))
+    }
+
+    /// The `idx`-th order statistic (0-based), via one linear
+    /// `select_nth_unstable` pass; memoized per rank.
+    fn rank(&self, idx: usize) -> u64 {
+        let mut sel = self.select.lock().unwrap();
+        if let Some(&(_, v)) = sel.resolved.iter().find(|&&(i, _)| i == idx) {
+            return v;
+        }
+        if sel.buf.is_empty() {
+            sel.buf.extend_from_slice(&self.samples);
+        }
+        // `buf` stays a permutation of `samples` across calls, so
+        // selecting on the already-partitioned buffer is still exact.
+        let v = *sel.buf.select_nth_unstable(idx).1;
+        sel.resolved.push((idx, v));
+        v
     }
 }
+
+impl Clone for Latencies {
+    fn clone(&self) -> Self {
+        Latencies::from_unsorted(self.samples.clone())
+    }
+}
+
+impl std::fmt::Debug for Latencies {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("Latencies").field(&self.samples).finish()
+    }
+}
+
+/// Insertion-order-sensitive equality: the strictest determinism pin —
+/// two byte-identical runs complete requests in the same order, not
+/// merely with the same latency multiset.
+impl PartialEq for Latencies {
+    fn eq(&self, other: &Self) -> bool {
+        self.samples == other.samples
+    }
+}
+
+impl Eq for Latencies {}
 
 impl std::ops::Deref for Latencies {
     type Target = [u64];
 
     fn deref(&self) -> &[u64] {
-        &self.0
+        &self.samples
     }
 }
 
@@ -226,14 +306,16 @@ pub struct ServeReport {
     pub power_cap_w: Option<f64>,
     pub clusters: usize,
     pub n_requests: usize,
-    /// Per-request latencies (completion - arrival), sorted, cycles.
+    /// Per-request latencies (completion - arrival), completion order,
+    /// cycles.
     pub latencies: Latencies,
     /// Time to first token per request (prompt completion - arrival;
-    /// the whole latency for single-pass classes), sorted, cycles.
+    /// the whole latency for single-pass classes), completion order,
+    /// cycles.
     pub ttft: Latencies,
-    /// Time between consecutive generated tokens, sorted, cycles. One
-    /// sample per decode token; empty when the stream has no
-    /// generative requests.
+    /// Time between consecutive generated tokens, cycles. One sample
+    /// per decode token; empty when the stream has no generative
+    /// requests.
     pub tbt: Latencies,
     /// First arrival to last completion, cycles (at least 1).
     pub makespan: u64,
@@ -635,11 +717,17 @@ mod tests {
     }
 
     #[test]
-    fn from_unsorted_sorts() {
+    fn from_unsorted_keeps_insertion_order_but_selects_exactly() {
         let l = Latencies::from_unsorted(vec![9, 1, 5]);
-        assert_eq!(l.as_slice(), &[1, 5, 9]);
+        assert_eq!(l.as_slice(), &[9, 1, 5]);
+        assert_eq!(l.sorted(), vec![1, 5, 9]);
         assert_eq!(l.percentile(0.0), 1);
+        assert_eq!(l.percentile(50.0), 5);
         assert_eq!(l.percentile(100.0), 9);
+        // repeated and interleaved rank queries stay exact: the scratch
+        // buffer is a permutation of the samples after every select
+        assert_eq!(l.percentile(100.0), 9);
+        assert_eq!(l.percentile(0.0), 1);
     }
 
     #[test]
@@ -647,8 +735,21 @@ mod tests {
         let a = Latencies::from_unsorted(vec![1, 3, 5]);
         let b = Latencies::from_unsorted(vec![2, 4, 6]);
         let m = Latencies::merged([&a, &b]);
-        assert_eq!(m.as_slice(), &[1, 2, 3, 4, 5, 6]);
+        assert_eq!(m.as_slice(), &[1, 3, 5, 2, 4, 6]);
+        assert_eq!(m.sorted(), vec![1, 2, 3, 4, 5, 6]);
         assert_eq!(m.percentile(100.0), 6);
+        assert_eq!(m.percentile(0.0), 1);
+    }
+
+    #[test]
+    fn equality_is_insertion_order_sensitive() {
+        let a = Latencies::from_unsorted(vec![2, 1]);
+        let b = Latencies::from_unsorted(vec![1, 2]);
+        assert_ne!(a, b, "same multiset, different completion order");
+        assert_eq!(a, a.clone());
+        // percentile memoization never leaks into equality
+        a.percentile(50.0);
+        assert_eq!(a, Latencies::from_unsorted(vec![2, 1]));
     }
 
     #[test]

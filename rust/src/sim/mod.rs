@@ -16,7 +16,9 @@
 //! * [`slab`] — [`slab::SlabHeap`]: the allocation-free event store
 //!   under the engine — a 4-ary min-heap of `(at, seq, u32 slot)`
 //!   triples over a slab arena with an O(1) free list, pinned against
-//!   `std::collections::BinaryHeap` by `rust/tests/heap_model.rs`;
+//!   `std::collections::BinaryHeap` by `rust/tests/heap_model.rs` —
+//!   plus [`slab::Arena`], the contiguous `u32`-keyed store the fleet
+//!   request plan lives in (DESIGN.md §14);
 //! * [`resource`] — [`Resource`] / [`ResourcePool`]: named serial
 //!   resources with occupancy accounting (`start = max(now, free_at)`),
 //!   the single queueing primitive clusters, accelerators, the spray

@@ -155,6 +155,73 @@ impl<E> Default for SlabHeap<E> {
     }
 }
 
+/// A contiguous append-only arena addressed by `u32` keys — the
+/// allocation pattern behind the fleet's request store (DESIGN.md §14):
+/// all per-request metadata lives in one flat slab instead of one
+/// heap-allocated `Vec` per cluster, so building and walking a
+/// million-request dispatch plan touches memory sequentially.
+///
+/// Unlike [`SlabHeap`]'s slot store there is no free list: simulation
+/// inputs are immutable for the lifetime of a run, so slots are never
+/// recycled and `as_slice` can expose the whole arena contiguously.
+#[derive(Clone, Debug, Default)]
+pub struct Arena<T> {
+    items: Vec<T>,
+}
+
+impl<T> Arena<T> {
+    pub fn new() -> Self {
+        Self { items: Vec::new() }
+    }
+
+    /// Pre-size the arena for `n` items.
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            items: Vec::with_capacity(n),
+        }
+    }
+
+    /// Adopt an already-built vector as the arena storage (the bulk
+    /// path: a counting-sort scatter produces the final layout in one
+    /// pass, no per-item `alloc` calls).
+    pub fn from_vec(items: Vec<T>) -> Self {
+        assert!(
+            items.len() < u32::MAX as usize,
+            "arena key space exhausted"
+        );
+        Self { items }
+    }
+
+    /// Append an item, returning its stable `u32` key.
+    pub fn alloc(&mut self, item: T) -> u32 {
+        let key = self.items.len();
+        assert!(key < u32::MAX as usize, "arena key space exhausted");
+        self.items.push(item);
+        key as u32
+    }
+
+    pub fn get(&self, key: u32) -> &T {
+        &self.items[key as usize]
+    }
+
+    pub fn get_mut(&mut self, key: u32) -> &mut T {
+        &mut self.items[key as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// The whole arena in key order, contiguously.
+    pub fn as_slice(&self) -> &[T] {
+        &self.items
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,6 +264,24 @@ mod tests {
         // the high-water mark of in-flight events
         assert_eq!(h.slots.len(), 1);
         assert_eq!(h.free.len(), 1);
+    }
+
+    #[test]
+    fn arena_keys_are_stable_and_contiguous() {
+        let mut a = Arena::with_capacity(4);
+        let k0 = a.alloc("a");
+        let k1 = a.alloc("b");
+        assert_eq!((k0, k1), (0, 1));
+        assert_eq!(*a.get(k0), "a");
+        *a.get_mut(k1) = "c";
+        assert_eq!(a.as_slice(), &["a", "c"]);
+        assert_eq!(a.len(), 2);
+        assert!(!a.is_empty());
+
+        let bulk = Arena::from_vec(vec![10u64, 20, 30]);
+        assert_eq!(bulk.as_slice(), &[10, 20, 30]);
+        assert_eq!(*bulk.get(2), 30);
+        assert!(Arena::<u64>::new().is_empty());
     }
 
     #[test]

@@ -56,12 +56,13 @@ fn fifo_matches_the_prerefactor_reference_schedule() {
         let reqs = poisson_stream(seed, n, 8.0e5);
         let clusters = mesh * mesh;
         let golden = reference_fifo_completions(&reqs, clusters);
-        let mut golden_latencies: Vec<u64> = reqs
+        // latencies are reported in request order, so the oracle pins
+        // every individual request, not just the sorted multiset
+        let golden_latencies: Vec<u64> = reqs
             .iter()
             .zip(&golden)
             .map(|(r, &c)| c - r.arrival)
             .collect();
-        golden_latencies.sort_unstable();
         let golden_makespan = (golden.iter().copied().max().unwrap()
             - reqs.iter().map(|r| r.arrival).min().unwrap())
         .max(1);
@@ -122,12 +123,11 @@ fn pinned_throughput_governor_reproduces_the_fifo_oracle() {
     for (seed, n, mesh) in [(0xA0u64, 120usize, 1usize), (0xA1, 120, 2)] {
         let reqs = poisson_stream(seed, n, 8.0e5);
         let golden = reference_fifo_completions(&reqs, mesh * mesh);
-        let mut golden_latencies: Vec<u64> = reqs
+        let golden_latencies: Vec<u64> = reqs
             .iter()
             .zip(&golden)
             .map(|(r, &c)| c - r.arrival)
             .collect();
-        golden_latencies.sort_unstable();
 
         let mut cfg = ServerConfig::new(mesh, Policy::Fifo);
         cfg.governor = GovernorPolicy::PinnedThroughput;

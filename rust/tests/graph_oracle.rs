@@ -249,7 +249,9 @@ fn legacy_fifo_serve_report_is_unchanged() {
 
     let clusters = 4usize; // 2x2 mesh
     let mut free = vec![0u64; clusters];
-    let mut golden_latencies: Vec<u64> = reqs
+    // latencies are reported in request order, so this pins every
+    // individual request against the legacy schedule
+    let golden_latencies: Vec<u64> = reqs
         .iter()
         .map(|r| {
             let service = legacy_service(r.class).max(1);
@@ -259,7 +261,6 @@ fn legacy_fifo_serve_report_is_unchanged() {
             free[ci] - r.arrival
         })
         .collect();
-    golden_latencies.sort_unstable();
 
     let rep = BatchScheduler::new(ServerConfig::new(2, Policy::Fifo)).run(&reqs);
     assert_eq!(rep.latencies.as_slice(), golden_latencies.as_slice());

@@ -1,0 +1,132 @@
+//! Differential suite for the `stats::Latencies` select-based
+//! percentiles (DESIGN.md §14): the old implementation kept every
+//! sample set fully sorted and indexed the sorted vector; the new one
+//! keeps insertion order and answers each rank with one
+//! `select_nth_unstable` pass over a lazily-built scratch permutation,
+//! memoizing resolved ranks. The reference below *is* the old
+//! sort-then-index path, kept executable — both must agree on every
+//! queried percentile, byte for byte, across empty / singleton /
+//! all-ties / million-entry inputs and across repeated, interleaved,
+//! and out-of-range queries.
+
+use softex::rng::Xoshiro256;
+use softex::server::Latencies;
+
+/// The pre-refactor percentile, verbatim semantics: full sort, then
+/// nearest-rank index `round(p/100 * (n-1))` with the same NaN/clamp
+/// handling `Latencies::percentile` applies.
+fn reference_percentile(samples: &[u64], p: f64) -> u64 {
+    if samples.is_empty() {
+        return 0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable();
+    let last = sorted.len() - 1;
+    let p = if p.is_nan() { 0.0 } else { p.clamp(0.0, 100.0) };
+    let idx = ((p / 100.0) * last as f64).round() as usize;
+    sorted[idx.min(last)]
+}
+
+/// The percentile grid every input is checked over: the report's real
+/// queries (p50/p95/p99), the edges, fractional ranks, and the
+/// out-of-range / NaN inputs the clamping contract covers.
+const GRID: [f64; 13] = [
+    0.0,
+    1.0,
+    10.0,
+    25.0,
+    50.0,
+    75.0,
+    90.0,
+    95.0,
+    99.0,
+    99.9,
+    100.0,
+    -5.0,
+    250.0,
+];
+
+fn assert_matches_reference(samples: Vec<u64>, what: &str) {
+    let l = Latencies::from_unsorted(samples.clone());
+    // forward sweep, then a reversed re-query of the same ranks: the
+    // scratch buffer is partitioned differently after every select and
+    // must stay a permutation of the samples (memoized ranks must also
+    // return the identical value the first query resolved)
+    for &p in GRID.iter().chain(GRID.iter().rev()) {
+        assert_eq!(
+            l.percentile(p),
+            reference_percentile(&samples, p),
+            "{what}: p = {p}"
+        );
+    }
+    assert_eq!(
+        l.percentile(f64::NAN),
+        reference_percentile(&samples, f64::NAN),
+        "{what}: NaN"
+    );
+    // the full order statistics agree too
+    let mut sorted = samples.clone();
+    sorted.sort_unstable();
+    assert_eq!(l.sorted(), sorted, "{what}: sorted()");
+    // and insertion order was never disturbed by the selects
+    assert_eq!(l.as_slice(), samples.as_slice(), "{what}: as_slice()");
+}
+
+#[test]
+fn empty_and_singleton_inputs_match_the_sort_path() {
+    assert_matches_reference(Vec::new(), "empty");
+    assert_matches_reference(vec![42], "singleton");
+    assert_matches_reference(vec![0], "singleton zero");
+    assert_matches_reference(vec![u64::MAX], "singleton max");
+}
+
+#[test]
+fn all_ties_match_the_sort_path() {
+    assert_matches_reference(vec![7; 2], "two ties");
+    assert_matches_reference(vec![7; 1000], "a thousand ties");
+    // plateaus with distinct values at the edges: every rank inside
+    // the plateau must answer the tie value, not a neighbor
+    let mut plateau = vec![1u64];
+    plateau.extend(vec![500u64; 998]);
+    plateau.push(1_000_000);
+    assert_matches_reference(plateau, "plateau");
+}
+
+#[test]
+fn small_adversarial_orders_match_the_sort_path() {
+    assert_matches_reference((1..=100).collect(), "ascending");
+    assert_matches_reference((1..=100).rev().collect(), "descending");
+    assert_matches_reference(vec![9, 1, 5, 5, 9, 1, 3], "duplicates shuffled");
+    // sawtooth: worst case for anything assuming partial order
+    assert_matches_reference((0..512).map(|i| (i % 7) * 1000 + i / 7).collect(), "sawtooth");
+}
+
+#[test]
+fn million_entry_seeded_input_matches_the_sort_path() {
+    // the fleet-scale case the select path exists for: a million
+    // samples, heavy duplication (50k distinct values), seeded so the
+    // differential is reproducible
+    let mut rng = Xoshiro256::new(0x57A75);
+    let samples: Vec<u64> = (0..1_000_000).map(|_| rng.below(50_000)).collect();
+    assert_matches_reference(samples, "1M seeded");
+}
+
+#[test]
+fn merged_sets_match_the_sort_path_globally() {
+    let mut rng = Xoshiro256::new(0xD1FF);
+    let parts: Vec<Vec<u64>> = (0..8)
+        .map(|_| (0..1_000).map(|_| rng.below(10_000)).collect())
+        .collect();
+    let sets: Vec<Latencies> = parts
+        .iter()
+        .map(|p| Latencies::from_unsorted(p.clone()))
+        .collect();
+    let merged = Latencies::merged(sets.iter());
+    let all: Vec<u64> = parts.concat();
+    for &p in &GRID {
+        assert_eq!(merged.percentile(p), reference_percentile(&all, p), "p = {p}");
+    }
+    // merge order is concatenation order — the fleet's cluster-index
+    // merge determinism depends on it
+    assert_eq!(merged.as_slice(), all.as_slice());
+}

@@ -1,0 +1,178 @@
+#!/usr/bin/env python3
+"""Regression gate for the committed throughput-bench baselines.
+
+CI regenerates BENCH_sim.json / BENCH_fleet.json on every push (quick
+mode) and runs this gate against the committed baseline:
+
+  python3 tools/bench_gate.py --kind sim   --new BENCH_sim.json   --baseline <stash>
+  python3 tools/bench_gate.py --kind fleet --new BENCH_fleet.json --baseline <stash>
+
+The gate fails the build when:
+  * the fresh run is not `measured` (the bench did not actually run);
+  * the headline speedup drops below its floor (sim: batched engine
+    >= 5x over the reference loop; fleet: shared-cost-model runtime
+    >= 3x over per-cluster re-derivation);
+  * the committed baseline is an unmeasured bootstrap placeholder —
+    the gate refuses to "pass" against a file with no numbers in it;
+  * any grid cell regresses below 0.8x of the committed baseline
+    (> 20% throughput loss).
+
+`--selftest` runs the gate against synthetic fixtures and asserts it
+trips on each injected failure — CI runs it before the real gate so a
+silently-neutered gate fails loudly.
+"""
+
+import argparse
+import json
+
+KINDS = {
+    "sim": dict(
+        bench="sim_throughput",
+        headline="speedup_vs_reference",
+        floor=5.0,
+        key=("model", "policy", "governor"),
+        metric="tokens_per_sec",
+    ),
+    "fleet": dict(
+        bench="fleet_throughput",
+        headline="speedup_vs_rederive",
+        floor=3.0,
+        key=("clusters", "threads", "policy"),
+        metric="requests_per_sec",
+    ),
+}
+MAX_CELL_REGRESSION = 0.8
+
+
+def check(kind, new, base):
+    spec = KINDS[kind]
+    if new.get("bench") != spec["bench"]:
+        raise AssertionError(
+            f"wrong bench file: {new.get('bench')!r} != {spec['bench']!r}"
+        )
+    if new.get("measured") is not True:
+        raise AssertionError("bench did not run (measured is not true)")
+
+    speedup = new["headline"][spec["headline"]]
+    if speedup < spec["floor"]:
+        raise AssertionError(
+            f"headline {spec['headline']} {speedup:.2f}x is below the "
+            f"{spec['floor']}x floor"
+        )
+    print(f"headline {spec['headline']}: {speedup:.2f}x (floor {spec['floor']}x)")
+
+    if not base.get("measured"):
+        raise AssertionError(
+            "committed baseline is an unmeasured bootstrap placeholder — the "
+            "regression gate refuses to pass against a file with no numbers.\n"
+            "Measure a real baseline on representative hardware and commit it:\n"
+            f"  cargo bench --bench {spec['bench']}\n"
+            f"  git add BENCH_{kind}.json\n"
+            f'  git commit -m "Record measured {kind}-bench baseline"'
+        )
+
+    def cell_key(c):
+        return tuple(c[k] for k in spec["key"])
+
+    baseline = {cell_key(c): c[spec["metric"]] for c in base["cells"]}
+    worst = None
+    for cell in new["cells"]:
+        old = baseline.get(cell_key(cell))
+        if not old:
+            continue
+        ratio = cell[spec["metric"]] / old
+        if worst is None or ratio < worst[0]:
+            worst = (ratio, cell_key(cell))
+        if ratio < MAX_CELL_REGRESSION:
+            raise AssertionError(
+                f"{cell_key(cell)}: {spec['metric']} regressed to {ratio:.2f}x "
+                f"of the committed baseline (floor {MAX_CELL_REGRESSION}x)"
+            )
+    if worst:
+        print(f"worst cell vs baseline: {worst[0]:.2f}x at {worst[1]}")
+
+
+def selftest():
+    """The gate must pass healthy runs and trip on every injected failure."""
+
+    def fleet_doc(rps, speedup=4.0, measured=True):
+        return {
+            "bench": "fleet_throughput",
+            "schema": 1,
+            "measured": measured,
+            "headline": {"speedup_vs_rederive": speedup},
+            "cells": [
+                {
+                    "clusters": 256,
+                    "threads": 8,
+                    "policy": "p2c",
+                    "requests_per_sec": rps,
+                }
+            ],
+        }
+
+    def sim_doc(tps, speedup=6.0, measured=True):
+        return {
+            "bench": "sim_throughput",
+            "schema": 1,
+            "measured": measured,
+            "headline": {"speedup_vs_reference": speedup},
+            "cells": [
+                {
+                    "model": "vit-tiny",
+                    "policy": "fifo",
+                    "governor": "pinned-throughput",
+                    "tokens_per_sec": tps,
+                }
+            ],
+        }
+
+    def trips(kind, new, base, needle):
+        try:
+            check(kind, new, base)
+        except AssertionError as e:
+            assert needle in str(e), f"tripped with the wrong message: {e}"
+            return
+        raise SystemExit(f"gate FAILED to trip ({kind}: expected {needle!r})")
+
+    # healthy pairs pass
+    check("fleet", fleet_doc(1000.0), fleet_doc(900.0))
+    check("sim", sim_doc(5000.0), sim_doc(4800.0))
+    # a > 20% cell regression trips
+    trips("fleet", fleet_doc(700.0), fleet_doc(1000.0), "regressed")
+    trips("sim", sim_doc(3500.0), sim_doc(5000.0), "regressed")
+    # a headline below the floor trips
+    trips("fleet", fleet_doc(1000.0, speedup=2.4), fleet_doc(900.0), "floor")
+    trips("sim", sim_doc(5000.0, speedup=4.9), sim_doc(4800.0), "floor")
+    # an unmeasured baseline or an unmeasured fresh run trips
+    trips("fleet", fleet_doc(1000.0), fleet_doc(900.0, measured=False), "placeholder")
+    trips("fleet", fleet_doc(1000.0, measured=False), fleet_doc(900.0), "did not run")
+    # a mixed-up bench file trips
+    trips("fleet", sim_doc(5000.0), fleet_doc(900.0), "wrong bench file")
+    print("bench gate self-test: healthy runs pass, every synthetic regression trips")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--kind", choices=sorted(KINDS))
+    ap.add_argument("--new", help="freshly generated bench JSON")
+    ap.add_argument("--baseline", help="committed baseline bench JSON")
+    ap.add_argument("--selftest", action="store_true")
+    args = ap.parse_args()
+    if args.selftest:
+        selftest()
+        return
+    if not (args.kind and args.new and args.baseline):
+        ap.error("--kind, --new and --baseline are required unless --selftest")
+    with open(args.new) as f:
+        new = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    try:
+        check(args.kind, new, base)
+    except AssertionError as e:
+        raise SystemExit(str(e))
+
+
+if __name__ == "__main__":
+    main()
