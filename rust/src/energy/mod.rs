@@ -84,7 +84,16 @@ pub fn cluster_power_w(mode: ActivityMode, op: &OperatingPoint) -> f64 {
             // direct paper anchors at 0.55 V
             ActivityMode::SoftmaxHw => 0.0561,
             ActivityMode::GeluHw => 0.0557,
-            _ => p08 * SCALE_055,
+            // every other mode scales from its 0.8 V anchor; the variants
+            // are spelled out so a new mode cannot silently inherit the
+            // scaled path without a pricing decision (audit rule E3/E4)
+            ActivityMode::MatMul
+            | ActivityMode::SoftmaxSw
+            | ActivityMode::GeluSw
+            | ActivityMode::CoresElementwise
+            | ActivityMode::VexpCores
+            | ActivityMode::SoleFusedNorm
+            | ActivityMode::Idle => p08 * SCALE_055,
         }
     }
 }

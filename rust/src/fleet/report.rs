@@ -289,10 +289,10 @@ impl FleetReport {
         };
         let mut out = report::render_table(
             &format!(
-                "Fleet run — {} ({} offered, {} admitted, {} downgraded, {} shed, mix {}, \
-                 governor {}{})",
-                self.label, self.n_offered, self.n_admitted, self.n_downgraded, self.n_shed,
-                self.mix, self.governor, cap
+                "Fleet run — {} on {} clusters ({} offered, {} admitted, {} downgraded, {} shed, \
+                 mix {}, engine {}, governor {}{})",
+                self.label, self.clusters, self.n_offered, self.n_admitted, self.n_downgraded,
+                self.n_shed, self.mix, self.engine, self.governor, cap
             ),
             &FLEET_HEADERS,
             &[self.row()],

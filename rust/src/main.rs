@@ -14,7 +14,7 @@
 //!   verify [--artifacts DIR]                            golden checks
 //!   info                                                cluster summary
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use softex::cluster::cores::ExpAlgo;
 use softex::coordinator::{execute_trace, ExecConfig, KernelClass, NonlinEngine};
@@ -41,9 +41,9 @@ const BOOL_FLAGS: &[&str] = &["json", "sw-nonlin"];
 /// Split `--flag value`, `--flag=value`, and bare boolean `--flag`
 /// arguments from positionals. A value-carrying flag followed by
 /// another `--flag` (or by nothing) is a usage error.
-fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
     let mut pos = Vec::new();
-    let mut flags = HashMap::new();
+    let mut flags = BTreeMap::new();
     let mut i = 0;
     while i < args.len() {
         if let Some(name) = args[i].strip_prefix("--") {
@@ -79,7 +79,7 @@ fn usage_error(msg: &str, usage: &str) -> ! {
 /// Parse an optional numeric flag, exiting with the usage message
 /// (instead of a panic backtrace) on a malformed value.
 fn num_flag<T: std::str::FromStr>(
-    flags: &HashMap<String, String>,
+    flags: &BTreeMap<String, String>,
     name: &str,
     default: T,
     usage: &str,
@@ -92,7 +92,7 @@ fn num_flag<T: std::str::FromStr>(
     }
 }
 
-fn cmd_run(pos: &[String], flags: &HashMap<String, String>) {
+fn cmd_run(pos: &[String], flags: &BTreeMap<String, String>) {
     let name = pos.first().map(String::as_str).unwrap_or("vit");
     let Some(model) = ModelConfig::by_name(name) else {
         eprintln!(
@@ -146,14 +146,20 @@ fn cmd_run(pos: &[String], flags: &HashMap<String, String>) {
 
 const SOFTMAX_USAGE: &str = "usage: softex softmax [--rows R] [--len L] [--lanes N]";
 
-fn cmd_softmax(flags: &HashMap<String, String>) {
+fn cmd_softmax(flags: &BTreeMap<String, String>) {
     let rows: usize = num_flag(flags, "rows", 512, SOFTMAX_USAGE);
     let len: usize = num_flag(flags, "len", 128, SOFTMAX_USAGE);
     let lanes: usize = num_flag(flags, "lanes", 16, SOFTMAX_USAGE);
-    if rows == 0 || len == 0 || lanes == 0 {
-        usage_error("--rows, --len, and --lanes must be at least 1", SOFTMAX_USAGE);
+    if rows == 0 || len == 0 {
+        usage_error("--rows and --len must be at least 1", SOFTMAX_USAGE);
     }
     let cfg = SoftExConfig::with_lanes(lanes);
+    // validate at the CLI boundary: the lane count maps onto a fitted
+    // hardware datapath, and reaching the library panic from a flag would
+    // be a crash, not an error message
+    if let Err(e) = cfg.validate() {
+        usage_error(&format!("invalid SoftEx config: {e}"), SOFTMAX_USAGE);
+    }
     let scores = gen::attention_scores(rows, len, 0x5EED);
     let r = softex::softex::run_softmax(&cfg, &scores, rows, len);
     println!(
@@ -174,7 +180,7 @@ fn cmd_softmax(flags: &HashMap<String, String>) {
 
 const GELU_USAGE: &str = "usage: softex gelu [--n N] [--terms 2..=6] [--bits B]";
 
-fn cmd_gelu(flags: &HashMap<String, String>) {
+fn cmd_gelu(flags: &BTreeMap<String, String>) {
     let n: usize = num_flag(flags, "n", 16384, GELU_USAGE);
     let terms: usize = num_flag(flags, "terms", 4, GELU_USAGE);
     let bits: u32 = num_flag(flags, "bits", 14, GELU_USAGE);
@@ -188,6 +194,9 @@ fn cmd_gelu(flags: &HashMap<String, String>) {
         );
     }
     let cfg = SoftExConfig { terms, acc_frac_bits: bits, ..Default::default() };
+    if let Err(e) = cfg.validate() {
+        usage_error(&format!("invalid SoftEx config: {e}"), GELU_USAGE);
+    }
     let xs = gen::gelu_inputs(n, 0x6E1);
     let r = softex::softex::run_gelu(&cfg, &xs);
     let mse: f64 = xs
@@ -207,7 +216,7 @@ fn cmd_gelu(flags: &HashMap<String, String>) {
 
 const MESH_USAGE: &str = "usage: softex mesh [--max N] [--trials T]";
 
-fn cmd_mesh(flags: &HashMap<String, String>) {
+fn cmd_mesh(flags: &BTreeMap<String, String>) {
     let max: usize = num_flag(flags, "max", 8, MESH_USAGE);
     let trials: u32 = num_flag(flags, "trials", 1 << 14, MESH_USAGE);
     if max == 0 || trials == 0 {
@@ -250,7 +259,7 @@ const SERVE_USAGE: &str =
 /// policy. `--power-cap-w W` selects the power-cap governor (and is
 /// required by `--governor power-cap`); any other governor name
 /// conflicts with a cap.
-fn parse_governor(flags: &HashMap<String, String>, usage: &str) -> GovernorPolicy {
+fn parse_governor(flags: &BTreeMap<String, String>, usage: &str) -> GovernorPolicy {
     let cap: Option<f64> = flags
         .contains_key("power-cap-w")
         .then(|| num_flag(flags, "power-cap-w", 0.0, usage));
@@ -286,7 +295,7 @@ fn parse_governor(flags: &HashMap<String, String>, usage: &str) -> GovernorPolic
 /// (`ModelConfig::by_name` spellings) gives a single-model stream, the
 /// `edge` / `genai` aliases select the built-in mixes, and the flag's
 /// absence keeps the edge default.
-fn parse_mix(flags: &HashMap<String, String>, usage: &str) -> WorkloadMix {
+fn parse_mix(flags: &BTreeMap<String, String>, usage: &str) -> WorkloadMix {
     match flags.get("model").map(String::as_str) {
         None | Some("edge") => WorkloadMix::edge_default(),
         Some("genai") => WorkloadMix::genai_default(),
@@ -308,7 +317,7 @@ fn parse_mix(flags: &HashMap<String, String>, usage: &str) -> WorkloadMix {
 /// that here as a usage error instead of tripping the scheduler's
 /// assert.
 fn parse_engine(
-    flags: &HashMap<String, String>,
+    flags: &BTreeMap<String, String>,
     gov: GovernorPolicy,
     usage: &str,
 ) -> NonlinEngine {
@@ -340,7 +349,7 @@ fn parse_engine(
 /// shrunk draft companion with acceptance probability `--spec-accept P`
 /// (default 0.75). The tagging seed is the run seed, so the tagged
 /// subset is reproducible alongside the arrival stream.
-fn parse_features(flags: &HashMap<String, String>, seed: u64, usage: &str) -> ServingFeatures {
+fn parse_features(flags: &BTreeMap<String, String>, seed: u64, usage: &str) -> ServingFeatures {
     let mut f = ServingFeatures { tag_seed: seed, ..Default::default() };
     f.prefix_share = num_flag(flags, "prefix-share", 0.0, usage);
     if !(0.0..=1.0).contains(&f.prefix_share) {
@@ -366,7 +375,7 @@ fn parse_features(flags: &HashMap<String, String>, seed: u64, usage: &str) -> Se
 }
 
 /// Parse the shared `--kv` flag, exiting with `usage` on unknown names.
-fn parse_kv(flags: &HashMap<String, String>, usage: &str) -> KvConfig {
+fn parse_kv(flags: &BTreeMap<String, String>, usage: &str) -> KvConfig {
     match flags.get("kv").map(String::as_str) {
         None => KvConfig::resident(),
         Some(name) => match KvPolicy::parse(name) {
@@ -381,7 +390,7 @@ fn parse_kv(flags: &HashMap<String, String>, usage: &str) -> KvConfig {
     }
 }
 
-fn cmd_serve(flags: &HashMap<String, String>) {
+fn cmd_serve(flags: &BTreeMap<String, String>) {
     let n: usize = num_flag(flags, "requests", 1000, SERVE_USAGE);
     let mesh: usize = num_flag(flags, "mesh", 2, SERVE_USAGE);
     let seed: u64 = num_flag(flags, "seed", 0x5EED, SERVE_USAGE);
@@ -443,7 +452,7 @@ fn fleet_usage_error(msg: &str) -> ! {
     usage_error(msg, FLEET_USAGE)
 }
 
-fn cmd_fleet(flags: &HashMap<String, String>) {
+fn cmd_fleet(flags: &BTreeMap<String, String>) {
     let clusters: usize = num_flag(flags, "clusters", 8, FLEET_USAGE);
     if clusters == 0 {
         fleet_usage_error("--clusters must be at least 1");
@@ -567,7 +576,7 @@ fn cmd_fleet(flags: &HashMap<String, String>) {
     }
 }
 
-fn cmd_verify(flags: &HashMap<String, String>) {
+fn cmd_verify(flags: &BTreeMap<String, String>) {
     let dir = flags
         .get("artifacts")
         .cloned()

@@ -103,7 +103,9 @@ impl Latencies {
     /// The `idx`-th order statistic (0-based), via one linear
     /// `select_nth_unstable` pass; memoized per rank.
     fn rank(&self, idx: usize) -> u64 {
-        let mut sel = self.select.lock().unwrap();
+        // a poisoned lock only means another thread panicked mid-select;
+        // the memo state is still a valid permutation, so keep going
+        let mut sel = self.select.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         if let Some(&(_, v)) = sel.resolved.iter().find(|&&(i, _)| i == idx) {
             return v;
         }
@@ -494,8 +496,14 @@ impl ServeReport {
         };
         let mut out = report::render_table(
             &format!(
-                "Serving run — {} ({} requests on {} clusters, mix {}, governor {}{})",
-                self.label, self.n_requests, self.clusters, self.mix, self.governor, cap
+                "Serving run — {} ({} requests on {} clusters, mix {}, engine {}, governor {}{})",
+                self.label,
+                self.n_requests,
+                self.clusters,
+                self.mix,
+                self.engine,
+                self.governor,
+                cap
             ),
             &SUMMARY_HEADERS,
             &[self.row()],

@@ -196,7 +196,7 @@ impl PrefixCache {
                 .enumerate()
                 .min_by_key(|(_, e)| e.last_use)
                 .map(|(i, _)| i)
-                .unwrap();
+                .expect("eviction only runs while the cache holds entries");
             let evicted = self.entries.remove(idx);
             self.used_bytes -= evicted.bytes;
         }

@@ -92,7 +92,7 @@ mod tests {
     fn max_is_global_max() {
         let xs = gen(1000, 2.0, 1);
         let r = accumulate_online(&xs, 16);
-        let want = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let want = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
         assert_eq!(r.max.to_f32(), want);
     }
 

@@ -127,7 +127,7 @@ mod tests {
         // GELU's minimum is ~-0.1700 at x~-0.7518
         let xs: Vec<f32> = (0..1200).map(|i| -6.0 + i as f32 * 0.01).collect();
         let r = run_gelu(&cfg(), &quantize_slice(&xs));
-        let min = r.out.iter().cloned().fold(f32::INFINITY, f32::min);
+        let min = r.out.iter().copied().fold(f32::INFINITY, f32::min);
         assert!(min > -0.2 && min < -0.12, "{min}");
     }
 

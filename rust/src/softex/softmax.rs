@@ -66,7 +66,7 @@ mod tests {
     }
 
     fn exact_softmax(row: &[f32]) -> Vec<f64> {
-        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
         let e: Vec<f64> = row.iter().map(|&x| ((x as f64) - m).exp()).collect();
         let s: f64 = e.iter().sum();
         e.into_iter().map(|v| v / s).collect()

@@ -234,3 +234,158 @@ fn governor_misuse_is_a_usage_error() {
     assert_eq!(out.status.code(), Some(2));
     assert!(stderr(&out).contains("0.55 V"), "{}", stderr(&out));
 }
+
+#[test]
+fn run_accepts_sw_nonlin_and_exp_algo() {
+    let out = softex(&["run", "vit-tiny", "--sw-nonlin", "--exp", "glibc"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("end-to-end"), "{text}");
+    assert!(text.contains("Softmax"), "{text}");
+}
+
+#[test]
+fn softmax_lanes_and_len_are_bounds_checked() {
+    // lanes outside the 1..=128 hardware template range is a usage error
+    let out = softex(&["softmax", "--rows", "4", "--len", "64", "--lanes", "500"]);
+    assert_eq!(out.status.code(), Some(2));
+    let err = stderr(&out);
+    assert!(err.contains("lanes"), "{err}");
+    assert!(err.contains("usage:"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+
+    // zero-length rows are rejected before the kernel runs
+    let out = softex(&["softmax", "--rows", "4", "--len", "0"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr(&out).contains("--len"), "{}", stderr(&out));
+
+    // an in-range lane count runs the job
+    let out = softex(&["softmax", "--rows", "4", "--len", "64", "--lanes", "8"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("8 lanes"), "{}", stdout(&out));
+}
+
+#[test]
+fn gelu_bits_are_bounds_checked() {
+    // accumulator precision outside 4..=24 fractional bits is a usage error
+    let out = softex(&["gelu", "--n", "256", "--bits", "40"]);
+    assert_eq!(out.status.code(), Some(2));
+    let err = stderr(&out);
+    assert!(err.contains("bits"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+
+    let out = softex(&["gelu", "--n", "256", "--terms", "3", "--bits", "12"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("terms=3"), "{}", stdout(&out));
+}
+
+#[test]
+fn mesh_sweep_honors_max() {
+    let out = softex(&["mesh", "--max", "2", "--trials", "64"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("1x1"), "{text}");
+    assert!(text.contains("2x2"), "{text}");
+    assert!(!text.contains("3x3"), "{text}");
+}
+
+#[test]
+fn serve_policy_kv_and_prefix_flags_reach_the_report() {
+    let out = softex(&[
+        "serve",
+        "--requests",
+        "8",
+        "--mesh",
+        "1",
+        "--policy",
+        "fifo",
+        "--kv",
+        "spill",
+        "--model",
+        "llama-edge",
+        "--prefix-share",
+        "0.5",
+        "--prefix-len",
+        "32",
+        "--json",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let json = stdout(&out);
+    assert!(json.contains("\"label\":\"fifo@"), "{json}");
+    assert!(json.contains("\"prefix_hits\":"), "{json}");
+
+    // a chunked prefill splits prompt ingestion and reports the count
+    let out = softex(&[
+        "serve",
+        "--requests",
+        "8",
+        "--mesh",
+        "1",
+        "--model",
+        "whisper",
+        "--prefill-chunk",
+        "64",
+        "--json",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("\"prefill_chunks\":"), "{}", stdout(&out));
+
+    // prefix-len without prefix-share is a usage error
+    let out = softex(&["serve", "--requests", "8", "--prefix-len", "32"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr(&out).contains("--prefix-share"), "{}", stderr(&out));
+}
+
+#[test]
+fn fleet_load_admission_and_speculation_flags_work() {
+    let out = softex(&[
+        "fleet",
+        "--clusters",
+        "2",
+        "--requests",
+        "10",
+        "--rho",
+        "0.5",
+        "--threads",
+        "2",
+        "--slo-ms",
+        "500",
+        "--admission",
+        "shed",
+        "--model",
+        "llama-edge",
+        "--speculate",
+        "4",
+        "--spec-accept",
+        "0.9",
+        "--json",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let json = stdout(&out);
+    assert!(json.contains("\"n_shed\":"), "{json}");
+    assert!(json.contains("\"spec_drafted_tokens\":"), "{json}");
+
+    // bursty arrivals keep the same long-run rate
+    let out = softex(&["fleet", "--clusters", "2", "--requests", "12", "--burst", "4", "--json"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("\"goodput_gops\""), "{}", stdout(&out));
+
+    // spec-accept without speculate is a usage error
+    let out = softex(&["fleet", "--requests", "5", "--spec-accept", "0.5"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr(&out).contains("--speculate"), "{}", stderr(&out));
+
+    // admission without an SLO to admit against is a usage error
+    let out = softex(&["fleet", "--requests", "5", "--admission", "shed"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr(&out).contains("--slo-ms"), "{}", stderr(&out));
+}
+
+#[test]
+fn verify_reports_missing_artifacts_without_panicking() {
+    let out = softex(&["verify", "--artifacts", "/nonexistent/softex-audit-test"]);
+    assert_eq!(out.status.code(), Some(1));
+    let err = stderr(&out);
+    assert!(err.contains("artifacts"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+}

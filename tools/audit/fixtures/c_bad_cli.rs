@@ -1,0 +1,6 @@
+// Fixture (virtual path rust/tests/cli.rs): only --alpha is exercised.
+#[test]
+fn alpha_round_trips() {
+    let out = run(&["--alpha", "3"]);
+    assert!(out.contains("3"));
+}

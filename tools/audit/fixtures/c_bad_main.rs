@@ -1,0 +1,14 @@
+// Fixture (virtual path rust/src/main.rs): the second flag is parsed but
+// absent from the usage text (C1) and from the CLI test suite (C2).
+// NB: comments count toward the usage corpus, so this header must not
+// spell the offending flag out.
+use std::collections::BTreeMap;
+
+const USAGE: &str = "usage: tool [--alpha N]";
+
+fn main() {
+    let flags: BTreeMap<String, String> = BTreeMap::new();
+    let _a = flags.get("alpha");
+    let _b = flags.get("beta");
+    let _ = USAGE;
+}

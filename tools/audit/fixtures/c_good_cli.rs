@@ -1,0 +1,12 @@
+// Fixture (virtual path rust/tests/cli.rs): both flags are exercised.
+#[test]
+fn alpha_round_trips() {
+    let out = run(&["--alpha", "3"]);
+    assert!(out.contains("3"));
+}
+
+#[test]
+fn beta_round_trips() {
+    let out = run(&["--beta", "7"]);
+    assert!(out.contains("7"));
+}

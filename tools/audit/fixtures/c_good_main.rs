@@ -1,0 +1,12 @@
+// Fixture (virtual path rust/src/main.rs): both parsed flags are documented
+// in usage text and exercised by the CLI suite.
+use std::collections::BTreeMap;
+
+const USAGE: &str = "usage: tool [--alpha N] [--beta M]";
+
+fn main() {
+    let flags: BTreeMap<String, String> = BTreeMap::new();
+    let _a = flags.get("alpha");
+    let _b = flags.get("beta");
+    let _ = USAGE;
+}

@@ -1,0 +1,15 @@
+// Fixture (virtual path rust/src/sim/clock.rs): violates every D rule.
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn now_ms() -> u128 {
+    let t = Instant::now(); // D1: wall clock in a deterministic path
+    let mut m: HashMap<u64, u64> = HashMap::new(); // D2: unordered container
+    m.insert(1, 2);
+    t.elapsed().as_millis()
+}
+
+pub fn entropy_seed() -> u64 {
+    let mut rng = rand::thread_rng(); // D3: entropy source
+    rng.gen()
+}

@@ -1,0 +1,14 @@
+// Fixture (virtual path rust/src/sim/clock.rs): the deterministic shape of
+// the same code — ordered containers, sim ticks, the seeded generator.
+use crate::rng::Xoshiro256;
+use std::collections::BTreeMap;
+
+pub fn tick_ms(now_ticks: u64) -> u64 {
+    let mut m: BTreeMap<u64, u64> = BTreeMap::new();
+    m.insert(1, now_ticks);
+    m.values().sum()
+}
+
+pub fn seeded_draw(seed: u64) -> u64 {
+    Xoshiro256::new(seed).next_u64()
+}

@@ -1,0 +1,16 @@
+// Fixture (virtual path rust/src/workload/trace.rs): the costing enums the
+// E-family anchors against, shrunk to two variants each.
+pub enum Op {
+    MatMul { m: usize },
+    Gelu { n: usize },
+}
+
+pub enum OpId {
+    Throughput,
+    Efficiency,
+}
+
+pub enum ActivityMode {
+    MatMul,
+    Idle,
+}

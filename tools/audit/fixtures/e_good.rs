@@ -1,0 +1,31 @@
+// Fixture (virtual path rust/src/coordinator/exec.rs): every variant named
+// at every designated site, no wildcards.
+use crate::workload::{ActivityMode, Op, OpId};
+
+pub fn op_cost(op: &Op) -> u64 {
+    match *op {
+        Op::MatMul { m } => m as u64,
+        Op::Gelu { n } => n as u64,
+    }
+}
+
+pub fn ticks(op: OpId, cycles: u64) -> u64 {
+    match op {
+        OpId::Throughput => cycles,
+        OpId::Efficiency => cycles * 2,
+    }
+}
+
+pub fn power_08v(mode: ActivityMode) -> f64 {
+    match mode {
+        ActivityMode::MatMul => 0.5,
+        ActivityMode::Idle => 0.1,
+    }
+}
+
+pub fn cluster_power_w(mode: ActivityMode) -> f64 {
+    match mode {
+        ActivityMode::MatMul => 0.28,
+        ActivityMode::Idle => 0.02,
+    }
+}

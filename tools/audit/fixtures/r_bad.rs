@@ -1,0 +1,21 @@
+// Fixture (virtual path rust/src/server/stats.rs): ServeReport grows an
+// `energy_j` field that neither to_json() nor the table printer surfaces.
+pub struct ServeReport {
+    pub label: String,
+    pub p99_cycles: u64,
+    pub energy_j: f64,
+}
+
+impl ServeReport {
+    pub fn to_json(&self) -> String {
+        format!("{{\"label\":\"{}\",\"p99_cycles\":{}}}", self.label, self.p99_cycles)
+    }
+
+    pub fn render(&self) -> String {
+        format!("{} p99={}", self.label, self.p99_cycles)
+    }
+
+    pub fn row(&self) -> Vec<String> {
+        vec![self.label.clone(), self.p99_cycles.to_string()]
+    }
+}

@@ -1,0 +1,16 @@
+// Fixture (virtual path rust/src/fleet/report.rs): a clean FleetReport so
+// the R fixtures satisfy both anchors and only the planted gap fires.
+pub struct FleetReport {
+    pub label: String,
+    pub n_shed: u64,
+}
+
+impl FleetReport {
+    pub fn to_json(&self) -> String {
+        format!("{{\"label\":\"{}\",\"n_shed\":{}}}", self.label, self.n_shed)
+    }
+
+    pub fn render(&self) -> String {
+        format!("{} shed={}", self.label, self.n_shed)
+    }
+}

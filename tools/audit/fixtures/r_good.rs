@@ -1,0 +1,35 @@
+// Fixture (virtual path rust/src/server/stats.rs): every ServeReport field
+// is named in to_json() and in the printer; `ttft` shows the
+// `field_`-prefix convention (surfaced as ttft_p50).
+pub struct ServeReport {
+    pub label: String,
+    pub p99_cycles: u64,
+    pub energy_j: f64,
+    pub ttft: Vec<u64>,
+}
+
+impl ServeReport {
+    pub fn ttft_p50(&self) -> u64 {
+        self.ttft.get(self.ttft.len() / 2).copied().unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"label\":\"{}\",\"p99_cycles\":{},\"energy_j\":{},\"ttft_p50\":{}}}",
+            self.label,
+            self.p99_cycles,
+            self.energy_j,
+            self.ttft_p50()
+        )
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "{} p99={} energy_j={} ttft_p50={}",
+            self.label,
+            self.p99_cycles,
+            self.energy_j,
+            self.ttft_p50()
+        )
+    }
+}

@@ -1,0 +1,11 @@
+// Fixture (virtual path rust/src/sim/s.rs): two library-path panics (S1)
+// and an unsafe block with no SAFETY comment (S2).
+pub fn first_two(xs: &[u64]) -> (u64, u64) {
+    let a = xs.first().unwrap();
+    let b = xs.get(1).expect("needs two elements");
+    (*a, *b)
+}
+
+pub fn read_raw(v: &u64) -> u64 {
+    unsafe { core::ptr::read(v) }
+}

@@ -1,0 +1,25 @@
+// Fixture (virtual path rust/src/sim/s.rs): fallible paths return options,
+// the unsafe block carries its SAFETY comment, and test-mod unwraps are
+// exempt.
+pub fn first_two(xs: &[u64]) -> Option<(u64, u64)> {
+    match (xs.first(), xs.get(1)) {
+        (Some(a), Some(b)) => Some((*a, *b)),
+        _ => None,
+    }
+}
+
+pub fn read_raw(v: &u64) -> u64 {
+    // SAFETY: `v` is a live shared reference, so the pointer derived from
+    // it is non-null, aligned, and valid for reads of u64.
+    unsafe { core::ptr::read(v) }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwraps_are_fine_in_tests() {
+        let pair = super::first_two(&[1, 2]);
+        assert_eq!(pair.unwrap(), (1, 2));
+        assert!(super::first_two(&[]).is_none());
+    }
+}

@@ -1,0 +1,176 @@
+//! The audit allowlist: a TOML subset with only `[[allow]]` table arrays,
+//! quoted-string values, and integer `count`s. Entries have *count
+//! semantics*: an entry expects exactly `count` findings. Fewer means the
+//! entry is stale (meta-finding A1); more means the excess is reported.
+//! Either way the allowlist cannot silently rot.
+
+use crate::rules::Finding;
+
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub rule: String,
+    /// Repo-relative path the suppressed findings must be in.
+    pub path: Option<String>,
+    /// Exact finding symbol (e.g. `ServeReport.latencies`) to suppress.
+    pub symbol: Option<String>,
+    pub count: usize,
+    pub reason: String,
+    pub used: usize,
+}
+
+pub fn parse(text: &str) -> Result<Vec<Entry>, String> {
+    let mut entries: Vec<Entry> = Vec::new();
+    let mut cur: Option<Entry> = None;
+    for (idx, raw) in text.lines().enumerate() {
+        let ln = idx + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[allow]]" {
+            if let Some(e) = cur.take() {
+                entries.push(e);
+            }
+            cur = Some(Entry {
+                rule: String::new(),
+                path: None,
+                symbol: None,
+                count: 1,
+                reason: String::new(),
+                used: 0,
+            });
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(format!("allowlist line {ln}: expected `key = value`"));
+        };
+        let key = line[..eq].trim();
+        let val = line[eq + 1..].trim();
+        let Some(e) = cur.as_mut() else {
+            return Err(format!("allowlist line {ln}: `{key}` outside an [[allow]] entry"));
+        };
+        match key {
+            "rule" => e.rule = unquote(val, ln)?,
+            "path" => e.path = Some(unquote(val, ln)?),
+            "symbol" => e.symbol = Some(unquote(val, ln)?),
+            "reason" => e.reason = unquote(val, ln)?,
+            "count" => {
+                e.count = val
+                    .parse()
+                    .map_err(|_| format!("allowlist line {ln}: `count` must be an integer"))?;
+            }
+            other => return Err(format!("allowlist line {ln}: unknown key `{other}`")),
+        }
+    }
+    if let Some(e) = cur.take() {
+        entries.push(e);
+    }
+    for e in &entries {
+        if e.rule.is_empty() {
+            return Err("allowlist entry missing `rule`".to_string());
+        }
+        if e.reason.is_empty() {
+            return Err(format!("allowlist entry for {} missing `reason`", e.rule));
+        }
+        if e.path.is_none() && e.symbol.is_none() {
+            return Err(format!("allowlist entry for {} needs a `path` or `symbol`", e.rule));
+        }
+    }
+    Ok(entries)
+}
+
+fn unquote(v: &str, ln: usize) -> Result<String, String> {
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        Ok(v[1..v.len() - 1].to_string())
+    } else {
+        Err(format!("allowlist line {ln}: expected a quoted string"))
+    }
+}
+
+/// Suppress findings against the entries. Returns the findings that remain
+/// (excess over `count`, plus one A1 per under-used entry) and the number
+/// suppressed.
+pub fn apply(findings: Vec<Finding>, entries: &mut [Entry]) -> (Vec<Finding>, usize) {
+    let mut kept = Vec::new();
+    let mut suppressed = 0usize;
+    for f in findings {
+        let mut hit = false;
+        for e in entries.iter_mut() {
+            if e.rule != f.rule {
+                continue;
+            }
+            if let Some(p) = &e.path {
+                if p != &f.path {
+                    continue;
+                }
+            }
+            if let Some(s) = &e.symbol {
+                if s != &f.symbol {
+                    continue;
+                }
+            }
+            if e.used >= e.count {
+                continue;
+            }
+            e.used += 1;
+            hit = true;
+            break;
+        }
+        if hit {
+            suppressed += 1;
+        } else {
+            kept.push(f);
+        }
+    }
+    for e in entries.iter() {
+        if e.used < e.count {
+            kept.push(Finding {
+                rule: "A1",
+                path: e.path.clone().unwrap_or_else(|| "tools/audit_allow.toml".to_string()),
+                line: 0,
+                symbol: e.symbol.clone().unwrap_or_else(|| e.rule.clone()),
+                detail: format!(
+                    "stale allowlist entry: rule {} expected {} finding(s) here, matched {}",
+                    e.rule, e.count, e.used
+                ),
+            });
+        }
+    }
+    (kept, suppressed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# justifications live next to the suppressions
+[[allow]]
+rule = \"S1\"
+path = \"rust/src/sim/slab.rs\"
+count = 2
+reason = \"slab indices are validated on insert\"
+
+[[allow]]
+rule = \"R2\"
+symbol = \"FleetReport.policy\"
+reason = \"the policy@N label carries it\"
+";
+
+    #[test]
+    fn parses_entries_with_defaults() {
+        let es = parse(SAMPLE).expect("parse");
+        assert_eq!(es.len(), 2);
+        assert_eq!(es[0].count, 2);
+        assert_eq!(es[1].count, 1);
+        assert_eq!(es[1].symbol.as_deref(), Some("FleetReport.policy"));
+    }
+
+    #[test]
+    fn rejects_entries_without_reason_or_target() {
+        assert!(parse("[[allow]]\nrule = \"S1\"\npath = \"x\"\n").is_err());
+        assert!(parse("[[allow]]\nrule = \"S1\"\nreason = \"r\"\n").is_err());
+        let extra = "[[allow]]\nrule = \"S1\"\npath = \"x\"\nreason = \"r\"\nbogus = \"y\"\n";
+        assert!(parse(extra).is_err());
+    }
+}

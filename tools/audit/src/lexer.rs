@@ -1,0 +1,308 @@
+//! A minimal Rust lexer: just enough to strip comments and string/char
+//! literals and hand the rules a stream of identifiers, literals, and
+//! punctuation with line numbers.
+//!
+//! This is deliberately not a parser. Every invariant in the catalog
+//! (DESIGN.md §15) is expressible over token patterns plus brace matching,
+//! and a hand-rolled lexer keeps the auditor dependency-free and fast.
+//! Known approximations are documented on the rules that rely on them.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    /// String literal (plain, byte, or raw); `text` is the unescaped content.
+    Str,
+    /// Line or block comment; `text` is the content without the delimiters.
+    Comment,
+    Num,
+    /// Char or byte-char literal; content is not needed by any rule.
+    Char,
+    /// A single punctuation character.
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based source line of the token's first character.
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct
+            && self.text.chars().next() == Some(c)
+            && self.text.chars().count() == 1
+    }
+}
+
+/// Lex `src` into tokens. Lifetimes (`'a`) are skipped so their names lex as
+/// ordinary identifiers; char literals are disambiguated from lifetimes by
+/// looking for the closing quote.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut line: u32 = 1;
+    let mut i = 0usize;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (covers `//`, `///`, `//!`).
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let mut j = i + 2;
+            while j < n && cs[j] != '\n' {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Comment, text: cs[i + 2..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        // Block comment, with Rust-style nesting.
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let start_line = line;
+            let mut depth = 1u32;
+            let mut j = i + 2;
+            let mut text = String::new();
+            while j < n && depth > 0 {
+                if cs[j] == '/' && j + 1 < n && cs[j + 1] == '*' {
+                    depth += 1;
+                    text.push_str("/*");
+                    j += 2;
+                } else if cs[j] == '*' && j + 1 < n && cs[j + 1] == '/' {
+                    depth -= 1;
+                    if depth > 0 {
+                        text.push_str("*/");
+                    }
+                    j += 2;
+                } else {
+                    if cs[j] == '\n' {
+                        line += 1;
+                    }
+                    text.push(cs[j]);
+                    j += 1;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Comment, text, line: start_line });
+            i = j;
+            continue;
+        }
+        // Raw (optionally byte) strings: r"..", r#".."#, br"..".
+        if c == 'r' || c == 'b' {
+            if let Some((text, next, lines)) = raw_string(&cs, i) {
+                toks.push(Tok { kind: TokKind::Str, text, line });
+                line += lines;
+                i = next;
+                continue;
+            }
+        }
+        // Plain (optionally byte) string literal.
+        if c == '"' || (c == 'b' && i + 1 < n && cs[i + 1] == '"') {
+            let start_line = line;
+            let mut j = if c == 'b' { i + 2 } else { i + 1 };
+            let mut text = String::new();
+            while j < n && cs[j] != '"' {
+                if cs[j] == '\\' && j + 1 < n {
+                    match cs[j + 1] {
+                        // Line continuation: swallow the newline and the
+                        // next line's leading indentation, as rustc does.
+                        '\n' => {
+                            line += 1;
+                            j += 2;
+                            while j < n && (cs[j] == ' ' || cs[j] == '\t') {
+                                j += 1;
+                            }
+                            continue;
+                        }
+                        'n' => text.push('\n'),
+                        't' => text.push('\t'),
+                        'r' => text.push('\r'),
+                        other => text.push(other),
+                    }
+                    j += 2;
+                } else {
+                    if cs[j] == '\n' {
+                        line += 1;
+                    }
+                    text.push(cs[j]);
+                    j += 1;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Str, text, line: start_line });
+            i = j + 1;
+            continue;
+        }
+        if c == '\'' {
+            // Escaped char literal: '\n', '\'', '\u{..}'.
+            if i + 1 < n && cs[i + 1] == '\\' {
+                let mut j = i + 3; // skip the escaped character
+                while j < n && cs[j] != '\'' {
+                    j += 1;
+                }
+                toks.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                i = j + 1;
+                continue;
+            }
+            // Plain char literal: 'x'.
+            if i + 2 < n && cs[i + 2] == '\'' {
+                toks.push(Tok { kind: TokKind::Char, text: cs[i + 1].to_string(), line });
+                i += 3;
+                continue;
+            }
+            // Lifetime: drop the quote, let the name lex as an ident.
+            i += 1;
+            continue;
+        }
+        if c == '_' || c.is_alphabetic() {
+            let mut j = i;
+            while j < n && (cs[j] == '_' || cs[j].is_alphanumeric()) {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text: cs[i..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            let mut seen_dot = false;
+            while j < n {
+                let d = cs[j];
+                if d == '_' || d.is_alphanumeric() {
+                    j += 1;
+                } else if d == '.' && !seen_dot && j + 1 < n && cs[j + 1].is_ascii_digit() {
+                    seen_dot = true;
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Num, text: cs[i..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    toks
+}
+
+/// Try to lex a raw string starting at `i`. Returns the content, the index
+/// one past the closing delimiter, and the number of newlines consumed.
+fn raw_string(cs: &[char], i: usize) -> Option<(String, usize, u32)> {
+    let n = cs.len();
+    let mut k = i;
+    if cs[k] == 'b' {
+        k += 1;
+    }
+    if k >= n || cs[k] != 'r' {
+        return None;
+    }
+    k += 1;
+    let mut hashes = 0usize;
+    while k < n && cs[k] == '#' {
+        hashes += 1;
+        k += 1;
+    }
+    if k >= n || cs[k] != '"' {
+        return None;
+    }
+    k += 1;
+    let mut text = String::new();
+    let mut lines = 0u32;
+    while k < n {
+        if cs[k] == '"' {
+            let mut m = 0usize;
+            while m < hashes && k + 1 + m < n && cs[k + 1 + m] == '#' {
+                m += 1;
+            }
+            if m == hashes {
+                return Some((text, k + 1 + hashes, lines));
+            }
+        }
+        if cs[k] == '\n' {
+            lines += 1;
+        }
+        text.push(cs[k]);
+        k += 1;
+    }
+    Some((text, n, lines))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src).into_iter().filter(|t| t.kind == TokKind::Ident).map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_stripped_from_the_ident_stream() {
+        let src = r##"
+            // HashMap in a comment is not a use
+            let s = "HashMap in a string is not a use";
+            let r = r#"raw "HashMap" body"#;
+            let m = BTreeMap::new();
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"HashMap".to_string()), "{ids:?}");
+        assert!(ids.contains(&"BTreeMap".to_string()));
+    }
+
+    #[test]
+    fn string_and_comment_content_is_preserved_for_usage_scans() {
+        let toks = lex("const U: &str = \"usage: softex [--rows N]\"; // flags: --len");
+        let strs: Vec<&Tok> = toks.iter().filter(|t| t.kind == TokKind::Str).collect();
+        assert_eq!(strs.len(), 1);
+        assert!(strs[0].text.contains("--rows"));
+        let com: Vec<&Tok> = toks.iter().filter(|t| t.kind == TokKind::Comment).collect();
+        assert_eq!(com.len(), 1);
+        assert!(com[0].text.contains("--len"));
+    }
+
+    #[test]
+    fn multiline_string_with_continuation_keeps_line_numbers() {
+        let src = "const A: &str = \"first \\\n    second\";\nfn after() {}\n";
+        let toks = lex(src);
+        let s = toks.iter().find(|t| t.kind == TokKind::Str).expect("string token");
+        assert_eq!(s.text, "first second");
+        let after = toks.iter().find(|t| t.is_ident("after")).expect("ident after");
+        assert_eq!(after.line, 2);
+    }
+
+    #[test]
+    fn lifetimes_and_char_literals_disambiguate() {
+        let toks = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert!(toks.iter().any(|t| t.kind == TokKind::Char && t.text == "x"));
+        // The lifetime name lexes as a harmless ident, not a char literal.
+        assert!(toks.iter().any(|t| t.is_ident("a")));
+    }
+
+    #[test]
+    fn nested_block_comments_terminate() {
+        let toks = lex("/* outer /* inner */ tail */ fn f() {}");
+        assert!(toks.iter().any(|t| t.is_ident("f")));
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Comment).count(), 1);
+    }
+
+    #[test]
+    fn underscore_is_an_ident_for_wildcard_detection() {
+        let toks = lex("match x { _ => 0 }");
+        let pos = toks.iter().position(|t| t.is_ident("_")).expect("wildcard ident");
+        assert!(toks[pos + 1].is_punct('='));
+        assert!(toks[pos + 2].is_punct('>'));
+    }
+}

@@ -1,0 +1,63 @@
+//! `softex-audit`: repo-specific static analysis for the softex tree.
+//!
+//! The runtime oracles (determinism matrix, work-stealing equivalence,
+//! timing gates) catch a nondeterminism or costing bug only after it ships
+//! a divergent report. The rules here prove the load-bearing invariants by
+//! construction instead: see DESIGN.md §15 for the catalog and
+//! `tools/audit_allow.toml` for the justified exceptions.
+//!
+//! Everything is std-only: a hand-rolled lexer (`lexer`), token-tree
+//! queries (`tree`), the rule families (`rules`), a TOML-subset allowlist
+//! (`allowlist`), and embedded fixtures (`selftest`).
+
+pub mod allowlist;
+pub mod lexer;
+pub mod rules;
+pub mod selftest;
+pub mod tree;
+
+use std::path::{Path, PathBuf};
+
+/// Load the audited tree under `root`: every `rust/src/**/*.rs` as a
+/// scanned file plus `rust/tests/cli.rs` as a reference file. Paths are
+/// sorted so findings order is deterministic.
+pub fn collect_tree(root: &Path) -> Result<tree::Tree, String> {
+    let src_root = root.join("rust").join("src");
+    let mut paths: Vec<PathBuf> = Vec::new();
+    walk(&src_root, &mut paths).map_err(|e| format!("walking {}: {e}", src_root.display()))?;
+    paths.sort();
+    let mut files = Vec::new();
+    for p in &paths {
+        let text =
+            std::fs::read_to_string(p).map_err(|e| format!("reading {}: {e}", p.display()))?;
+        files.push(tree::File::new(&rel_path(root, p), &text));
+    }
+    let mut refs = Vec::new();
+    let cli = root.join("rust").join("tests").join("cli.rs");
+    if let Ok(text) = std::fs::read_to_string(&cli) {
+        refs.push(tree::File::new("rust/tests/cli.rs", &text));
+    }
+    Ok(tree::Tree { files, refs })
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, p: &Path) -> String {
+    match p.strip_prefix(root) {
+        Ok(r) => r.to_string_lossy().replace('\\', "/"),
+        Err(_) => p.to_string_lossy().replace('\\', "/"),
+    }
+}

@@ -1,0 +1,126 @@
+//! CLI driver for `softex-audit` (see DESIGN.md §15).
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/setup error.
+
+use softex_audit::{allowlist, collect_tree, rules, selftest};
+use std::path::PathBuf;
+use std::process::exit;
+
+const USAGE: &str = "usage: softex-audit [--root DIR] [--allowlist FILE] [--json] [--selftest]\n\
+    --root DIR        repo root to audit (default: this workspace)\n\
+    --allowlist FILE  allowlist to apply (default: <root>/tools/audit_allow.toml)\n\
+    --json            machine-readable findings on stdout\n\
+    --selftest        prove every rule fires on its embedded fixtures";
+
+fn die_usage(msg: &str) -> ! {
+    eprintln!("softex-audit: {msg}\n{USAGE}");
+    exit(2);
+}
+
+fn main() {
+    let mut root: Option<PathBuf> = None;
+    let mut allow_path: Option<PathBuf> = None;
+    let mut json = false;
+    let mut run_selftest = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = Some(PathBuf::from(v)),
+                None => die_usage("--root needs a value"),
+            },
+            "--allowlist" => match args.next() {
+                Some(v) => allow_path = Some(PathBuf::from(v)),
+                None => die_usage("--allowlist needs a value"),
+            },
+            "--json" => json = true,
+            "--selftest" => run_selftest = true,
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return;
+            }
+            other => die_usage(&format!("unknown argument `{other}`")),
+        }
+    }
+    if run_selftest {
+        exit(if selftest::run_selftest() { 0 } else { 1 });
+    }
+    let root = match root {
+        Some(r) => r,
+        None => PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join(".."),
+    };
+    let root = match root.canonicalize() {
+        Ok(r) => r,
+        Err(_) => root,
+    };
+    let tree = match collect_tree(&root) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("softex-audit: {e}");
+            exit(2);
+        }
+    };
+    let findings = rules::run_all(&tree);
+    let allow_path = allow_path.unwrap_or_else(|| root.join("tools").join("audit_allow.toml"));
+    let mut entries = match std::fs::read_to_string(&allow_path) {
+        Ok(text) => match allowlist::parse(&text) {
+            Ok(es) => es,
+            Err(e) => {
+                eprintln!("softex-audit: {}: {e}", allow_path.display());
+                exit(2);
+            }
+        },
+        // No allowlist is a valid (stricter) configuration.
+        Err(_) => Vec::new(),
+    };
+    let (reported, suppressed) = allowlist::apply(findings, &mut entries);
+    if json {
+        println!("{}", to_json(&reported, suppressed));
+    } else {
+        for f in &reported {
+            println!("{}:{}: {} [{}] {}", f.path, f.line, f.rule, f.symbol, f.detail);
+        }
+        if reported.is_empty() {
+            println!("softex-audit: clean ({suppressed} finding(s) suppressed by allowlist)");
+        } else {
+            println!(
+                "softex-audit: {} finding(s), {suppressed} suppressed by allowlist",
+                reported.len()
+            );
+        }
+    }
+    exit(if reported.is_empty() { 0 } else { 1 });
+}
+
+fn to_json(findings: &[rules::Finding], suppressed: usize) -> String {
+    let mut s = String::from("{\"findings\":[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"rule\":\"{}\",\"path\":\"{}\",\"line\":{},\"symbol\":\"{}\",\"detail\":\"{}\"}}",
+            esc(f.rule),
+            esc(&f.path),
+            f.line,
+            esc(&f.symbol),
+            esc(&f.detail)
+        ));
+    }
+    s.push_str(&format!("],\"suppressed\":{suppressed}}}"));
+    s
+}
+
+fn esc(s: &str) -> String {
+    let mut o = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => o.push_str("\\\""),
+            '\\' => o.push_str("\\\\"),
+            '\n' => o.push_str("\\n"),
+            c if (c as u32) < 0x20 => o.push_str(&format!("\\u{:04x}", c as u32)),
+            c => o.push(c),
+        }
+    }
+    o
+}

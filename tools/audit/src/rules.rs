@@ -1,0 +1,486 @@
+//! The invariant catalog (DESIGN.md §15). Five rule families over the token
+//! tree, plus the allowlist meta-rule A1 (raised in `allowlist::apply`):
+//!
+//! * D — determinism: no wall clocks, unordered containers, or entropy in
+//!   the paths that feed reports.
+//! * E — exhaustiveness: every costing enum variant is named at its
+//!   designated match site, and those sites carry no wildcard arm.
+//! * R — report parity: every `ServeReport`/`FleetReport` field is named in
+//!   both `to_json()` and the table printer (`render()` + `row()`).
+//! * C — CLI parity: every flag the binary looks up is documented in usage
+//!   text and exercised by `rust/tests/cli.rs`.
+//! * S — safety: no `.unwrap()`/`.expect()` in non-test library code outside
+//!   the allowlist; `unsafe` requires a nearby `// SAFETY:` comment.
+
+use crate::lexer::TokKind;
+use crate::tree::{enum_variants, fn_body, ident_set, struct_fields, File, Tree};
+use std::collections::BTreeSet;
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: u32,
+    /// What the finding is about: a banned ident, `Enum::Variant@site`,
+    /// `Struct.field`, a `--flag` name, or an allowlist entry.
+    pub symbol: String,
+    pub detail: String,
+}
+
+pub struct Rule {
+    pub id: &'static str,
+    pub summary: &'static str,
+}
+
+#[rustfmt::skip]
+pub fn all_rules() -> Vec<Rule> {
+    vec![
+        Rule { id: "D1", summary: "no std::time::{Instant,SystemTime} in sim/fleet/server/report/main paths" },
+        Rule { id: "D2", summary: "no HashMap/HashSet in sim/fleet/server/report/main paths" },
+        Rule { id: "D3", summary: "no entropy sources (thread_rng, from_entropy, RandomState, DefaultHasher, rand::) outside rng.rs" },
+        Rule { id: "E1", summary: "every Op variant is priced in coordinator::exec::op_cost" },
+        Rule { id: "E2", summary: "every OpId variant is stretched in OpId::ticks" },
+        Rule { id: "E3", summary: "every ActivityMode variant is priced in power_08v and cluster_power_w (the EnergyLedger's charging tables)" },
+        Rule { id: "E4", summary: "designated costing match sites carry no wildcard `_ =>` arm" },
+        Rule { id: "R1", summary: "every ServeReport/FleetReport field is named in to_json()" },
+        Rule { id: "R2", summary: "every ServeReport/FleetReport field is named in the table printer (render/row)" },
+        Rule { id: "C1", summary: "every flag main.rs looks up appears in its usage text" },
+        Rule { id: "C2", summary: "every flag main.rs looks up is exercised in rust/tests/cli.rs" },
+        Rule { id: "S1", summary: "no .unwrap()/.expect() in non-test library code outside the allowlist" },
+        Rule { id: "S2", summary: "unsafe requires a `// SAFETY:` comment within the six preceding lines" },
+        Rule { id: "A1", summary: "allowlist entries must still match; stale entries are findings themselves" },
+    ]
+}
+
+/// Paths whose iteration order, timing, or hashing leaks into reports.
+const D_PATH_PREFIXES: [&str; 4] =
+    ["rust/src/sim/", "rust/src/fleet/", "rust/src/server/", "rust/src/report/"];
+const D_PATH_FILES: [&str; 1] = ["rust/src/main.rs"];
+
+/// The designated costing match sites (E-family anchors). `ticks` is the
+/// OpId stretch in `energy::governor`; the two power functions are the
+/// tables `EnergyLedger` charges through via `part_energies`.
+const E_SITES: [&str; 4] = ["op_cost", "ticks", "power_08v", "cluster_power_w"];
+
+const REPORT_STRUCTS: [&str; 2] = ["ServeReport", "FleetReport"];
+
+pub fn run_all(tree: &Tree) -> Vec<Finding> {
+    let mut out = Vec::new();
+    check_determinism(tree, &mut out);
+    check_exhaustiveness(tree, &mut out);
+    check_report_parity(tree, &mut out);
+    check_cli_parity(tree, &mut out);
+    check_safety(tree, &mut out);
+    out.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule, a.symbol.as_str())
+            .cmp(&(b.path.as_str(), b.line, b.rule, b.symbol.as_str()))
+    });
+    out
+}
+
+fn in_d_paths(path: &str) -> bool {
+    D_PATH_PREFIXES.iter().any(|p| path.starts_with(p)) || D_PATH_FILES.contains(&path)
+}
+
+fn check_determinism(tree: &Tree, out: &mut Vec<Finding>) {
+    for file in &tree.files {
+        let d_scope = in_d_paths(&file.path);
+        for (i, t) in file.toks.iter().enumerate() {
+            if file.in_test[i] || t.kind != TokKind::Ident {
+                continue;
+            }
+            let name = t.text.as_str();
+            if d_scope && (name == "Instant" || name == "SystemTime") {
+                out.push(Finding {
+                    rule: "D1",
+                    path: file.path.clone(),
+                    line: t.line,
+                    symbol: name.to_string(),
+                    detail: "wall-clock time in a deterministic path; derive time from sim ticks"
+                        .to_string(),
+                });
+            }
+            if d_scope && (name == "HashMap" || name == "HashSet") {
+                out.push(Finding {
+                    rule: "D2",
+                    path: file.path.clone(),
+                    line: t.line,
+                    symbol: name.to_string(),
+                    detail: "unordered container in a report-feeding path; use BTreeMap/BTreeSet"
+                        .to_string(),
+                });
+            }
+            let entropy = name == "thread_rng"
+                || name == "from_entropy"
+                || name == "RandomState"
+                || name == "DefaultHasher";
+            let rand_path = name == "rand"
+                && i + 2 < file.toks.len()
+                && file.toks[i + 1].is_punct(':')
+                && file.toks[i + 2].is_punct(':');
+            if entropy || rand_path {
+                out.push(Finding {
+                    rule: "D3",
+                    path: file.path.clone(),
+                    line: t.line,
+                    symbol: name.to_string(),
+                    detail: "entropy source outside the seeded rng.rs constructors".to_string(),
+                });
+            }
+        }
+    }
+}
+
+fn find_enum<'a>(tree: &'a Tree, name: &str) -> Option<(&'a File, Vec<String>)> {
+    for file in &tree.files {
+        if let Some(vars) = enum_variants(file, name) {
+            return Some((file, vars));
+        }
+    }
+    None
+}
+
+fn find_fn<'a>(tree: &'a Tree, name: &str) -> Option<(&'a File, (usize, usize))> {
+    for file in &tree.files {
+        if let Some(r) = fn_body(file, name) {
+            return Some((file, r));
+        }
+    }
+    None
+}
+
+fn check_variants_at_site(
+    tree: &Tree,
+    enum_name: &str,
+    fn_name: &str,
+    rule: &'static str,
+    out: &mut Vec<Finding>,
+) {
+    let Some((_, variants)) = find_enum(tree, enum_name) else {
+        out.push(Finding {
+            rule,
+            path: "rust/src".to_string(),
+            line: 0,
+            symbol: format!("enum {enum_name}"),
+            detail: "costing enum not found anywhere in the tree; the rule's anchor moved"
+                .to_string(),
+        });
+        return;
+    };
+    let Some((file, range)) = find_fn(tree, fn_name) else {
+        out.push(Finding {
+            rule,
+            path: "rust/src".to_string(),
+            line: 0,
+            symbol: format!("fn {fn_name}"),
+            detail: "designated match site not found anywhere in the tree; the rule's anchor moved"
+                .to_string(),
+        });
+        return;
+    };
+    let idents = ident_set(file, range);
+    for v in variants {
+        if !idents.contains(&v) {
+            out.push(Finding {
+                rule,
+                path: file.path.clone(),
+                line: file.toks[range.0].line,
+                symbol: format!("{enum_name}::{v}@{fn_name}"),
+                detail: format!(
+                    "enum variant never named inside the designated match site `{fn_name}`"
+                ),
+            });
+        }
+    }
+}
+
+fn check_exhaustiveness(tree: &Tree, out: &mut Vec<Finding>) {
+    check_variants_at_site(tree, "Op", "op_cost", "E1", out);
+    check_variants_at_site(tree, "OpId", "ticks", "E2", out);
+    check_variants_at_site(tree, "ActivityMode", "power_08v", "E3", out);
+    check_variants_at_site(tree, "ActivityMode", "cluster_power_w", "E3", out);
+    // E4: `_ =>` inside a designated body can silently absorb a variant
+    // added later, which is exactly what E1-E3 exist to prevent.
+    for site in E_SITES {
+        let Some((file, (open, close))) = find_fn(tree, site) else {
+            continue; // already reported as a missing anchor above
+        };
+        let mut k = open;
+        while k + 2 <= close {
+            if file.toks[k].is_ident("_")
+                && file.toks[k + 1].is_punct('=')
+                && file.toks[k + 2].is_punct('>')
+            {
+                out.push(Finding {
+                    rule: "E4",
+                    path: file.path.clone(),
+                    line: file.toks[k].line,
+                    symbol: format!("_ =>@{site}"),
+                    detail: "wildcard arm in a designated costing match; name every variant"
+                        .to_string(),
+                });
+            }
+            k += 1;
+        }
+    }
+}
+
+/// A field counts as "named" if the body mentions the field ident itself or
+/// any ident prefixed with `field_` (e.g. `ttft` surfaces as `ttft_p50`).
+/// Fields surfaced only through derived accessors (`latencies` via `p50()`)
+/// must be allowlisted with the accessor named in the reason — the allowlist
+/// is the documented mapping.
+fn field_named(idents: &BTreeSet<String>, field: &str) -> bool {
+    if idents.contains(field) {
+        return true;
+    }
+    let pref = format!("{field}_");
+    idents.iter().any(|id| id.starts_with(&pref))
+}
+
+fn check_report_parity(tree: &Tree, out: &mut Vec<Finding>) {
+    for sname in REPORT_STRUCTS {
+        let mut found = None;
+        for file in &tree.files {
+            if let Some((line, fields)) = struct_fields(file, sname) {
+                found = Some((file, line, fields));
+                break;
+            }
+        }
+        let Some((file, decl_line, fields)) = found else {
+            out.push(Finding {
+                rule: "R1",
+                path: "rust/src".to_string(),
+                line: 0,
+                symbol: sname.to_string(),
+                detail: "report struct not found anywhere in the tree; the rule's anchor moved"
+                    .to_string(),
+            });
+            continue;
+        };
+        match fn_body(file, "to_json") {
+            None => out.push(Finding {
+                rule: "R1",
+                path: file.path.clone(),
+                line: decl_line,
+                symbol: format!("{sname}.to_json"),
+                detail: "report struct has no to_json() in its defining file".to_string(),
+            }),
+            Some(range) => {
+                let ids = ident_set(file, range);
+                for fld in &fields {
+                    if !field_named(&ids, fld) {
+                        out.push(Finding {
+                            rule: "R1",
+                            path: file.path.clone(),
+                            line: file.toks[range.0].line,
+                            symbol: format!("{sname}.{fld}"),
+                            detail: "field never named in to_json(); JSON consumers cannot see it"
+                                .to_string(),
+                        });
+                    }
+                }
+            }
+        }
+        let mut printer_ids = BTreeSet::new();
+        let mut printer_line = decl_line;
+        let mut have_printer = false;
+        for m in ["render", "row"] {
+            if let Some(range) = fn_body(file, m) {
+                have_printer = true;
+                printer_line = file.toks[range.0].line;
+                printer_ids.extend(ident_set(file, range));
+            }
+        }
+        if !have_printer {
+            out.push(Finding {
+                rule: "R2",
+                path: file.path.clone(),
+                line: decl_line,
+                symbol: format!("{sname}.render"),
+                detail: "report struct has no render()/row() in its defining file".to_string(),
+            });
+        } else {
+            for fld in &fields {
+                if !field_named(&printer_ids, fld) {
+                    out.push(Finding {
+                        rule: "R2",
+                        path: file.path.clone(),
+                        line: printer_line,
+                        symbol: format!("{sname}.{fld}"),
+                        detail: "field never named in the table printer (render/row)".to_string(),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// A flag "mentions" check: `--flag` must occur with a non-flag character
+/// (or end of text) after it, so `--len` does not match inside `--prefix-len`.
+fn mentions_flag(texts: &[&str], flag: &str) -> bool {
+    let needle = format!("--{flag}");
+    texts.iter().any(|t| {
+        let mut start = 0usize;
+        while let Some(p) = t[start..].find(&needle) {
+            let end = start + p + needle.len();
+            let boundary = match t[end..].chars().next() {
+                None => true,
+                Some(c) => !(c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-'),
+            };
+            if boundary {
+                return true;
+            }
+            start = start + p + 1;
+        }
+        false
+    })
+}
+
+fn looks_like_flag(name: &str) -> bool {
+    !name.is_empty()
+        && name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-')
+}
+
+fn check_cli_parity(tree: &Tree, out: &mut Vec<Finding>) {
+    let Some(main) = tree.files.iter().find(|f| f.path == "rust/src/main.rs") else {
+        out.push(Finding {
+            rule: "C1",
+            path: "rust/src/main.rs".to_string(),
+            line: 0,
+            symbol: "main.rs".to_string(),
+            detail: "CLI entry point not found; the rule's anchor moved".to_string(),
+        });
+        return;
+    };
+    // Collect the flags the binary actually looks up: `flags.get("x")`,
+    // `flags.contains_key("x")`, and the first string argument of
+    // `num_flag(..)` calls.
+    let toks = &main.toks;
+    let mut flags: Vec<(String, u32)> = Vec::new();
+    fn push_flag(name: &str, line: u32, flags: &mut Vec<(String, u32)>) {
+        if looks_like_flag(name) && !flags.iter().any(|(f, _)| f == name) {
+            flags.push((name.to_string(), line));
+        }
+    }
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        if (t.text == "get" || t.text == "contains_key")
+            && i + 2 < toks.len()
+            && toks[i + 1].is_punct('(')
+            && toks[i + 2].kind == TokKind::Str
+        {
+            push_flag(&toks[i + 2].text, toks[i + 2].line, &mut flags);
+        }
+        if t.text == "num_flag" && i + 1 < toks.len() && toks[i + 1].is_punct('(') {
+            for j in i + 2..(i + 8).min(toks.len()) {
+                if toks[j].kind == TokKind::Str {
+                    push_flag(&toks[j].text, toks[j].line, &mut flags);
+                    break;
+                }
+                if toks[j].is_punct(')') {
+                    break;
+                }
+            }
+        }
+    }
+    // Usage corpus: every string and comment in main.rs (the command doc
+    // comment is part of the usage surface; the per-command USAGE consts
+    // are strings).
+    let usage: Vec<&str> = toks
+        .iter()
+        .filter(|t| t.kind == TokKind::Str || t.kind == TokKind::Comment)
+        .map(|t| t.text.as_str())
+        .collect();
+    let cli = tree.refs.iter().find(|f| f.path == "rust/tests/cli.rs");
+    let cli_strs: Option<Vec<&str>> = cli.map(|f| {
+        f.toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .map(|t| t.text.as_str())
+            .collect()
+    });
+    if cli_strs.is_none() {
+        out.push(Finding {
+            rule: "C2",
+            path: "rust/tests/cli.rs".to_string(),
+            line: 0,
+            symbol: "cli.rs".to_string(),
+            detail: "CLI test suite not found; the rule's anchor moved".to_string(),
+        });
+    }
+    for (flag, line) in &flags {
+        if !mentions_flag(&usage, flag) {
+            out.push(Finding {
+                rule: "C1",
+                path: main.path.clone(),
+                line: *line,
+                symbol: format!("--{flag}"),
+                detail: "flag is parsed but never mentioned in usage text".to_string(),
+            });
+        }
+        if let Some(strs) = &cli_strs {
+            if !mentions_flag(strs, flag) {
+                out.push(Finding {
+                    rule: "C2",
+                    path: main.path.clone(),
+                    line: *line,
+                    symbol: format!("--{flag}"),
+                    detail: "flag is parsed but never exercised in rust/tests/cli.rs".to_string(),
+                });
+            }
+        }
+    }
+}
+
+fn check_safety(tree: &Tree, out: &mut Vec<Finding>) {
+    for file in &tree.files {
+        let toks = &file.toks;
+        for i in 0..toks.len() {
+            if file.in_test[i] || toks[i].kind != TokKind::Ident {
+                continue;
+            }
+            let t = &toks[i];
+            if (t.text == "unwrap" || t.text == "expect")
+                && i >= 1
+                && toks[i - 1].is_punct('.')
+                && i + 1 < toks.len()
+                && toks[i + 1].is_punct('(')
+            {
+                out.push(Finding {
+                    rule: "S1",
+                    path: file.path.clone(),
+                    line: t.line,
+                    symbol: t.text.clone(),
+                    detail: "panic path in library code; return an error or allowlist with a proof of infallibility"
+                        .to_string(),
+                });
+            }
+            if t.text == "unsafe" {
+                let mut ok = false;
+                for p in toks[..i].iter().rev() {
+                    if t.line.saturating_sub(p.line) > 6 {
+                        break;
+                    }
+                    if p.kind == TokKind::Comment && p.text.contains("SAFETY:") {
+                        ok = true;
+                        break;
+                    }
+                }
+                if !ok {
+                    out.push(Finding {
+                        rule: "S2",
+                        path: file.path.clone(),
+                        line: t.line,
+                        symbol: "unsafe".to_string(),
+                        detail: "unsafe block without a `// SAFETY:` comment in the six preceding lines"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+    }
+}

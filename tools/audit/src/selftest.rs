@@ -1,0 +1,150 @@
+//! `--selftest`: embedded positive/negative fixtures proving every rule in
+//! the catalog can fire — the same contract as `tools/bench_gate.py
+//! --selftest`. A rule without a violating fixture is a rule nobody has
+//! proven works; the meta-check here and the mirror test in
+//! `tests/fixture_suite.rs` make that unshippable.
+
+use crate::tree::{File, Tree};
+use crate::{allowlist, rules};
+
+pub struct Case {
+    pub rule: &'static str,
+    /// Virtual `(path, source)` trees; paths under `rust/tests/` become
+    /// reference files like the real `cli.rs`.
+    pub bad: &'static [(&'static str, &'static str)],
+    pub good: &'static [(&'static str, &'static str)],
+    /// Allowlist text applied to each side (A1's fixtures live here).
+    pub bad_allow: &'static str,
+    pub good_allow: &'static str,
+}
+
+const D_BAD: &[(&str, &str)] = &[("rust/src/sim/clock.rs", include_str!("../fixtures/d_bad.rs"))];
+const D_GOOD: &[(&str, &str)] = &[("rust/src/sim/clock.rs", include_str!("../fixtures/d_good.rs"))];
+
+const E_BAD: &[(&str, &str)] = &[
+    ("rust/src/workload/trace.rs", include_str!("../fixtures/e_enums.rs")),
+    ("rust/src/coordinator/exec.rs", include_str!("../fixtures/e_bad.rs")),
+];
+const E_GOOD: &[(&str, &str)] = &[
+    ("rust/src/workload/trace.rs", include_str!("../fixtures/e_enums.rs")),
+    ("rust/src/coordinator/exec.rs", include_str!("../fixtures/e_good.rs")),
+];
+
+const R_BAD: &[(&str, &str)] = &[
+    ("rust/src/server/stats.rs", include_str!("../fixtures/r_bad.rs")),
+    ("rust/src/fleet/report.rs", include_str!("../fixtures/r_fleet.rs")),
+];
+const R_GOOD: &[(&str, &str)] = &[
+    ("rust/src/server/stats.rs", include_str!("../fixtures/r_good.rs")),
+    ("rust/src/fleet/report.rs", include_str!("../fixtures/r_fleet.rs")),
+];
+
+const C_BAD: &[(&str, &str)] = &[
+    ("rust/src/main.rs", include_str!("../fixtures/c_bad_main.rs")),
+    ("rust/tests/cli.rs", include_str!("../fixtures/c_bad_cli.rs")),
+];
+const C_GOOD: &[(&str, &str)] = &[
+    ("rust/src/main.rs", include_str!("../fixtures/c_good_main.rs")),
+    ("rust/tests/cli.rs", include_str!("../fixtures/c_good_cli.rs")),
+];
+
+const S_BAD: &[(&str, &str)] = &[("rust/src/sim/s.rs", include_str!("../fixtures/s_bad.rs"))];
+const S_GOOD: &[(&str, &str)] = &[("rust/src/sim/s.rs", include_str!("../fixtures/s_good.rs"))];
+
+/// A1's violating fixture is a clean tree plus an allowlist entry that
+/// matches nothing: the staleness itself is the finding.
+const A_BAD_ALLOW: &str =
+    "[[allow]]\nrule = \"S1\"\npath = \"rust/src/sim/nonexistent.rs\"\nreason = \"deliberately stale: nothing matches this entry\"\n";
+
+pub fn cases() -> Vec<Case> {
+    let mut out = Vec::new();
+    for rule in ["D1", "D2", "D3"] {
+        out.push(Case { rule, bad: D_BAD, good: D_GOOD, bad_allow: "", good_allow: "" });
+    }
+    for rule in ["E1", "E2", "E3", "E4"] {
+        out.push(Case { rule, bad: E_BAD, good: E_GOOD, bad_allow: "", good_allow: "" });
+    }
+    for rule in ["R1", "R2"] {
+        out.push(Case { rule, bad: R_BAD, good: R_GOOD, bad_allow: "", good_allow: "" });
+    }
+    for rule in ["C1", "C2"] {
+        out.push(Case { rule, bad: C_BAD, good: C_GOOD, bad_allow: "", good_allow: "" });
+    }
+    for rule in ["S1", "S2"] {
+        out.push(Case { rule, bad: S_BAD, good: S_GOOD, bad_allow: "", good_allow: "" });
+    }
+    out.push(Case {
+        rule: "A1",
+        bad: S_GOOD,
+        good: S_GOOD,
+        bad_allow: A_BAD_ALLOW,
+        good_allow: "",
+    });
+    out
+}
+
+pub fn build_tree(files: &[(&str, &str)]) -> Tree {
+    let mut tree = Tree { files: Vec::new(), refs: Vec::new() };
+    for (path, text) in files {
+        let f = File::new(path, text);
+        if path.starts_with("rust/tests/") {
+            tree.refs.push(f);
+        } else {
+            tree.files.push(f);
+        }
+    }
+    tree
+}
+
+/// Run one case: the rule must fire on the violating tree and the clean
+/// tree must raise nothing from the same family (other families are out of
+/// scope for a family-local fixture — a D fixture has no report structs).
+pub fn run_case(c: &Case) -> Result<(), String> {
+    let findings = rules::run_all(&build_tree(c.bad));
+    let mut entries = allowlist::parse(c.bad_allow)
+        .map_err(|e| format!("{}: bad-side allowlist: {e}", c.rule))?;
+    let (reported, _) = allowlist::apply(findings, &mut entries);
+    if !reported.iter().any(|f| f.rule == c.rule) {
+        return Err(format!("{}: rule did not fire on its violating fixture", c.rule));
+    }
+    let findings = rules::run_all(&build_tree(c.good));
+    let mut entries = allowlist::parse(c.good_allow)
+        .map_err(|e| format!("{}: good-side allowlist: {e}", c.rule))?;
+    let (reported, _) = allowlist::apply(findings, &mut entries);
+    let family = c.rule.as_bytes()[0] as char;
+    if let Some(f) = reported.iter().find(|f| f.rule.starts_with(family)) {
+        return Err(format!(
+            "{}: clean fixture raised {} at {}:{} [{}]",
+            c.rule, f.rule, f.path, f.line, f.symbol
+        ));
+    }
+    Ok(())
+}
+
+/// Returns true when every registered rule has a case and every case passes.
+pub fn run_selftest() -> bool {
+    let cases = cases();
+    let mut ok = true;
+    for r in rules::all_rules() {
+        if !cases.iter().any(|c| c.rule == r.id) {
+            println!("FAIL {}: registered rule has no selftest case", r.id);
+            ok = false;
+        }
+    }
+    for c in &cases {
+        match run_case(c) {
+            Ok(()) => println!("PASS {}", c.rule),
+            Err(e) => {
+                println!("FAIL {e}");
+                ok = false;
+            }
+        }
+    }
+    if ok {
+        println!(
+            "softex-audit selftest: {} rules fire on violating fixtures and stay quiet on clean ones",
+            cases.len()
+        );
+    }
+    ok
+}

@@ -1,0 +1,308 @@
+//! The audited file set plus the token-level queries the rules share:
+//! `#[cfg(test)]` region masking, brace matching, enum-variant and
+//! struct-field extraction, and designated-function body location.
+
+use crate::lexer::{lex, Tok, TokKind};
+use std::collections::BTreeSet;
+
+pub struct File {
+    /// Repo-relative path with `/` separators (e.g. `rust/src/main.rs`).
+    pub path: String,
+    pub toks: Vec<Tok>,
+    /// Parallel to `toks`: true for tokens inside a `#[cfg(test)]` item.
+    pub in_test: Vec<bool>,
+}
+
+impl File {
+    pub fn new(path: &str, src: &str) -> File {
+        let toks = lex(src);
+        let in_test = mark_test_regions(&toks);
+        File { path: path.to_string(), toks, in_test }
+    }
+}
+
+pub struct Tree {
+    /// Files the rules scan for violations (`rust/src/**/*.rs`).
+    pub files: Vec<File>,
+    /// Reference-only files consulted but never flagged (`rust/tests/cli.rs`).
+    pub refs: Vec<File>,
+}
+
+/// Mark every token belonging to a `#[cfg(test)]` item (attribute included).
+/// `#[cfg(not(test))]` and `#[cfg(feature = ..)]` are not test regions: the
+/// marker is the exact token sequence `cfg ( test )` inside the attribute.
+fn mark_test_regions(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].is_punct('#') && i + 1 < toks.len() && toks[i + 1].is_punct('[') {
+            if let Some(close) = matching_bracket(toks, i + 1) {
+                if is_cfg_test(&toks[i + 1..=close]) {
+                    let end = item_end(toks, close + 1).unwrap_or(toks.len() - 1);
+                    for m in mask.iter_mut().take(end + 1).skip(i) {
+                        *m = true;
+                    }
+                    i = end + 1;
+                } else {
+                    i = close + 1;
+                }
+                continue;
+            }
+        }
+        i += 1;
+    }
+    mask
+}
+
+fn is_cfg_test(attr: &[Tok]) -> bool {
+    attr.windows(4).any(|w| {
+        w[0].is_ident("cfg") && w[1].is_punct('(') && w[2].is_ident("test") && w[3].is_punct(')')
+    })
+}
+
+/// Index of the bracket matching the one at `open_idx`. Counts only the
+/// bracket's own kind; valid Rust nests properly so this cannot misalign.
+/// String/comment content is already folded into single tokens by the lexer.
+pub fn matching_bracket(toks: &[Tok], open_idx: usize) -> Option<usize> {
+    let open = toks[open_idx].text.chars().next()?;
+    let close = match open {
+        '(' => ')',
+        '[' => ']',
+        '{' => '}',
+        _ => return None,
+    };
+    let mut depth: i64 = 0;
+    for (j, t) in toks.iter().enumerate().skip(open_idx) {
+        if t.is_punct(open) {
+            depth += 1;
+        } else if t.is_punct(close) {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+    }
+    None
+}
+
+/// Index of the last token of the item starting at `start` (after its
+/// attributes): the matching `}` of its first top-level brace, or the first
+/// top-level `;` for brace-less items like `use`.
+fn item_end(toks: &[Tok], start: usize) -> Option<usize> {
+    let mut i = start;
+    // Skip doc comments and further attributes before the item keyword.
+    loop {
+        if i < toks.len() && toks[i].kind == TokKind::Comment {
+            i += 1;
+            continue;
+        }
+        if i + 1 < toks.len() && toks[i].is_punct('#') && toks[i + 1].is_punct('[') {
+            i = matching_bracket(toks, i + 1)? + 1;
+            continue;
+        }
+        break;
+    }
+    let mut depth: i64 = 0;
+    let mut j = i;
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.kind == TokKind::Punct {
+            match t.text.chars().next() {
+                Some('(') | Some('[') => depth += 1,
+                Some(')') | Some(']') => depth -= 1,
+                Some('{') => {
+                    if depth == 0 {
+                        return matching_bracket(toks, j);
+                    }
+                    depth += 1;
+                }
+                Some('}') => depth -= 1,
+                Some(';') if depth == 0 => return Some(j),
+                _ => {}
+            }
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Variant names of the (non-test) `enum name` declared in `file`, if any.
+pub fn enum_variants(file: &File, name: &str) -> Option<Vec<String>> {
+    let toks = &file.toks;
+    for i in 0..toks.len().saturating_sub(1) {
+        if !(toks[i].is_ident("enum") && toks[i + 1].is_ident(name) && !file.in_test[i]) {
+            continue;
+        }
+        let mut j = i + 2;
+        while j < toks.len() && !toks[j].is_punct('{') {
+            j += 1;
+        }
+        if j >= toks.len() {
+            return None;
+        }
+        let close = matching_bracket(toks, j)?;
+        let mut vars = Vec::new();
+        let mut depth: i64 = 0;
+        let mut expect_variant = true;
+        for t in &toks[j + 1..close] {
+            if t.kind == TokKind::Punct {
+                match t.text.chars().next() {
+                    Some('{') | Some('(') | Some('[') => depth += 1,
+                    Some('}') | Some(')') | Some(']') => depth -= 1,
+                    Some(',') if depth == 0 => expect_variant = true,
+                    _ => {}
+                }
+                continue;
+            }
+            if depth == 0 && expect_variant && t.kind == TokKind::Ident {
+                vars.push(t.text.clone());
+                expect_variant = false;
+            }
+        }
+        return Some(vars);
+    }
+    None
+}
+
+/// Field names and declaration line of the (non-test) `struct name` in `file`.
+/// A field is an ident directly followed by a single `:` at bracket depth 0;
+/// path segments (`std::sync::Mutex`) are excluded by the `::` checks. Struct
+/// bodies contain no comparison operators, so `<`/`>` count as brackets here.
+pub fn struct_fields(file: &File, name: &str) -> Option<(u32, Vec<String>)> {
+    let toks = &file.toks;
+    for i in 0..toks.len().saturating_sub(1) {
+        if !(toks[i].is_ident("struct") && toks[i + 1].is_ident(name) && !file.in_test[i]) {
+            continue;
+        }
+        let decl_line = toks[i].line;
+        let mut j = i + 2;
+        while j < toks.len() && !toks[j].is_punct('{') {
+            if toks[j].is_punct(';') {
+                return Some((decl_line, Vec::new())); // unit or tuple struct
+            }
+            j += 1;
+        }
+        if j >= toks.len() {
+            return None;
+        }
+        let close = matching_bracket(toks, j)?;
+        let mut fields = Vec::new();
+        let mut depth: i64 = 0;
+        for k in j + 1..close {
+            let t = &toks[k];
+            if t.kind == TokKind::Punct {
+                match t.text.chars().next() {
+                    Some('{') | Some('(') | Some('[') | Some('<') => depth += 1,
+                    Some('}') | Some(')') | Some(']') | Some('>') => depth -= 1,
+                    _ => {}
+                }
+                continue;
+            }
+            if depth == 0
+                && t.kind == TokKind::Ident
+                && k + 2 < toks.len()
+                && toks[k + 1].is_punct(':')
+                && !toks[k + 2].is_punct(':')
+                && !toks[k - 1].is_punct(':')
+            {
+                fields.push(t.text.clone());
+            }
+        }
+        return Some((decl_line, fields));
+    }
+    None
+}
+
+/// Token range `(open_brace, close_brace)` of the body of the first
+/// non-test `fn name` in `file`.
+pub fn fn_body(file: &File, name: &str) -> Option<(usize, usize)> {
+    let toks = &file.toks;
+    for i in 0..toks.len().saturating_sub(1) {
+        if !(toks[i].is_ident("fn") && toks[i + 1].is_ident(name) && !file.in_test[i]) {
+            continue;
+        }
+        let mut depth: i64 = 0;
+        let mut j = i + 2;
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.kind == TokKind::Punct {
+                match t.text.chars().next() {
+                    Some('(') | Some('[') => depth += 1,
+                    Some(')') | Some(']') => depth -= 1,
+                    Some('{') => {
+                        if depth == 0 {
+                            let close = matching_bracket(toks, j)?;
+                            return Some((j, close));
+                        }
+                        depth += 1;
+                    }
+                    Some('}') => depth -= 1,
+                    Some(';') if depth == 0 => break, // trait method without a body
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+    }
+    None
+}
+
+/// All identifier texts inside the inclusive token range.
+pub fn ident_set(file: &File, range: (usize, usize)) -> BTreeSet<String> {
+    file.toks[range.0..=range.1]
+        .iter()
+        .filter(|t| t.kind == TokKind::Ident)
+        .map(|t| t.text.clone())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_test_mod_is_masked_and_cfg_not_test_is_not() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n\
+                   #[cfg(not(test))]\nfn gated() { y.unwrap(); }\n";
+        let f = File::new("rust/src/x.rs", src);
+        let unwraps: Vec<bool> = f
+            .toks
+            .iter()
+            .zip(&f.in_test)
+            .filter(|(t, _)| t.is_ident("unwrap"))
+            .map(|(_, &m)| m)
+            .collect();
+        assert_eq!(unwraps, vec![true, false]);
+    }
+
+    #[test]
+    fn enum_variants_sees_unit_tuple_and_struct_variants() {
+        let src = "pub enum Op {\n    MatMul { m: usize, k: usize },\n    Gelu(u32),\n    Idle,\n}";
+        let f = File::new("rust/src/x.rs", src);
+        let expect = Some(vec!["MatMul".into(), "Gelu".into(), "Idle".into()]);
+        assert_eq!(enum_variants(&f, "Op"), expect);
+        assert_eq!(enum_variants(&f, "Missing"), None);
+    }
+
+    #[test]
+    fn struct_fields_skips_types_paths_and_generics() {
+        let src = "pub struct R {\n    pub label: String,\n\
+                   pub m: std::collections::BTreeMap<String, Vec<u64>>,\n\
+                   pub guard: std::sync::Mutex<u32>,\n}";
+        let f = File::new("rust/src/x.rs", src);
+        let (_, fields) = struct_fields(&f, "R").expect("struct R");
+        assert_eq!(fields, vec!["label".to_string(), "m".into(), "guard".into()]);
+    }
+
+    #[test]
+    fn fn_body_spans_the_braces_and_skips_the_signature() {
+        let src = "fn cost(op: &Op) -> (u64, u64) { match op { _ => (0, 0) } }\nfn other() {}";
+        let f = File::new("rust/src/x.rs", src);
+        let (open, close) = fn_body(&f, "cost").expect("fn cost");
+        assert!(f.toks[open].is_punct('{'));
+        assert!(f.toks[close].is_punct('}'));
+        let ids = ident_set(&f, (open, close));
+        assert!(ids.contains("op"));
+        assert!(!ids.contains("other"));
+    }
+}
